@@ -1,0 +1,59 @@
+"""AOT pipeline: lower every Layer-2 model to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and gen_hlo.py.
+
+Usage (from python/): ``python -m compile.aot --out-dir ../artifacts``
+Idempotent: artifacts are only rewritten when the HLO changes.
+"""
+
+import argparse
+import pathlib
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, arg_specs) -> str:
+    """Lower a jax function to XLA HLO text via StableHLO."""
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: pathlib.Path, n: int) -> list:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    written = []
+    for name, (fn, arg_specs) in model.specs(n).items():
+        path = out_dir / f"{name}.hlo.txt"
+        text = to_hlo_text(fn, arg_specs)
+        if path.exists() and path.read_text() == text:
+            written.append((name, path, "unchanged"))
+            continue
+        path.write_text(text)
+        written.append((name, path, "written"))
+    return written
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    p.add_argument("--n", type=int, default=256, help="square matmul size")
+    args = p.parse_args(argv)
+    out_dir = pathlib.Path(args.out_dir)
+    for name, path, status in build(out_dir, args.n):
+        print(f"{status:>9}  {name:<28} -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels (build-time only; never on the request path)."""
+
+from . import fused, matmul, ref  # noqa: F401

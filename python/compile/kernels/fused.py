@@ -1,0 +1,103 @@
+"""Layer-1 Pallas kernels for the paper's motivating fusion examples (§2).
+
+Each kernel fuses a whole pipeline into a single traversal — the DSL-side
+``nzip``/``rnz`` fusion rules (eq 24-28) performed here at the Pallas
+level, so the rust runtime can execute the fused artifacts the same way
+the interpreter executes the fused DSL forms.
+
+All kernels use ``interpret=True`` (CPU PJRT cannot run Mosaic
+custom-calls; see ``matmul.py``).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_matvec_kernel(a_ref, b_ref, v_ref, u_ref, o_ref):
+    """Paper eq 1 in one pass: w = (A + B) (v + u), row block at a time."""
+    vu = v_ref[...] + u_ref[...]
+    o_ref[...] = (a_ref[...] + b_ref[...]) @ vu
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def fused_matvec_eq1(a, b, v, u, *, bm=32):
+    """w_i = sum_j (A_ij + B_ij)(v_j + u_j); a, b: [m, j]; v, u: [j]."""
+    m, j = a.shape
+    assert m % bm == 0, f"bm={bm} must divide m={m}"
+    return pl.pallas_call(
+        _fused_matvec_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, j), lambda i: (i, 0)),
+            pl.BlockSpec((bm, j), lambda i: (i, 0)),
+            pl.BlockSpec((j,), lambda i: (0,)),
+            pl.BlockSpec((j,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), a.dtype),
+        interpret=True,
+    )(a, b, v, u)
+
+
+def _weighted_matmul_kernel(a_ref, b_ref, g_ref, o_ref):
+    """Paper eq 2: one (i,k) tile of C = (A ⊙ g) B, full-j blocks."""
+    o_ref[...] = (a_ref[...] * g_ref[...][None, :]) @ b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def weighted_matmul_eq2(a, b, g, *, bm=32, bn=32):
+    """C_ik = sum_j A_ij B_jk g_j; a: [m, j], b: [j, n], g: [j]."""
+    m, j = a.shape
+    j2, n = b.shape
+    assert j == j2
+    assert m % bm == 0 and n % bn == 0
+    return pl.pallas_call(
+        _weighted_matmul_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, j), lambda i, k: (i, 0)),
+            pl.BlockSpec((j, bn), lambda i, k: (0, k)),
+            pl.BlockSpec((j,), lambda i, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, k: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b, g)
+
+
+def _nn_layer_kernel(w_ref, x_ref, beta_ref, o_ref, *, eps):
+    """Paper eq 3-5 fused: dense + batch-norm + tanh for one feature block.
+
+    The grid splits the feature (k) dimension; the batch statistics E/V
+    are per-feature over the full batch, so each grid step sees the whole
+    batch (x) and one block of W columns — the low-arithmetic-density
+    normalisation and nonlinearity never touch memory as separate passes.
+    """
+    y = x_ref[...] @ w_ref[...] + beta_ref[...][None, :]
+    mean = jnp.mean(y, axis=0, keepdims=True)
+    var = jnp.mean((y - mean) ** 2, axis=0, keepdims=True)
+    o_ref[...] = jnp.tanh((y - mean) * jax.lax.rsqrt(var + eps))
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "eps"))
+def nn_layer_eq345(w, x, beta, *, bk=32, eps=1e-5):
+    """r = tanh(batchnorm(x @ w + beta)); w: [i, k], x: [b, i], beta: [k]."""
+    i, k = w.shape
+    b, i2 = x.shape
+    assert i == i2
+    assert k % bk == 0
+    return pl.pallas_call(
+        functools.partial(_nn_layer_kernel, eps=eps),
+        grid=(k // bk,),
+        in_specs=[
+            pl.BlockSpec((i, bk), lambda kb: (0, kb)),
+            pl.BlockSpec((b, i), lambda kb: (0, 0)),
+            pl.BlockSpec((bk,), lambda kb: (kb,)),
+        ],
+        out_specs=pl.BlockSpec((b, bk), lambda kb: (0, kb)),
+        out_shape=jax.ShapeDtypeStruct((b, k), x.dtype),
+        interpret=True,
+    )(w, x, beta)

@@ -1,0 +1,80 @@
+"""Layer-1 Pallas kernel: tiled matrix multiplication.
+
+This is the paper's subdivision insight expressed in TPU terms (DESIGN.md
+§5, Hardware adaptation): the DSL's ``subdiv d b`` of the HoF spine
+corresponds one-to-one to the ``BlockSpec`` grid tiling here —
+
+- subdividing the two maps (rows of A / columns of B) → the ``(i, k)``
+  grid with ``(bm, bn)`` output tiles staged in VMEM;
+- subdividing the ``rnz`` (the j reduction) → the ``j`` grid dimension
+  with a VMEM accumulator carried across grid steps.
+
+The block sizes ``(bm, bk, bn)`` are exactly the paper's block size ``b``,
+exposed as parameters so the rust coordinator can select variants the same
+way the enumerator selects subdivided spines.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what the AOT
+artifacts need (and numerics are identical).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, n_k_blocks):
+    """One (i, k, j) grid step: o += a_tile @ b_tile, zero-init at j == 0."""
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+    del n_k_blocks
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul(a, b, *, bm=32, bk=32, bn=32):
+    """Tiled ``a @ b`` via Pallas. Shapes must divide by the block sizes.
+
+    a: [m, k], b: [k, n] → [m, n]; float32.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
+        f"block sizes ({bm},{bk},{bn}) must divide shapes ({m},{k},{n})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k_blocks=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kb: (i, kb)),
+            pl.BlockSpec((bk, bn), lambda i, j, kb: (kb, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kb: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+def vmem_footprint_bytes(bm, bk, bn, dtype_bytes=4):
+    """Estimated VMEM residency of one grid step: an A tile, a B tile and
+    the output accumulator tile. Used by DESIGN.md §Perf to pick block
+    sizes under the ~16 MiB/core VMEM budget."""
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization(bm, bk, bn, mxu=128):
+    """Fraction of MXU lanes a (bm, bk)×(bk, bn) tile occupies — 1.0 when
+    every tile dimension is a multiple of the 128×128 systolic array."""
+    def frac(d):
+        return min(1.0, d / mxu) if d % mxu else 1.0
+    return min(frac(bm), frac(bk), frac(bn))

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the kernels (and, transitively, the AOT
+artifacts executed from rust) are validated against. Each mirrors one of
+the paper's motivating computations (§2, eq 1-7) or the matmul evaluation
+workload (§4).
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(a, b):
+    """C[i,k] = sum_j A[i,j] B[j,k] — the paper's eq 50 workload."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def fused_matvec_eq1(a, b, v, u):
+    """Paper eq 1: w_i = sum_j (A_ij + B_ij) * (v_j + u_j).
+
+    The point of the DSL's fusion rules: a single traversal, no
+    temporaries.
+    """
+    return (a + b) @ (v + u)
+
+
+def weighted_matmul_eq2(a, b, g):
+    """Paper eq 2/6: C_ik = sum_j A_ij * B_jk * g_j."""
+    return (a * g[None, :]) @ b
+
+
+def nn_layer_eq345(w, x, beta, eps=1e-5):
+    """Paper eq 3-5: dense transform + batch normalization + nonlinearity.
+
+    y_k^b = sum_i W_ik x_i^b + beta_k           (eq 3)
+    z_k   = (y_k^b - E[y^b]) / sqrt(V[y^b]+eps) (eq 4)
+    r_k   = tanh(z_k)                           (eq 5)
+
+    x: [batch, in], w: [in, out], beta: [out] → r: [batch, out].
+    E/V are taken over the batch dimension, per feature.
+    """
+    y = x @ w + beta[None, :]
+    mean = jnp.mean(y, axis=0, keepdims=True)
+    var = jnp.var(y, axis=0, keepdims=True)
+    z = (y - mean) / jnp.sqrt(var + eps)
+    return jnp.tanh(z)
+
+
+def tensor_contraction_eq7(a, b, c, g, f):
+    """Paper eq 7: C_ipq = sum_jk A_ijk B_jp C_kq g_j f_k.
+
+    The PDE-style multi-index contraction motivating hierarchical
+    partitioning.
+    """
+    t = a * g[None, :, None] * f[None, None, :]  # [i, j, k]
+    return jnp.einsum("ijk,jp,kq->ipq", t, b, c)

@@ -1,0 +1,65 @@
+"""Layer-2: the JAX compute graphs that the AOT pipeline lowers.
+
+Each model is a jitted function calling the Layer-1 Pallas kernels; the
+whole graph (kernel included, thanks to ``interpret=True``) lowers into a
+single HLO module per variant, which the rust runtime loads and executes.
+Python never runs on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused, matmul, ref
+
+
+def matmul_xla(a, b):
+    """The vendor-library baseline (the paper's Eigen role): XLA's own dot."""
+    return (jnp.dot(a, b),)
+
+
+def matmul_pallas(a, b, *, bm=32, bk=32, bn=32):
+    """The paper's blocked matmul as a Pallas grid (subdivided spine)."""
+    return (matmul.matmul(a, b, bm=bm, bk=bk, bn=bn),)
+
+
+def fused_matvec(a, b, v, u):
+    """Paper eq 1, fused end to end."""
+    return (fused.fused_matvec_eq1(a, b, v, u),)
+
+
+def weighted_matmul(a, b, g):
+    """Paper eq 2, fused end to end."""
+    return (fused.weighted_matmul_eq2(a, b, g),)
+
+
+def nn_layer(w, x, beta):
+    """Paper eq 3-5, the fused dense + batchnorm + tanh layer."""
+    return (fused.nn_layer_eq345(w, x, beta),)
+
+
+def tensor_contraction(a, b, c, g, f):
+    """Paper eq 7 (pure XLA; the contraction structure is the point)."""
+    return (ref.tensor_contraction_eq7(a, b, c, g, f),)
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def specs(n=256):
+    """The artifact catalogue: name → (function, example argument specs).
+
+    ``n`` is the square matmul size; the fused examples use fixed small
+    shapes matching the rust integration tests and examples.
+    """
+    return {
+        f"matmul_xla_{n}": (matmul_xla, (f32(n, n), f32(n, n))),
+        f"matmul_pallas_{n}": (matmul_pallas, (f32(n, n), f32(n, n))),
+        "fused_matvec_64x96": (fused_matvec, (f32(64, 96), f32(64, 96), f32(96), f32(96))),
+        "weighted_matmul_64": (weighted_matmul, (f32(64, 64), f32(64, 64), f32(64))),
+        "nn_layer_32x64x128": (nn_layer, (f32(64, 128), f32(32, 64), f32(128))),
+        "tensor_contraction_8": (
+            tensor_contraction,
+            (f32(8, 8, 8), f32(8, 8), f32(8, 8), f32(8), f32(8)),
+        ),
+    }

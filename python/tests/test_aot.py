@@ -1,0 +1,40 @@
+"""AOT pipeline tests: every model lowers to parseable HLO text, and the
+artifact build is idempotent."""
+
+import pathlib
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+@pytest.mark.parametrize("name", list(model.specs(n=32).keys()))
+def test_every_model_lowers_to_hlo_text(name):
+    fn, arg_specs = model.specs(n=32)[name]
+    text = aot.to_hlo_text(fn, arg_specs)
+    assert text.startswith("HloModule"), text[:80]
+    assert "ENTRY" in text
+    # interpret-mode pallas must not leave TPU custom-calls behind
+    assert "mosaic" not in text.lower()
+
+
+def test_lowered_matmul_executes_correctly_in_jax():
+    # The HLO we ship corresponds to a function whose jax execution matches
+    # the oracle — executed here once as an end-to-end sanity check.
+    fn, _ = model.specs(n=32)["matmul_pallas_32"]
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal((32, 32)).astype(np.float32)
+    b = rng.standard_normal((32, 32)).astype(np.float32)
+    (got,) = fn(a, b)
+    np.testing.assert_allclose(got, a @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_build_is_idempotent(tmp_path: pathlib.Path):
+    first = aot.build(tmp_path, n=32)
+    assert all(status == "written" for _, _, status in first)
+    second = aot.build(tmp_path, n=32)
+    assert all(status == "unchanged" for _, _, status in second)
+    names = {p.name for _, p, _ in second}
+    assert f"matmul_xla_32.hlo.txt" in names
+    assert all((tmp_path / n).stat().st_size > 200 for n in names)

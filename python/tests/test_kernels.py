@@ -1,0 +1,122 @@
+"""Layer-1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+hypothesis sweeps shapes and block sizes; fixed-seed numpy draws values.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused, matmul, ref
+
+RNG = np.random.default_rng(0)
+
+
+def rand(*shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------- matmul
+
+BLOCKS = st.sampled_from([1, 2, 4, 8])
+MULTIPLES = st.integers(min_value=1, max_value=4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(bm=BLOCKS, bk=BLOCKS, bn=BLOCKS, mi=MULTIPLES, ki=MULTIPLES, ni=MULTIPLES)
+def test_matmul_kernel_matches_ref_across_shapes(bm, bk, bn, mi, ki, ni):
+    m, k, n = bm * mi, bk * ki, bn * ni
+    a, b = rand(m, k), rand(k, n)
+    got = matmul.matmul(a, b, bm=bm, bk=bk, bn=bn)
+    np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_kernel_rejects_indivisible_blocks():
+    with pytest.raises(AssertionError):
+        matmul.matmul(rand(6, 6), rand(6, 6), bm=4, bk=2, bn=2)
+
+
+def test_matmul_block_sweep_fixed_shape():
+    a, b = rand(32, 32), rand(32, 32)
+    want = ref.matmul(a, b)
+    for bs in [4, 8, 16, 32]:
+        got = matmul.matmul(a, b, bm=bs, bk=bs, bn=bs)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_vmem_footprint_and_mxu_model():
+    # 3 tiles of 128² f32 = 192 KiB — well inside the 16 MiB budget
+    assert matmul.vmem_footprint_bytes(128, 128, 128) == 3 * 128 * 128 * 4
+    assert matmul.mxu_utilization(128, 128, 128) == 1.0
+    assert matmul.mxu_utilization(32, 128, 128) == pytest.approx(0.25)
+
+
+# ----------------------------------------------------------- fused eq 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(bm=st.sampled_from([1, 2, 4]), mi=MULTIPLES, j=st.integers(2, 24))
+def test_fused_matvec_eq1(bm, mi, j):
+    m = bm * mi
+    a, b, v, u = rand(m, j), rand(m, j), rand(j), rand(j)
+    got = fused.fused_matvec_eq1(a, b, v, u, bm=bm)
+    np.testing.assert_allclose(
+        got, ref.fused_matvec_eq1(a, b, v, u), rtol=1e-5, atol=1e-5
+    )
+
+
+# ----------------------------------------------------------- fused eq 2
+
+
+@settings(max_examples=10, deadline=None)
+@given(bm=st.sampled_from([1, 2, 4]), bn=st.sampled_from([1, 2, 4]),
+       mi=MULTIPLES, ni=MULTIPLES, j=st.integers(2, 16))
+def test_weighted_matmul_eq2(bm, bn, mi, ni, j):
+    m, n = bm * mi, bn * ni
+    a, b, g = rand(m, j), rand(j, n), rand(j)
+    got = fused.weighted_matmul_eq2(a, b, g, bm=bm, bn=bn)
+    np.testing.assert_allclose(
+        got, ref.weighted_matmul_eq2(a, b, g), rtol=1e-4, atol=1e-5
+    )
+
+
+# --------------------------------------------------------- fused eq 3-5
+
+
+@settings(max_examples=10, deadline=None)
+@given(bk=st.sampled_from([1, 2, 4]), ki=MULTIPLES,
+       b=st.integers(2, 12), i=st.integers(2, 16))
+def test_nn_layer_eq345(bk, ki, b, i):
+    k = bk * ki
+    w, x, beta = rand(i, k), rand(b, i), rand(k)
+    got = fused.nn_layer_eq345(w, x, beta, bk=bk)
+    np.testing.assert_allclose(
+        got, ref.nn_layer_eq345(w, x, beta), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_nn_layer_output_is_normalized():
+    # batch-norm property: tanh-input per-feature mean ≈ 0
+    w, x, beta = rand(16, 8), rand(64, 16), rand(8)
+    z = np.arctanh(np.clip(np.asarray(fused.nn_layer_eq345(w, x, beta, bk=8)), -0.999999, 0.999999))
+    np.testing.assert_allclose(z.mean(axis=0), 0.0, atol=1e-2)
+
+
+# ------------------------------------------------------------------ eq 7
+
+
+def test_tensor_contraction_eq7_against_loops():
+    i, j, k, p, q = 3, 4, 5, 2, 3
+    a, b, c = rand(i, j, k), rand(j, p), rand(k, q)
+    g, f = rand(j), rand(k)
+    want = np.zeros((i, p, q), dtype=np.float64)
+    for ii in range(i):
+        for jj in range(j):
+            for kk in range(k):
+                for pp in range(p):
+                    for qq in range(q):
+                        want[ii, pp, qq] += (
+                            a[ii, jj, kk] * b[jj, pp] * c[kk, qq] * g[jj] * f[kk]
+                        )
+    got = ref.tensor_contraction_eq7(a, b, c, g, f)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

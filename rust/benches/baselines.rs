@@ -1,0 +1,10 @@
+//! Paper §4 baselines: naive (4.9 s), hand-blocked (278 ms), Eigen
+//! (333/60 ms) — here naive rust, blocked rust, and the XLA/Pallas
+//! artifacts through PJRT.
+use hofdla::bench_support::{env_config, env_size};
+
+fn main() {
+    let n = env_size(512);
+    let e = hofdla::experiments::baselines_experiment(n, &env_config()).expect("baselines");
+    print!("{}", e.render());
+}

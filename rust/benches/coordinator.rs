@@ -1,0 +1,58 @@
+//! Coordinator throughput: optimize-job latency and artifact-execution
+//! batching overhead (L3 §Perf driver).
+use hofdla::bench_support::{bench, fmt_duration, BenchConfig};
+use hofdla::coordinator::{Config, Coordinator, OptimizeSpec, RankBy, Request, Response};
+
+fn main() {
+    let c = Coordinator::start(Config::default()).expect("start");
+    let spec = OptimizeSpec {
+        source: "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))"
+            .into(),
+        inputs: vec![("A".into(), vec![64, 64]), ("B".into(), vec![64, 64])],
+        rank_by: RankBy::CostModel,
+        subdivide_rnz: None,
+        top_k: 6,
+    };
+    let cfg = BenchConfig::quick();
+    let m = bench("optimize 64x64 (cost model)", &cfg, || {
+        let Response::Optimized(r) = c.call(Request::Optimize(spec.clone())).unwrap() else {
+            unreachable!()
+        };
+        std::hint::black_box(r.variants_explored);
+    });
+    println!("optimize-job median latency: {}", fmt_duration(m.median));
+
+    // Pipelined submission throughput (the batching path).
+    let t = std::time::Instant::now();
+    let jobs = 64;
+    let handles: Vec<_> = (0..jobs)
+        .map(|_| c.submit(Request::Optimize(spec.clone())).unwrap())
+        .collect();
+    for h in handles {
+        h.wait().unwrap();
+    }
+    let dt = t.elapsed();
+    println!(
+        "{} concurrent optimize jobs: {} total ({:.1} jobs/s); metrics: {}",
+        jobs,
+        fmt_duration(dt),
+        jobs as f64 / dt.as_secs_f64(),
+        c.metrics.summary()
+    );
+
+    if hofdla::runtime::artifact_path("matmul_xla_256").exists() {
+        let n = 256usize;
+        let a = vec![1f32; n * n];
+        let mk = || Request::ExecArtifact {
+            name: "matmul_xla_256".into(),
+            inputs: vec![(a.clone(), vec![n, n]), (a.clone(), vec![n, n])],
+        };
+        let m = bench("exec artifact matmul_xla_256", &cfg, || {
+            let Response::Executed { output } = c.call(mk()).unwrap() else {
+                unreachable!()
+            };
+            std::hint::black_box(output.len());
+        });
+        println!("artifact exec median latency: {}", fmt_duration(m.median));
+    }
+}

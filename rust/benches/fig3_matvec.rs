@@ -1,0 +1,10 @@
+//! Paper Figure 3: the six rearrangements of the matrix-vector product
+//! from subdividing the vector (1a-1c) or the map (2a-2c family).
+use hofdla::bench_support::{env_config, env_size};
+
+fn main() {
+    let n = env_size(2048);
+    let b = if n % 256 == 0 { 16 } else { 4 };
+    let e = hofdla::experiments::fig3(n, b, &env_config()).expect("fig3");
+    print!("{}", e.render());
+}

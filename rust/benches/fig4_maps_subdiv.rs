@@ -1,0 +1,17 @@
+//! Paper Figure 4: rearrangements with the two maps subdivided — the
+//! paper's finding: no improvement over the naive form.
+use hofdla::experiments::{self, MatmulOpts};
+
+fn main() {
+    // Default smaller than the paper's 1024: this family has many
+    // variants; HOFDLA_N overrides.
+    let mut opts = MatmulOpts::default();
+    if std::env::var("HOFDLA_N").is_err() {
+        opts.n = 256;
+    }
+    if opts.n % (opts.b * opts.b) != 0 {
+        opts.b = 4;
+    }
+    let e = experiments::fig4(&opts).expect("fig4");
+    print!("{}", e.render());
+}

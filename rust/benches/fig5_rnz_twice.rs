@@ -1,0 +1,17 @@
+//! Paper Figure 5: rearrangements with the reduction subdivided twice —
+//! the paper's finding: all candidates at least as good as naive.
+use hofdla::experiments::{self, MatmulOpts};
+
+fn main() {
+    // Default smaller than the paper's 1024: this family has many
+    // variants; HOFDLA_N overrides.
+    let mut opts = MatmulOpts::default();
+    if std::env::var("HOFDLA_N").is_err() {
+        opts.n = 384;
+    }
+    if opts.n % (opts.b * opts.b) != 0 {
+        opts.b = 4;
+    }
+    let e = experiments::fig5(&opts).expect("fig5");
+    print!("{}", e.render());
+}

@@ -1,0 +1,17 @@
+//! Paper Figure 6: rearrangements with every HoF subdivided once — the
+//! paper's finding: no gain over subdividing just the reduction.
+use hofdla::experiments::{self, MatmulOpts};
+
+fn main() {
+    // Default smaller than the paper's 1024: this family has many
+    // variants; HOFDLA_N overrides.
+    let mut opts = MatmulOpts::default();
+    if std::env::var("HOFDLA_N").is_err() {
+        opts.n = 256;
+    }
+    if opts.n % (opts.b * opts.b) != 0 {
+        opts.b = 4;
+    }
+    let e = experiments::fig6(&opts).expect("fig6");
+    print!("{}", e.render());
+}

@@ -1,0 +1,15 @@
+//! Paper Table 1: the six rearrangements of naive 1024x1024 matmul.
+//! Default size 512 (HOFDLA_N=1024 for the paper's setting); prints the
+//! paper-style sorted table plus baselines for the ratio.
+use hofdla::experiments::{self, MatmulOpts};
+
+fn main() {
+    let opts = MatmulOpts {
+        simulate: std::env::args().any(|a| a == "--sim"),
+        ..Default::default()
+    };
+    let e = experiments::table1(&opts).expect("table1");
+    print!("{}", e.render());
+    let b = experiments::baselines_experiment(opts.n, &opts.bench).expect("baselines");
+    print!("{}", b.render());
+}

@@ -1,0 +1,12 @@
+//! Paper Table 2: the twelve rearrangements of matmul with the reduction
+//! subdivided (b=16).
+use hofdla::experiments::{self, MatmulOpts};
+
+fn main() {
+    let opts = MatmulOpts {
+        simulate: std::env::args().any(|a| a == "--sim"),
+        ..Default::default()
+    };
+    let e = experiments::table2(&opts).expect("table2");
+    print!("{}", e.render());
+}

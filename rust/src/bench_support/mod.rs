@@ -1,0 +1,157 @@
+//! Self-contained micro-benchmark harness and table formatting.
+//!
+//! criterion is not available in this offline environment; this module
+//! provides the warmup + repeated-measurement + median protocol the
+//! benches use, plus helpers to print the paper-style tables.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Median wall time of the measured runs.
+    pub median: Duration,
+    /// Minimum observed (best-case) time.
+    pub min: Duration,
+    /// Number of measured runs.
+    pub runs: usize,
+}
+
+impl Measurement {
+    pub fn secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+/// Benchmark protocol configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup: usize,
+    pub runs: usize,
+    /// Cap on total measured time; stops early once exceeded (variants in
+    /// the matmul tables differ by ~100×, so slow ones take fewer runs).
+    pub max_total: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: 1,
+            runs: 5,
+            max_total: Duration::from_secs(20),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Quick config for CI-style runs.
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup: 1,
+            runs: 3,
+            max_total: Duration::from_secs(8),
+        }
+    }
+}
+
+/// Time a closure under the protocol. The closure must perform the full
+/// unit of work per call; use [`std::hint::black_box`] inside as needed.
+pub fn bench(name: &str, cfg: &BenchConfig, mut f: impl FnMut()) -> Measurement {
+    for _ in 0..cfg.warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(cfg.runs);
+    let start_all = Instant::now();
+    for _ in 0..cfg.runs {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed());
+        if start_all.elapsed() > cfg.max_total {
+            break;
+        }
+    }
+    times.sort();
+    Measurement {
+        name: name.to_string(),
+        median: times[times.len() / 2],
+        min: times[0],
+        runs: times.len(),
+    }
+}
+
+/// Format a duration like the paper's tables (seconds with 2-3 significant
+/// digits, or milliseconds under a second).
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.0} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// Print a paper-style two-column table sorted ascending by time.
+pub fn print_table(title: &str, rows: &mut Vec<(String, Duration)>) {
+    println!("\n=== {title} ===");
+    rows.sort_by_key(|(_, d)| *d);
+    let w = rows.iter().map(|(n, _)| n.len()).max().unwrap_or(8).max(8);
+    println!("{:w$}  {:>10}", "HoF order", "Time", w = w);
+    for (name, d) in rows.iter() {
+        println!("{:w$}  {:>10}", name, fmt_duration(*d), w = w);
+    }
+}
+
+/// Read a benchmark problem size from the environment (`HOFDLA_N`),
+/// defaulting as given. The paper uses 1024; benches default smaller so the
+/// full suite stays tractable, and `HOFDLA_N=1024` reproduces the paper's
+/// setting.
+pub fn env_size(default: usize) -> usize {
+    std::env::var("HOFDLA_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Read the bench protocol from the environment (`HOFDLA_QUICK=1`).
+pub fn env_config() -> BenchConfig {
+    if std::env::var("HOFDLA_QUICK").is_ok() {
+        BenchConfig::quick()
+    } else {
+        BenchConfig::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let m = bench("spin", &BenchConfig::quick(), || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(std::hint::black_box(i));
+            }
+            std::hint::black_box(x);
+        });
+        assert!(m.min <= m.median);
+        assert!(m.runs >= 1);
+        assert!(m.median.as_nanos() > 0);
+    }
+
+    #[test]
+    fn fmt_durations() {
+        assert_eq!(fmt_duration(Duration::from_secs(5)), "5.00 s");
+        assert_eq!(fmt_duration(Duration::from_millis(186)), "186 ms");
+        assert!(fmt_duration(Duration::from_micros(3)).contains("µs"));
+    }
+
+    #[test]
+    fn env_size_default() {
+        std::env::remove_var("HOFDLA_N");
+        assert_eq!(env_size(512), 512);
+    }
+}

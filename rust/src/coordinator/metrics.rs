@@ -1,0 +1,57 @@
+//! Service metrics: cheap atomic counters surfaced by the CLI's `serve`
+//! status output and asserted on by the invariant tests.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counters for the whole service lifetime.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    /// Artifact-execution batches drained by the runtime thread.
+    pub exec_batches: AtomicU64,
+    /// Largest batch the runtime thread has seen.
+    pub max_batch_seen: AtomicU64,
+    /// Executable-cache hits on the runtime thread.
+    pub exec_cache_hits: AtomicU64,
+}
+
+impl Metrics {
+    /// Human-readable one-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted={} completed={} failed={} exec_batches={} max_batch={} cache_hits={}",
+            self.submitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.exec_batches.load(Ordering::Relaxed),
+            self.max_batch_seen.load(Ordering::Relaxed),
+            self.exec_cache_hits.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Jobs in flight (submitted minus resolved).
+    pub fn in_flight(&self) -> u64 {
+        self.submitted
+            .load(Ordering::Relaxed)
+            .saturating_sub(
+                self.completed.load(Ordering::Relaxed) + self.failed.load(Ordering::Relaxed),
+            )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_and_in_flight() {
+        let m = Metrics::default();
+        m.submitted.store(5, Ordering::Relaxed);
+        m.completed.store(3, Ordering::Relaxed);
+        m.failed.store(1, Ordering::Relaxed);
+        assert_eq!(m.in_flight(), 1);
+        assert!(m.summary().contains("submitted=5"));
+    }
+}

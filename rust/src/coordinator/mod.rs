@@ -1,0 +1,400 @@
+//! The optimization service — Layer 3's front end.
+//!
+//! The paper's system is a compiler, so the coordinator is the part a
+//! downstream user deploys: a threaded service that accepts *optimize*
+//! jobs (DSL source + input shapes → enumerate, rank, pick the best
+//! rearrangement) and *execute* jobs (run an AOT artifact through the PJRT
+//! runtime), with
+//!
+//! - a worker pool for CPU-bound optimization pipelines,
+//! - a dedicated runtime thread owning the (non-`Send`) PJRT client, with
+//!   an executable cache and request batching,
+//! - response routing back to each submitter via per-job channels,
+//! - service metrics.
+//!
+//! Python never appears anywhere here — artifacts were compiled ahead of
+//! time by `make artifacts`.
+
+mod metrics;
+mod pipeline;
+
+pub use metrics::Metrics;
+pub use pipeline::{optimize, OptimizeResult, OptimizeSpec, RankBy};
+
+use crate::{Error, Result};
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Optimization worker threads.
+    pub workers: usize,
+    /// Maximum artifact-execution requests drained per batch.
+    pub max_batch: usize,
+    /// Artifact directory for the runtime thread.
+    pub artifact_dir: PathBuf,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            workers: 2,
+            max_batch: 8,
+            artifact_dir: crate::runtime::artifact_dir(),
+        }
+    }
+}
+
+/// A request to the service.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Run the optimization pipeline on DSL source.
+    Optimize(OptimizeSpec),
+    /// Execute a named AOT artifact with f32 inputs.
+    ExecArtifact {
+        name: String,
+        inputs: Vec<(Vec<f32>, Vec<usize>)>,
+    },
+}
+
+/// A response from the service.
+#[derive(Clone, Debug)]
+pub enum Response {
+    Optimized(OptimizeResult),
+    Executed { output: Vec<f32> },
+}
+
+/// Handle to a submitted job; resolves exactly once.
+pub struct JobHandle {
+    pub id: u64,
+    rx: Receiver<Result<Response>>,
+}
+
+impl JobHandle {
+    /// Block until the job completes.
+    pub fn wait(self) -> Result<Response> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::Coordinator("worker dropped without responding".into()))?
+    }
+}
+
+enum Work {
+    Opt {
+        spec: OptimizeSpec,
+        reply: Sender<Result<Response>>,
+    },
+    Stop,
+}
+
+enum RtWork {
+    Exec {
+        name: String,
+        inputs: Vec<(Vec<f32>, Vec<usize>)>,
+        reply: Sender<Result<Response>>,
+    },
+    Stop,
+}
+
+/// The running service.
+pub struct Coordinator {
+    next_id: std::sync::atomic::AtomicU64,
+    opt_tx: SyncSender<Work>,
+    rt_tx: SyncSender<RtWork>,
+    pub metrics: Arc<Metrics>,
+    workers: Vec<JoinHandle<()>>,
+    rt_thread: Option<JoinHandle<()>>,
+    n_workers: usize,
+}
+
+impl Coordinator {
+    /// Start the service threads.
+    pub fn start(cfg: Config) -> Result<Self> {
+        let metrics = Arc::new(Metrics::default());
+        let (opt_tx, opt_rx) = sync_channel::<Work>(1024);
+        let opt_rx = Arc::new(Mutex::new(opt_rx));
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers.max(1) {
+            let rx = opt_rx.clone();
+            let m = metrics.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("hofdla-opt-{w}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(Work::Opt { spec, reply }) => {
+                                let r = pipeline::optimize(&spec).map(Response::Optimized);
+                                if r.is_ok() {
+                                    m.completed.fetch_add(1, Ordering::Relaxed);
+                                } else {
+                                    m.failed.fetch_add(1, Ordering::Relaxed);
+                                }
+                                let _ = reply.send(r);
+                            }
+                            Ok(Work::Stop) | Err(_) => break,
+                        }
+                    })
+                    .map_err(|e| Error::Coordinator(format!("spawn: {e}")))?,
+            );
+        }
+
+        // Runtime thread: owns the PJRT client; batches artifact requests.
+        let (rt_tx, rt_rx) = sync_channel::<RtWork>(1024);
+        let m = metrics.clone();
+        let max_batch = cfg.max_batch.max(1);
+        let art_dir = cfg.artifact_dir.clone();
+        let rt_thread = std::thread::Builder::new()
+            .name("hofdla-runtime".into())
+            .spawn(move || {
+                let mut rt = match crate::runtime::Runtime::cpu() {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        while let Ok(w) = rt_rx.recv() {
+                            match w {
+                                RtWork::Exec { reply, .. } => {
+                                    let _ = reply.send(Err(Error::Runtime(format!(
+                                        "PJRT unavailable: {e}"
+                                    ))));
+                                }
+                                RtWork::Stop => break,
+                            }
+                        }
+                        return;
+                    }
+                };
+                'outer: loop {
+                    let first = match rt_rx.recv() {
+                        Ok(w) => w,
+                        Err(_) => break,
+                    };
+                    let mut batch = Vec::with_capacity(max_batch);
+                    match first {
+                        RtWork::Stop => break,
+                        w => batch.push(w),
+                    }
+                    let mut stop_after = false;
+                    while batch.len() < max_batch {
+                        match rt_rx.try_recv() {
+                            Ok(RtWork::Stop) => {
+                                stop_after = true;
+                                break;
+                            }
+                            Ok(w) => batch.push(w),
+                            Err(_) => break,
+                        }
+                    }
+                    m.exec_batches.fetch_add(1, Ordering::Relaxed);
+                    m.max_batch_seen
+                        .fetch_max(batch.len() as u64, Ordering::Relaxed);
+                    Self::run_batch(&mut rt, &art_dir, batch, &m);
+                    if stop_after {
+                        break 'outer;
+                    }
+                }
+            })
+            .map_err(|e| Error::Coordinator(format!("spawn runtime: {e}")))?;
+
+        Ok(Coordinator {
+            next_id: std::sync::atomic::AtomicU64::new(1),
+            opt_tx,
+            rt_tx,
+            metrics,
+            n_workers: cfg.workers.max(1),
+            workers,
+            rt_thread: Some(rt_thread),
+        })
+    }
+
+    fn run_batch(
+        rt: &mut crate::runtime::Runtime,
+        art_dir: &std::path::Path,
+        batch: Vec<RtWork>,
+        m: &Metrics,
+    ) {
+        for w in batch {
+            let RtWork::Exec {
+                name,
+                inputs,
+                reply,
+            } = w
+            else {
+                continue;
+            };
+            let path = art_dir.join(format!("{name}.hlo.txt"));
+            let before = rt.cache_len();
+            let r = rt.load(&path).and_then(|exe| {
+                if rt.cache_len() == before {
+                    m.exec_cache_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                let refs: Vec<(&[f32], &[usize])> = inputs
+                    .iter()
+                    .map(|(d, s)| (d.as_slice(), s.as_slice()))
+                    .collect();
+                rt.run_f32(&exe, &refs)
+            });
+            match r {
+                Ok(output) => {
+                    m.completed.fetch_add(1, Ordering::Relaxed);
+                    let _ = reply.send(Ok(Response::Executed { output }));
+                }
+                Err(e) => {
+                    m.failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = reply.send(Err(e));
+                }
+            }
+        }
+    }
+
+    /// Submit a job; returns a handle that resolves exactly once.
+    pub fn submit(&self, req: Request) -> Result<JobHandle> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = std::sync::mpsc::channel();
+        match req {
+            Request::Optimize(spec) => self
+                .opt_tx
+                .send(Work::Opt { spec, reply: tx })
+                .map_err(|_| Error::Coordinator("service stopped".into()))?,
+            Request::ExecArtifact { name, inputs } => self
+                .rt_tx
+                .send(RtWork::Exec {
+                    name,
+                    inputs,
+                    reply: tx,
+                })
+                .map_err(|_| Error::Coordinator("service stopped".into()))?,
+        }
+        Ok(JobHandle { id, rx })
+    }
+
+    /// Convenience: submit and wait.
+    pub fn call(&self, req: Request) -> Result<Response> {
+        self.submit(req)?.wait()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        for _ in 0..self.n_workers {
+            let _ = self.opt_tx.send(Work::Stop);
+        }
+        let _ = self.rt_tx.send(RtWork::Stop);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        if let Some(t) = self.rt_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opt_spec(n: usize) -> OptimizeSpec {
+        OptimizeSpec {
+            source:
+                "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))"
+                    .into(),
+            inputs: vec![("A".into(), vec![n, n]), ("B".into(), vec![n, n])],
+            rank_by: RankBy::CostModel,
+            subdivide_rnz: None,
+            top_k: 6,
+        }
+    }
+
+    #[test]
+    fn optimize_roundtrip() {
+        let c = Coordinator::start(Config {
+            workers: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let Response::Optimized(r) = c.call(Request::Optimize(opt_spec(16))).unwrap() else {
+            panic!("wrong response type")
+        };
+        assert_eq!(r.variants_explored, 6);
+        assert_eq!(r.ranking.first().unwrap().0, r.best);
+        assert_eq!(r.best, "map1 rnz map2"); // Table 1 winner
+    }
+
+    #[test]
+    fn jobs_route_to_matching_requests() {
+        // Distinct problem sizes in flight concurrently; every response
+        // must carry its own request's size.
+        let c = Coordinator::start(Config {
+            workers: 4,
+            ..Default::default()
+        })
+        .unwrap();
+        let sizes = [4usize, 8, 16, 32, 4, 8, 16, 32, 64, 64];
+        let handles: Vec<(usize, JobHandle)> = sizes
+            .iter()
+            .map(|&n| (n, c.submit(Request::Optimize(opt_spec(n))).unwrap()))
+            .collect();
+        for (n, h) in handles {
+            let Response::Optimized(r) = h.wait().unwrap() else { panic!() };
+            assert_eq!(r.input_elems, 2 * n * n, "routing mixed up sizes");
+        }
+        let m = &c.metrics;
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 10);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 10);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 0);
+        assert_eq!(m.in_flight(), 0);
+    }
+
+    #[test]
+    fn parse_errors_fail_cleanly() {
+        let c = Coordinator::start(Config::default()).unwrap();
+        let bad = OptimizeSpec {
+            source: "(map (lam".into(),
+            inputs: vec![],
+            rank_by: RankBy::CostModel,
+            subdivide_rnz: None,
+            top_k: 3,
+        };
+        assert!(c.call(Request::Optimize(bad)).is_err());
+        assert_eq!(c.metrics.failed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn artifact_execution_and_batching() {
+        if !crate::runtime::artifact_path("matmul_xla_256").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let c = Coordinator::start(Config {
+            workers: 1,
+            max_batch: 4,
+            ..Default::default()
+        })
+        .unwrap();
+        let n = 256usize;
+        let a = vec![1f32; n * n];
+        let b = vec![2f32; n * n];
+        let mk = || Request::ExecArtifact {
+            name: "matmul_xla_256".into(),
+            inputs: vec![(a.clone(), vec![n, n]), (b.clone(), vec![n, n])],
+        };
+        let handles: Vec<JobHandle> = (0..6).map(|_| c.submit(mk()).unwrap()).collect();
+        for h in handles {
+            let Response::Executed { output } = h.wait().unwrap() else { panic!() };
+            assert_eq!(output.len(), n * n);
+            assert!((output[0] - (2 * n) as f32).abs() < 1e-2);
+        }
+        let m = &c.metrics;
+        assert!(m.max_batch_seen.load(Ordering::Relaxed) <= 4);
+        assert!(m.exec_cache_hits.load(Ordering::Relaxed) >= 5);
+        let missing = Request::ExecArtifact {
+            name: "no_such_artifact".into(),
+            inputs: vec![],
+        };
+        assert!(c.call(missing).is_err());
+    }
+}

@@ -1,0 +1,242 @@
+//! The optimization pipeline executed by worker threads:
+//! parse → typecheck → fuse → (optional subdivision) → enumerate →
+//! rank (cost model or cache simulator) → report.
+//!
+//! This is the paper's §3-4 flow packaged as a service call.
+
+use crate::cachesim::{simulate, HierarchyConfig};
+use crate::costmodel::estimate;
+use crate::dsl;
+use crate::enumerate::{enumerate_all, Variant};
+use crate::exec::lower;
+use crate::layout::Layout;
+use crate::rewrite::{fusion, normalize, subdivision, Ctx};
+use crate::typecheck::Env;
+use crate::{Error, Result};
+
+/// How variants are ranked.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RankBy {
+    /// Analytical cost model (fast; the "early cut" metric).
+    CostModel,
+    /// Trace-driven cache simulation on the CPU hierarchy (slower,
+    /// sharper).
+    CacheSim,
+}
+
+/// An optimization request.
+#[derive(Clone, Debug)]
+pub struct OptimizeSpec {
+    /// DSL source (s-expression; see [`crate::dsl::parse`]).
+    pub source: String,
+    /// Input name → row-major shape (outermost first).
+    pub inputs: Vec<(String, Vec<usize>)>,
+    pub rank_by: RankBy,
+    /// Subdivide every reduction with this block size before enumerating
+    /// (the paper's Table 2 move).
+    pub subdivide_rnz: Option<usize>,
+    /// Keep this many rows in the report.
+    pub top_k: usize,
+}
+
+/// The pipeline's report.
+#[derive(Clone, Debug)]
+pub struct OptimizeResult {
+    pub variants_explored: usize,
+    /// (display key, score) sorted ascending (best first).
+    pub ranking: Vec<(String, f64)>,
+    /// Display key of the winner.
+    pub best: String,
+    /// Pretty-printed winning expression.
+    pub best_expr: String,
+    /// Total input elements (diagnostic; ties results to requests).
+    pub input_elems: usize,
+}
+
+/// Run the pipeline synchronously.
+pub fn optimize(spec: &OptimizeSpec) -> Result<OptimizeResult> {
+    let expr = dsl::parse(&spec.source)?;
+    let mut env = Env::new();
+    let mut input_elems = 0usize;
+    for (name, shape) in &spec.inputs {
+        let layout = Layout::row_major(shape);
+        input_elems += layout.len();
+        env.inputs.insert(name.clone(), layout);
+    }
+    crate::typecheck::infer(&expr, &env)?;
+
+    // Fuse pipelines so the executor's normal form holds.
+    let fused = fusion::fuse(&expr);
+    let ctx = Ctx::new(env.clone());
+
+    // Optional subdivision of every reduction (innermost-first so the
+    // spine stays well-labelled).
+    let (start_expr, labels) = match spec.subdivide_rnz {
+        None => (fused.clone(), spine_labels(&fused)?),
+        Some(b) => {
+            let subdivided = subdivide_deepest_rnz(&fused, b, &ctx)?;
+            // Bring subdivided bound-variable views back to the input level
+            // (the paper's A^(1a)-style bookkeeping) so exchange rules can
+            // traverse the spine.
+            let hoisted = crate::rewrite::rewrite_bottom_up(
+                &[subdivision::hoist_subdiv()],
+                &subdivided,
+            );
+            let normalized = normalize(&hoisted);
+            let labels = spine_labels(&normalized)?;
+            (normalized, labels)
+        }
+    };
+    let label_refs: Vec<&str> = labels.iter().map(|s| s.as_str()).collect();
+    let start = Variant::new(start_expr, &label_refs);
+
+    let variants = enumerate_all(&start, &ctx, 4096)?;
+    let mut ranking: Vec<(String, f64)> = Vec::with_capacity(variants.len());
+    let mut best_expr = None;
+    for v in &variants {
+        let prog = lower(&v.expr, &env)?;
+        let score = match spec.rank_by {
+            RankBy::CostModel => estimate(&prog).score(),
+            RankBy::CacheSim => {
+                simulate(&prog, &HierarchyConfig::cpu_i5_7300hq())?.cost_cycles()
+            }
+        };
+        ranking.push((v.display_key(), score));
+        best_expr = match best_expr {
+            None => Some((score, v.expr.clone())),
+            Some((s, _)) if score < s => Some((score, v.expr.clone())),
+            keep => keep,
+        };
+    }
+    ranking.sort_by(|a, b| a.1.total_cmp(&b.1));
+    let variants_explored = ranking.len();
+    ranking.truncate(spec.top_k.max(1));
+    let (_, best_e) =
+        best_expr.ok_or_else(|| Error::Rewrite("no variants produced".into()))?;
+    Ok(OptimizeResult {
+        variants_explored,
+        best: ranking[0].0.clone(),
+        best_expr: dsl::pretty(&best_e),
+        ranking,
+        input_elems,
+    })
+}
+
+/// Default spine labels: map1, map2, …, rnz1, … by kind and order.
+fn spine_labels(e: &dsl::Expr) -> Result<Vec<String>> {
+    let kinds = crate::enumerate::spine_kinds(e);
+    if kinds.is_empty() {
+        return Err(Error::Rewrite("expression has no HoF spine".into()));
+    }
+    let mut map_n = 0usize;
+    let mut rnz_n = 0usize;
+    Ok(kinds
+        .iter()
+        .map(|k| {
+            if *k == "map" {
+                map_n += 1;
+                format!("map{map_n}")
+            } else {
+                rnz_n += 1;
+                format!("rnz{rnz_n}")
+            }
+        })
+        .collect())
+}
+
+/// Subdivide the deepest `rnz` on the spine (the paper's Table 2 starting
+/// move), then leave rearrangement to the enumerator.
+fn subdivide_deepest_rnz(e: &dsl::Expr, b: usize, ctx: &Ctx) -> Result<dsl::Expr> {
+    use dsl::Expr;
+    fn rec(e: &Expr, b: usize, ctx: &Ctx) -> Result<Expr> {
+        match e {
+            Expr::Nzip { f, args } => {
+                let Expr::Lam { params, body } = &**f else {
+                    return Err(Error::Rewrite("nzip operator is not a lambda".into()));
+                };
+                let mut ctx2 = ctx.clone();
+                for (p, a) in params.iter().zip(args) {
+                    ctx2.vars.insert(p.clone(), ctx.layout_of(a)?.peel_outer()?);
+                }
+                let new_body = rec(body, b, &ctx2)?;
+                Ok(Expr::Nzip {
+                    f: Box::new(Expr::Lam {
+                        params: params.clone(),
+                        body: Box::new(new_body),
+                    }),
+                    args: args.clone(),
+                })
+            }
+            Expr::Rnz { .. } => subdivision::subdivide_rnz(e, b, ctx).ok_or_else(|| {
+                Error::Rewrite(format!("cannot subdivide reduction with block {b}"))
+            }),
+            other => Err(Error::Rewrite(format!(
+                "no reduction on the spine: {}",
+                dsl::pretty(other)
+            ))),
+        }
+    }
+    rec(e, b, ctx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn matmul_spec(n: usize, rank_by: RankBy) -> OptimizeSpec {
+        OptimizeSpec {
+            source:
+                "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))"
+                    .into(),
+            inputs: vec![("A".into(), vec![n, n]), ("B".into(), vec![n, n])],
+            rank_by,
+            subdivide_rnz: None,
+            top_k: 10,
+        }
+    }
+
+    #[test]
+    fn pipeline_finds_table1_winner_by_cost_model() {
+        let r = optimize(&matmul_spec(32, RankBy::CostModel)).unwrap();
+        assert_eq!(r.variants_explored, 6);
+        assert_eq!(r.best, "map1 rnz map2"); // mapA rnz mapB
+    }
+
+    #[test]
+    fn pipeline_finds_table1_winner_by_cachesim() {
+        // needs matrices larger than L1 for the ordering to show
+        let r = optimize(&matmul_spec(128, RankBy::CacheSim)).unwrap();
+        assert_eq!(r.variants_explored, 6);
+        assert_eq!(r.best, "map1 rnz map2");
+    }
+
+    #[test]
+    fn pipeline_with_subdivision_explores_twelve() {
+        let mut spec = matmul_spec(32, RankBy::CostModel);
+        spec.subdivide_rnz = Some(4);
+        let r = optimize(&spec).unwrap();
+        assert_eq!(r.variants_explored, 12); // Table 2
+    }
+
+    #[test]
+    fn pipeline_fuses_before_enumerating() {
+        // an unfused pipeline over vectors: map f (map g v) reduced
+        let spec = OptimizeSpec {
+            source: "(rnz + * (map (lam (x) (app * x 2.0)) (in u)) (in v))".into(),
+            inputs: vec![("u".into(), vec![64]), ("v".into(), vec![64])],
+            rank_by: RankBy::CostModel,
+            subdivide_rnz: None,
+            top_k: 3,
+        };
+        let r = optimize(&spec).unwrap();
+        assert_eq!(r.variants_explored, 1); // single rnz after fusion
+        assert!(r.best_expr.starts_with("(rnz"));
+    }
+
+    #[test]
+    fn unknown_input_is_an_error() {
+        let mut spec = matmul_spec(8, RankBy::CostModel);
+        spec.inputs.pop();
+        assert!(optimize(&spec).is_err());
+    }
+}

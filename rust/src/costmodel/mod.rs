@@ -1,0 +1,185 @@
+//! Analytical cost model — the paper's "early cut rule" substrate
+//! (Conclusions / Future work: "an early cut rule is also necessary to
+//! prune rearrangements which are not feasible").
+//!
+//! Without executing or even tracing a variant, we estimate from the loop
+//! nest alone:
+//!
+//! - **stride badness** — for each leaf input, the stride of the innermost
+//!   loop that advances it, penalising non-unit innermost strides (the
+//!   paper's "consecutive reads are the best for the memory controller");
+//! - **accumulator footprint** — the paper notes raising reductions
+//!   outwards grows the temporaries ("1a uses only scalar accumulators,
+//!   while 1b and 1c require full columns");
+//! - **parallelism width** — the extent product of the map levels above
+//!   the first reduction (§2.1's thread-spawn considerations).
+//!
+//! The estimate ranks variants for pruning; exact ranking comes from the
+//! cache simulator or real execution.
+
+use crate::exec::{Node, Program};
+
+/// Static cost estimate for one lowered variant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostEstimate {
+    /// Estimated memory traffic in cache-line units (lower is better).
+    pub traffic: f64,
+    /// Peak accumulator (reduction destination) footprint in elements.
+    pub acc_footprint: usize,
+    /// Product of map extents above the first reduction — available outer
+    /// parallelism.
+    pub outer_parallelism: usize,
+    /// Total leaf evaluations (invariant across rearrangements of the same
+    /// computation; sanity metric).
+    pub flops: u64,
+}
+
+impl CostEstimate {
+    /// Scalar ranking score (lower = better): traffic dominates; large
+    /// accumulators are penalised lightly.
+    pub fn score(&self) -> f64 {
+        self.traffic + 0.1 * self.acc_footprint as f64
+    }
+}
+
+/// Estimate the cost of a lowered program.
+pub fn estimate(prog: &Program) -> CostEstimate {
+    let mut est = CostEstimate {
+        traffic: 0.0,
+        acc_footprint: 0,
+        outer_parallelism: 1,
+        flops: 0,
+    };
+    walk(&prog.root, 1.0, &mut est, &mut Vec::new(), true);
+    est
+}
+
+/// `iters`: product of enclosing loop extents. `stack`: per-level advance
+/// lists, innermost last, to find which loop moves each track.
+fn walk(
+    node: &Node,
+    iters: f64,
+    est: &mut CostEstimate,
+    stack: &mut Vec<Vec<(usize, usize)>>,
+    above_reduction: bool,
+) {
+    match node {
+        Node::MapLoop {
+            extent,
+            advances,
+            body,
+            ..
+        } => {
+            if above_reduction {
+                est.outer_parallelism *= extent;
+            }
+            stack.push(advances.iter().map(|a| (a.dst, a.stride)).collect());
+            walk(body, iters * *extent as f64, est, stack, above_reduction);
+            stack.pop();
+        }
+        Node::RedLoop {
+            extent,
+            advances,
+            body_size,
+            body,
+            ..
+        } => {
+            est.acc_footprint = est.acc_footprint.max(*body_size);
+            stack.push(advances.iter().map(|a| (a.dst, a.stride)).collect());
+            walk(body, iters * *extent as f64, est, stack, false);
+            stack.pop();
+        }
+        Node::Leaf(k) => {
+            est.flops += iters as u64;
+            // Per input track: the innermost loop that advances it decides
+            // the per-access line cost. stride 0 → register reuse; stride 1
+            // → 1/8 line per access; large stride → a fresh line each time.
+            for &t in &k.tracks {
+                let mut stride: Option<usize> = None;
+                for level in stack.iter().rev() {
+                    if let Some(&(_, s)) = level.iter().find(|&&(tt, _)| tt == t) {
+                        stride = Some(s);
+                        break;
+                    }
+                }
+                let per_access = match stride {
+                    None | Some(0) => 0.01,
+                    Some(1) => 0.125,
+                    Some(s) if s < 8 => s as f64 * 0.125,
+                    _ => 1.0,
+                };
+                est.traffic += iters * per_access;
+            }
+            est.traffic += iters * 0.125; // destination
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::enumerate::{enumerate_all, starts};
+    use crate::exec::lower;
+    use crate::layout::Layout;
+    use crate::rewrite::Ctx;
+    use crate::typecheck::Env;
+
+    fn variants(n: usize) -> Vec<(String, CostEstimate)> {
+        let env = Env::new()
+            .with("A", Layout::row_major(&[n, n]))
+            .with("B", Layout::row_major(&[n, n]));
+        let ctx = Ctx::new(env.clone());
+        enumerate_all(&starts::matmul_naive_variant(), &ctx, 10)
+            .unwrap()
+            .iter()
+            .map(|v| {
+                let prog = lower(&v.expr, &env).unwrap();
+                (v.display_key(), estimate(&prog))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn flops_invariant_across_rearrangements() {
+        let vs = variants(16);
+        let f0 = vs[0].1.flops;
+        for (k, e) in &vs {
+            assert_eq!(e.flops, f0, "{k}");
+        }
+    }
+
+    #[test]
+    fn best_known_variant_scores_best() {
+        // Table 1: mapA rnz mapB wins; mapB rnz mapA loses.
+        let vs: std::collections::HashMap<_, _> = variants(64).into_iter().collect();
+        let best = vs["mapA rnz mapB"].score();
+        let worst = vs["mapB rnz mapA"].score();
+        let naive = vs["mapA mapB rnz"].score();
+        assert!(best < naive, "best {best} naive {naive}");
+        assert!(naive < worst, "naive {naive} worst {worst}");
+    }
+
+    #[test]
+    fn flipped_variants_use_bigger_accumulators() {
+        // paper: "1a uses only scalar accumulators, while 1b and 1c require
+        // full columns"
+        let vs: std::collections::HashMap<_, _> = variants(32).into_iter().collect();
+        assert_eq!(vs["mapA mapB rnz"].acc_footprint, 1);
+        assert!(vs["rnz mapA mapB"].acc_footprint > 1);
+    }
+
+    #[test]
+    fn outer_parallelism_counts_maps_above_reduction() {
+        let vs: std::collections::HashMap<_, _> = variants(32).into_iter().collect();
+        assert_eq!(vs["mapA mapB rnz"].outer_parallelism, 32 * 32);
+        assert_eq!(vs["rnz mapA mapB"].outer_parallelism, 1);
+    }
+
+    #[test]
+    fn early_cut_keeps_best() {
+        let mut vs = variants(32);
+        vs.sort_by(|a, b| a.1.score().total_cmp(&b.1.score()));
+        let kept: Vec<&String> = vs.iter().take(3).map(|(k, _)| k).collect();
+        assert!(kept.contains(&&"mapA rnz mapB".to_string()));
+    }
+}

@@ -1,0 +1,201 @@
+//! Ergonomic combinators for constructing [`Expr`] trees in Rust code.
+//!
+//! These mirror the paper's surface syntax: `map`/`zip` are the 1- and
+//! 2-ary cases of `nzip`, `dot u v = rnz (+) (*) u v`, etc.
+
+use super::expr::{Expr, Prim};
+
+pub fn var(name: &str) -> Expr {
+    Expr::Var(name.to_string())
+}
+
+pub fn lit(x: f64) -> Expr {
+    Expr::Lit(x)
+}
+
+pub fn input(name: &str) -> Expr {
+    Expr::Input(name.to_string())
+}
+
+pub fn add() -> Expr {
+    Expr::Prim(Prim::Add)
+}
+
+pub fn sub() -> Expr {
+    Expr::Prim(Prim::Sub)
+}
+
+pub fn mul() -> Expr {
+    Expr::Prim(Prim::Mul)
+}
+
+pub fn div() -> Expr {
+    Expr::Prim(Prim::Div)
+}
+
+pub fn pmax() -> Expr {
+    Expr::Prim(Prim::Max)
+}
+
+pub fn lam(params: &[&str], body: Expr) -> Expr {
+    Expr::Lam {
+        params: params.iter().map(|s| s.to_string()).collect(),
+        body: Box::new(body),
+    }
+}
+
+pub fn lam1(p: &str, body: Expr) -> Expr {
+    lam(&[p], body)
+}
+
+pub fn lam2(p1: &str, p2: &str, body: Expr) -> Expr {
+    lam(&[p1, p2], body)
+}
+
+pub fn lam3(p1: &str, p2: &str, p3: &str, body: Expr) -> Expr {
+    lam(&[p1, p2, p3], body)
+}
+
+pub fn app(f: Expr, args: Vec<Expr>) -> Expr {
+    Expr::App {
+        f: Box::new(f),
+        args,
+    }
+}
+
+pub fn app1(f: Expr, a: Expr) -> Expr {
+    app(f, vec![a])
+}
+
+pub fn app2(f: Expr, a: Expr, b: Expr) -> Expr {
+    app(f, vec![a, b])
+}
+
+/// `nzip f xs` — variadic map/zip.
+pub fn nzip(f: Expr, args: Vec<Expr>) -> Expr {
+    Expr::Nzip {
+        f: Box::new(f),
+        args,
+    }
+}
+
+/// `map f x` — unary nzip.
+pub fn map(f: Expr, x: Expr) -> Expr {
+    nzip(f, vec![x])
+}
+
+/// `zip f x y` — binary nzip (Haskell `zipWith`).
+pub fn zip(f: Expr, x: Expr, y: Expr) -> Expr {
+    nzip(f, vec![x, y])
+}
+
+/// `rnz r m xs` — reduce-of-n-ary-zip.
+pub fn rnz(r: Expr, m: Expr, args: Vec<Expr>) -> Expr {
+    Expr::Rnz {
+        r: Box::new(r),
+        m: Box::new(m),
+        args,
+    }
+}
+
+/// `reduce r x = rnz r id x` with the identity zipper.
+pub fn reduce(r: Expr, x: Expr) -> Expr {
+    rnz(r, lam1("e%id", var("e%id")), vec![x])
+}
+
+/// `dot u v = rnz (+) (*) u v` (paper eq. 29).
+pub fn dot(u: Expr, v: Expr) -> Expr {
+    rnz(add(), mul(), vec![u, v])
+}
+
+/// `lift f` — apply `f` elementwise one container level down. `lift (+)`
+/// is the paper's `zip (+)` reduction operator for vector accumulators.
+pub fn lift(f: Expr) -> Expr {
+    Expr::Lift { f: Box::new(f) }
+}
+
+/// `lift^k f`.
+pub fn lift_n(f: Expr, k: usize) -> Expr {
+    (0..k).fold(f, |acc, _| lift(acc))
+}
+
+pub fn subdiv(d: usize, b: usize, arg: Expr) -> Expr {
+    Expr::Subdiv {
+        d,
+        b,
+        arg: Box::new(arg),
+    }
+}
+
+pub fn flatten(d: usize, arg: Expr) -> Expr {
+    Expr::Flatten {
+        d,
+        arg: Box::new(arg),
+    }
+}
+
+pub fn flip2(d1: usize, d2: usize, arg: Expr) -> Expr {
+    Expr::Flip {
+        d1,
+        d2,
+        arg: Box::new(arg),
+    }
+}
+
+/// `flip d` with the default second dimension `d+1` (paper convention).
+pub fn flip(d: usize, arg: Expr) -> Expr {
+    flip2(d, d + 1, arg)
+}
+
+/// The textbook matrix–vector product `map (\r -> dot r v) A`
+/// (paper eq. 39/46). `a` must be a row-major matrix input, `v` a vector.
+pub fn matvec_naive(a: Expr, v: Expr) -> Expr {
+    map(lam1("r", dot(var("r"), v)), a)
+}
+
+/// The textbook matrix–matrix product
+/// `map (\rA -> map (\cB -> dot rA cB) (flip 0 B)) A` (paper eq. 51;
+/// the flip makes "columns of B" explicit for a row-major `B`).
+pub fn matmul_naive(a: Expr, b: Expr) -> Expr {
+    map(
+        lam1("rA", map(lam1("cB", dot(var("rA"), var("cB"))), flip(0, b))),
+        a,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_builds_rnz() {
+        let e = dot(input("u"), input("v"));
+        match e {
+            Expr::Rnz { r, m, args } => {
+                assert_eq!(*r, add());
+                assert_eq!(*m, mul());
+                assert_eq!(args.len(), 2);
+            }
+            _ => panic!("expected rnz"),
+        }
+    }
+
+    #[test]
+    fn matmul_shape() {
+        let e = matmul_naive(input("A"), input("B"));
+        assert_eq!(e.inputs(), vec!["B".to_string(), "A".to_string()]);
+        assert!(e.size() > 5);
+    }
+
+    #[test]
+    fn lift_n_nests() {
+        let e = lift_n(add(), 2);
+        match e {
+            Expr::Lift { f } => match *f {
+                Expr::Lift { .. } => {}
+                _ => panic!("expected nested lift"),
+            },
+            _ => panic!("expected lift"),
+        }
+    }
+}

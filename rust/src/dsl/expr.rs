@@ -1,0 +1,450 @@
+//! Core expression AST and the lambda-calculus plumbing (free variables,
+//! capture-avoiding substitution, alpha-equivalence) that the rewrite engine
+//! is built on.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Scalar primitive operations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Prim {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+    Neg,
+    Exp,
+    Sqrt,
+    Tanh,
+    Relu,
+}
+
+impl Prim {
+    /// Number of arguments the primitive consumes.
+    pub fn arity(self) -> usize {
+        match self {
+            Prim::Add | Prim::Sub | Prim::Mul | Prim::Div | Prim::Max | Prim::Min => 2,
+            Prim::Neg | Prim::Exp | Prim::Sqrt | Prim::Tanh | Prim::Relu => 1,
+        }
+    }
+
+    /// Apply to scalar values.
+    pub fn apply(self, args: &[f64]) -> f64 {
+        debug_assert_eq!(args.len(), self.arity());
+        match self {
+            Prim::Add => args[0] + args[1],
+            Prim::Sub => args[0] - args[1],
+            Prim::Mul => args[0] * args[1],
+            Prim::Div => args[0] / args[1],
+            Prim::Max => args[0].max(args[1]),
+            Prim::Min => args[0].min(args[1]),
+            Prim::Neg => -args[0],
+            Prim::Exp => args[0].exp(),
+            Prim::Sqrt => args[0].sqrt(),
+            Prim::Tanh => args[0].tanh(),
+            Prim::Relu => args[0].max(0.0),
+        }
+    }
+
+    /// `true` for operators that are associative (allows reduction
+    /// regrouping, paper §2.1).
+    pub fn is_associative(self) -> bool {
+        matches!(self, Prim::Add | Prim::Mul | Prim::Max | Prim::Min)
+    }
+
+    /// `true` for operators that are also commutative (allows reduction
+    /// reordering).
+    pub fn is_commutative(self) -> bool {
+        matches!(self, Prim::Add | Prim::Mul | Prim::Max | Prim::Min)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Prim::Add => "+",
+            Prim::Sub => "-",
+            Prim::Mul => "*",
+            Prim::Div => "/",
+            Prim::Max => "max",
+            Prim::Min => "min",
+            Prim::Neg => "neg",
+            Prim::Exp => "exp",
+            Prim::Sqrt => "sqrt",
+            Prim::Tanh => "tanh",
+            Prim::Relu => "relu",
+        }
+    }
+}
+
+/// The expression language (paper §2.1 / §3).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    /// Bound variable.
+    Var(String),
+    /// Scalar literal.
+    Lit(f64),
+    /// Scalar primitive (used curried: `App(Prim(Add), [x, y])`).
+    Prim(Prim),
+    /// Multi-parameter lambda abstraction.
+    Lam { params: Vec<String>, body: Box<Expr> },
+    /// Application (possibly partial for binary prims inside `lift`).
+    App { f: Box<Expr>, args: Vec<Expr> },
+    /// `nzip f xs` — the variadic map/zip (paper eq. 20): consumes the
+    /// outermost dimension of each argument in lock-step and applies `f`.
+    Nzip { f: Box<Expr>, args: Vec<Expr> },
+    /// `rnz r m xs` — reduce-of-n-ary-zip (paper eq. 26): reduces
+    /// `m x0[i] … xn[i]` over `i` with the (at least associative) `r`.
+    Rnz {
+        r: Box<Expr>,
+        m: Box<Expr>,
+        args: Vec<Expr>,
+    },
+    /// `lift f` — raise `f` to operate elementwise over one container
+    /// level (paper eq. 41). `lift (+)` is the paper's `zip (+)`.
+    Lift { f: Box<Expr> },
+    /// `subdiv d b s` — split dimension `d` into blocks of `b`.
+    Subdiv { d: usize, b: usize, arg: Box<Expr> },
+    /// `flatten d s` — merge dimensions `d` and `d+1`.
+    Flatten { d: usize, arg: Box<Expr> },
+    /// `flip d1 d2 s` — swap two dimensions of the logical layout.
+    Flip { d1: usize, d2: usize, arg: Box<Expr> },
+    /// Named external array input; its layout lives in the environment.
+    Input(String),
+}
+
+static FRESH: AtomicU64 = AtomicU64::new(0);
+
+/// Generate a globally fresh variable name (used by capture-avoiding
+/// substitution and by rewrite rules that must invent binders).
+pub fn fresh_var(hint: &str) -> String {
+    let n = FRESH.fetch_add(1, Ordering::Relaxed);
+    format!("{hint}%{n}")
+}
+
+impl Expr {
+    /// Free variables of the expression.
+    pub fn free_vars(&self) -> HashSet<String> {
+        let mut out = HashSet::new();
+        self.collect_free(&mut Vec::new(), &mut out);
+        out
+    }
+
+    fn collect_free(&self, bound: &mut Vec<String>, out: &mut HashSet<String>) {
+        match self {
+            Expr::Var(x) => {
+                if !bound.iter().any(|b| b == x) {
+                    out.insert(x.clone());
+                }
+            }
+            Expr::Lit(_) | Expr::Prim(_) | Expr::Input(_) => {}
+            Expr::Lam { params, body } => {
+                let n = params.len();
+                bound.extend(params.iter().cloned());
+                body.collect_free(bound, out);
+                bound.truncate(bound.len() - n);
+            }
+            Expr::App { f, args } => {
+                f.collect_free(bound, out);
+                for a in args {
+                    a.collect_free(bound, out);
+                }
+            }
+            Expr::Nzip { f, args } => {
+                f.collect_free(bound, out);
+                for a in args {
+                    a.collect_free(bound, out);
+                }
+            }
+            Expr::Rnz { r, m, args } => {
+                r.collect_free(bound, out);
+                m.collect_free(bound, out);
+                for a in args {
+                    a.collect_free(bound, out);
+                }
+            }
+            Expr::Lift { f } => f.collect_free(bound, out),
+            Expr::Subdiv { arg, .. } | Expr::Flatten { arg, .. } | Expr::Flip { arg, .. } => {
+                arg.collect_free(bound, out)
+            }
+        }
+    }
+
+    /// Capture-avoiding substitution `self[x := val]`.
+    pub fn subst(&self, x: &str, val: &Expr) -> Expr {
+        match self {
+            Expr::Var(y) => {
+                if y == x {
+                    val.clone()
+                } else {
+                    self.clone()
+                }
+            }
+            Expr::Lit(_) | Expr::Prim(_) | Expr::Input(_) => self.clone(),
+            Expr::Lam { params, body } => {
+                if params.iter().any(|p| p == x) {
+                    // x is shadowed; nothing to do below.
+                    return self.clone();
+                }
+                let val_free = val.free_vars();
+                if params.iter().any(|p| val_free.contains(p)) {
+                    // Rename clashing binders to fresh names first.
+                    let mut new_params = Vec::with_capacity(params.len());
+                    let mut new_body = (**body).clone();
+                    for p in params {
+                        if val_free.contains(p) {
+                            let np = fresh_var(p.split('%').next().unwrap_or(p));
+                            new_body = new_body.subst(p, &Expr::Var(np.clone()));
+                            new_params.push(np);
+                        } else {
+                            new_params.push(p.clone());
+                        }
+                    }
+                    Expr::Lam {
+                        params: new_params,
+                        body: Box::new(new_body.subst(x, val)),
+                    }
+                } else {
+                    Expr::Lam {
+                        params: params.clone(),
+                        body: Box::new(body.subst(x, val)),
+                    }
+                }
+            }
+            Expr::App { f, args } => Expr::App {
+                f: Box::new(f.subst(x, val)),
+                args: args.iter().map(|a| a.subst(x, val)).collect(),
+            },
+            Expr::Nzip { f, args } => Expr::Nzip {
+                f: Box::new(f.subst(x, val)),
+                args: args.iter().map(|a| a.subst(x, val)).collect(),
+            },
+            Expr::Rnz { r, m, args } => Expr::Rnz {
+                r: Box::new(r.subst(x, val)),
+                m: Box::new(m.subst(x, val)),
+                args: args.iter().map(|a| a.subst(x, val)).collect(),
+            },
+            Expr::Lift { f } => Expr::Lift {
+                f: Box::new(f.subst(x, val)),
+            },
+            Expr::Subdiv { d, b, arg } => Expr::Subdiv {
+                d: *d,
+                b: *b,
+                arg: Box::new(arg.subst(x, val)),
+            },
+            Expr::Flatten { d, arg } => Expr::Flatten {
+                d: *d,
+                arg: Box::new(arg.subst(x, val)),
+            },
+            Expr::Flip { d1, d2, arg } => Expr::Flip {
+                d1: *d1,
+                d2: *d2,
+                arg: Box::new(arg.subst(x, val)),
+            },
+        }
+    }
+
+    /// Structural equality up to renaming of bound variables.
+    pub fn alpha_eq(&self, other: &Expr) -> bool {
+        fn go(a: &Expr, b: &Expr, env: &mut Vec<(String, String)>) -> bool {
+            match (a, b) {
+                (Expr::Var(x), Expr::Var(y)) => {
+                    // Find the innermost binding of either side.
+                    for (bx, by) in env.iter().rev() {
+                        let hit_x = bx == x;
+                        let hit_y = by == y;
+                        if hit_x || hit_y {
+                            return hit_x && hit_y;
+                        }
+                    }
+                    x == y
+                }
+                (Expr::Lit(x), Expr::Lit(y)) => x == y,
+                (Expr::Prim(x), Expr::Prim(y)) => x == y,
+                (Expr::Input(x), Expr::Input(y)) => x == y,
+                (
+                    Expr::Lam { params: p1, body: b1 },
+                    Expr::Lam { params: p2, body: b2 },
+                ) => {
+                    if p1.len() != p2.len() {
+                        return false;
+                    }
+                    let n = p1.len();
+                    for (x, y) in p1.iter().zip(p2) {
+                        env.push((x.clone(), y.clone()));
+                    }
+                    let r = go(b1, b2, env);
+                    env.truncate(env.len() - n);
+                    r
+                }
+                (Expr::App { f: f1, args: a1 }, Expr::App { f: f2, args: a2 }) => {
+                    go(f1, f2, env)
+                        && a1.len() == a2.len()
+                        && a1.iter().zip(a2).all(|(x, y)| go(x, y, env))
+                }
+                (Expr::Nzip { f: f1, args: a1 }, Expr::Nzip { f: f2, args: a2 }) => {
+                    go(f1, f2, env)
+                        && a1.len() == a2.len()
+                        && a1.iter().zip(a2).all(|(x, y)| go(x, y, env))
+                }
+                (
+                    Expr::Rnz { r: r1, m: m1, args: a1 },
+                    Expr::Rnz { r: r2, m: m2, args: a2 },
+                ) => {
+                    go(r1, r2, env)
+                        && go(m1, m2, env)
+                        && a1.len() == a2.len()
+                        && a1.iter().zip(a2).all(|(x, y)| go(x, y, env))
+                }
+                (Expr::Lift { f: f1 }, Expr::Lift { f: f2 }) => go(f1, f2, env),
+                (
+                    Expr::Subdiv { d: d1, b: b1, arg: x },
+                    Expr::Subdiv { d: d2, b: b2, arg: y },
+                ) => d1 == d2 && b1 == b2 && go(x, y, env),
+                (Expr::Flatten { d: d1, arg: x }, Expr::Flatten { d: d2, arg: y }) => {
+                    d1 == d2 && go(x, y, env)
+                }
+                (
+                    Expr::Flip { d1: a1, d2: b1, arg: x },
+                    Expr::Flip { d1: a2, d2: b2, arg: y },
+                ) => a1 == a2 && b1 == b2 && go(x, y, env),
+                _ => false,
+            }
+        }
+        go(self, other, &mut Vec::new())
+    }
+
+    /// Number of AST nodes (used by rewrite strategies and tests).
+    pub fn size(&self) -> usize {
+        1 + match self {
+            Expr::Var(_) | Expr::Lit(_) | Expr::Prim(_) | Expr::Input(_) => 0,
+            Expr::Lam { body, .. } => body.size(),
+            Expr::App { f, args } => f.size() + args.iter().map(Expr::size).sum::<usize>(),
+            Expr::Nzip { f, args } => f.size() + args.iter().map(Expr::size).sum::<usize>(),
+            Expr::Rnz { r, m, args } => {
+                r.size() + m.size() + args.iter().map(Expr::size).sum::<usize>()
+            }
+            Expr::Lift { f } => f.size(),
+            Expr::Subdiv { arg, .. } | Expr::Flatten { arg, .. } | Expr::Flip { arg, .. } => {
+                arg.size()
+            }
+        }
+    }
+
+    /// Names of all `Input`s referenced by the expression.
+    pub fn inputs(&self) -> Vec<String> {
+        fn go(e: &Expr, out: &mut Vec<String>) {
+            match e {
+                Expr::Input(n) => {
+                    if !out.contains(n) {
+                        out.push(n.clone());
+                    }
+                }
+                Expr::Var(_) | Expr::Lit(_) | Expr::Prim(_) => {}
+                Expr::Lam { body, .. } => go(body, out),
+                Expr::App { f, args } | Expr::Nzip { f, args } => {
+                    go(f, out);
+                    args.iter().for_each(|a| go(a, out));
+                }
+                Expr::Rnz { r, m, args } => {
+                    go(r, out);
+                    go(m, out);
+                    args.iter().for_each(|a| go(a, out));
+                }
+                Expr::Lift { f } => go(f, out),
+                Expr::Subdiv { arg, .. } | Expr::Flatten { arg, .. } | Expr::Flip { arg, .. } => {
+                    go(arg, out)
+                }
+            }
+        }
+        let mut out = Vec::new();
+        go(self, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::builder::*;
+
+    #[test]
+    fn prim_arity_and_apply() {
+        assert_eq!(Prim::Add.arity(), 2);
+        assert_eq!(Prim::Neg.arity(), 1);
+        assert_eq!(Prim::Add.apply(&[2.0, 3.0]), 5.0);
+        assert_eq!(Prim::Mul.apply(&[2.0, 3.0]), 6.0);
+        assert_eq!(Prim::Relu.apply(&[-1.0]), 0.0);
+        assert_eq!(Prim::Max.apply(&[1.0, 7.0]), 7.0);
+    }
+
+    #[test]
+    fn free_vars_respects_binding() {
+        // \x -> x + y  has free var y only
+        let e = lam1("x", app2(add(), var("x"), var("y")));
+        let fv = e.free_vars();
+        assert!(fv.contains("y"));
+        assert!(!fv.contains("x"));
+    }
+
+    #[test]
+    fn subst_avoids_capture() {
+        // (\y -> x + y)[x := y]  must NOT become \y -> y + y
+        let e = lam1("y", app2(add(), var("x"), var("y")));
+        let s = e.subst("x", &var("y"));
+        if let Expr::Lam { params, body } = &s {
+            assert_ne!(params[0], "y", "binder must have been renamed");
+            // body is y + <renamed>
+            if let Expr::App { args, .. } = &**body {
+                assert_eq!(args[0], var("y"));
+                assert_eq!(args[1], var(&params[0]));
+            } else {
+                panic!("unexpected body");
+            }
+        } else {
+            panic!("expected lambda");
+        }
+    }
+
+    #[test]
+    fn subst_shadowed_is_noop() {
+        let e = lam1("x", var("x"));
+        assert_eq!(e.subst("x", &lit(1.0)), e);
+    }
+
+    #[test]
+    fn alpha_eq_renamed_binders() {
+        let a = lam1("x", app2(add(), var("x"), var("c")));
+        let b = lam1("z", app2(add(), var("z"), var("c")));
+        assert!(a.alpha_eq(&b));
+        let c = lam1("z", app2(add(), var("c"), var("z")));
+        assert!(!a.alpha_eq(&c));
+    }
+
+    #[test]
+    fn alpha_eq_distinguishes_free_vars() {
+        assert!(var("x").alpha_eq(&var("x")));
+        assert!(!var("x").alpha_eq(&var("y")));
+    }
+
+    #[test]
+    fn inputs_collects_unique_in_order() {
+        let e = nzip(
+            lam1("r", rnz(add(), mul(), vec![var("r"), input("v")])),
+            vec![input("A")],
+        );
+        // f is visited before the args, so "v" (inside the lambda) comes first
+        assert_eq!(e.inputs(), vec!["v".to_string(), "A".to_string()]);
+    }
+
+    #[test]
+    fn fresh_vars_are_distinct() {
+        assert_ne!(fresh_var("a"), fresh_var("a"));
+    }
+
+    #[test]
+    fn size_counts_nodes() {
+        assert_eq!(var("x").size(), 1);
+        assert_eq!(app2(add(), var("x"), var("y")).size(), 4);
+    }
+}

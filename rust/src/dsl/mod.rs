@@ -1,0 +1,17 @@
+//! The functional DSL of the paper: a lambda calculus extended with the
+//! variadic higher-order functions `nzip` and `rnz`, the applicative `lift`,
+//! and the layout operators `subdiv` / `flatten` / `flip`.
+//!
+//! `map` and `zip` are the 1- and 2-ary special cases of [`Expr::Nzip`]
+//! (paper eq. 20); `reduce f xs = rnz f id xs` and the fused
+//! `dot u v = rnz (+) (*) u v` (paper eq. 29).
+
+mod builder;
+mod expr;
+mod parser;
+mod pretty;
+
+pub use builder::*;
+pub use expr::{fresh_var, Expr, Prim};
+pub use parser::parse;
+pub use pretty::pretty;

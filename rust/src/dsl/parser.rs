@@ -1,0 +1,355 @@
+//! S-expression parser for the DSL — the textual front end of the
+//! optimization service (`hofdla optimize <file>`).
+//!
+//! Grammar (s-expressions):
+//!
+//! ```text
+//! expr ::= number
+//!        | prim                      ; + - * / max min neg exp sqrt tanh relu
+//!        | symbol                    ; variable
+//!        | (in NAME)                 ; named array input
+//!        | (lam (x y ...) expr)
+//!        | (app expr expr ...)
+//!        | (nzip f a b ...)          ; (map f a) and (zip f a b) are sugar
+//!        | (rnz r m a b ...)
+//!        | (reduce r a)              ; sugar: rnz r id a
+//!        | (dot a b)                 ; sugar: rnz + * a b
+//!        | (lift f)
+//!        | (subdiv d b expr)
+//!        | (flatten d expr)
+//!        | (flip d1 [d2] expr)
+//! ```
+
+use super::expr::{Expr, Prim};
+use crate::{Error, Result};
+
+/// Parse a single DSL expression from source text.
+pub fn parse(src: &str) -> Result<Expr> {
+    let toks = tokenize(src)?;
+    let mut pos = 0;
+    let sexp = parse_sexp(&toks, &mut pos)?;
+    if pos != toks.len() {
+        return Err(Error::Parse(format!(
+            "trailing tokens after expression (at token {pos})"
+        )));
+    }
+    to_expr(&sexp)
+}
+
+#[derive(Debug, Clone)]
+enum Sexp {
+    Atom(String),
+    List(Vec<Sexp>),
+}
+
+fn tokenize(src: &str) -> Result<Vec<String>> {
+    let mut toks = Vec::new();
+    let mut cur = String::new();
+    let mut chars = src.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            ';' => {
+                // comment to end of line
+                for c2 in chars.by_ref() {
+                    if c2 == '\n' {
+                        break;
+                    }
+                }
+            }
+            '(' | ')' => {
+                if !cur.is_empty() {
+                    toks.push(std::mem::take(&mut cur));
+                }
+                toks.push(c.to_string());
+            }
+            c if c.is_whitespace() => {
+                if !cur.is_empty() {
+                    toks.push(std::mem::take(&mut cur));
+                }
+            }
+            c => cur.push(c),
+        }
+    }
+    if !cur.is_empty() {
+        toks.push(cur);
+    }
+    if toks.is_empty() {
+        return Err(Error::Parse("empty input".into()));
+    }
+    Ok(toks)
+}
+
+fn parse_sexp(toks: &[String], pos: &mut usize) -> Result<Sexp> {
+    match toks.get(*pos) {
+        None => Err(Error::Parse("unexpected end of input".into())),
+        Some(t) if t == "(" => {
+            *pos += 1;
+            let mut items = Vec::new();
+            loop {
+                match toks.get(*pos) {
+                    None => return Err(Error::Parse("unclosed '('".into())),
+                    Some(t) if t == ")" => {
+                        *pos += 1;
+                        return Ok(Sexp::List(items));
+                    }
+                    _ => items.push(parse_sexp(toks, pos)?),
+                }
+            }
+        }
+        Some(t) if t == ")" => Err(Error::Parse("unexpected ')'".into())),
+        Some(t) => {
+            *pos += 1;
+            Ok(Sexp::Atom(t.clone()))
+        }
+    }
+}
+
+fn prim_of(name: &str) -> Option<Prim> {
+    Some(match name {
+        "+" => Prim::Add,
+        "-" => Prim::Sub,
+        "*" => Prim::Mul,
+        "/" => Prim::Div,
+        "max" => Prim::Max,
+        "min" => Prim::Min,
+        "neg" => Prim::Neg,
+        "exp" => Prim::Exp,
+        "sqrt" => Prim::Sqrt,
+        "tanh" => Prim::Tanh,
+        "relu" => Prim::Relu,
+        _ => return None,
+    })
+}
+
+fn to_expr(s: &Sexp) -> Result<Expr> {
+    match s {
+        Sexp::Atom(a) => {
+            if let Ok(x) = a.parse::<f64>() {
+                return Ok(Expr::Lit(x));
+            }
+            if let Some(p) = prim_of(a) {
+                return Ok(Expr::Prim(p));
+            }
+            Ok(Expr::Var(a.clone()))
+        }
+        Sexp::List(items) => {
+            let head = match items.first() {
+                Some(Sexp::Atom(h)) => h.as_str(),
+                Some(Sexp::List(_)) => {
+                    // ((lam ...) a b) — implicit application
+                    let f = to_expr(&items[0])?;
+                    let args = items[1..].iter().map(to_expr).collect::<Result<_>>()?;
+                    return Ok(Expr::App {
+                        f: Box::new(f),
+                        args,
+                    });
+                }
+                None => return Err(Error::Parse("empty list".into())),
+            };
+            let rest = &items[1..];
+            match head {
+                "in" => {
+                    let name = atom(rest, 0, "in")?;
+                    expect_len(rest, 1, "in")?;
+                    Ok(Expr::Input(name))
+                }
+                "lam" => {
+                    expect_len(rest, 2, "lam")?;
+                    let params = match &rest[0] {
+                        Sexp::List(ps) => ps
+                            .iter()
+                            .map(|p| match p {
+                                Sexp::Atom(a) => Ok(a.clone()),
+                                _ => Err(Error::Parse("lam: parameter must be a symbol".into())),
+                            })
+                            .collect::<Result<Vec<_>>>()?,
+                        Sexp::Atom(a) => vec![a.clone()],
+                    };
+                    Ok(Expr::Lam {
+                        params,
+                        body: Box::new(to_expr(&rest[1])?),
+                    })
+                }
+                "app" => {
+                    if rest.is_empty() {
+                        return Err(Error::Parse("app: needs a function".into()));
+                    }
+                    Ok(Expr::App {
+                        f: Box::new(to_expr(&rest[0])?),
+                        args: rest[1..].iter().map(to_expr).collect::<Result<_>>()?,
+                    })
+                }
+                "nzip" | "map" | "zip" => {
+                    if rest.len() < 2 {
+                        return Err(Error::Parse(format!("{head}: needs f and ≥1 array")));
+                    }
+                    let f = to_expr(&rest[0])?;
+                    let args: Vec<Expr> =
+                        rest[1..].iter().map(to_expr).collect::<Result<_>>()?;
+                    if head == "map" && args.len() != 1 {
+                        return Err(Error::Parse("map: exactly one array".into()));
+                    }
+                    if head == "zip" && args.len() != 2 {
+                        return Err(Error::Parse("zip: exactly two arrays".into()));
+                    }
+                    Ok(Expr::Nzip {
+                        f: Box::new(f),
+                        args,
+                    })
+                }
+                "rnz" => {
+                    if rest.len() < 3 {
+                        return Err(Error::Parse("rnz: needs r, m and ≥1 array".into()));
+                    }
+                    Ok(Expr::Rnz {
+                        r: Box::new(to_expr(&rest[0])?),
+                        m: Box::new(to_expr(&rest[1])?),
+                        args: rest[2..].iter().map(to_expr).collect::<Result<_>>()?,
+                    })
+                }
+                "reduce" => {
+                    expect_len(rest, 2, "reduce")?;
+                    Ok(crate::dsl::builder::reduce(
+                        to_expr(&rest[0])?,
+                        to_expr(&rest[1])?,
+                    ))
+                }
+                "dot" => {
+                    expect_len(rest, 2, "dot")?;
+                    Ok(crate::dsl::builder::dot(
+                        to_expr(&rest[0])?,
+                        to_expr(&rest[1])?,
+                    ))
+                }
+                "lift" => {
+                    expect_len(rest, 1, "lift")?;
+                    Ok(Expr::Lift {
+                        f: Box::new(to_expr(&rest[0])?),
+                    })
+                }
+                "subdiv" => {
+                    expect_len(rest, 3, "subdiv")?;
+                    Ok(Expr::Subdiv {
+                        d: usize_atom(rest, 0, "subdiv")?,
+                        b: usize_atom(rest, 1, "subdiv")?,
+                        arg: Box::new(to_expr(&rest[2])?),
+                    })
+                }
+                "flatten" => {
+                    expect_len(rest, 2, "flatten")?;
+                    Ok(Expr::Flatten {
+                        d: usize_atom(rest, 0, "flatten")?,
+                        arg: Box::new(to_expr(&rest[1])?),
+                    })
+                }
+                "flip" => match rest.len() {
+                    2 => {
+                        let d = usize_atom(rest, 0, "flip")?;
+                        Ok(Expr::Flip {
+                            d1: d,
+                            d2: d + 1,
+                            arg: Box::new(to_expr(&rest[1])?),
+                        })
+                    }
+                    3 => Ok(Expr::Flip {
+                        d1: usize_atom(rest, 0, "flip")?,
+                        d2: usize_atom(rest, 1, "flip")?,
+                        arg: Box::new(to_expr(&rest[2])?),
+                    }),
+                    n => Err(Error::Parse(format!("flip: 2 or 3 args, got {n}"))),
+                },
+                _ => {
+                    // (f a b ...) — implicit application
+                    let f = to_expr(&items[0])?;
+                    Ok(Expr::App {
+                        f: Box::new(f),
+                        args: rest.iter().map(to_expr).collect::<Result<_>>()?,
+                    })
+                }
+            }
+        }
+    }
+}
+
+fn atom(rest: &[Sexp], i: usize, ctx: &str) -> Result<String> {
+    match rest.get(i) {
+        Some(Sexp::Atom(a)) => Ok(a.clone()),
+        _ => Err(Error::Parse(format!("{ctx}: expected symbol at arg {i}"))),
+    }
+}
+
+fn usize_atom(rest: &[Sexp], i: usize, ctx: &str) -> Result<usize> {
+    atom(rest, i, ctx)?
+        .parse()
+        .map_err(|_| Error::Parse(format!("{ctx}: expected integer at arg {i}")))
+}
+
+fn expect_len(rest: &[Sexp], n: usize, ctx: &str) -> Result<()> {
+    if rest.len() != n {
+        return Err(Error::Parse(format!(
+            "{ctx}: expected {n} args, got {}",
+            rest.len()
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::builder::*;
+    use crate::dsl::pretty;
+
+    #[test]
+    fn roundtrip_matvec() {
+        let e = matvec_naive(input("A"), input("v"));
+        let s = pretty(&e);
+        let back = parse(&s).unwrap();
+        assert!(back.alpha_eq(&e), "{s}");
+    }
+
+    #[test]
+    fn roundtrip_matmul() {
+        let e = matmul_naive(input("A"), input("B"));
+        let back = parse(&pretty(&e)).unwrap();
+        assert!(back.alpha_eq(&e));
+    }
+
+    #[test]
+    fn sugar_forms() {
+        assert!(parse("(dot (in u) (in v))")
+            .unwrap()
+            .alpha_eq(&dot(input("u"), input("v"))));
+        assert!(parse("(map (lam (x) (app * x 2.0)) (in v))").unwrap().alpha_eq(
+            &map(lam1("x", app2(mul(), var("x"), lit(2.0))), input("v"))
+        ));
+        // default flip second arg
+        assert!(parse("(flip 0 (in A))")
+            .unwrap()
+            .alpha_eq(&flip(0, input("A"))));
+    }
+
+    #[test]
+    fn comments_and_whitespace() {
+        let e = parse("; the dot product\n(dot (in u) ; u\n  (in v))").unwrap();
+        assert!(e.alpha_eq(&dot(input("u"), input("v"))));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("").is_err());
+        assert!(parse("(").is_err());
+        assert!(parse(")").is_err());
+        assert!(parse("(dot (in u))").is_err());
+        assert!(parse("(map f a b)").is_err());
+        assert!(parse("(subdiv x 2 (in A))").is_err());
+        assert!(parse("(in a) extra").is_err());
+    }
+
+    #[test]
+    fn numbers_and_prims() {
+        assert_eq!(parse("3.5").unwrap(), lit(3.5));
+        assert_eq!(parse("+").unwrap(), add());
+        assert_eq!(parse("relu").unwrap(), Expr::Prim(Prim::Relu));
+    }
+}

@@ -1,0 +1,122 @@
+//! S-expression pretty printer for [`Expr`]. Output round-trips through
+//! [`super::parser::parse`].
+
+use super::expr::{Expr, Prim};
+
+/// Render an expression as a single-line s-expression.
+pub fn pretty(e: &Expr) -> String {
+    let mut s = String::new();
+    go(e, &mut s);
+    s
+}
+
+fn go(e: &Expr, out: &mut String) {
+    match e {
+        Expr::Var(x) => out.push_str(x),
+        Expr::Lit(x) => {
+            if x.fract() == 0.0 && x.abs() < 1e15 {
+                out.push_str(&format!("{:.1}", x));
+            } else {
+                out.push_str(&format!("{}", x));
+            }
+        }
+        Expr::Prim(p) => out.push_str(prim_name(*p)),
+        Expr::Lam { params, body } => {
+            out.push_str("(lam (");
+            for (i, p) in params.iter().enumerate() {
+                if i > 0 {
+                    out.push(' ');
+                }
+                out.push_str(p);
+            }
+            out.push_str(") ");
+            go(body, out);
+            out.push(')');
+        }
+        Expr::App { f, args } => {
+            out.push_str("(app ");
+            go(f, out);
+            for a in args {
+                out.push(' ');
+                go(a, out);
+            }
+            out.push(')');
+        }
+        Expr::Nzip { f, args } => {
+            out.push_str("(nzip ");
+            go(f, out);
+            for a in args {
+                out.push(' ');
+                go(a, out);
+            }
+            out.push(')');
+        }
+        Expr::Rnz { r, m, args } => {
+            out.push_str("(rnz ");
+            go(r, out);
+            out.push(' ');
+            go(m, out);
+            for a in args {
+                out.push(' ');
+                go(a, out);
+            }
+            out.push(')');
+        }
+        Expr::Lift { f } => {
+            out.push_str("(lift ");
+            go(f, out);
+            out.push(')');
+        }
+        Expr::Subdiv { d, b, arg } => {
+            out.push_str(&format!("(subdiv {d} {b} "));
+            go(arg, out);
+            out.push(')');
+        }
+        Expr::Flatten { d, arg } => {
+            out.push_str(&format!("(flatten {d} "));
+            go(arg, out);
+            out.push(')');
+        }
+        Expr::Flip { d1, d2, arg } => {
+            out.push_str(&format!("(flip {d1} {d2} "));
+            go(arg, out);
+            out.push(')');
+        }
+        Expr::Input(n) => {
+            out.push_str("(in ");
+            out.push_str(n);
+            out.push(')');
+        }
+    }
+}
+
+pub(super) fn prim_name(p: Prim) -> &'static str {
+    p.name()
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::dsl::builder::*;
+    use crate::dsl::pretty;
+
+    #[test]
+    fn pretty_matvec() {
+        let e = matvec_naive(input("A"), input("v"));
+        assert_eq!(
+            pretty(&e),
+            "(nzip (lam (r) (rnz + * r (in v))) (in A))"
+        );
+    }
+
+    #[test]
+    fn pretty_layout_ops() {
+        let e = subdiv(0, 16, flip(0, input("A")));
+        assert_eq!(pretty(&e), "(subdiv 0 16 (flip 0 1 (in A)))");
+    }
+
+    #[test]
+    fn pretty_literals() {
+        assert_eq!(pretty(&lit(2.0)), "2.0");
+        assert_eq!(pretty(&lit(2.5)), "2.5");
+    }
+}

@@ -1,0 +1,300 @@
+//! Enumeration of HoF rearrangements (paper §4).
+//!
+//! The nesting of HoFs in a (fused, subdivided) expression forms a list —
+//! the *spine*. Adjacent spine levels can be swapped by the exchange rules
+//! of [`crate::rewrite::exchange`], each swap pairing with a `flip` of the
+//! logical layout. Enumerating all permutations by adjacent transpositions
+//! is exactly the Steinhaus–Johnson–Trotter scheme the paper cites; here we
+//! additionally keep the search robust by breadth-first exploring the swap
+//! graph and deduplicating on the paper's display form (the two/three
+//! `rnz`s of a subdivided reduction are "not differentiated", so 4 HoFs
+//! with two rnzs yield the paper's 12 cases, not 24).
+
+mod sjt;
+pub mod starts;
+
+pub use sjt::sjt_permutations;
+
+use crate::dsl::Expr;
+use crate::rewrite::{exchange, normalize, Ctx};
+use crate::{Error, Result};
+use std::collections::{HashMap, VecDeque};
+
+/// One rearrangement of the computation: the expression plus the spine
+/// labels from outermost to innermost (`["mapA", "rnz", "mapB"]` reads as
+/// the paper's table rows).
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub expr: Expr,
+    pub labels: Vec<String>,
+}
+
+impl Variant {
+    pub fn new(expr: Expr, labels: &[&str]) -> Self {
+        Variant {
+            expr,
+            labels: labels.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// The paper's display form: collapsed labels joined by spaces
+    /// (`rnz*` labels are not differentiated).
+    pub fn display_key(&self) -> String {
+        self.labels
+            .iter()
+            .map(|l| collapse(l))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Collapse a label to its display form: all `rnz…` labels are the same.
+pub fn collapse(label: &str) -> &str {
+    if label.starts_with("rnz") {
+        "rnz"
+    } else {
+        label
+    }
+}
+
+/// The spine: the chain of HoF kinds from the root inward, descending
+/// through operator lambdas.
+pub fn spine_kinds(e: &Expr) -> Vec<&'static str> {
+    let mut out = Vec::new();
+    let mut cur = e;
+    loop {
+        match cur {
+            Expr::Nzip { f, .. } => {
+                out.push("map");
+                match &**f {
+                    Expr::Lam { body, .. } => cur = body,
+                    _ => break,
+                }
+            }
+            Expr::Rnz { m, .. } => {
+                out.push("red");
+                match &**m {
+                    Expr::Lam { body, .. } => cur = body,
+                    _ => break,
+                }
+            }
+            _ => break,
+        }
+    }
+    out
+}
+
+/// Try to swap spine levels `depth` and `depth+1` by applying an exchange
+/// rule at that node. Returns the normalized full expression on success.
+pub fn try_swap_at(e: &Expr, depth: usize, ctx: &Ctx) -> Option<Expr> {
+    fn rec(e: &Expr, depth: usize, ctx: &Ctx) -> Option<Expr> {
+        if depth == 0 {
+            return exchange::map_map(e, ctx)
+                .or_else(|| exchange::map_map_nested(e, ctx))
+                .or_else(|| exchange::map_rnz(e, ctx))
+                .or_else(|| exchange::rnz_map(e, ctx))
+                .or_else(|| exchange::rnz_rnz(e, ctx));
+        }
+        match e {
+            Expr::Nzip { f, args } => {
+                let Expr::Lam { params, body } = &**f else {
+                    return None;
+                };
+                if params.len() != args.len() {
+                    return None;
+                }
+                let mut ctx2 = ctx.clone();
+                for (p, a) in params.iter().zip(args) {
+                    let elem = ctx.layout_of(a).ok()?.peel_outer().ok()?;
+                    ctx2.vars.insert(p.clone(), elem);
+                }
+                let new_body = rec(body, depth - 1, &ctx2)?;
+                Some(Expr::Nzip {
+                    f: Box::new(Expr::Lam {
+                        params: params.clone(),
+                        body: Box::new(new_body),
+                    }),
+                    args: args.clone(),
+                })
+            }
+            Expr::Rnz { r, m, args } => {
+                let Expr::Lam { params, body } = &**m else {
+                    return None;
+                };
+                if params.len() != args.len() {
+                    return None;
+                }
+                let mut ctx2 = ctx.clone();
+                for (p, a) in params.iter().zip(args) {
+                    let elem = ctx.layout_of(a).ok()?.peel_outer().ok()?;
+                    ctx2.vars.insert(p.clone(), elem);
+                }
+                let new_body = rec(body, depth - 1, &ctx2)?;
+                Some(Expr::Rnz {
+                    r: r.clone(),
+                    m: Box::new(Expr::Lam {
+                        params: params.clone(),
+                        body: Box::new(new_body),
+                    }),
+                    args: args.clone(),
+                })
+            }
+            _ => None,
+        }
+    }
+    rec(e, depth, ctx).map(|x| normalize(&x))
+}
+
+/// Breadth-first enumeration of all rearrangements reachable by adjacent
+/// exchanges, deduplicated on the display key. Every returned variant
+/// typechecks under `ctx.env`.
+pub fn enumerate_all(start: &Variant, ctx: &Ctx, limit: usize) -> Result<Vec<Variant>> {
+    let n = start.labels.len();
+    if spine_kinds(&start.expr).len() != n {
+        return Err(Error::Rewrite(format!(
+            "label count {} does not match spine length {}",
+            n,
+            spine_kinds(&start.expr).len()
+        )));
+    }
+    crate::typecheck::infer(&start.expr, &ctx.env)?;
+    let mut seen: HashMap<String, usize> = HashMap::new();
+    let mut out: Vec<Variant> = Vec::new();
+    let mut queue: VecDeque<Variant> = VecDeque::new();
+    seen.insert(start.display_key(), 0);
+    out.push(start.clone());
+    queue.push_back(start.clone());
+    while let Some(v) = queue.pop_front() {
+        if out.len() >= limit {
+            break;
+        }
+        for d in 0..n.saturating_sub(1) {
+            if let Some(new_expr) = try_swap_at(&v.expr, d, ctx) {
+                // Defensive: drop rewrites that no longer typecheck.
+                if crate::typecheck::infer(&new_expr, &ctx.env).is_err() {
+                    continue;
+                }
+                let mut labels = v.labels.clone();
+                labels.swap(d, d + 1);
+                let nv = Variant {
+                    expr: new_expr,
+                    labels,
+                };
+                let key = nv.display_key();
+                if !seen.contains_key(&key) {
+                    seen.insert(key, out.len());
+                    out.push(nv.clone());
+                    queue.push_back(nv);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Compare a variant's executed output against reference candidates (the
+/// reference result and, for transposing rearrangements, its transpose).
+/// Returns the index of the matching candidate.
+pub fn verify_against(
+    got: &[f64],
+    candidates: &[Vec<f64>],
+    tol: f64,
+) -> Option<usize> {
+    candidates
+        .iter()
+        .position(|c| crate::util::allclose(got, c, tol))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::Layout;
+    use crate::typecheck::Env;
+
+    fn matmul_env(n: usize, j: usize, k: usize) -> Env {
+        Env::new()
+            .with("A", Layout::row_major(&[n, j]))
+            .with("B", Layout::row_major(&[j, k]))
+    }
+
+    #[test]
+    fn spine_of_naive_matmul() {
+        let e = crate::dsl::matmul_naive(crate::dsl::input("A"), crate::dsl::input("B"));
+        assert_eq!(spine_kinds(&e), vec!["map", "map", "red"]);
+    }
+
+    #[test]
+    fn naive_matmul_has_six_rearrangements() {
+        // Paper Table 1: 3 distinct HoFs → 6 permutations.
+        let env = matmul_env(4, 6, 8);
+        let ctx = Ctx::new(env);
+        let start = starts::matmul_naive_variant();
+        let variants = enumerate_all(&start, &ctx, 100).unwrap();
+        assert_eq!(variants.len(), 6, "{:?}",
+            variants.iter().map(|v| v.display_key()).collect::<Vec<_>>());
+        // all 6 label orders present
+        let keys: std::collections::HashSet<String> =
+            variants.iter().map(|v| v.display_key()).collect();
+        for perm in [
+            "mapA mapB rnz",
+            "mapA rnz mapB",
+            "rnz mapA mapB",
+            "mapB mapA rnz",
+            "mapB rnz mapA",
+            "rnz mapB mapA",
+        ] {
+            assert!(keys.contains(perm), "missing {perm}; got {keys:?}");
+        }
+    }
+
+    #[test]
+    fn all_rearrangements_compute_matmul_or_its_transpose() {
+        use crate::exec::run;
+        use crate::util::Rng;
+        let (n, j, k) = (4usize, 6, 8);
+        let env = matmul_env(n, j, k);
+        let ctx = Ctx::new(env.clone());
+        let mut rng = Rng::new(11);
+        let a = rng.fill_vec(n * j);
+        let b = rng.fill_vec(j * k);
+        // reference C and C^T
+        let mut c = vec![0.0; n * k];
+        for i in 0..n {
+            for jj in 0..j {
+                for kk in 0..k {
+                    c[i * k + kk] += a[i * j + jj] * b[jj * k + kk];
+                }
+            }
+        }
+        let mut ct = vec![0.0; n * k];
+        for i in 0..n {
+            for kk in 0..k {
+                ct[kk * n + i] = c[i * k + kk];
+            }
+        }
+        let start = starts::matmul_naive_variant();
+        let variants = enumerate_all(&start, &ctx, 100).unwrap();
+        assert_eq!(variants.len(), 6);
+        for v in &variants {
+            let out = run(&v.expr, &env, &[("A", &a), ("B", &b)])
+                .unwrap_or_else(|e| panic!("{}: {e}", v.display_key()));
+            let hit = verify_against(&out, &[c.clone(), ct.clone()], 1e-9);
+            assert!(hit.is_some(), "variant {} wrong result", v.display_key());
+        }
+    }
+
+    #[test]
+    fn subdivided_rnz_has_twelve_rearrangements() {
+        // Paper Table 2: 4 HoFs, two indistinguishable rnzs → 12 cases.
+        let env = matmul_env(4, 8, 4);
+        let ctx = Ctx::new(env.clone());
+        let start = starts::matmul_rnz_subdivided_variant(2);
+        let variants = enumerate_all(&start, &ctx, 200).unwrap();
+        assert_eq!(
+            variants.len(),
+            12,
+            "{:?}",
+            variants.iter().map(|v| v.display_key()).collect::<Vec<_>>()
+        );
+    }
+}

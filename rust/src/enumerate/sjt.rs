@@ -1,0 +1,89 @@
+//! Steinhaus–Johnson–Trotter permutation enumeration (paper refs [16][17]).
+//!
+//! Generates all permutations of `0..n` such that consecutive permutations
+//! differ by one adjacent transposition — exactly the moves the exchange
+//! rules can realise on the HoF spine. The BFS in [`super::enumerate_all`]
+//! is the robust path (it skips inapplicable swaps); SJT is exposed for the
+//! cases where every adjacent swap is known to apply, and as the reference
+//! for the enumeration tests.
+
+/// All permutations of `0..n` in SJT order; each differs from its
+/// predecessor by one adjacent swap. `n = 0` yields one empty permutation.
+pub fn sjt_permutations(n: usize) -> Vec<Vec<usize>> {
+    let mut perm: Vec<usize> = (0..n).collect();
+    // direction: -1 = looking left, +1 = looking right
+    let mut dir: Vec<isize> = vec![-1; n];
+    let mut out = vec![perm.clone()];
+    loop {
+        // find the largest mobile element
+        let mut mobile: Option<usize> = None; // index into perm
+        for i in 0..n {
+            let j = (i as isize + dir[perm[i]]) as i64;
+            if j < 0 || j >= n as i64 {
+                continue;
+            }
+            let j = j as usize;
+            if perm[j] < perm[i]
+                && mobile.map(|mi| perm[i] > perm[mi]).unwrap_or(true)
+            {
+                mobile = Some(i);
+            }
+        }
+        let Some(i) = mobile else { break };
+        let v = perm[i];
+        let j = (i as isize + dir[v]) as usize;
+        perm.swap(i, j);
+        // reverse direction of all elements larger than v
+        for d in v + 1..n {
+            dir[d] = -dir[d];
+        }
+        out.push(perm.clone());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn counts_are_factorials() {
+        assert_eq!(sjt_permutations(0).len(), 1);
+        assert_eq!(sjt_permutations(1).len(), 1);
+        assert_eq!(sjt_permutations(2).len(), 2);
+        assert_eq!(sjt_permutations(3).len(), 6);
+        assert_eq!(sjt_permutations(4).len(), 24);
+        assert_eq!(sjt_permutations(5).len(), 120);
+    }
+
+    #[test]
+    fn all_distinct_and_valid() {
+        let perms = sjt_permutations(4);
+        let set: HashSet<&Vec<usize>> = perms.iter().collect();
+        assert_eq!(set.len(), 24);
+        for p in &perms {
+            let mut q = p.clone();
+            q.sort_unstable();
+            assert_eq!(q, vec![0, 1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn consecutive_differ_by_adjacent_swap() {
+        let perms = sjt_permutations(5);
+        for w in perms.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            let diffs: Vec<usize> = (0..5).filter(|&i| a[i] != b[i]).collect();
+            assert_eq!(diffs.len(), 2, "{a:?} -> {b:?}");
+            assert_eq!(diffs[1], diffs[0] + 1, "swap not adjacent");
+            assert_eq!(a[diffs[0]], b[diffs[1]]);
+            assert_eq!(a[diffs[1]], b[diffs[0]]);
+        }
+    }
+
+    #[test]
+    fn starts_with_identity() {
+        assert_eq!(sjt_permutations(3)[0], vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,284 @@
+//! Canonical starting expressions for the paper's experiments (§4).
+//!
+//! Subdivisions are expressed at the *input* level (the paper's
+//! `A^(1a) = subdiv 0 2 A` bookkeeping): every HoF argument in the nest is
+//! then a bare variable or input view, which is the normal form the
+//! exchange rules traverse.
+//!
+//! Inputs are always named `A` (n×j, row-major) and `B` (j×k, row-major);
+//! `C_ik = Σ_j A_ij · B_jk`. Columns of `B` are made explicit with
+//! `flip 0 B`, exactly as the paper's eq 51 assumes.
+
+use super::Variant;
+use crate::dsl::*;
+
+/// Paper eq 51: `map (\rA -> map (\cB -> rnz (+) (*) rA cB) (flip 0 B)) A`.
+/// Spine: `mapA mapB rnz` — Table 1's first row.
+pub fn matmul_naive_variant() -> Variant {
+    Variant::new(
+        matmul_naive(input("A"), input("B")),
+        &["mapA", "mapB", "rnz"],
+    )
+}
+
+/// Table 2 start: the reduction subdivided with block size `b`.
+///
+/// `A2 = subdiv 0 b A` (rows chunked), `B2 = subdiv 0 b (flip 0 B)`
+/// (columns chunked); the dot product becomes a reduction over chunk dot
+/// products. Spine: `mapA mapB rnzO rnzI`.
+pub fn matmul_rnz_subdivided_variant(b: usize) -> Variant {
+    let a2 = subdiv(0, b, input("A"));
+    let b2 = subdiv(0, b, flip(0, input("B")));
+    let e = map(
+        lam1(
+            "rA",
+            map(
+                lam1(
+                    "cB",
+                    rnz(
+                        add(),
+                        lam2("u", "v", dot(var("u"), var("v"))),
+                        vec![var("rA"), var("cB")],
+                    ),
+                ),
+                b2,
+            ),
+        ),
+        a2,
+    );
+    Variant::new(e, &["mapA", "mapB", "rnzO", "rnzI"])
+}
+
+/// Figure 4 start: the two maps subdivided with block size `b` (in their
+/// outermost direction — rows of A and columns of B are grouped).
+/// Spine: `mapAo mapAi mapBo mapBi rnz`.
+pub fn matmul_maps_subdivided_variant(b: usize) -> Variant {
+    // A: [(j,1),(n,j)] — subdiv the row-index dim (1)
+    let a2 = subdiv(1, b, input("A"));
+    // flip 0 B: [(j,k),(k,1)] — subdiv the column-index dim (1)
+    let b2 = subdiv(1, b, flip(0, input("B")));
+    let e = map(
+        lam1(
+            "RA",
+            map(
+                lam1(
+                    "rA",
+                    map(
+                        lam1(
+                            "CB",
+                            map(
+                                lam1("cB", dot(var("rA"), var("cB"))),
+                                var("CB"),
+                            ),
+                        ),
+                        b2.clone(),
+                    ),
+                ),
+                var("RA"),
+            ),
+        ),
+        a2,
+    );
+    Variant::new(e, &["mapAo", "mapAi", "mapBo", "mapBi", "rnz"])
+}
+
+/// Figure 5 start: the reduction subdivided twice (`b1` outer chunks of
+/// `b2`-element inner chunks). Spine: `mapA mapB rnzO rnzM rnzI`.
+pub fn matmul_rnz_twice_subdivided_variant(b1: usize, b2: usize) -> Variant {
+    // j dimension: (b2,1),(b1,b2),(j/(b1 b2), b1 b2)
+    let a2 = subdiv(1, b1, subdiv(0, b2, input("A")));
+    let b2e = subdiv(1, b1, subdiv(0, b2, flip(0, input("B"))));
+    let e = map(
+        lam1(
+            "rA",
+            map(
+                lam1(
+                    "cB",
+                    rnz(
+                        add(),
+                        lam2(
+                            "u",
+                            "v",
+                            rnz(
+                                add(),
+                                lam2("p", "q", dot(var("p"), var("q"))),
+                                vec![var("u"), var("v")],
+                            ),
+                        ),
+                        vec![var("rA"), var("cB")],
+                    ),
+                ),
+                b2e,
+            ),
+        ),
+        a2,
+    );
+    Variant::new(e, &["mapA", "mapB", "rnzO", "rnzM", "rnzI"])
+}
+
+/// Figure 6 start: every HoF subdivided once with block size `b`.
+/// Spine: `mapAo mapAi mapBo mapBi rnzO rnzI`.
+pub fn matmul_all_subdivided_variant(b: usize) -> Variant {
+    // A: subdiv rows (dim 1) and row contents (dim 0)
+    let a2 = subdiv(0, b, subdiv(1, b, input("A")));
+    // flip 0 B: subdiv columns (dim 1) and column contents (dim 0)
+    let b2 = subdiv(0, b, subdiv(1, b, flip(0, input("B"))));
+    let e = map(
+        lam1(
+            "RA",
+            map(
+                lam1(
+                    "rA",
+                    map(
+                        lam1(
+                            "CB",
+                            map(
+                                lam1(
+                                    "cB",
+                                    rnz(
+                                        add(),
+                                        lam2("u", "v", dot(var("u"), var("v"))),
+                                        vec![var("rA"), var("cB")],
+                                    ),
+                                ),
+                                var("CB"),
+                            ),
+                        ),
+                        b2.clone(),
+                    ),
+                ),
+                var("RA"),
+            ),
+        ),
+        a2,
+    );
+    Variant::new(
+        e,
+        &["mapAo", "mapAi", "mapBo", "mapBi", "rnzO", "rnzI"],
+    )
+}
+
+/// Figure 3 starts: the matrix–vector product (`A`: n×j, `v`: j).
+/// Cases 1a-1c subdivide the vector (eq 47); 2a-2c subdivide the map side
+/// (eq 48).
+pub fn matvec_naive_variant() -> Variant {
+    Variant::new(
+        matvec_naive(input("A"), input("v")),
+        &["mapA", "rnz"],
+    )
+}
+
+/// eq 47 (the 1a form): rows and vector chunked with block size `b`.
+/// Spine: `mapA rnzO rnzI`.
+pub fn matvec_vector_subdivided_variant(b: usize) -> Variant {
+    let a2 = subdiv(0, b, input("A"));
+    let v2 = subdiv(0, b, input("v"));
+    let e = map(
+        lam1(
+            "r",
+            rnz(
+                add(),
+                lam2("u", "w", dot(var("u"), var("w"))),
+                vec![var("r"), v2],
+            ),
+        ),
+        a2,
+    );
+    Variant::new(e, &["mapA", "rnzO", "rnzI"])
+}
+
+/// eq 48/49 (the 2a-side family): subdividing the map over rows instead.
+/// Spine: `mapAo mapAi rnz`.
+pub fn matvec_map_subdivided_variant(b: usize) -> Variant {
+    let a2 = subdiv(1, b, input("A"));
+    let e = map(
+        lam1(
+            "R",
+            map(lam1("r", dot(var("r"), input("v"))), var("R")),
+        ),
+        a2,
+    );
+    Variant::new(e, &["mapAo", "mapAi", "rnz"])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::run;
+    use crate::layout::Layout;
+    use crate::typecheck::Env;
+    use crate::util::Rng;
+
+    fn env(n: usize, j: usize, k: usize) -> Env {
+        Env::new()
+            .with("A", Layout::row_major(&[n, j]))
+            .with("B", Layout::row_major(&[j, k]))
+            .with("v", Layout::row_major(&[j]))
+    }
+
+    fn reference_matmul(a: &[f64], b: &[f64], n: usize, j: usize, k: usize) -> Vec<f64> {
+        let mut c = vec![0.0; n * k];
+        for i in 0..n {
+            for jj in 0..j {
+                for kk in 0..k {
+                    c[i * k + kk] += a[i * j + jj] * b[jj * k + kk];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn all_starts_compute_the_same_matmul() {
+        let (n, j, k) = (4usize, 8, 4);
+        let env = env(n, j, k);
+        let mut rng = Rng::new(5);
+        let a = rng.fill_vec(n * j);
+        let b = rng.fill_vec(j * k);
+        let c = reference_matmul(&a, &b, n, j, k);
+        for (name, v) in [
+            ("naive", matmul_naive_variant()),
+            ("rnz-subdiv", matmul_rnz_subdivided_variant(2)),
+            ("maps-subdiv", matmul_maps_subdivided_variant(2)),
+            ("rnz-twice", matmul_rnz_twice_subdivided_variant(2, 2)),
+            ("all-subdiv", matmul_all_subdivided_variant(2)),
+        ] {
+            let out = run(&v.expr, &env, &[("A", &a), ("B", &b)])
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(
+                crate::util::allclose(&out, &c, 1e-9),
+                "{name} produced wrong result"
+            );
+            assert_eq!(
+                super::super::spine_kinds(&v.expr).len(),
+                v.labels.len(),
+                "{name} labels mismatch spine"
+            );
+        }
+    }
+
+    #[test]
+    fn matvec_starts_agree() {
+        let (n, j) = (6usize, 8);
+        let env = env(n, j, 1);
+        let mut rng = Rng::new(9);
+        let a = rng.fill_vec(n * j);
+        let v = rng.fill_vec(j);
+        let reference = run(
+            &matvec_naive_variant().expr,
+            &env,
+            &[("A", &a), ("v", &v)],
+        )
+        .unwrap();
+        for (name, var) in [
+            ("1a", matvec_vector_subdivided_variant(2)),
+            ("2-family", matvec_map_subdivided_variant(2)),
+        ] {
+            let out = run(&var.expr, &env, &[("A", &a), ("v", &v)]).unwrap();
+            assert!(
+                crate::util::allclose(&out, &reference, 1e-9),
+                "{name} wrong"
+            );
+        }
+    }
+}

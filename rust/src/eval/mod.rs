@@ -1,0 +1,530 @@
+//! Reference evaluator: a slow, obviously-correct interpreter for the DSL.
+//!
+//! Every rewrite rule and the fast loop-nest executor are validated against
+//! this oracle. Arrays are immutable shared buffers with strided [`View`]s,
+//! so the layout operators (`subdiv`/`flatten`/`flip`) are zero-copy here
+//! too — exactly the paper's "logical structure" semantics.
+
+use crate::dsl::Expr;
+use crate::layout::{Layout, View};
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// A runtime value: a scalar or a strided window over a shared buffer.
+#[derive(Clone, Debug)]
+pub enum Value {
+    Scalar(f64),
+    Arr(ArrVal),
+}
+
+/// Array value: shared flat storage plus a view describing the logical
+/// structure.
+#[derive(Clone, Debug)]
+pub struct ArrVal {
+    pub data: Rc<Vec<f64>>,
+    pub view: View,
+}
+
+impl ArrVal {
+    /// Dense array from data in row-major order of `shape` (outermost
+    /// first).
+    pub fn dense(data: Vec<f64>, shape_outer_first: &[usize]) -> Self {
+        let layout = Layout::row_major(shape_outer_first);
+        assert_eq!(layout.len(), data.len(), "dense: shape/data mismatch");
+        ArrVal {
+            data: Rc::new(data),
+            view: View::of(layout),
+        }
+    }
+
+    /// Read the scalar at a fully-specified logical index.
+    pub fn at(&self, idx: &[usize]) -> f64 {
+        self.data[self.view.offset_of(idx)]
+    }
+
+    /// Flatten to a dense `Vec` in logical (innermost-fastest) order.
+    pub fn to_dense(&self) -> Vec<f64> {
+        self.view
+            .layout
+            .offsets()
+            .into_iter()
+            .map(|o| self.data[self.view.offset + o])
+            .collect()
+    }
+}
+
+impl Value {
+    pub fn as_scalar(&self) -> Result<f64> {
+        match self {
+            Value::Scalar(x) => Ok(*x),
+            Value::Arr(a) if a.view.layout.is_scalar() => {
+                Ok(a.data[a.view.offset])
+            }
+            _ => Err(Error::Eval("expected scalar value".into())),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&ArrVal> {
+        match self {
+            Value::Arr(a) => Ok(a),
+            Value::Scalar(_) => Err(Error::Eval("expected array value".into())),
+        }
+    }
+
+    /// Dense representation in logical order (scalar → 1 element).
+    pub fn to_dense(&self) -> Vec<f64> {
+        match self {
+            Value::Scalar(x) => vec![*x],
+            Value::Arr(a) => a.to_dense(),
+        }
+    }
+
+    /// Logical extents, innermost first (empty for scalars).
+    pub fn extents(&self) -> Vec<usize> {
+        match self {
+            Value::Scalar(_) => Vec::new(),
+            Value::Arr(a) => a.view.layout.dims.iter().map(|d| d.extent).collect(),
+        }
+    }
+}
+
+/// Named input arrays.
+pub type Inputs = HashMap<String, ArrVal>;
+
+/// Evaluate a closed expression given its named inputs.
+pub fn eval(e: &Expr, inputs: &Inputs) -> Result<Value> {
+    let mut vars: HashMap<String, Value> = HashMap::new();
+    go(e, inputs, &mut vars)
+}
+
+fn go(e: &Expr, inputs: &Inputs, vars: &mut HashMap<String, Value>) -> Result<Value> {
+    match e {
+        Expr::Var(x) => vars
+            .get(x)
+            .cloned()
+            .ok_or_else(|| Error::Eval(format!("unbound variable '{x}'"))),
+        Expr::Lit(x) => Ok(Value::Scalar(*x)),
+        Expr::Input(n) => inputs
+            .get(n)
+            .cloned()
+            .map(Value::Arr)
+            .ok_or_else(|| Error::Eval(format!("missing input '{n}'"))),
+        Expr::Prim(_) | Expr::Lam { .. } | Expr::Lift { .. } => Err(Error::Eval(
+            "function form used as a value outside operator position".into(),
+        )),
+        Expr::App { f, args } => {
+            let vals = args
+                .iter()
+                .map(|a| go(a, inputs, vars))
+                .collect::<Result<Vec<_>>>()?;
+            apply(f, &vals, inputs, vars)
+        }
+        Expr::Nzip { f, args } => {
+            let vals = args
+                .iter()
+                .map(|a| go(a, inputs, vars))
+                .collect::<Result<Vec<_>>>()?;
+            nzip_values(|elems| apply(f, elems, inputs, vars), &vals, "nzip")
+        }
+        Expr::Rnz { r, m, args } => {
+            let vals = args
+                .iter()
+                .map(|a| go(a, inputs, vars))
+                .collect::<Result<Vec<_>>>()?;
+            let extent = outer_extent(&vals, "rnz")?;
+            let mut acc: Option<Value> = None;
+            for i in 0..extent {
+                let elems = index_all(&vals, i)?;
+                let v = apply(m, &elems, inputs, vars)?;
+                acc = Some(match acc {
+                    None => v,
+                    Some(a) => combine(r, &a, &v)?,
+                });
+            }
+            acc.ok_or_else(|| Error::Eval("rnz over empty extent".into()))
+        }
+        Expr::Subdiv { d, b, arg } => {
+            let v = go(arg, inputs, vars)?;
+            let a = v.as_arr()?;
+            Ok(Value::Arr(ArrVal {
+                data: a.data.clone(),
+                view: a.view.subdiv(*d, *b)?,
+            }))
+        }
+        Expr::Flatten { d, arg } => {
+            let v = go(arg, inputs, vars)?;
+            let a = v.as_arr()?;
+            Ok(Value::Arr(ArrVal {
+                data: a.data.clone(),
+                view: a.view.flatten(*d)?,
+            }))
+        }
+        Expr::Flip { d1, d2, arg } => {
+            let v = go(arg, inputs, vars)?;
+            let a = v.as_arr()?;
+            Ok(Value::Arr(ArrVal {
+                data: a.data.clone(),
+                view: a.view.flip2(*d1, *d2)?,
+            }))
+        }
+    }
+}
+
+/// Apply a function-position expression to already-evaluated arguments.
+fn apply(
+    f: &Expr,
+    args: &[Value],
+    inputs: &Inputs,
+    vars: &mut HashMap<String, Value>,
+) -> Result<Value> {
+    match f {
+        Expr::Prim(p) => {
+            if args.len() != p.arity() {
+                return Err(Error::Eval(format!(
+                    "primitive {} expects {} args, got {}",
+                    p.name(),
+                    p.arity(),
+                    args.len()
+                )));
+            }
+            let xs = args
+                .iter()
+                .map(Value::as_scalar)
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Value::Scalar(p.apply(&xs)))
+        }
+        Expr::Lam { params, body } => {
+            if params.len() != args.len() {
+                return Err(Error::Eval(format!(
+                    "lambda expects {} args, got {}",
+                    params.len(),
+                    args.len()
+                )));
+            }
+            let mut saved = Vec::with_capacity(params.len());
+            for (p, v) in params.iter().zip(args) {
+                saved.push((p.clone(), vars.insert(p.clone(), v.clone())));
+            }
+            let r = go(body, inputs, vars);
+            for (p, old) in saved.into_iter().rev() {
+                match old {
+                    Some(v) => {
+                        vars.insert(p, v);
+                    }
+                    None => {
+                        vars.remove(&p);
+                    }
+                }
+            }
+            r
+        }
+        Expr::Lift { f: inner } => {
+            nzip_values(|elems| apply(inner, elems, inputs, vars), args, "lift")
+        }
+        other => Err(Error::Eval(format!(
+            "unsupported function form: {}",
+            crate::dsl::pretty(other)
+        ))),
+    }
+}
+
+/// Shared elementwise-over-outer-dimension loop used by `nzip` and `lift`:
+/// applies `f` to each tuple of outer-indexed elements and packs the results
+/// into a fresh dense array.
+fn nzip_values(
+    mut f: impl FnMut(&[Value]) -> Result<Value>,
+    args: &[Value],
+    what: &str,
+) -> Result<Value> {
+    let extent = outer_extent(args, what)?;
+    let mut elem_extents: Option<Vec<usize>> = None;
+    let mut out: Vec<f64> = Vec::new();
+    for i in 0..extent {
+        let elems = index_all(args, i)?;
+        let v = f(&elems)?;
+        match &elem_extents {
+            None => elem_extents = Some(v.extents()),
+            Some(prev) => {
+                if *prev != v.extents() {
+                    return Err(Error::Eval(format!(
+                        "{what}: result shape varies across elements"
+                    )));
+                }
+            }
+        }
+        out.extend(v.to_dense());
+    }
+    // Assemble the dense result: element dims (innermost first) + outer.
+    let elem_extents = elem_extents.unwrap_or_default();
+    let mut dims = Vec::with_capacity(elem_extents.len() + 1);
+    let mut stride = 1;
+    for &e in &elem_extents {
+        dims.push(crate::layout::Dim::new(e, stride));
+        stride *= e;
+    }
+    dims.push(crate::layout::Dim::new(extent, stride));
+    Ok(Value::Arr(ArrVal {
+        data: Rc::new(out),
+        view: View::of(Layout { dims }),
+    }))
+}
+
+/// Combine two accumulator values with a reduction operator (`Prim` or
+/// `lift^k prim`).
+fn combine(r: &Expr, a: &Value, b: &Value) -> Result<Value> {
+    match r {
+        Expr::Prim(p) => {
+            if p.arity() != 2 {
+                return Err(Error::Eval("reduction operator must be binary".into()));
+            }
+            Ok(Value::Scalar(p.apply(&[a.as_scalar()?, b.as_scalar()?])))
+        }
+        Expr::Lift { f } => {
+            let (aa, ba) = (a.as_arr()?, b.as_arr()?);
+            let ea = aa.view.layout.outer().ok_or_else(|| {
+                Error::Eval("lifted reduction over scalar accumulator".into())
+            })?;
+            let eb = ba
+                .view
+                .layout
+                .outer()
+                .ok_or_else(|| Error::Eval("lifted reduction over scalar".into()))?;
+            if ea.extent != eb.extent {
+                return Err(Error::Eval(format!(
+                    "lifted reduction extent mismatch: {} vs {}",
+                    ea.extent, eb.extent
+                )));
+            }
+            let mut out: Vec<f64> = Vec::new();
+            let mut elem_extents: Option<Vec<usize>> = None;
+            for i in 0..ea.extent {
+                let va = Value::Arr(ArrVal {
+                    data: aa.data.clone(),
+                    view: aa.view.index_outer(i)?,
+                });
+                let vb = Value::Arr(ArrVal {
+                    data: ba.data.clone(),
+                    view: ba.view.index_outer(i)?,
+                });
+                let va = promote_scalar(va);
+                let vb = promote_scalar(vb);
+                let v = combine(f, &va, &vb)?;
+                if elem_extents.is_none() {
+                    elem_extents = Some(v.extents());
+                }
+                out.extend(v.to_dense());
+            }
+            let elem_extents = elem_extents.unwrap_or_default();
+            let mut dims = Vec::with_capacity(elem_extents.len() + 1);
+            let mut stride = 1;
+            for &e in &elem_extents {
+                dims.push(crate::layout::Dim::new(e, stride));
+                stride *= e;
+            }
+            dims.push(crate::layout::Dim::new(ea.extent, stride));
+            Ok(Value::Arr(ArrVal {
+                data: Rc::new(out),
+                view: View::of(Layout { dims }),
+            }))
+        }
+        other => Err(Error::Eval(format!(
+            "unsupported reduction operator: {}",
+            crate::dsl::pretty(other)
+        ))),
+    }
+}
+
+/// Rank-0 array views behave as scalars under prim reduction.
+fn promote_scalar(v: Value) -> Value {
+    match &v {
+        Value::Arr(a) if a.view.layout.is_scalar() => Value::Scalar(a.data[a.view.offset]),
+        _ => v,
+    }
+}
+
+fn outer_extent(args: &[Value], what: &str) -> Result<usize> {
+    let mut extent = None;
+    for (i, v) in args.iter().enumerate() {
+        let a = v
+            .as_arr()
+            .map_err(|_| Error::Eval(format!("{what}: arg {i} is scalar")))?;
+        let outer = a
+            .view
+            .layout
+            .outer()
+            .ok_or_else(|| Error::Eval(format!("{what}: arg {i} has rank 0")))?;
+        match extent {
+            None => extent = Some(outer.extent),
+            Some(e) if e == outer.extent => {}
+            Some(e) => {
+                return Err(Error::Eval(format!(
+                    "{what}: extent mismatch {e} vs {}",
+                    outer.extent
+                )))
+            }
+        }
+    }
+    extent.ok_or_else(|| Error::Eval(format!("{what}: no arguments")))
+}
+
+/// Index every argument at outer position `i`, yielding element values
+/// (scalars where the element rank is 0).
+fn index_all(args: &[Value], i: usize) -> Result<Vec<Value>> {
+    args.iter()
+        .map(|v| {
+            let a = v.as_arr()?;
+            let view = a.view.index_outer(i)?;
+            if view.layout.is_scalar() {
+                Ok(Value::Scalar(a.data[view.offset]))
+            } else {
+                Ok(Value::Arr(ArrVal {
+                    data: a.data.clone(),
+                    view,
+                }))
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::*;
+
+    fn inputs2(a: (Vec<f64>, Vec<usize>), b: (Vec<f64>, Vec<usize>)) -> Inputs {
+        let mut m = Inputs::new();
+        m.insert("A".into(), ArrVal::dense(a.0, &a.1));
+        m.insert("B".into(), ArrVal::dense(b.0, &b.1));
+        m
+    }
+
+    #[test]
+    fn dot_product() {
+        let mut inp = Inputs::new();
+        inp.insert("u".into(), ArrVal::dense(vec![1.0, 2.0, 3.0], &[3]));
+        inp.insert("v".into(), ArrVal::dense(vec![4.0, 5.0, 6.0], &[3]));
+        let e = dot(input("u"), input("v"));
+        assert_eq!(eval(&e, &inp).unwrap().as_scalar().unwrap(), 32.0);
+    }
+
+    #[test]
+    fn map_scale() {
+        let mut inp = Inputs::new();
+        inp.insert("v".into(), ArrVal::dense(vec![1.0, -2.0, 3.0], &[3]));
+        let e = map(lam1("x", app2(mul(), var("x"), lit(2.0))), input("v"));
+        assert_eq!(eval(&e, &inp).unwrap().to_dense(), vec![2.0, -4.0, 6.0]);
+    }
+
+    #[test]
+    fn matvec_textbook() {
+        // A = [[1,2],[3,4],[5,6]], v = [1,10] → [21, 43, 65]
+        let mut inp = Inputs::new();
+        inp.insert(
+            "A".into(),
+            ArrVal::dense(vec![1., 2., 3., 4., 5., 6.], &[3, 2]),
+        );
+        inp.insert("v".into(), ArrVal::dense(vec![1., 10.], &[2]));
+        let e = matvec_naive(input("A"), input("v"));
+        assert_eq!(eval(&e, &inp).unwrap().to_dense(), vec![21., 43., 65.]);
+    }
+
+    #[test]
+    fn matvec_flipped_form_matches_eq40() {
+        // rnz (lift +) (\c q -> map (\e -> e*q) c) (flip 0 A) v
+        let mut inp = Inputs::new();
+        inp.insert(
+            "A".into(),
+            ArrVal::dense(vec![1., 2., 3., 4., 5., 6.], &[3, 2]),
+        );
+        inp.insert("v".into(), ArrVal::dense(vec![1., 10.], &[2]));
+        let e = rnz(
+            lift(add()),
+            lam2(
+                "c",
+                "q",
+                map(lam1("e", app2(mul(), var("e"), var("q"))), var("c")),
+            ),
+            vec![flip(0, input("A")), input("v")],
+        );
+        assert_eq!(eval(&e, &inp).unwrap().to_dense(), vec![21., 43., 65.]);
+    }
+
+    #[test]
+    fn matmul_small() {
+        // [[1,2],[3,4]] * [[5,6],[7,8]] = [[19,22],[43,50]]
+        let inp = inputs2(
+            (vec![1., 2., 3., 4.], vec![2, 2]),
+            (vec![5., 6., 7., 8.], vec![2, 2]),
+        );
+        let e = matmul_naive(input("A"), input("B"));
+        assert_eq!(
+            eval(&e, &inp).unwrap().to_dense(),
+            vec![19., 22., 43., 50.]
+        );
+    }
+
+    #[test]
+    fn dyadic_product_eq36() {
+        // map (\x -> map (\y -> x*y) u) v  over v=[1,2], u=[3,4,5]
+        let mut inp = Inputs::new();
+        inp.insert("v".into(), ArrVal::dense(vec![1., 2.], &[2]));
+        inp.insert("u".into(), ArrVal::dense(vec![3., 4., 5.], &[3]));
+        let e = map(
+            lam1(
+                "x",
+                map(lam1("y", app2(mul(), var("x"), var("y"))), input("u")),
+            ),
+            input("v"),
+        );
+        let v = eval(&e, &inp).unwrap();
+        assert_eq!(v.to_dense(), vec![3., 4., 5., 6., 8., 10.]);
+        assert_eq!(v.extents(), vec![3, 2]);
+    }
+
+    #[test]
+    fn subdivided_map_identity_eq44() {
+        let mut inp = Inputs::new();
+        inp.insert(
+            "v".into(),
+            ArrVal::dense((0..12).map(|i| i as f64).collect(), &[12]),
+        );
+        let double = lam1("x", app2(mul(), var("x"), lit(2.0)));
+        let plain = map(double.clone(), input("v"));
+        let blocked = map(
+            lam1("blk", map(double, var("blk"))),
+            subdiv(0, 4, input("v")),
+        );
+        let a = eval(&plain, &inp).unwrap().to_dense();
+        let b = eval(&blocked, &inp).unwrap().to_dense();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn reduce_with_max() {
+        let mut inp = Inputs::new();
+        inp.insert("v".into(), ArrVal::dense(vec![3., 9., 1., 7.], &[4]));
+        let e = reduce(pmax(), input("v"));
+        assert_eq!(eval(&e, &inp).unwrap().as_scalar().unwrap(), 9.0);
+    }
+
+    #[test]
+    fn lifted_reduction_of_rows() {
+        // Column sums of A via rnz (lift +) id rows
+        let mut inp = Inputs::new();
+        inp.insert(
+            "A".into(),
+            ArrVal::dense(vec![1., 2., 3., 4., 5., 6.], &[3, 2]),
+        );
+        let e = rnz(lift(add()), lam1("r", var("r")), vec![input("A")]);
+        assert_eq!(eval(&e, &inp).unwrap().to_dense(), vec![9., 12.]);
+    }
+
+    #[test]
+    fn errors_surface() {
+        let inp = Inputs::new();
+        assert!(eval(&var("x"), &inp).is_err());
+        assert!(eval(&input("Q"), &inp).is_err());
+        assert!(eval(&add(), &inp).is_err());
+    }
+}

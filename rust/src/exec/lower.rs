@@ -1,0 +1,550 @@
+//! Lowering from the DSL AST (fused normal form) to the loop-nest IR.
+//!
+//! Every `nzip` becomes a [`Node::MapLoop`], every `rnz` a
+//! [`Node::RedLoop`]; layout operators are folded into the strides of the
+//! views they wrap, and scalar bodies compile to stack bytecode
+//! ([`Kernel`]). Each HoF argument position receives its own *track* (an
+//! independent offset cursor), so aliased views of one buffer traverse
+//! independently — offsets are derived per iteration as
+//! `off[child] = off[parent] + base + i * stride`.
+
+use super::program::{Adv, Kernel, KernelOp, Node, Program, SlotId, TrackId};
+use crate::dsl::{Expr, Prim};
+use crate::layout::Layout;
+use crate::typecheck::{self, Env};
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// Lower a typechecked expression to an executable [`Program`].
+pub fn lower(e: &Expr, env: &Env) -> Result<Program> {
+    // Typecheck up front: lowering relies on the shape guarantees.
+    typecheck::infer(e, env)?;
+    let mut lw = Lowerer {
+        env,
+        input_names: Vec::new(),
+        input_lens: Vec::new(),
+        track_slot: Vec::new(),
+        temp_sizes: Vec::new(),
+        vars: HashMap::new(),
+    };
+    let (root, out_size) = lw.lower_node(e, None)?;
+    Ok(Program {
+        root,
+        input_names: lw.input_names,
+        track_slot: lw.track_slot,
+        input_lens: lw.input_lens,
+        out_size,
+        temp_sizes: lw.temp_sizes,
+    })
+}
+
+/// A resolved array view: which buffer, derived from which track, with what
+/// residual layout.
+#[derive(Clone, Debug)]
+struct ViewSpec {
+    slot: SlotId,
+    src: Option<TrackId>,
+    base: usize,
+    layout: Layout,
+}
+
+#[derive(Clone, Debug)]
+struct VarInfo {
+    track: TrackId,
+    layout: Layout,
+}
+
+struct Lowerer<'a> {
+    env: &'a Env,
+    input_names: Vec<String>,
+    input_lens: Vec<usize>,
+    track_slot: Vec<SlotId>,
+    temp_sizes: Vec<usize>,
+    vars: HashMap<String, VarInfo>,
+}
+
+impl<'a> Lowerer<'a> {
+    fn slot_of(&mut self, name: &str) -> Result<(SlotId, Layout)> {
+        let layout = self
+            .env
+            .inputs
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Error::Lower(format!("unknown input '{name}'")))?;
+        if let Some(i) = self.input_names.iter().position(|n| n == name) {
+            return Ok((i, layout));
+        }
+        self.input_names.push(name.to_string());
+        self.input_lens.push(layout.required_span());
+        Ok((self.input_names.len() - 1, layout))
+    }
+
+    fn new_track(&mut self, slot: SlotId) -> TrackId {
+        self.track_slot.push(slot);
+        self.track_slot.len() - 1
+    }
+
+    /// Resolve an expression in HoF-argument position to a strided view.
+    fn resolve_view(&mut self, e: &Expr) -> Result<ViewSpec> {
+        match e {
+            Expr::Input(n) => {
+                let (slot, layout) = self.slot_of(n)?;
+                Ok(ViewSpec {
+                    slot,
+                    src: None,
+                    base: 0,
+                    layout,
+                })
+            }
+            Expr::Var(x) => {
+                let info = self
+                    .vars
+                    .get(x)
+                    .cloned()
+                    .ok_or_else(|| Error::Lower(format!("unbound variable '{x}'")))?;
+                Ok(ViewSpec {
+                    slot: self.track_slot[info.track],
+                    src: Some(info.track),
+                    base: 0,
+                    layout: info.layout,
+                })
+            }
+            Expr::Subdiv { d, b, arg } => {
+                let v = self.resolve_view(arg)?;
+                Ok(ViewSpec {
+                    layout: v.layout.subdiv(*d, *b)?,
+                    ..v
+                })
+            }
+            Expr::Flatten { d, arg } => {
+                let v = self.resolve_view(arg)?;
+                Ok(ViewSpec {
+                    layout: v.layout.flatten(*d)?,
+                    ..v
+                })
+            }
+            Expr::Flip { d1, d2, arg } => {
+                let v = self.resolve_view(arg)?;
+                Ok(ViewSpec {
+                    layout: v.layout.flip2(*d1, *d2)?,
+                    ..v
+                })
+            }
+            other => Err(Error::Lower(format!(
+                "HoF argument is not a view of an input (fuse first): {}",
+                crate::dsl::pretty(other)
+            ))),
+        }
+    }
+
+    /// Consume the outermost dimension of each argument view: create one
+    /// fresh track per argument and the matching loop advances, and return
+    /// the bound element views.
+    fn consume_outer(&mut self, views: Vec<ViewSpec>) -> Result<(usize, Vec<Adv>, Vec<ViewSpec>)> {
+        let mut extent = None;
+        let mut advances = Vec::with_capacity(views.len());
+        let mut elems = Vec::with_capacity(views.len());
+        for v in views {
+            let outer = v
+                .layout
+                .outer()
+                .ok_or_else(|| Error::Lower("HoF over rank-0 view".into()))?;
+            match extent {
+                None => extent = Some(outer.extent),
+                Some(e) if e == outer.extent => {}
+                Some(e) => {
+                    return Err(Error::Lower(format!(
+                        "extent mismatch {e} vs {}",
+                        outer.extent
+                    )))
+                }
+            }
+            let t = self.new_track(v.slot);
+            advances.push(Adv {
+                dst: t,
+                src: v.src,
+                base: v.base,
+                stride: outer.stride,
+            });
+            elems.push(ViewSpec {
+                slot: v.slot,
+                src: Some(t),
+                base: 0,
+                layout: v.layout.peel_outer()?,
+            });
+        }
+        Ok((extent.unwrap(), advances, elems))
+    }
+
+    /// Bind a function-position expression to element views and lower its
+    /// body. Handles `Lam`, bare `Prim`, and `lift^k`.
+    fn bind_and_lower(
+        &mut self,
+        f: &Expr,
+        elems: Vec<ViewSpec>,
+        under_op: Option<Prim>,
+    ) -> Result<(Node, usize)> {
+        match f {
+            Expr::Lam { params, body } => {
+                if params.len() != elems.len() {
+                    return Err(Error::Lower(format!(
+                        "lambda arity {} vs {} args",
+                        params.len(),
+                        elems.len()
+                    )));
+                }
+                // Bind each element view through a dedicated track when it
+                // is not already track-rooted (it always is, post
+                // consume_outer).
+                let mut saved = Vec::new();
+                for (p, v) in params.iter().zip(&elems) {
+                    let track = match (v.src, v.base) {
+                        (Some(t), 0) => t,
+                        _ => {
+                            return Err(Error::Lower(
+                                "internal: element view not track-rooted".into(),
+                            ))
+                        }
+                    };
+                    let info = VarInfo {
+                        track,
+                        layout: v.layout.clone(),
+                    };
+                    saved.push((p.clone(), self.vars.insert(p.clone(), info)));
+                }
+                let r = self.lower_node(body, under_op);
+                for (p, old) in saved.into_iter().rev() {
+                    match old {
+                        Some(v) => {
+                            self.vars.insert(p, v);
+                        }
+                        None => {
+                            self.vars.remove(&p);
+                        }
+                    }
+                }
+                r
+            }
+            Expr::Prim(p) => {
+                // rnz (+) (*) u v — the zipper is a bare primitive over
+                // scalar elements.
+                if elems.len() != p.arity() {
+                    return Err(Error::Lower(format!(
+                        "primitive {} arity {} vs {} args",
+                        p.name(),
+                        p.arity(),
+                        elems.len()
+                    )));
+                }
+                let mut tracks = Vec::with_capacity(elems.len());
+                let mut ops = Vec::with_capacity(elems.len() + 1);
+                for (i, v) in elems.iter().enumerate() {
+                    if !v.layout.is_scalar() {
+                        return Err(Error::Lower(format!(
+                            "primitive {} over non-scalar element",
+                            p.name()
+                        )));
+                    }
+                    tracks.push(v.src.expect("track-rooted"));
+                    ops.push(KernelOp::In(i as u8));
+                }
+                ops.push(KernelOp::Prim(*p));
+                Ok((Node::Leaf(Kernel { ops, tracks }), 1))
+            }
+            Expr::Lift { f: inner } => {
+                // lift g elementwise: one more map loop over the elements.
+                let (extent, advances, sub_elems) = self.consume_outer(elems)?;
+                let (body, body_size) = self.bind_and_lower(inner, sub_elems, under_op)?;
+                Ok((
+                    Node::MapLoop {
+                        extent,
+                        advances,
+                        body_size,
+                        body: Box::new(body),
+                    },
+                    extent * body_size,
+                ))
+            }
+            other => Err(Error::Lower(format!(
+                "unsupported function form: {}",
+                crate::dsl::pretty(other)
+            ))),
+        }
+    }
+
+    fn lower_node(&mut self, e: &Expr, under_op: Option<Prim>) -> Result<(Node, usize)> {
+        match e {
+            Expr::Nzip { f, args } => {
+                let views = args
+                    .iter()
+                    .map(|a| self.resolve_view(a))
+                    .collect::<Result<Vec<_>>>()?;
+                let (extent, advances, elems) = self.consume_outer(views)?;
+                let (body, body_size) = self.bind_and_lower(f, elems, under_op)?;
+                Ok((
+                    Node::MapLoop {
+                        extent,
+                        advances,
+                        body_size,
+                        body: Box::new(body),
+                    },
+                    extent * body_size,
+                ))
+            }
+            Expr::Rnz { r, m, args } => {
+                let op = reducer_prim(r)?;
+                let views = args
+                    .iter()
+                    .map(|a| self.resolve_view(a))
+                    .collect::<Result<Vec<_>>>()?;
+                let (extent, advances, elems) = self.consume_outer(views)?;
+                let (body, body_size) = self.bind_and_lower(m, elems, Some(op))?;
+                // A reduction running under a different (or non-commutative)
+                // enclosing accumulator needs a private region.
+                let temp = match under_op {
+                    Some(o) if o == op && op.is_commutative() => None,
+                    None => None,
+                    Some(_) => {
+                        self.temp_sizes.push(body_size);
+                        Some(self.temp_sizes.len() - 1)
+                    }
+                };
+                Ok((
+                    Node::RedLoop {
+                        extent,
+                        advances,
+                        op,
+                        body_size,
+                        temp,
+                        body: Box::new(body),
+                    },
+                    body_size,
+                ))
+            }
+            // An array-typed body (identity zipper, bare view) lowers to a
+            // copy nest.
+            Expr::Var(_) | Expr::Input(_) | Expr::Subdiv { .. } | Expr::Flatten { .. }
+            | Expr::Flip { .. } => {
+                let v = self.resolve_view(e)?;
+                if v.layout.is_scalar() {
+                    let t = match (v.src, v.base) {
+                        (Some(t), 0) => t,
+                        _ => {
+                            let t = self.new_track(v.slot);
+                            // Constant-offset scalar view of an input: model
+                            // as a 1-iteration advance-less track via base.
+                            return Ok((
+                                Node::MapLoop {
+                                    extent: 1,
+                                    advances: vec![Adv {
+                                        dst: t,
+                                        src: v.src,
+                                        base: v.base,
+                                        stride: 0,
+                                    }],
+                                    body_size: 1,
+                                    body: Box::new(Node::Leaf(Kernel {
+                                        ops: vec![KernelOp::In(0)],
+                                        tracks: vec![t],
+                                    })),
+                                },
+                                1,
+                            ));
+                        }
+                    };
+                    return Ok((
+                        Node::Leaf(Kernel {
+                            ops: vec![KernelOp::In(0)],
+                            tracks: vec![t],
+                        }),
+                        1,
+                    ));
+                }
+                self.lower_copy(v)
+            }
+            // Scalar computation leaf.
+            _ => {
+                let mut tracks = Vec::new();
+                let mut ops = Vec::new();
+                self.compile_kernel(e, &mut ops, &mut tracks)?;
+                Ok((Node::Leaf(Kernel { ops, tracks }), 1))
+            }
+        }
+    }
+
+    /// Copy an array view to the destination: one map loop per dimension.
+    fn lower_copy(&mut self, v: ViewSpec) -> Result<(Node, usize)> {
+        if v.layout.is_scalar() {
+            let t = v.src.expect("track-rooted");
+            return Ok((
+                Node::Leaf(Kernel {
+                    ops: vec![KernelOp::In(0)],
+                    tracks: vec![t],
+                }),
+                1,
+            ));
+        }
+        let (extent, advances, mut elems) = self.consume_outer(vec![v])?;
+        let elem = elems.pop().unwrap();
+        let (body, body_size) = self.lower_copy(elem)?;
+        Ok((
+            Node::MapLoop {
+                extent,
+                advances,
+                body_size,
+                body: Box::new(body),
+            },
+            extent * body_size,
+        ))
+    }
+
+    /// Compile a scalar expression to stack bytecode.
+    fn compile_kernel(
+        &mut self,
+        e: &Expr,
+        ops: &mut Vec<KernelOp>,
+        tracks: &mut Vec<TrackId>,
+    ) -> Result<()> {
+        match e {
+            Expr::Lit(x) => {
+                ops.push(KernelOp::Const(*x));
+                Ok(())
+            }
+            Expr::Var(x) => {
+                let info = self
+                    .vars
+                    .get(x)
+                    .cloned()
+                    .ok_or_else(|| Error::Lower(format!("unbound variable '{x}'")))?;
+                if !info.layout.is_scalar() {
+                    return Err(Error::Lower(format!(
+                        "array variable '{x}' used in scalar position"
+                    )));
+                }
+                if tracks.len() >= u8::MAX as usize {
+                    return Err(Error::Lower("kernel has too many inputs".into()));
+                }
+                ops.push(KernelOp::In(tracks.len() as u8));
+                tracks.push(info.track);
+                Ok(())
+            }
+            Expr::App { f, args } => match &**f {
+                Expr::Prim(p) => {
+                    if args.len() != p.arity() {
+                        return Err(Error::Lower(format!(
+                            "primitive {} arity mismatch",
+                            p.name()
+                        )));
+                    }
+                    for a in args {
+                        self.compile_kernel(a, ops, tracks)?;
+                    }
+                    ops.push(KernelOp::Prim(*p));
+                    Ok(())
+                }
+                Expr::Lam { .. } => Err(Error::Lower(
+                    "beta-redex in scalar position (run lambda rewrites first)".into(),
+                )),
+                other => Err(Error::Lower(format!(
+                    "unsupported scalar application head: {}",
+                    crate::dsl::pretty(other)
+                ))),
+            },
+            other => Err(Error::Lower(format!(
+                "unsupported scalar expression: {}",
+                crate::dsl::pretty(other)
+            ))),
+        }
+    }
+}
+
+/// Extract the primitive from a (possibly `lift^k`-wrapped) reduction
+/// operator.
+fn reducer_prim(r: &Expr) -> Result<Prim> {
+    let mut cur = r;
+    while let Expr::Lift { f } = cur {
+        cur = f;
+    }
+    match cur {
+        Expr::Prim(p) if p.arity() == 2 && p.is_associative() => Ok(*p),
+        other => Err(Error::Lower(format!(
+            "unsupported reduction operator: {}",
+            crate::dsl::pretty(other)
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::*;
+
+    #[test]
+    fn lower_matvec_shape() {
+        let env = Env::new()
+            .with("A", Layout::row_major(&[4, 6]))
+            .with("v", Layout::row_major(&[6]));
+        let e = matvec_naive(input("A"), input("v"));
+        let p = lower(&e, &env).unwrap();
+        assert_eq!(p.out_size, 4);
+        assert_eq!(p.loop_kinds(), vec!["map", "red"]);
+        assert_eq!(p.input_names, vec!["A".to_string(), "v".to_string()]);
+        assert!(p.temp_sizes.is_empty());
+    }
+
+    #[test]
+    fn lower_matmul_shape() {
+        let env = Env::new()
+            .with("A", Layout::row_major(&[4, 6]))
+            .with("B", Layout::row_major(&[6, 8]));
+        let p = lower(&matmul_naive(input("A"), input("B")), &env).unwrap();
+        assert_eq!(p.out_size, 32);
+        assert_eq!(p.loop_kinds(), vec!["map", "map", "red"]);
+    }
+
+    #[test]
+    fn lower_rejects_unfused_pipeline() {
+        let env = Env::new().with("v", Layout::row_major(&[4]));
+        // map f (map g v) — inner map is not a view
+        let e = map(
+            lam1("x", app2(mul(), var("x"), lit(2.0))),
+            map(lam1("y", app2(add(), var("y"), lit(1.0))), input("v")),
+        );
+        assert!(lower(&e, &env).is_err());
+    }
+
+    #[test]
+    fn same_op_nested_reduction_needs_no_temp() {
+        let env = Env::new()
+            .with("A", Layout::row_major(&[4, 8]))
+            .with("v", Layout::row_major(&[8]));
+        // 1a form: subdivided dot
+        let e = map(
+            lam1(
+                "r",
+                rnz(
+                    add(),
+                    lam2("b", "c", dot(var("b"), var("c"))),
+                    vec![subdiv(0, 2, var("r")), subdiv(0, 2, input("v"))],
+                ),
+            ),
+            input("A"),
+        );
+        let p = lower(&e, &env).unwrap();
+        assert!(p.temp_sizes.is_empty());
+        assert_eq!(p.loop_kinds(), vec!["map", "red", "red"]);
+    }
+
+    #[test]
+    fn mixed_op_nested_reduction_gets_temp() {
+        let env = Env::new().with("A", Layout::row_major(&[4, 8]));
+        // max over rows of (sum of row elements)
+        let e = rnz(
+            pmax(),
+            lam1("r", reduce(add(), var("r"))),
+            vec![input("A")],
+        );
+        let p = lower(&e, &env).unwrap();
+        assert_eq!(p.temp_sizes, vec![1]);
+    }
+}

@@ -1,0 +1,197 @@
+//! The loop-nest IR produced by [`super::lower`] and consumed by
+//! [`super::interp`] and [`super::trace`].
+
+use crate::dsl::Prim;
+
+/// Identifies one *view instance* ("track") whose flat offset the
+/// interpreter maintains. Every HoF argument position gets its own track,
+/// so aliased views of the same buffer advance independently.
+pub type TrackId = usize;
+
+/// External input buffer slot.
+pub type SlotId = usize;
+
+/// How a loop derives a child track's offset each iteration:
+/// `off[dst] = off_at_loop_entry(src) + base + i * stride`.
+#[derive(Clone, Debug)]
+pub struct Adv {
+    pub dst: TrackId,
+    /// Parent track whose (stable, outer-loop-owned) offset is the base;
+    /// `None` for direct input views (base 0).
+    pub src: Option<TrackId>,
+    /// Constant extra offset of the view (from slicing/base offsets).
+    pub base: usize,
+    /// Stride of the consumed (outermost) dimension.
+    pub stride: usize,
+}
+
+/// A loop-nest node.
+#[derive(Clone, Debug)]
+pub enum Node {
+    /// `nzip`: iterate `extent` times, advancing each argument track by its
+    /// stride and the destination cursor by `body_size` elements.
+    MapLoop {
+        extent: usize,
+        advances: Vec<Adv>,
+        body_size: usize,
+        body: Box<Node>,
+    },
+    /// `rnz`: iterate `extent` times combining body results into the
+    /// destination region with the associative `op`.
+    RedLoop {
+        extent: usize,
+        advances: Vec<Adv>,
+        op: Prim,
+        body_size: usize,
+        /// Arena slot used when this reduction runs under a *different*
+        /// enclosing accumulation operator and needs a private region.
+        temp: Option<usize>,
+        body: Box<Node>,
+    },
+    /// Innermost scalar computation writing one element at the destination
+    /// cursor.
+    Leaf(Kernel),
+}
+
+/// Stack bytecode for scalar leaf expressions.
+#[derive(Clone, Debug, PartialEq)]
+pub enum KernelOp {
+    /// Push the scalar at `tracks[i]`'s current offset.
+    In(u8),
+    /// Push a constant.
+    Const(f64),
+    /// Pop `arity` operands, push the primitive's result.
+    Prim(Prim),
+}
+
+/// A compiled scalar leaf: bytecode over a small operand stack, reading the
+/// listed tracks.
+#[derive(Clone, Debug)]
+pub struct Kernel {
+    pub ops: Vec<KernelOp>,
+    /// Track for each `In(i)` operand.
+    pub tracks: Vec<TrackId>,
+}
+
+impl Kernel {
+    /// Fast-path classification: `a * b` over exactly two inputs.
+    pub fn is_mul2(&self) -> bool {
+        self.tracks.len() == 2
+            && self.ops
+                == [
+                    KernelOp::In(0),
+                    KernelOp::In(1),
+                    KernelOp::Prim(Prim::Mul),
+                ]
+    }
+
+    /// Fast-path classification: a bare copy of one input.
+    pub fn is_copy(&self) -> bool {
+        self.tracks.len() == 1 && self.ops == [KernelOp::In(0)]
+    }
+
+    /// Maximum operand-stack depth (for the interpreter's fixed buffer).
+    pub fn max_stack(&self) -> usize {
+        let mut depth = 0usize;
+        let mut max = 0usize;
+        for op in &self.ops {
+            match op {
+                KernelOp::In(_) | KernelOp::Const(_) => depth += 1,
+                KernelOp::Prim(p) => depth = depth + 1 - p.arity(),
+            }
+            max = max.max(depth);
+        }
+        max
+    }
+}
+
+/// How a leaf (or microkernel) writes its result element.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WriteMode {
+    /// `dst = val`
+    Set,
+    /// `dst = op(dst, val)`
+    Acc(Prim),
+}
+
+/// A complete lowered program.
+#[derive(Clone, Debug)]
+pub struct Program {
+    pub root: Node,
+    /// Input buffer names in slot order.
+    pub input_names: Vec<String>,
+    /// Buffer slot backing each track.
+    pub track_slot: Vec<SlotId>,
+    /// Declared length of each input buffer (for validation).
+    pub input_lens: Vec<usize>,
+    /// Total output elements.
+    pub out_size: usize,
+    /// Sizes of reduction temp regions.
+    pub temp_sizes: Vec<usize>,
+}
+
+impl Program {
+    pub fn n_tracks(&self) -> usize {
+        self.track_slot.len()
+    }
+
+    /// Total loop-nest depth (for diagnostics).
+    pub fn depth(&self) -> usize {
+        fn go(n: &Node) -> usize {
+            match n {
+                Node::MapLoop { body, .. } | Node::RedLoop { body, .. } => 1 + go(body),
+                Node::Leaf(_) => 0,
+            }
+        }
+        go(&self.root)
+    }
+
+    /// Sequence of loop kinds from outermost in, e.g. `["map", "map",
+    /// "red"]` — the paper's "HoF order from left to right is the nesting
+    /// from top down".
+    pub fn loop_kinds(&self) -> Vec<&'static str> {
+        fn go(n: &Node, out: &mut Vec<&'static str>) {
+            match n {
+                Node::MapLoop { body, .. } => {
+                    out.push("map");
+                    go(body, out);
+                }
+                Node::RedLoop { body, .. } => {
+                    out.push("red");
+                    go(body, out);
+                }
+                Node::Leaf(_) => {}
+            }
+        }
+        let mut out = Vec::new();
+        go(&self.root, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_classification() {
+        let mul2 = Kernel {
+            ops: vec![
+                KernelOp::In(0),
+                KernelOp::In(1),
+                KernelOp::Prim(Prim::Mul),
+            ],
+            tracks: vec![0, 1],
+        };
+        assert!(mul2.is_mul2());
+        assert!(!mul2.is_copy());
+        assert_eq!(mul2.max_stack(), 2);
+
+        let copy = Kernel {
+            ops: vec![KernelOp::In(0)],
+            tracks: vec![3],
+        };
+        assert!(copy.is_copy());
+        assert_eq!(copy.max_stack(), 1);
+    }
+}

@@ -1,0 +1,388 @@
+//! Strided layout algebra — the paper's §2.1.
+//!
+//! A multi-dimensional array view is described by a list of
+//! `(extent, stride)` pairs, written in the paper as
+//! `a^((e_1,s_1),(e_2,s_2),…,(e_n,s_n))`. **Index 0 is the innermost
+//! (fastest-varying) dimension**; higher-order functions consume the
+//! *outermost* dimension, i.e. the one at the highest index. This matches
+//! the paper's convention: for the 120-element example,
+//! `a^((3,1),(2,3),(5,6),(4,30))` is the flat row-major 4-tensor while
+//! `a^((3,1),(2,15),(5,3),(4,30))` is the same memory reinterpreted as a
+//! subdivided (blocked) matrix.
+//!
+//! Three layout operators change the *logical* structure without moving any
+//! data:
+//!
+//! - [`Layout::subdiv`] — split dimension `d`'s extent into blocks of `b`
+//!   (paper eq. for `subdiv d b s`),
+//! - [`Layout::flatten`] — merge dimensions `d` and `d+1` (inverse of
+//!   `subdiv`),
+//! - [`Layout::flip`] — swap two dimensions (a transpose of the logical
+//!   structure; `flip` applied twice is the identity).
+//!
+//! Because the layouts are Naperian (a container of a fixed shape is a
+//! function from its index set), these operators correspond to `curry` /
+//! `uncurry` / `flip` on index functions — which is what makes the paper's
+//! HoF exchange rules type-check.
+
+mod view;
+
+pub use view::View;
+
+use crate::{Error, Result};
+
+/// One logical dimension of a strided view: `extent` elements, consecutive
+/// logical indices separated by `stride` elements in flat storage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Dim {
+    pub extent: usize,
+    pub stride: usize,
+}
+
+impl Dim {
+    pub fn new(extent: usize, stride: usize) -> Self {
+        Dim { extent, stride }
+    }
+}
+
+/// A strided multi-dimensional layout. `dims[0]` is the innermost dimension.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, Default)]
+pub struct Layout {
+    pub dims: Vec<Dim>,
+}
+
+impl Layout {
+    /// Scalar layout (rank 0).
+    pub fn scalar() -> Self {
+        Layout { dims: Vec::new() }
+    }
+
+    /// Construct from `(extent, stride)` pairs, innermost first.
+    pub fn from_pairs(pairs: &[(usize, usize)]) -> Self {
+        Layout {
+            dims: pairs.iter().map(|&(e, s)| Dim::new(e, s)).collect(),
+        }
+    }
+
+    /// Dense row-major layout for logical shape given **outermost first**
+    /// (the conventional shape order, e.g. `[rows, cols]` for a matrix).
+    ///
+    /// `row_major(&[n, m])` yields `dims = [(m,1),(n,m)]`: the column index
+    /// is innermost.
+    pub fn row_major(shape_outer_first: &[usize]) -> Self {
+        let mut dims = Vec::with_capacity(shape_outer_first.len());
+        let mut stride = 1;
+        for &e in shape_outer_first.iter().rev() {
+            dims.push(Dim::new(e, stride));
+            stride *= e;
+        }
+        Layout { dims }
+    }
+
+    /// Dense column-major layout, shape given outermost first.
+    pub fn col_major(shape_outer_first: &[usize]) -> Self {
+        let mut dims: Vec<Dim> = Vec::with_capacity(shape_outer_first.len());
+        let mut stride = 1;
+        for &e in shape_outer_first.iter() {
+            dims.push(Dim::new(e, stride));
+            stride *= e;
+        }
+        dims.reverse();
+        Layout { dims }
+    }
+
+    /// Number of dimensions.
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// `true` for rank 0.
+    pub fn is_scalar(&self) -> bool {
+        self.dims.is_empty()
+    }
+
+    /// Total number of logical elements (product of extents).
+    pub fn len(&self) -> usize {
+        self.dims.iter().map(|d| d.extent).product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The outermost dimension — the one a HoF consumes.
+    pub fn outer(&self) -> Option<Dim> {
+        self.dims.last().copied()
+    }
+
+    /// Layout of one element along the outermost dimension (what a HoF's
+    /// function argument sees).
+    pub fn peel_outer(&self) -> Result<Layout> {
+        if self.dims.is_empty() {
+            return Err(Error::Layout("peel_outer on scalar layout".into()));
+        }
+        Ok(Layout {
+            dims: self.dims[..self.dims.len() - 1].to_vec(),
+        })
+    }
+
+    /// The smallest flat-buffer size (in elements, relative to the view's
+    /// base offset) that contains every address this layout can touch.
+    pub fn required_span(&self) -> usize {
+        1 + self
+            .dims
+            .iter()
+            .map(|d| (d.extent - 1) * d.stride)
+            .sum::<usize>()
+    }
+
+    /// Flat offset of a logical index (given innermost-first, one index per
+    /// dimension).
+    pub fn offset_of(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.dims.len());
+        idx.iter()
+            .zip(&self.dims)
+            .map(|(&i, d)| {
+                debug_assert!(i < d.extent);
+                i * d.stride
+            })
+            .sum()
+    }
+
+    /// `subdiv d b`: split the extent at dimension `d` into blocks of size
+    /// `b`. Per the paper:
+    ///
+    /// ```text
+    /// (e'_d,     s'_d)     = (b, s_d)           -- within-block (inner)
+    /// (e'_{d+1}, s'_{d+1}) = (e_d / b, b * s_d) -- block index  (outer)
+    /// ```
+    ///
+    /// `b` must divide `e_d`.
+    pub fn subdiv(&self, d: usize, b: usize) -> Result<Layout> {
+        let dim = *self
+            .dims
+            .get(d)
+            .ok_or_else(|| Error::Layout(format!("subdiv: dim {d} out of range (rank {})", self.rank())))?;
+        if b == 0 || dim.extent % b != 0 {
+            return Err(Error::Layout(format!(
+                "subdiv: block size {b} does not divide extent {}",
+                dim.extent
+            )));
+        }
+        let mut dims = self.dims.clone();
+        dims[d] = Dim::new(b, dim.stride);
+        dims.insert(d + 1, Dim::new(dim.extent / b, b * dim.stride));
+        Ok(Layout { dims })
+    }
+
+    /// `flatten d`: merge dimensions `d` and `d+1` into one of extent
+    /// `e_d * e_{d+1}` and stride `s_d`. It is the inverse of `subdiv`
+    /// only when the strides chain (`s_{d+1} == e_d * s_d`); we enforce
+    /// that, since otherwise the flattened view would address different
+    /// elements than the nested one.
+    pub fn flatten(&self, d: usize) -> Result<Layout> {
+        if d + 1 >= self.rank() {
+            return Err(Error::Layout(format!(
+                "flatten: need dims {d},{} but rank is {}",
+                d + 1,
+                self.rank()
+            )));
+        }
+        let inner = self.dims[d];
+        let outer = self.dims[d + 1];
+        if outer.stride != inner.extent * inner.stride {
+            return Err(Error::Layout(format!(
+                "flatten: dims {d},{} do not chain: outer stride {} != {} * {}",
+                d + 1,
+                outer.stride,
+                inner.extent,
+                inner.stride
+            )));
+        }
+        let mut dims = self.dims.clone();
+        dims[d] = Dim::new(inner.extent * outer.extent, inner.stride);
+        dims.remove(d + 1);
+        Ok(Layout { dims })
+    }
+
+    /// `flip d1 d2`: swap dimensions `d1` and `d2` (extent and stride
+    /// together). Commutative in its arguments; an involution.
+    pub fn flip2(&self, d1: usize, d2: usize) -> Result<Layout> {
+        if d1 >= self.rank() || d2 >= self.rank() {
+            return Err(Error::Layout(format!(
+                "flip: dims {d1},{d2} out of range (rank {})",
+                self.rank()
+            )));
+        }
+        let mut dims = self.dims.clone();
+        dims.swap(d1, d2);
+        Ok(Layout { dims })
+    }
+
+    /// `flip d` with the paper's default second argument `d2 = d1 + 1`.
+    pub fn flip(&self, d: usize) -> Result<Layout> {
+        self.flip2(d, d + 1)
+    }
+
+    /// Enumerate the flat offsets of all logical elements in logical
+    /// (innermost-fastest) order. For tests and the reference evaluator.
+    pub fn offsets(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.len());
+        let mut idx = vec![0usize; self.rank()];
+        loop {
+            out.push(self.offset_of(&idx));
+            // increment innermost-first
+            let mut d = 0;
+            loop {
+                if d == self.rank() {
+                    return out;
+                }
+                idx[d] += 1;
+                if idx[d] < self.dims[d].extent {
+                    break;
+                }
+                idx[d] = 0;
+                d += 1;
+            }
+        }
+    }
+
+    /// `true` if no two distinct logical indices map to the same flat
+    /// offset (the view is a bijection onto its image).
+    pub fn is_injective(&self) -> bool {
+        let mut offs = self.offsets();
+        let n = offs.len();
+        offs.sort_unstable();
+        offs.dedup();
+        offs.len() == n
+    }
+}
+
+impl std::fmt::Display for Layout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "a^(")?;
+        for (i, d) in self.dims.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "({},{})", d.extent, d.stride)?;
+        }
+        write!(f, ")")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_major_matrix() {
+        // n=4 rows, m=3 cols
+        let l = Layout::row_major(&[4, 3]);
+        assert_eq!(l.dims, vec![Dim::new(3, 1), Dim::new(4, 3)]);
+        assert_eq!(l.len(), 12);
+        assert_eq!(l.required_span(), 12);
+        assert!(l.is_injective());
+    }
+
+    #[test]
+    fn col_major_matrix() {
+        let l = Layout::col_major(&[4, 3]);
+        assert_eq!(l.dims, vec![Dim::new(3, 4), Dim::new(4, 1)]);
+        assert!(l.is_injective());
+    }
+
+    #[test]
+    fn paper_120_element_example() {
+        // Paper §2.1: 120 elements; flat 4-tensor vs subdivided matrix.
+        let flat = Layout::from_pairs(&[(3, 1), (2, 3), (5, 6), (4, 30)]);
+        assert_eq!(flat.len(), 120);
+        assert_eq!(flat.required_span(), 120);
+        assert!(flat.is_injective());
+
+        let blocked = Layout::from_pairs(&[(3, 1), (2, 15), (5, 3), (4, 30)]);
+        assert_eq!(blocked.len(), 120);
+        assert_eq!(blocked.required_span(), 120);
+        assert!(blocked.is_injective());
+    }
+
+    #[test]
+    fn subdiv_matches_paper_equations() {
+        // 6x4 row-major matrix: dims [(4,1),(6,4)]
+        let l = Layout::row_major(&[6, 4]);
+        // split the column dimension (d=0) into blocks of 2
+        let s = l.subdiv(0, 2).unwrap();
+        assert_eq!(
+            s.dims,
+            vec![Dim::new(2, 1), Dim::new(2, 2), Dim::new(6, 4)]
+        );
+        assert!(s.is_injective());
+        assert_eq!(s.len(), 24);
+    }
+
+    #[test]
+    fn subdiv_then_flatten_is_identity() {
+        let l = Layout::row_major(&[8, 6]);
+        for d in 0..2 {
+            for &b in &[1, 2, 3, 6] {
+                if l.dims[d].extent % b != 0 {
+                    continue;
+                }
+                let round = l.subdiv(d, b).unwrap().flatten(d).unwrap();
+                assert_eq!(round, l, "subdiv({d},{b}) then flatten");
+            }
+        }
+    }
+
+    #[test]
+    fn subdiv_requires_divisibility() {
+        let l = Layout::row_major(&[6, 4]);
+        assert!(l.subdiv(0, 3).is_err()); // 3 does not divide 4
+        assert!(l.subdiv(1, 4).is_err()); // 4 does not divide 6
+        assert!(l.subdiv(0, 0).is_err());
+        assert!(l.subdiv(5, 2).is_err());
+    }
+
+    #[test]
+    fn flatten_requires_chained_strides() {
+        // flip first so strides no longer chain
+        let l = Layout::row_major(&[4, 4]).flip(0).unwrap();
+        assert!(l.flatten(0).is_err());
+    }
+
+    #[test]
+    fn flip_involution_and_commutative() {
+        let l = Layout::from_pairs(&[(3, 1), (5, 3), (2, 15)]);
+        let f = l.flip2(0, 2).unwrap();
+        assert_eq!(f.flip2(0, 2).unwrap(), l);
+        assert_eq!(l.flip2(0, 2).unwrap(), l.flip2(2, 0).unwrap());
+        assert_eq!(l.flip(1).unwrap(), l.flip2(1, 2).unwrap());
+    }
+
+    #[test]
+    fn offsets_row_major_are_sequential() {
+        let l = Layout::row_major(&[2, 3]);
+        assert_eq!(l.offsets(), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn offsets_flipped_matrix_walk_columns() {
+        let l = Layout::row_major(&[2, 3]).flip(0).unwrap();
+        // flipped: inner dim is now the row index (stride 3)
+        assert_eq!(l.offsets(), vec![0, 3, 1, 4, 2, 5]);
+    }
+
+    #[test]
+    fn peel_outer_gives_element_layout() {
+        let l = Layout::row_major(&[4, 3]);
+        let row = l.peel_outer().unwrap();
+        assert_eq!(row.dims, vec![Dim::new(3, 1)]);
+        assert!(Layout::scalar().peel_outer().is_err());
+    }
+
+    #[test]
+    fn display_matches_paper_notation() {
+        let l = Layout::from_pairs(&[(3, 1), (4, 3)]);
+        assert_eq!(l.to_string(), "a^((3,1),(4,3))");
+    }
+}

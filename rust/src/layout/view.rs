@@ -1,0 +1,119 @@
+//! A [`View`] pairs a [`Layout`] with a base offset into some flat buffer.
+//!
+//! Views are how the executor and reference evaluator address data: slicing
+//! off the outermost dimension (what a HoF does when it binds its function's
+//! parameter) is just an offset adjustment, and the layout operators apply
+//! unchanged.
+
+use super::Layout;
+use crate::{Error, Result};
+
+/// A strided window into a flat buffer identified externally (by slot or by
+/// ownership); the view itself only stores geometry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct View {
+    pub offset: usize,
+    pub layout: Layout,
+}
+
+impl View {
+    pub fn new(offset: usize, layout: Layout) -> Self {
+        View { offset, layout }
+    }
+
+    /// Whole-buffer view with a given layout.
+    pub fn of(layout: Layout) -> Self {
+        View { offset: 0, layout }
+    }
+
+    /// The view of element `i` along the outermost dimension: drops that
+    /// dimension and advances the offset by `i * stride`.
+    pub fn index_outer(&self, i: usize) -> Result<View> {
+        let outer = self
+            .layout
+            .outer()
+            .ok_or_else(|| Error::Layout("index_outer on scalar view".into()))?;
+        if i >= outer.extent {
+            return Err(Error::Layout(format!(
+                "index_outer: {i} out of range {}",
+                outer.extent
+            )));
+        }
+        Ok(View {
+            offset: self.offset + i * outer.stride,
+            layout: self.layout.peel_outer()?,
+        })
+    }
+
+    /// Flat offset of a full logical index.
+    pub fn offset_of(&self, idx: &[usize]) -> usize {
+        self.offset + self.layout.offset_of(idx)
+    }
+
+    /// One-past-the-last flat offset this view can touch.
+    pub fn span_end(&self) -> usize {
+        self.offset + self.layout.required_span()
+    }
+
+    pub fn subdiv(&self, d: usize, b: usize) -> Result<View> {
+        Ok(View {
+            offset: self.offset,
+            layout: self.layout.subdiv(d, b)?,
+        })
+    }
+
+    pub fn flatten(&self, d: usize) -> Result<View> {
+        Ok(View {
+            offset: self.offset,
+            layout: self.layout.flatten(d)?,
+        })
+    }
+
+    pub fn flip2(&self, d1: usize, d2: usize) -> Result<View> {
+        Ok(View {
+            offset: self.offset,
+            layout: self.layout.flip2(d1, d2)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::Dim;
+
+    #[test]
+    fn index_outer_walks_rows() {
+        let v = View::of(Layout::row_major(&[4, 3]));
+        let r2 = v.index_outer(2).unwrap();
+        assert_eq!(r2.offset, 6);
+        assert_eq!(r2.layout.dims, vec![Dim::new(3, 1)]);
+        assert!(v.index_outer(4).is_err());
+    }
+
+    #[test]
+    fn index_outer_on_flipped_walks_columns() {
+        let v = View::of(Layout::row_major(&[4, 3])).flip2(0, 1).unwrap();
+        let c1 = v.index_outer(1).unwrap();
+        assert_eq!(c1.offset, 1);
+        assert_eq!(c1.layout.dims, vec![Dim::new(4, 3)]);
+    }
+
+    #[test]
+    fn nested_indexing_matches_offset_of() {
+        let v = View::of(Layout::row_major(&[3, 5]));
+        for i in 0..3 {
+            for j in 0..5 {
+                let elem = v.index_outer(i).unwrap().index_outer(j).unwrap();
+                assert_eq!(elem.offset, v.offset_of(&[j, i]));
+                assert!(elem.layout.is_scalar());
+            }
+        }
+    }
+
+    #[test]
+    fn span_end() {
+        let v = View::new(10, Layout::row_major(&[2, 2]));
+        assert_eq!(v.span_end(), 14);
+    }
+}

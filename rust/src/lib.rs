@@ -1,0 +1,81 @@
+//! # hofdla — pattern-based optimization for dense linear algebra
+//!
+//! A reproduction of *"Towards scalable pattern-based optimization for dense
+//! linear algebra"* (Berényi, Leitereg, Lehel, 2018; DOI 10.1002/cpe.4696).
+//!
+//! The paper proposes describing dense multi-dimensional array computations
+//! with a small, **closed** set of variadic higher-order functions (HoFs) —
+//! [`nzip`](dsl::Expr::Nzip) (n-ary map/zip), [`rnz`](dsl::Expr::Rnz)
+//! (reduce-of-n-ary-zip) — over strided arrays whose *logical* layout is
+//! manipulated by `subdiv` / `flatten` / `flip`, and then optimizing the
+//! expression purely by **structure-induced rewrites**: fusion, exchange
+//! (HoF interchange paired with a layout `flip`), and subdivision identities.
+//!
+//! The crate is organised as the paper's system plus every substrate it
+//! needs (see `DESIGN.md` for the full inventory):
+//!
+//! - [`layout`] — the strided `(extent, stride)` layout algebra.
+//! - [`dsl`] — the expression AST, builder combinators, pretty printer and
+//!   s-expression parser.
+//! - [`typecheck`] — shape/type inference over expressions.
+//! - [`eval`] — slow, obviously-correct reference evaluator (the oracle for
+//!   every rewrite and for the fast executor).
+//! - [`rewrite`] — the rewrite engine and the paper's rule families.
+//! - [`enumerate`] — HoF-spine extraction and Steinhaus–Johnson–Trotter
+//!   enumeration of rearrangements.
+//! - [`exec`] — lowering to a loop-nest IR and a fast strided executor (the
+//!   measured artifact; stands in for the paper's generated C++14).
+//! - [`cachesim`] — a set-associative multi-level cache simulator driven by
+//!   the loop IR's address stream (stands in for the paper's Core i5/HD7970).
+//! - [`costmodel`] — analytical locality cost model used for ranking and
+//!   the paper's "early cut" pruning.
+//! - [`baselines`] — naive / hand-blocked native matmul (the paper's C
+//!   baselines).
+//! - [`runtime`] — PJRT client wrapping the `xla` crate; loads the
+//!   AOT-compiled JAX/Pallas artifacts (the paper's Eigen role).
+//! - [`coordinator`] — a threaded optimization-service front end: job queue,
+//!   pipeline, executable cache, batching, metrics.
+//! - [`bench_support`] — micro-benchmark harness, PRNG, table formatting
+//!   (criterion/proptest are unavailable offline; these are self-contained).
+
+pub mod baselines;
+pub mod bench_support;
+pub mod cachesim;
+pub mod coordinator;
+pub mod costmodel;
+pub mod dsl;
+pub mod enumerate;
+pub mod eval;
+pub mod exec;
+pub mod experiments;
+pub mod layout;
+pub mod rewrite;
+pub mod runtime;
+pub mod typecheck;
+pub mod util;
+
+pub use dsl::{Expr, Prim};
+pub use layout::{Dim, Layout};
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("layout error: {0}")]
+    Layout(String),
+    #[error("type error: {0}")]
+    Type(String),
+    #[error("parse error: {0}")]
+    Parse(String),
+    #[error("lowering error: {0}")]
+    Lower(String),
+    #[error("eval error: {0}")]
+    Eval(String),
+    #[error("rewrite error: {0}")]
+    Rewrite(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,210 @@
+//! `hofdla` — CLI for the pattern-based dense-linear-algebra optimizer.
+//!
+//! Subcommands:
+//!
+//! - `optimize <file.dsl> --input A=64x64 …` — run the full pipeline on
+//!   DSL source and print the ranked rearrangements.
+//! - `enumerate --family <f> --n <n> [--b <b>]` — list the rearrangements
+//!   of a matmul family (naive / rnz / maps / rnz2 / all).
+//! - `bench <table1|table2|fig3|fig4|fig5|fig6|gpu|baselines|all>` —
+//!   regenerate a paper table/figure.
+//! - `run-artifact <name> [--n <n>]` — execute an AOT artifact through
+//!   PJRT.
+//! - `serve --demo` — start the coordinator and run a demo workload.
+
+use hofdla::bench_support::BenchConfig;
+use hofdla::coordinator::{Config, Coordinator, OptimizeSpec, RankBy, Request, Response};
+use hofdla::enumerate::{enumerate_all, starts};
+use hofdla::experiments::{self, MatmulOpts};
+use hofdla::layout::Layout;
+use hofdla::rewrite::Ctx;
+use hofdla::typecheck::Env;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "usage:\n  hofdla optimize <file.dsl> --input NAME=DIMxDIM [--rank cost|cachesim] [--subdivide-rnz B] [--top K]\n  hofdla enumerate --family naive|rnz|maps|rnz2|all [--n N] [--b B]\n  hofdla bench table1|table2|fig3|fig4|fig5|fig6|gpu|baselines|all [--n N] [--b B] [--sim]\n  hofdla run-artifact <name> [--n N]\n  hofdla serve --demo".to_string()
+}
+
+fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn flag_usize(args: &[String], name: &str, default: usize) -> usize {
+    flag_value(args, name)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn run(args: &[String]) -> hofdla::Result<()> {
+    let err = hofdla::Error::Coordinator;
+    match args.first().map(|s| s.as_str()) {
+        Some("optimize") => {
+            let file = args
+                .get(1)
+                .filter(|a| !a.starts_with("--"))
+                .ok_or_else(|| err(usage()))?;
+            let source = std::fs::read_to_string(file)
+                .map_err(|e| err(format!("read {file}: {e}")))?;
+            let mut inputs = Vec::new();
+            for (i, a) in args.iter().enumerate() {
+                if a == "--input" {
+                    let spec = args.get(i + 1).ok_or_else(|| err(usage()))?;
+                    let (name, dims) = spec
+                        .split_once('=')
+                        .ok_or_else(|| err(format!("bad --input {spec}")))?;
+                    let shape: Vec<usize> = dims
+                        .split('x')
+                        .map(|d| d.parse().map_err(|_| err(format!("bad dim in {spec}"))))
+                        .collect::<hofdla::Result<_>>()?;
+                    inputs.push((name.to_string(), shape));
+                }
+            }
+            let rank_by = match flag_value(args, "--rank") {
+                Some("cachesim") => RankBy::CacheSim,
+                _ => RankBy::CostModel,
+            };
+            let spec = OptimizeSpec {
+                source,
+                inputs,
+                rank_by,
+                subdivide_rnz: flag_value(args, "--subdivide-rnz")
+                    .and_then(|v| v.parse().ok()),
+                top_k: flag_usize(args, "--top", 12),
+            };
+            let r = hofdla::coordinator::optimize(&spec)?;
+            println!("explored {} rearrangements", r.variants_explored);
+            println!("{:<28} {:>14}", "HoF order", "score");
+            for (k, s) in &r.ranking {
+                println!("{k:<28} {s:>14.1}");
+            }
+            println!("\nbest: {}\n{}", r.best, r.best_expr);
+            Ok(())
+        }
+        Some("enumerate") => {
+            let n = flag_usize(args, "--n", 64);
+            let b = flag_usize(args, "--b", 4);
+            let family = flag_value(args, "--family").unwrap_or("naive");
+            let start = match family {
+                "naive" => starts::matmul_naive_variant(),
+                "rnz" => starts::matmul_rnz_subdivided_variant(b),
+                "maps" => starts::matmul_maps_subdivided_variant(b),
+                "rnz2" => starts::matmul_rnz_twice_subdivided_variant(b, b),
+                "all" => starts::matmul_all_subdivided_variant(b),
+                other => return Err(err(format!("unknown family '{other}'"))),
+            };
+            let env = Env::new()
+                .with("A", Layout::row_major(&[n, n]))
+                .with("B", Layout::row_major(&[n, n]));
+            let variants = enumerate_all(&start, &Ctx::new(env), 4096)?;
+            println!(
+                "family={family} n={n} b={b}: {} rearrangements",
+                variants.len()
+            );
+            for v in &variants {
+                println!("  {}", v.display_key());
+            }
+            Ok(())
+        }
+        Some("bench") => {
+            let which = args.get(1).map(|s| s.as_str()).unwrap_or("all");
+            let mut opts = MatmulOpts {
+                n: flag_usize(args, "--n", hofdla::bench_support::env_size(256)),
+                b: flag_usize(args, "--b", 16),
+                bench: BenchConfig::quick(),
+                measure_time: true,
+                simulate: args.iter().any(|a| a == "--sim"),
+            };
+            if opts.n % (opts.b * opts.b) != 0 {
+                opts.b = 4;
+            }
+            let run_one = |name: &str, opts: &MatmulOpts| -> hofdla::Result<()> {
+                let e = match name {
+                    "table1" => experiments::table1(opts)?,
+                    "table2" => experiments::table2(opts)?,
+                    "fig3" => experiments::fig3(opts.n, opts.b, &opts.bench)?,
+                    "fig4" => experiments::fig4(opts)?,
+                    "fig5" => experiments::fig5(opts)?,
+                    "fig6" => experiments::fig6(opts)?,
+                    "gpu" => experiments::gpu_sim(opts.n.min(256), opts.b)?,
+                    "baselines" => experiments::baselines_experiment(opts.n, &opts.bench)?,
+                    other => return Err(err(format!("unknown bench '{other}'"))),
+                };
+                print!("{}", e.render());
+                Ok(())
+            };
+            if which == "all" {
+                for name in [
+                    "table1", "table2", "fig3", "fig4", "fig5", "fig6", "gpu", "baselines",
+                ] {
+                    run_one(name, &opts)?;
+                }
+                Ok(())
+            } else {
+                run_one(which, &opts)
+            }
+        }
+        Some("run-artifact") => {
+            let name = args.get(1).ok_or_else(|| err(usage()))?;
+            let n = flag_usize(args, "--n", 256);
+            let mut rt = hofdla::runtime::Runtime::cpu()?;
+            let exe = rt.load(&hofdla::runtime::artifact_path(name))?;
+            println!(
+                "loaded {name} on {} ({} params)",
+                rt.platform(),
+                exe.n_params
+            );
+            if exe.n_params == 2 {
+                let a = vec![1f32; n * n];
+                let out = rt.run_f32(&exe, &[(&a, &[n, n]), (&a, &[n, n])])?;
+                println!(
+                    "output[0..4] = {:?} (len {})",
+                    &out[..4.min(out.len())],
+                    out.len()
+                );
+            } else {
+                println!("(no demo input convention for {} params)", exe.n_params);
+            }
+            Ok(())
+        }
+        Some("serve") => {
+            let c = Coordinator::start(Config::default())?;
+            println!("coordinator started: demo workload");
+            let spec = OptimizeSpec {
+                source:
+                    "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))"
+                        .into(),
+                inputs: vec![("A".into(), vec![128, 128]), ("B".into(), vec![128, 128])],
+                rank_by: RankBy::CacheSim,
+                subdivide_rnz: Some(16),
+                top_k: 12,
+            };
+            let Response::Optimized(r) = c.call(Request::Optimize(spec))? else {
+                unreachable!()
+            };
+            println!(
+                "explored {} rearrangements; best = {}",
+                r.variants_explored, r.best
+            );
+            println!("metrics: {}", c.metrics.summary());
+            Ok(())
+        }
+        _ => {
+            println!("{}", usage());
+            Ok(())
+        }
+    }
+}

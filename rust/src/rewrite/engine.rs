@@ -1,0 +1,181 @@
+//! Generic traversal machinery: one-level child maps (the catamorphism
+//! workhorse the paper implements with recursion schemes), first-match
+//! application, and bottom-up fixpoint rewriting.
+
+use crate::dsl::Expr;
+
+/// A context-free rewrite rule: returns `Some(new)` when the pattern
+/// matches at the given node.
+#[derive(Clone, Copy)]
+pub struct Rule {
+    pub name: &'static str,
+    pub apply: fn(&Expr) -> Option<Expr>,
+}
+
+impl std::fmt::Debug for Rule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Rule({})", self.name)
+    }
+}
+
+/// Rebuild a node with each direct child transformed by `f`.
+pub fn map_children(e: &Expr, mut f: impl FnMut(&Expr) -> Expr) -> Expr {
+    match e {
+        Expr::Var(_) | Expr::Lit(_) | Expr::Prim(_) | Expr::Input(_) => e.clone(),
+        Expr::Lam { params, body } => Expr::Lam {
+            params: params.clone(),
+            body: Box::new(f(body)),
+        },
+        Expr::App { f: g, args } => Expr::App {
+            f: Box::new(f(g)),
+            args: args.iter().map(&mut f).collect(),
+        },
+        Expr::Nzip { f: g, args } => Expr::Nzip {
+            f: Box::new(f(g)),
+            args: args.iter().map(&mut f).collect(),
+        },
+        Expr::Rnz { r, m, args } => Expr::Rnz {
+            r: Box::new(f(r)),
+            m: Box::new(f(m)),
+            args: args.iter().map(&mut f).collect(),
+        },
+        Expr::Lift { f: g } => Expr::Lift { f: Box::new(f(g)) },
+        Expr::Subdiv { d, b, arg } => Expr::Subdiv {
+            d: *d,
+            b: *b,
+            arg: Box::new(f(arg)),
+        },
+        Expr::Flatten { d, arg } => Expr::Flatten {
+            d: *d,
+            arg: Box::new(f(arg)),
+        },
+        Expr::Flip { d1, d2, arg } => Expr::Flip {
+            d1: *d1,
+            d2: *d2,
+            arg: Box::new(f(arg)),
+        },
+    }
+}
+
+/// Apply `rule` at the first matching node in pre-order; `None` if no node
+/// matches.
+pub fn rewrite_once(rule: &Rule, e: &Expr) -> Option<Expr> {
+    if let Some(new) = (rule.apply)(e) {
+        return Some(new);
+    }
+    // Try children left-to-right; rebuild on the first success.
+    let mut done = false;
+    let new = map_children(e, |c| {
+        if done {
+            return c.clone();
+        }
+        match rewrite_once(rule, c) {
+            Some(n) => {
+                done = true;
+                n
+            }
+            None => c.clone(),
+        }
+    });
+    if done {
+        Some(new)
+    } else {
+        None
+    }
+}
+
+/// Exhaustively apply a rule set bottom-up until fixpoint. A step budget
+/// guards against non-terminating rule sets.
+pub fn rewrite_bottom_up(rules: &[Rule], e: &Expr) -> Expr {
+    const MAX_STEPS: usize = 100_000;
+    let steps = 0usize;
+    fn pass(rules: &[Rule], e: &Expr, steps: &mut usize) -> (Expr, bool) {
+        let mut changed = false;
+        // children first
+        let mut cur = map_children(e, |c| {
+            let (n, ch) = pass(rules, c, steps);
+            changed |= ch;
+            n
+        });
+        // then this node, repeatedly
+        'outer: loop {
+            if *steps >= MAX_STEPS {
+                break;
+            }
+            for r in rules {
+                if let Some(n) = (r.apply)(&cur) {
+                    *steps += 1;
+                    changed = true;
+                    // The rewrite may expose new redexes in children.
+                    let (n2, _) = pass(rules, &n, steps);
+                    cur = n2;
+                    continue 'outer;
+                }
+            }
+            break;
+        }
+        (cur, changed)
+    }
+    let mut steps_taken = steps;
+    let (out, _) = pass(rules, e, &mut steps_taken);
+    out
+}
+
+/// The standard cleanup set: β-reduction, η-reduction, layout-op
+/// simplification. Run after structural rewrites to keep expressions in
+/// normal form.
+pub fn normalize(e: &Expr) -> Expr {
+    let rules = [
+        super::lambda::beta(),
+        super::lambda::eta(),
+        super::simplify::flip_flip(),
+        super::simplify::flatten_subdiv(),
+        super::simplify::subdiv_trivial(),
+    ];
+    rewrite_bottom_up(&rules, e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::*;
+
+    #[test]
+    fn map_children_rebuilds() {
+        let e = map(lam1("x", var("x")), input("v"));
+        let out = map_children(&e, |c| c.clone());
+        assert_eq!(out, e);
+    }
+
+    #[test]
+    fn rewrite_once_finds_nested_match() {
+        // rule: replace literal 1.0 with 2.0
+        let rule = Rule {
+            name: "one-to-two",
+            apply: |e| match e {
+                Expr::Lit(x) if *x == 1.0 => Some(Expr::Lit(2.0)),
+                _ => None,
+            },
+        };
+        let e = map(lam1("x", app2(mul(), var("x"), lit(1.0))), input("v"));
+        let out = rewrite_once(&rule, &e).unwrap();
+        assert_eq!(
+            out,
+            map(lam1("x", app2(mul(), var("x"), lit(2.0))), input("v"))
+        );
+        assert!(rewrite_once(&rule, &out).is_none());
+    }
+
+    #[test]
+    fn bottom_up_fixpoint_terminates() {
+        let rule = Rule {
+            name: "dec",
+            apply: |e| match e {
+                Expr::Lit(x) if *x > 0.0 => Some(Expr::Lit(x - 1.0)),
+                _ => None,
+            },
+        };
+        let out = rewrite_bottom_up(&[rule], &lit(5.0));
+        assert_eq!(out, lit(0.0));
+    }
+}

@@ -1,0 +1,558 @@
+//! Exchange (interchange) rules for nested HoFs — the paper's second rule
+//! group and its central contribution: *exchanging two nested higher-order
+//! functions must be done with an appropriate `flip` in the subdivision
+//! structure* (§3).
+//!
+//! - [`map_map`] — eq 36-37: flip two nested independent maps (the result
+//!   is transposed "up to a flip in the functor structure").
+//! - [`map_rnz`] / [`rnz_map`] — eq 42 in both directions: the map/reduce
+//!   interchange that turns row-dot matvec into column-axpy matvec
+//!   (Figure 2), inserting `flip (rank-2)` on the consumed array and
+//!   `lift`ing the reduction operator.
+//! - [`rnz_rnz`] — eq 43: interchange of two same-operator reductions
+//!   (requires commutativity + associativity).
+//!
+//! These rules are context-sensitive (they need ranks to place the flips),
+//! so they take a typing [`Ctx`] rather than being plain [`super::Rule`]s.
+
+use super::Ctx;
+use crate::dsl::{fresh_var, Expr};
+
+/// eq 36-37. `map (\x -> map (\y -> body) U) V  =  map (\y -> map (\x ->
+/// body) V) U` when `U` does not depend on `x`. The result is the "deep
+/// transpose" of the original (caller must account for the transposed
+/// output shape).
+pub fn map_map(e: &Expr, _ctx: &Ctx) -> Option<Expr> {
+    let Expr::Nzip { f, args } = e else {
+        return None;
+    };
+    let [v_arr] = args.as_slice() else {
+        return None;
+    };
+    let Expr::Lam { params, body } = &**f else {
+        return None;
+    };
+    let [x] = params.as_slice() else { return None };
+    let Expr::Nzip {
+        f: inner_f,
+        args: inner_args,
+    } = &**body
+    else {
+        return None;
+    };
+    let [u_arr] = inner_args.as_slice() else {
+        return None;
+    };
+    let Expr::Lam {
+        params: inner_params,
+        body: inner_body,
+    } = &**inner_f
+    else {
+        return None;
+    };
+    let [y] = inner_params.as_slice() else {
+        return None;
+    };
+    // U must not depend on x (it must be a loop-invariant array).
+    if u_arr.free_vars().contains(x) {
+        return None;
+    }
+    // Rename binders apart so V (which sits under y's binder in the result)
+    // cannot capture.
+    let nx = fresh_var(x.split('%').next().unwrap_or(x));
+    let ny = fresh_var(y.split('%').next().unwrap_or(y));
+    let new_body = inner_body
+        .subst(x, &Expr::Var(nx.clone()))
+        .subst(y, &Expr::Var(ny.clone()));
+    Some(Expr::Nzip {
+        f: Box::new(Expr::Lam {
+            params: vec![ny],
+            body: Box::new(Expr::Nzip {
+                f: Box::new(Expr::Lam {
+                    params: vec![nx],
+                    body: Box::new(new_body),
+                }),
+                args: vec![v_arr.clone()],
+            }),
+        }),
+        args: vec![u_arr.clone()],
+    })
+}
+
+/// The *nested-dependent* variant of eq 36-37: both maps traverse the same
+/// (rank ≥ 2) array, the inner one iterating the outer's binding:
+///
+/// ```text
+/// map (\x -> map (\y -> body) x) M  =  map (\x' -> map (\y' -> body') x') (flip (rm-2) M)
+/// ```
+///
+/// This swaps a block loop with its within-block loop (used when
+/// enumerating subdivided maps, Figures 4/6). `x` must not occur in `body`
+/// other than through `y`. The result is transposed at the two consumed
+/// levels.
+pub fn map_map_nested(e: &Expr, ctx: &Ctx) -> Option<Expr> {
+    let Expr::Nzip { f, args } = e else {
+        return None;
+    };
+    let [m_arr] = args.as_slice() else {
+        return None;
+    };
+    let Expr::Lam { params, body } = &**f else {
+        return None;
+    };
+    let [x] = params.as_slice() else { return None };
+    let Expr::Nzip {
+        f: inner_f,
+        args: inner_args,
+    } = &**body
+    else {
+        return None;
+    };
+    let [Expr::Var(iterated)] = inner_args.as_slice() else {
+        return None;
+    };
+    if iterated != x {
+        return None;
+    }
+    let Expr::Lam {
+        params: inner_params,
+        body: inner_body,
+    } = &**inner_f
+    else {
+        return None;
+    };
+    let [y] = inner_params.as_slice() else {
+        return None;
+    };
+    // x may not leak into the body except through y.
+    if inner_body.free_vars().contains(x) {
+        return None;
+    }
+    let rm = ctx.layout_of(m_arr).ok()?.rank();
+    if rm < 2 {
+        return None;
+    }
+    let nx = fresh_var("x");
+    let ny = fresh_var("y");
+    let new_body = inner_body.subst(y, &Expr::Var(ny.clone()));
+    Some(Expr::Nzip {
+        f: Box::new(Expr::Lam {
+            params: vec![nx.clone()],
+            body: Box::new(Expr::Nzip {
+                f: Box::new(Expr::Lam {
+                    params: vec![ny],
+                    body: Box::new(new_body),
+                }),
+                args: vec![Expr::Var(nx)],
+            }),
+        }),
+        args: vec![Expr::Flip {
+            d1: rm - 2,
+            d2: rm - 1,
+            arg: Box::new(m_arr.clone()),
+        }],
+    })
+}
+
+/// eq 42, left to right:
+///
+/// ```text
+/// map (\a -> rnz r m … a … u…) A
+///   = rnz (lift r) (\a q… -> map (\α -> m … α … q…) a) (flip (ra-2) A) u…
+/// ```
+///
+/// `A` must have rank ≥ 2; the bound row may appear at any argument
+/// position of the inner `rnz`; the remaining arguments must not depend on
+/// it.
+pub fn map_rnz(e: &Expr, ctx: &Ctx) -> Option<Expr> {
+    let Expr::Nzip { f, args } = e else {
+        return None;
+    };
+    let [a_arr] = args.as_slice() else {
+        return None;
+    };
+    let Expr::Lam { params, body } = &**f else {
+        return None;
+    };
+    let [a] = params.as_slice() else { return None };
+    let Expr::Rnz {
+        r,
+        m,
+        args: rnz_args,
+    } = &**body
+    else {
+        return None;
+    };
+    // Locate the bound row among the reduction's arguments.
+    let pos = rnz_args
+        .iter()
+        .position(|x| matches!(x, Expr::Var(v) if v == a))?;
+    // All other arguments must be independent of the row.
+    for (i, other) in rnz_args.iter().enumerate() {
+        if i != pos && other.free_vars().contains(a) {
+            return None;
+        }
+    }
+    // Rank of A decides the flip: the map consumed dim ra-1, the reduction
+    // consumes ra-2 — exchange them.
+    let ra = ctx.layout_of(a_arr).ok()?.rank();
+    if ra < 2 {
+        return None;
+    }
+    let n = rnz_args.len();
+    let na = fresh_var("a");
+    let alpha = fresh_var("al");
+    let qs: Vec<String> = (0..n - 1).map(|i| fresh_var(&format!("q{i}"))).collect();
+    // m's argument list in original positions: α at pos, q's elsewhere.
+    let mut m_args: Vec<Expr> = Vec::with_capacity(n);
+    let mut qi = 0usize;
+    for i in 0..n {
+        if i == pos {
+            m_args.push(Expr::Var(alpha.clone()));
+        } else {
+            m_args.push(Expr::Var(qs[qi].clone()));
+            qi += 1;
+        }
+    }
+    let new_m_body = Expr::Nzip {
+        f: Box::new(Expr::Lam {
+            params: vec![alpha],
+            body: Box::new(Expr::App {
+                f: m.clone(),
+                args: m_args,
+            }),
+        }),
+        args: vec![Expr::Var(na.clone())],
+    };
+    let mut new_params = vec![na];
+    new_params.extend(qs);
+    let mut new_args: Vec<Expr> = Vec::with_capacity(n);
+    new_args.push(Expr::Flip {
+        d1: ra - 2,
+        d2: ra - 1,
+        arg: Box::new(a_arr.clone()),
+    });
+    for (i, other) in rnz_args.iter().enumerate() {
+        if i != pos {
+            new_args.push(other.clone());
+        }
+    }
+    Some(Expr::Rnz {
+        r: Box::new(Expr::Lift { f: r.clone() }),
+        m: Box::new(Expr::Lam {
+            params: new_params,
+            body: Box::new(new_m_body),
+        }),
+        args: new_args,
+    })
+}
+
+/// eq 42, right to left: recognise the flipped form and pull the map back
+/// outside.
+pub fn rnz_map(e: &Expr, ctx: &Ctx) -> Option<Expr> {
+    let Expr::Rnz { r, m, args } = e else {
+        return None;
+    };
+    // Reduction operator must be a lift (the accumulator is an array).
+    let Expr::Lift { f: r0 } = &**r else {
+        return None;
+    };
+    let Expr::Lam { params, body } = &**m else {
+        return None;
+    };
+    let Expr::Nzip {
+        f: inner_f,
+        args: inner_args,
+    } = &**body
+    else {
+        return None;
+    };
+    let [Expr::Var(mapped)] = inner_args.as_slice() else {
+        return None;
+    };
+    // Which parameter is the mapped one? Its position j also locates the
+    // flipped array among the rnz arguments.
+    let j = params.iter().position(|p| p == mapped)?;
+    if args.len() != params.len() {
+        return None;
+    }
+    let Expr::Lam {
+        params: alpha_params,
+        body: m_body,
+    } = &**inner_f
+    else {
+        return None;
+    };
+    let [alpha] = alpha_params.as_slice() else {
+        return None;
+    };
+    // The mapped parameter must not occur in the body beyond the map.
+    if m_body.free_vars().contains(mapped) {
+        return None;
+    }
+    let ra = ctx.layout_of(&args[j]).ok()?.rank();
+    if ra < 2 {
+        return None;
+    }
+    // Rebuild: map (\a -> rnz r0 (\.. α at j ..) [.. Var a at j ..]) (flip A)
+    let na = fresh_var("a");
+    let mut inner_m_params: Vec<String> = params.clone();
+    inner_m_params[j] = alpha.clone();
+    let mut new_rnz_args: Vec<Expr> = args.clone();
+    new_rnz_args[j] = Expr::Var(na.clone());
+    Some(Expr::Nzip {
+        f: Box::new(Expr::Lam {
+            params: vec![na],
+            body: Box::new(Expr::Rnz {
+                r: Box::new((**r0).clone()),
+                m: Box::new(Expr::Lam {
+                    params: inner_m_params,
+                    body: m_body.clone(),
+                }),
+                args: new_rnz_args,
+            }),
+        }),
+        args: vec![Expr::Flip {
+            d1: ra - 2,
+            d2: ra - 1,
+            arg: Box::new(args[j].clone()),
+        }],
+    })
+}
+
+/// eq 43: interchange two nested reductions with the same (associative and
+/// commutative) operator:
+///
+/// ```text
+/// rnz r (\a… -> rnz r m a… B…) A…
+///   = rnz r (\a… b… -> rnz r (\α… -> m α… b…) a…) (flip (r-2) A)… B…
+/// ```
+pub fn rnz_rnz(e: &Expr, ctx: &Ctx) -> Option<Expr> {
+    let Expr::Rnz { r, m, args } = e else {
+        return None;
+    };
+    let Expr::Lam { params, body } = &**m else {
+        return None;
+    };
+    let Expr::Rnz {
+        r: r2,
+        m: m2,
+        args: inner_args,
+    } = &**body
+    else {
+        return None;
+    };
+    // Same reduction operator (structurally), commutative base.
+    if r != r2 {
+        return None;
+    }
+    let mut base = &**r;
+    while let Expr::Lift { f } = base {
+        base = f;
+    }
+    let Expr::Prim(p) = base else { return None };
+    if !p.is_commutative() || !p.is_associative() {
+        return None;
+    }
+    // Inner args must start with exactly the outer params (in order),
+    // followed by extras independent of them.
+    let n = params.len();
+    if inner_args.len() < n || args.len() != n {
+        return None;
+    }
+    for (p_name, ia) in params.iter().zip(&inner_args[..n]) {
+        if !matches!(ia, Expr::Var(v) if v == p_name) {
+            return None;
+        }
+    }
+    let extras = &inner_args[n..];
+    for ex in extras {
+        let fv = ex.free_vars();
+        if params.iter().any(|p| fv.contains(p)) {
+            return None;
+        }
+    }
+    // Flip each outer array (they must all have rank ≥ 2).
+    let mut flipped = Vec::with_capacity(n);
+    for a in args {
+        let ra = ctx.layout_of(a).ok()?.rank();
+        if ra < 2 {
+            return None;
+        }
+        flipped.push(Expr::Flip {
+            d1: ra - 2,
+            d2: ra - 1,
+            arg: Box::new(a.clone()),
+        });
+    }
+    let k = extras.len();
+    let new_as: Vec<String> = (0..n).map(|i| fresh_var(&format!("a{i}"))).collect();
+    let new_bs: Vec<String> = (0..k).map(|i| fresh_var(&format!("b{i}"))).collect();
+    let alphas: Vec<String> = (0..n).map(|i| fresh_var(&format!("al{i}"))).collect();
+    let mut m2_args: Vec<Expr> = alphas.iter().map(|a| Expr::Var(a.clone())).collect();
+    m2_args.extend(new_bs.iter().map(|b| Expr::Var(b.clone())));
+    let inner = Expr::Rnz {
+        r: r.clone(),
+        m: Box::new(Expr::Lam {
+            params: alphas,
+            body: Box::new(Expr::App {
+                f: m2.clone(),
+                args: m2_args,
+            }),
+        }),
+        args: new_as.iter().map(|a| Expr::Var(a.clone())).collect(),
+    };
+    let mut new_params = new_as;
+    new_params.extend(new_bs);
+    let mut new_args = flipped;
+    new_args.extend(extras.iter().cloned());
+    Some(Expr::Rnz {
+        r: r.clone(),
+        m: Box::new(Expr::Lam {
+            params: new_params,
+            body: Box::new(inner),
+        }),
+        args: new_args,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::*;
+    use crate::eval::{eval, ArrVal, Inputs};
+    use crate::layout::Layout;
+    use crate::rewrite::normalize;
+    use crate::typecheck::Env;
+
+    fn mv_inputs() -> (Inputs, Env) {
+        let mut inp = Inputs::new();
+        inp.insert(
+            "A".into(),
+            ArrVal::dense((0..12).map(|i| (i * i) as f64 % 7.0).collect(), &[3, 4]),
+        );
+        inp.insert(
+            "v".into(),
+            ArrVal::dense(vec![2., -1., 0.5, 3.], &[4]),
+        );
+        let env = Env::new()
+            .with("A", Layout::row_major(&[3, 4]))
+            .with("v", Layout::row_major(&[4]));
+        (inp, env)
+    }
+
+    #[test]
+    fn map_rnz_matches_eq42_on_matvec() {
+        let (inp, env) = mv_inputs();
+        let ctx = Ctx::new(env);
+        let e = matvec_naive(input("A"), input("v"));
+        let flipped = map_rnz(&e, &ctx).expect("rule applies");
+        let flipped = normalize(&flipped);
+        // Semantics preserved exactly (same multiplication order per term).
+        let a = eval(&e, &inp).unwrap().to_dense();
+        let b = eval(&flipped, &inp).unwrap().to_dense();
+        assert_eq!(a, b);
+        // And it became an rnz at the root with a lifted operator.
+        assert!(matches!(&flipped, Expr::Rnz { r, .. } if matches!(&**r, Expr::Lift { .. })));
+    }
+
+    #[test]
+    fn map_rnz_roundtrip_via_rnz_map() {
+        let (inp, env) = mv_inputs();
+        let ctx = Ctx::new(env);
+        let e = matvec_naive(input("A"), input("v"));
+        let there = normalize(&map_rnz(&e, &ctx).unwrap());
+        let back = normalize(&rnz_map(&there, &ctx).unwrap());
+        let a = eval(&e, &inp).unwrap().to_dense();
+        let b = eval(&back, &inp).unwrap().to_dense();
+        assert_eq!(a, b);
+        // The round trip restores the map-over-rows structure.
+        assert!(matches!(&back, Expr::Nzip { .. }));
+    }
+
+    #[test]
+    fn map_map_transposes_dyadic_product() {
+        // eq 36/37
+        let mut inp = Inputs::new();
+        inp.insert("v".into(), ArrVal::dense(vec![1., 2.], &[2]));
+        inp.insert("u".into(), ArrVal::dense(vec![3., 4., 5.], &[3]));
+        let env = Env::new()
+            .with("v", Layout::row_major(&[2]))
+            .with("u", Layout::row_major(&[3]));
+        let ctx = Ctx::new(env);
+        let e = map(
+            lam1(
+                "x",
+                map(lam1("y", app2(mul(), var("x"), var("y"))), input("u")),
+            ),
+            input("v"),
+        );
+        let t = map_map(&e, &ctx).expect("rule applies");
+        let a = eval(&e, &inp).unwrap();
+        let b = eval(&t, &inp).unwrap();
+        // transposed shapes
+        assert_eq!(a.extents(), vec![3, 2]);
+        assert_eq!(b.extents(), vec![2, 3]);
+        // elementwise transpose equality
+        let (aa, bb) = (a.to_dense(), b.to_dense());
+        for i in 0..2 {
+            for j in 0..3 {
+                assert_eq!(aa[i * 3 + j], bb[j * 2 + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn map_map_requires_independence() {
+        // inner array depends on x → no exchange
+        let env = Env::new().with("A", Layout::row_major(&[3, 4]));
+        let ctx = Ctx::new(env);
+        let e = map(
+            lam1("x", map(lam1("y", var("y")), var("x"))),
+            input("A"),
+        );
+        assert!(map_map(&e, &ctx).is_none());
+    }
+
+    #[test]
+    fn rnz_rnz_exchange_preserves_sum() {
+        // Sum over chunked vector pair: rnz + (\u v -> dot u v) U V where
+        // U, V are subdivided vectors (rank 2).
+        let mut inp = Inputs::new();
+        inp.insert(
+            "u".into(),
+            ArrVal::dense((0..8).map(|i| i as f64).collect(), &[8]),
+        );
+        inp.insert(
+            "v".into(),
+            ArrVal::dense((0..8).map(|i| (i as f64) * 0.5 + 1.0).collect(), &[8]),
+        );
+        let env = Env::new()
+            .with("u", Layout::row_major(&[8]))
+            .with("v", Layout::row_major(&[8]));
+        let ctx = Ctx::new(env);
+        let e = rnz(
+            add(),
+            lam2("bu", "bv", dot(var("bu"), var("bv"))),
+            vec![subdiv(0, 2, input("u")), subdiv(0, 2, input("v"))],
+        );
+        let x = rnz_rnz(&e, &ctx).expect("rule applies");
+        let x = normalize(&x);
+        let a = eval(&e, &inp).unwrap().as_scalar().unwrap();
+        let b = eval(&x, &inp).unwrap().as_scalar().unwrap();
+        assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+    }
+
+    #[test]
+    fn rnz_rnz_requires_same_operator() {
+        let env = Env::new().with("u", Layout::row_major(&[8]));
+        let ctx = Ctx::new(env);
+        // outer max of inner sums — must NOT exchange
+        let e = rnz(
+            pmax(),
+            lam1("b", reduce(add(), var("b"))),
+            vec![subdiv(0, 2, input("u"))],
+        );
+        assert!(rnz_rnz(&e, &ctx).is_none());
+    }
+}

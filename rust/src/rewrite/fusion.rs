@@ -1,0 +1,249 @@
+//! Pipeline fusion rules (paper §3, first group).
+//!
+//! `nzip` is closed under arbitrary composition via the generalized
+//! composition operator `ncomp` (eq 23):
+//!
+//! ```text
+//! nzip f xs[0..i-1] (nzip g ys) xs[i+1..]  =  nzip (ncomp i f g) xs++ys  (eq 24-25)
+//! rnz r f … (nzip g ys) …                  =  rnz r (ncomp i f g) …      (eq 27-28)
+//! ```
+//!
+//! This eliminates the materialisation of every intermediate array — the
+//! motivating "too many temporaries" problem of §2 (eq 1-2).
+
+use super::engine::Rule;
+use crate::dsl::{fresh_var, Expr};
+
+/// Build `ncomp i f g`: the function applying `g` to the `m` arguments at
+/// position `i` and passing the result as `f`'s `i`-th argument (paper
+/// eq. 23). `n` and `m` are the arities of `f` and `g`.
+pub fn ncomp(i: usize, f: &Expr, n: usize, g: &Expr, m: usize) -> Expr {
+    let a_params: Vec<String> = (0..n).map(|k| fresh_var(&format!("a{k}"))).collect();
+    let b_params: Vec<String> = (0..m).map(|k| fresh_var(&format!("b{k}"))).collect();
+    // f's argument list with position i replaced by (g b0..bm-1)
+    let g_call = Expr::App {
+        f: Box::new(g.clone()),
+        args: b_params.iter().map(|b| Expr::Var(b.clone())).collect(),
+    };
+    let mut f_args: Vec<Expr> = a_params.iter().map(|a| Expr::Var(a.clone())).collect();
+    f_args[i] = g_call;
+    let body = Expr::App {
+        f: Box::new(f.clone()),
+        args: f_args,
+    };
+    // parameter order: a0..a_{i-1}, b0..b_{m-1}, a_{i+1}..a_{n-1}
+    let mut params: Vec<String> = Vec::with_capacity(n - 1 + m);
+    params.extend(a_params[..i].iter().cloned());
+    params.extend(b_params.iter().cloned());
+    params.extend(a_params[i + 1..].iter().cloned());
+    Expr::Lam {
+        params,
+        body: Box::new(body),
+    }
+}
+
+/// Arity of a function expression in operator position, if statically
+/// known.
+fn arity_of(f: &Expr) -> Option<usize> {
+    match f {
+        Expr::Lam { params, .. } => Some(params.len()),
+        Expr::Prim(p) => Some(p.arity()),
+        Expr::Lift { f } => arity_of(f),
+        _ => None,
+    }
+}
+
+/// eq 25: fuse an `nzip` appearing as an argument of another `nzip`.
+pub fn nzip_nzip() -> Rule {
+    Rule {
+        name: "nzip-nzip-fusion",
+        apply: |e| {
+            let Expr::Nzip { f, args } = e else {
+                return None;
+            };
+            let i = args
+                .iter()
+                .position(|a| matches!(a, Expr::Nzip { .. }))?;
+            let Expr::Nzip { f: g, args: ys } = &args[i] else {
+                unreachable!()
+            };
+            let n = args.len();
+            let m = ys.len();
+            // Sanity: declared arities must match the usage.
+            if arity_of(f).is_some_and(|a| a != n) || arity_of(g).is_some_and(|a| a != m) {
+                return None;
+            }
+            let fused_f = ncomp(i, f, n, g, m);
+            let mut new_args = Vec::with_capacity(n - 1 + m);
+            new_args.extend(args[..i].iter().cloned());
+            new_args.extend(ys.iter().cloned());
+            new_args.extend(args[i + 1..].iter().cloned());
+            Some(Expr::Nzip {
+                f: Box::new(fused_f),
+                args: new_args,
+            })
+        },
+    }
+}
+
+/// eq 27-28: fuse an `nzip` appearing as an argument of an `rnz` into the
+/// reduction's zipper.
+pub fn rnz_nzip() -> Rule {
+    Rule {
+        name: "rnz-nzip-fusion",
+        apply: |e| {
+            let Expr::Rnz { r, m, args } = e else {
+                return None;
+            };
+            let i = args
+                .iter()
+                .position(|a| matches!(a, Expr::Nzip { .. }))?;
+            let Expr::Nzip { f: g, args: ys } = &args[i] else {
+                unreachable!()
+            };
+            let n = args.len();
+            let gm = ys.len();
+            if arity_of(m).is_some_and(|a| a != n) || arity_of(g).is_some_and(|a| a != gm) {
+                return None;
+            }
+            let fused_m = ncomp(i, m, n, g, gm);
+            let mut new_args = Vec::with_capacity(n - 1 + gm);
+            new_args.extend(args[..i].iter().cloned());
+            new_args.extend(ys.iter().cloned());
+            new_args.extend(args[i + 1..].iter().cloned());
+            Some(Expr::Rnz {
+                r: r.clone(),
+                m: Box::new(fused_m),
+                args: new_args,
+            })
+        },
+    }
+}
+
+/// `(lift f) x… = nzip f x…` — applying a lifted function *is* an
+/// elementwise map (paper eq 41); normalising to `nzip` lets the fusion
+/// rules see through it.
+pub fn lift_app() -> Rule {
+    Rule {
+        name: "lift-app-to-nzip",
+        apply: |e| {
+            let Expr::App { f, args } = e else {
+                return None;
+            };
+            let Expr::Lift { f: g } = &**f else {
+                return None;
+            };
+            Some(Expr::Nzip {
+                f: g.clone(),
+                args: args.clone(),
+            })
+        },
+    }
+}
+
+/// The full fusion pass: fuse all pipelines, then β/η-normalize.
+pub fn fuse(e: &Expr) -> Expr {
+    let rules = [
+        nzip_nzip(),
+        rnz_nzip(),
+        lift_app(),
+        super::lambda::beta(),
+        super::lambda::eta(),
+    ];
+    super::engine::rewrite_bottom_up(&rules, e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::*;
+    use crate::eval::{eval, ArrVal, Inputs};
+
+    fn vec_inputs() -> Inputs {
+        let mut m = Inputs::new();
+        m.insert("u".into(), ArrVal::dense(vec![1., 2., 3., 4.], &[4]));
+        m.insert("v".into(), ArrVal::dense(vec![5., 6., 7., 8.], &[4]));
+        m.insert("w".into(), ArrVal::dense(vec![0.5, 0.25, 2., 4.], &[4]));
+        m
+    }
+
+    #[test]
+    fn map_map_fusion_eq19() {
+        // map (*2) (map (+1) u)  →  single nzip
+        let inner = map(lam1("x", app2(add(), var("x"), lit(1.0))), input("u"));
+        let e = map(lam1("y", app2(mul(), var("y"), lit(2.0))), inner);
+        let fused = fuse(&e);
+        // exactly one nzip, no nested nzip in args
+        let Expr::Nzip { args, .. } = &fused else {
+            panic!("expected nzip, got {}", pretty(&fused))
+        };
+        assert!(args.iter().all(|a| matches!(a, Expr::Input(_))));
+        // semantics preserved
+        let inp = vec_inputs();
+        assert_eq!(
+            eval(&e, &inp).unwrap().to_dense(),
+            eval(&fused, &inp).unwrap().to_dense()
+        );
+    }
+
+    #[test]
+    fn motivating_example_eq1() {
+        // w_i = Σ_j (A_ij + B_ij) (v_j + u_j) — fused matvec:
+        // here the vector part: zip(+) u v zipped then reduced
+        // rnz (+) (*) (zip (+) u v) w  →  rnz with 3 args, no temporaries
+        let e = rnz(
+            add(),
+            mul(),
+            vec![zip(add(), input("u"), input("v")), input("w")],
+        );
+        let fused = fuse(&e);
+        let Expr::Rnz { args, .. } = &fused else {
+            panic!("expected rnz")
+        };
+        assert_eq!(args.len(), 3);
+        assert!(args.iter().all(|a| matches!(a, Expr::Input(_))));
+        let inp = vec_inputs();
+        let a = eval(&e, &inp).unwrap().as_scalar().unwrap();
+        let b = eval(&fused, &inp).unwrap().as_scalar().unwrap();
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zip_of_zips_flattens_to_variadic() {
+        // zip f (zip g u v) (zip h v w) → 4-ary nzip
+        let e = zip(
+            add(),
+            zip(mul(), input("u"), input("v")),
+            zip(add(), input("v"), input("w")),
+        );
+        let fused = fuse(&e);
+        let Expr::Nzip { args, .. } = &fused else {
+            panic!("expected nzip")
+        };
+        assert_eq!(args.len(), 4);
+        let inp = vec_inputs();
+        assert_eq!(
+            eval(&e, &inp).unwrap().to_dense(),
+            eval(&fused, &inp).unwrap().to_dense()
+        );
+    }
+
+    #[test]
+    fn fused_is_lowerable() {
+        // After fusion, the executor accepts what it rejected before.
+        use crate::exec::lower;
+        use crate::layout::Layout;
+        use crate::typecheck::Env;
+        let env = Env::new().with("u", Layout::row_major(&[4]));
+        let e = map(
+            lam1("y", app2(mul(), var("y"), lit(2.0))),
+            map(lam1("x", app2(add(), var("x"), lit(1.0))), input("u")),
+        );
+        assert!(lower(&e, &env).is_err());
+        let fused = fuse(&e);
+        let prog = lower(&fused, &env).unwrap();
+        let mut out = vec![0.0; 4];
+        crate::exec::execute(&prog, &[&[1., 2., 3., 4.]], &mut out).unwrap();
+        assert_eq!(out, vec![4., 6., 8., 10.]);
+    }
+}

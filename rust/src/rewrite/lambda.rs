@@ -1,0 +1,110 @@
+//! Standard lambda-calculus rules: β-reduction and η-reduction — the
+//! "standard lambda calculus transformations" the paper's DataView system
+//! also implements.
+
+use super::engine::Rule;
+use crate::dsl::Expr;
+
+/// β: `(\x1..xn -> body) a1..an  →  body[xi := ai]`.
+pub fn beta() -> Rule {
+    Rule {
+        name: "beta",
+        apply: |e| {
+            let Expr::App { f, args } = e else {
+                return None;
+            };
+            let Expr::Lam { params, body } = &**f else {
+                return None;
+            };
+            if params.len() != args.len() {
+                return None;
+            }
+            let mut out = (**body).clone();
+            // Substitute simultaneously: rename params apart first to avoid
+            // one substitution capturing another's argument.
+            let fresh: Vec<String> = params
+                .iter()
+                .map(|p| crate::dsl::fresh_var(p))
+                .collect();
+            for (p, np) in params.iter().zip(&fresh) {
+                out = out.subst(p, &Expr::Var(np.clone()));
+            }
+            for (np, a) in fresh.iter().zip(args) {
+                out = out.subst(np, a);
+            }
+            Some(out)
+        },
+    }
+}
+
+/// η: `\x1..xn -> f x1..xn  →  f` when no `xi` is free in `f`.
+pub fn eta() -> Rule {
+    Rule {
+        name: "eta",
+        apply: |e| {
+            let Expr::Lam { params, body } = e else {
+                return None;
+            };
+            let Expr::App { f, args } = &**body else {
+                return None;
+            };
+            if args.len() != params.len() {
+                return None;
+            }
+            let all_vars = params
+                .iter()
+                .zip(args)
+                .all(|(p, a)| matches!(a, Expr::Var(x) if x == p));
+            if !all_vars {
+                return None;
+            }
+            let fv = f.free_vars();
+            if params.iter().any(|p| fv.contains(p)) {
+                return None;
+            }
+            Some((**f).clone())
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::*;
+
+    #[test]
+    fn beta_simple() {
+        let e = app2(lam2("x", "y", app2(add(), var("x"), var("y"))), lit(1.0), lit(2.0));
+        let out = (beta().apply)(&e).unwrap();
+        assert_eq!(out, app2(add(), lit(1.0), lit(2.0)));
+    }
+
+    #[test]
+    fn beta_simultaneous_no_cross_capture() {
+        // (\x y -> x + y) y 3 — the arg `y` must not be captured by param y.
+        let e = app2(
+            lam2("x", "y", app2(add(), var("x"), var("y"))),
+            var("y"),
+            lit(3.0),
+        );
+        let out = (beta().apply)(&e).unwrap();
+        assert_eq!(out, app2(add(), var("y"), lit(3.0)));
+    }
+
+    #[test]
+    fn eta_reduces() {
+        let e = lam1("x", app1(lam1("q", var("q")), var("x")));
+        let out = (eta().apply)(&e).unwrap();
+        assert_eq!(out, lam1("q", var("q")));
+    }
+
+    #[test]
+    fn eta_respects_free_occurrence() {
+        // \x -> (f x) x — not an eta redex (x free in function position)
+        let e = lam1("x", app1(app1(var("f"), var("x")), var("x")));
+        assert!((eta().apply)(&e).is_none());
+        // \x -> f x x — arity mismatch with single param
+        let e2 = lam1("x", app2(var("f"), var("x"), var("x")));
+        assert!((eta().apply)(&e2).is_none());
+    }
+}

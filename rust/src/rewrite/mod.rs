@@ -1,0 +1,60 @@
+//! The rewrite engine and the paper's rule families (§3).
+//!
+//! Two groups of rules, exactly as the paper organises them:
+//!
+//! 1. **Pipelines** (sequential composition) — fused by generalized
+//!    composition: `map f . map g = map (f . g)` (eq 19) generalized to
+//!    variadic `nzip` via `ncomp` (eq 23-25), and fusion of `nzip` into
+//!    `rnz` (eq 27-28). See [`fusion`].
+//! 2. **Nested structures** — HoFs passed as argument functions to other
+//!    HoFs are *exchanged*, relying on the Naperian-functor transposition
+//!    property, always paired with a `flip` of the logical layout:
+//!    map–map (eq 36-37), map–rnz (eq 42), rnz–rnz (eq 43). See
+//!    [`exchange`].
+//!
+//! Plus the **subdivision identities** (eq 44 and the associativity-based
+//! `rnz` analogue) in [`subdivision`], standard lambda-calculus rules
+//! (β, η) in [`lambda`], and layout-operator cleanups in [`simplify`].
+
+pub mod engine;
+pub mod exchange;
+pub mod fusion;
+pub mod lambda;
+pub mod products;
+pub mod simplify;
+pub mod subdivision;
+
+pub use engine::{normalize, rewrite_bottom_up, rewrite_once, Rule};
+
+use crate::layout::Layout;
+use crate::typecheck::Env;
+use std::collections::HashMap;
+
+/// Typing context carried by rules that need layout information (the
+/// exchange rules must know ranks to place their `flip`s).
+#[derive(Clone, Debug, Default)]
+pub struct Ctx {
+    pub env: Env,
+    pub vars: HashMap<String, Layout>,
+}
+
+impl Ctx {
+    pub fn new(env: Env) -> Self {
+        Ctx {
+            env,
+            vars: HashMap::new(),
+        }
+    }
+
+    /// Layout of a subexpression under this context.
+    pub fn layout_of(&self, e: &crate::dsl::Expr) -> crate::Result<Layout> {
+        crate::typecheck::infer_with(e, &self.env, &self.vars)
+    }
+
+    /// Context extended with a variable binding.
+    pub fn bind(&self, name: &str, layout: Layout) -> Ctx {
+        let mut c = self.clone();
+        c.vars.insert(name.to_string(), layout);
+        c
+    }
+}

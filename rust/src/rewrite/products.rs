@@ -1,0 +1,317 @@
+//! Product rules (paper eq 30-34): the AoS↔SoA family.
+//!
+//! The paper extends the HoF calculus with *products of computations*:
+//!
+//! ```text
+//! Array dim layout (a, b) = (Array dim layout a, Array dim layout b)   (eq 30)
+//! (map f x, map g y)      = map (f × g) (x, y)                         (eq 31)
+//! (map f, map g) x        = map (fanOut f g) x                         (eq 32)
+//! (zip f x y, zip g p q)  = zip (f × g) (x, y) (p, q)                  (eq 33)
+//! (reduce f x, reduce g y)= reduce (f × g) (x, y)                      (eq 34)
+//! ```
+//!
+//! where `f × g` is the function product (`(***)` in Haskell's
+//! `Control.Arrow`) and `fanOut` duplicates one input into both
+//! components. These rules fuse *independent parallel traversals* into a
+//! single traversal over a structure-of-arrays view.
+//!
+//! The core AST deliberately has no tuple type (the executor's normal
+//! form is product-free — eq 30 is precisely the license to eliminate
+//! products before codegen), so this module carries its own small product
+//! IR over the scalar DSL, with an evaluator to property-test the rules
+//! and an `unzip` pass implementing eq 30 right-to-left.
+
+use crate::dsl::{Expr, Prim};
+use crate::eval::{eval, ArrVal, Inputs, Value};
+use crate::{Error, Result};
+
+/// A product-level computation: a tuple of ordinary DSL expressions, a
+/// HoF over tupled arrays, or a fan-out of one array through several
+/// functions.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PExpr {
+    /// `(e1, …, en)` — independent computations (AoS of results).
+    Tuple(Vec<Expr>),
+    /// `map (f1 × … × fn) (x1, …, xn)` — one traversal applying each
+    /// component function to its component array (eq 31/33 RHS; `zip`s
+    /// are n-ary tuples of argument lists).
+    MapProd {
+        fs: Vec<Expr>,
+        args: Vec<Vec<Expr>>,
+    },
+    /// `map (fanOut f1 … fn) x` — one traversal applying every function
+    /// to the same element (eq 32 RHS).
+    MapFan { fs: Vec<Expr>, arg: Expr },
+    /// `reduce (r1 × … × rn) (x1, …, xn)` (eq 34 RHS). Components are
+    /// full `rnz`s: (reducer, zipper, args) triples share the traversal.
+    RedProd {
+        rs: Vec<Expr>,
+        ms: Vec<Expr>,
+        args: Vec<Vec<Expr>>,
+    },
+}
+
+/// Evaluate a product expression to a tuple of values.
+pub fn peval(p: &PExpr, inputs: &Inputs) -> Result<Vec<Value>> {
+    match p {
+        PExpr::Tuple(es) => es.iter().map(|e| eval(e, inputs)).collect(),
+        // Semantically, the fused forms are one loop; the reference
+        // evaluation decomposes them again (that is what the rules assert
+        // equality against).
+        PExpr::MapProd { fs, args } => fs
+            .iter()
+            .zip(args)
+            .map(|(f, xs)| {
+                eval(
+                    &Expr::Nzip {
+                        f: Box::new(f.clone()),
+                        args: xs.clone(),
+                    },
+                    inputs,
+                )
+            })
+            .collect(),
+        PExpr::MapFan { fs, arg } => fs
+            .iter()
+            .map(|f| {
+                eval(
+                    &Expr::Nzip {
+                        f: Box::new(f.clone()),
+                        args: vec![arg.clone()],
+                    },
+                    inputs,
+                )
+            })
+            .collect(),
+        PExpr::RedProd { rs, ms, args } => rs
+            .iter()
+            .zip(ms)
+            .zip(args)
+            .map(|((r, m), xs)| {
+                eval(
+                    &Expr::Rnz {
+                        r: Box::new(r.clone()),
+                        m: Box::new(m.clone()),
+                        args: xs.clone(),
+                    },
+                    inputs,
+                )
+            })
+            .collect(),
+    }
+}
+
+/// eq 31/33: `(nzip f xs, nzip g ys, …) → map (f × g × …) ((xs), (ys), …)`.
+/// Requires every component to be an `nzip` and all consumed extents to
+/// agree (checked at evaluation; structurally we only require the form).
+pub fn pair_maps(p: &PExpr) -> Option<PExpr> {
+    let PExpr::Tuple(es) = p else { return None };
+    if es.len() < 2 {
+        return None;
+    }
+    let mut fs = Vec::with_capacity(es.len());
+    let mut args = Vec::with_capacity(es.len());
+    for e in es {
+        let Expr::Nzip { f, args: xs } = e else {
+            return None;
+        };
+        fs.push((**f).clone());
+        args.push(xs.clone());
+    }
+    Some(PExpr::MapProd { fs, args })
+}
+
+/// eq 32: `(map f x, map g x, …) → map (fanOut f g …) x` — all components
+/// traverse the *same* array.
+pub fn fan_out(p: &PExpr) -> Option<PExpr> {
+    let PExpr::Tuple(es) = p else { return None };
+    if es.len() < 2 {
+        return None;
+    }
+    let mut fs = Vec::with_capacity(es.len());
+    let mut shared: Option<&Expr> = None;
+    for e in es {
+        let Expr::Nzip { f, args } = e else {
+            return None;
+        };
+        let [x] = args.as_slice() else { return None };
+        match shared {
+            None => shared = Some(x),
+            Some(s) if s == x => {}
+            Some(_) => return None,
+        }
+        fs.push((**f).clone());
+    }
+    Some(PExpr::MapFan {
+        fs,
+        arg: shared.unwrap().clone(),
+    })
+}
+
+/// eq 34: `(rnz r1 m1 xs, rnz r2 m2 ys, …) → reduce (r1 × r2 × …) …`.
+pub fn pair_reduces(p: &PExpr) -> Option<PExpr> {
+    let PExpr::Tuple(es) = p else { return None };
+    if es.len() < 2 {
+        return None;
+    }
+    let mut rs = Vec::new();
+    let mut ms = Vec::new();
+    let mut args = Vec::new();
+    for e in es {
+        let Expr::Rnz { r, m, args: xs } = e else {
+            return None;
+        };
+        rs.push((**r).clone());
+        ms.push((**m).clone());
+        args.push(xs.clone());
+    }
+    Some(PExpr::RedProd { rs, ms, args })
+}
+
+/// eq 30, right to left (SoA): an array-of-structs input, presented as one
+/// interleaved buffer of `n`-field records, is reinterpreted as `n`
+/// strided component views — `subdiv`-style layout bookkeeping with no
+/// data movement. Returns one [`ArrVal`] per field.
+pub fn unzip_aos(buf: &ArrVal, n_fields: usize) -> Result<Vec<ArrVal>> {
+    let layout = &buf.view.layout;
+    if layout.rank() != 1 {
+        return Err(Error::Layout("unzip_aos: rank-1 AoS expected".into()));
+    }
+    let d = layout.dims[0];
+    if d.extent % n_fields != 0 {
+        return Err(Error::Layout(format!(
+            "unzip_aos: {} elements not divisible into {n_fields} fields",
+            d.extent
+        )));
+    }
+    // (records, fields) view: field k = every n_fields-th element.
+    let records = d.extent / n_fields;
+    (0..n_fields)
+        .map(|k| {
+            Ok(ArrVal {
+                data: buf.data.clone(),
+                view: crate::layout::View::new(
+                    buf.view.offset + k * d.stride,
+                    crate::layout::Layout::from_pairs(&[(records, n_fields * d.stride)]),
+                ),
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::*;
+    use crate::util::Rng;
+
+    fn inputs() -> Inputs {
+        let mut rng = Rng::new(31);
+        let mut m = Inputs::new();
+        m.insert("x".into(), ArrVal::dense(rng.fill_vec(8), &[8]));
+        m.insert("y".into(), ArrVal::dense(rng.fill_vec(8), &[8]));
+        m.insert("p".into(), ArrVal::dense(rng.fill_vec(8), &[8]));
+        m.insert("q".into(), ArrVal::dense(rng.fill_vec(8), &[8]));
+        m
+    }
+
+    fn assert_peval_eq(a: &PExpr, b: &PExpr, inp: &Inputs) {
+        let va = peval(a, inp).unwrap();
+        let vb = peval(b, inp).unwrap();
+        assert_eq!(va.len(), vb.len());
+        for (x, y) in va.iter().zip(&vb) {
+            assert!(
+                crate::util::allclose(&x.to_dense(), &y.to_dense(), 1e-12),
+                "component mismatch"
+            );
+        }
+    }
+
+    #[test]
+    fn eq31_pair_of_maps_fuses() {
+        let lhs = PExpr::Tuple(vec![
+            map(lam1("a", app2(mul(), var("a"), lit(2.0))), input("x")),
+            map(lam1("b", app2(add(), var("b"), lit(1.0))), input("y")),
+        ]);
+        let rhs = pair_maps(&lhs).expect("eq 31 applies");
+        assert!(matches!(rhs, PExpr::MapProd { .. }));
+        assert_peval_eq(&lhs, &rhs, &inputs());
+    }
+
+    #[test]
+    fn eq33_pair_of_zips_fuses() {
+        let lhs = PExpr::Tuple(vec![
+            zip(mul(), input("x"), input("y")),
+            zip(add(), input("p"), input("q")),
+        ]);
+        let rhs = pair_maps(&lhs).expect("eq 33 applies");
+        assert_peval_eq(&lhs, &rhs, &inputs());
+    }
+
+    #[test]
+    fn eq32_fanout_requires_shared_argument() {
+        let shared = PExpr::Tuple(vec![
+            map(lam1("a", app2(mul(), var("a"), var("a"))), input("x")),
+            map(lam1("a", app1(Expr::Prim(Prim::Neg), var("a"))), input("x")),
+        ]);
+        let rhs = fan_out(&shared).expect("eq 32 applies");
+        assert!(matches!(rhs, PExpr::MapFan { .. }));
+        assert_peval_eq(&shared, &rhs, &inputs());
+
+        let not_shared = PExpr::Tuple(vec![
+            map(lam1("a", var("a")), input("x")),
+            map(lam1("a", var("a")), input("y")),
+        ]);
+        assert!(fan_out(&not_shared).is_none());
+    }
+
+    #[test]
+    fn eq34_pair_of_reduces_fuses() {
+        let lhs = PExpr::Tuple(vec![
+            dot(input("x"), input("y")),
+            reduce(pmax(), input("p")),
+        ]);
+        let rhs = pair_reduces(&lhs).expect("eq 34 applies");
+        assert_peval_eq(&lhs, &rhs, &inputs());
+    }
+
+    #[test]
+    fn rules_reject_mixed_forms() {
+        let mixed = PExpr::Tuple(vec![
+            map(lam1("a", var("a")), input("x")),
+            dot(input("p"), input("q")),
+        ]);
+        assert!(pair_maps(&mixed).is_none());
+        assert!(pair_reduces(&mixed).is_none());
+    }
+
+    #[test]
+    fn eq30_unzip_aos_is_a_strided_view() {
+        // interleaved (a0,b0,a1,b1,...) record buffer
+        let data: Vec<f64> = (0..16).map(|i| i as f64).collect();
+        let aos = ArrVal::dense(data, &[16]);
+        let fields = unzip_aos(&aos, 2).unwrap();
+        assert_eq!(fields[0].to_dense(), vec![0., 2., 4., 6., 8., 10., 12., 14.]);
+        assert_eq!(fields[1].to_dense(), vec![1., 3., 5., 7., 9., 11., 13., 15.]);
+        // no copy: same backing buffer
+        assert!(std::rc::Rc::ptr_eq(&fields[0].data, &aos.data));
+        // and the SoA views compose with ordinary HoFs:
+        let mut inp = Inputs::new();
+        inp.insert("a".into(), fields[0].clone());
+        inp.insert("b".into(), fields[1].clone());
+        let s = eval(&dot(input("a"), input("b")), &inp)
+            .unwrap()
+            .as_scalar()
+            .unwrap();
+        let expect: f64 = (0..8).map(|i| (2 * i) as f64 * (2 * i + 1) as f64).sum();
+        assert_eq!(s, expect);
+    }
+
+    #[test]
+    fn unzip_rejects_bad_shapes() {
+        let aos = ArrVal::dense(vec![1., 2., 3.], &[3]);
+        assert!(unzip_aos(&aos, 2).is_err());
+        let mat = ArrVal::dense(vec![0.0; 6], &[2, 3]);
+        assert!(unzip_aos(&mat, 2).is_err());
+    }
+}

@@ -1,0 +1,108 @@
+//! Layout-operator cleanups. Exchange rules insert `flip`s mechanically;
+//! these rules cancel and canonicalise the resulting chains so that
+//! repeated exchanges do not grow expressions without bound.
+
+use super::engine::Rule;
+use crate::dsl::Expr;
+
+/// `flip d1 d2 (flip d1 d2 x) → x` — flip is an involution (paper §2.1).
+pub fn flip_flip() -> Rule {
+    Rule {
+        name: "flip-flip",
+        apply: |e| {
+            let Expr::Flip { d1, d2, arg } = e else {
+                return None;
+            };
+            let Expr::Flip {
+                d1: e1,
+                d2: e2,
+                arg: inner,
+            } = &**arg
+            else {
+                return None;
+            };
+            // flip is commutative in its arguments
+            let same = (d1 == e1 && d2 == e2) || (d1 == e2 && d2 == e1);
+            if same {
+                Some((**inner).clone())
+            } else {
+                None
+            }
+        },
+    }
+}
+
+/// `flatten d (subdiv d b x) → x` — flatten is the inverse of subdiv.
+pub fn flatten_subdiv() -> Rule {
+    Rule {
+        name: "flatten-subdiv",
+        apply: |e| {
+            let Expr::Flatten { d, arg } = e else {
+                return None;
+            };
+            let Expr::Subdiv {
+                d: sd,
+                b: _,
+                arg: inner,
+            } = &**arg
+            else {
+                return None;
+            };
+            if d == sd {
+                Some((**inner).clone())
+            } else {
+                None
+            }
+        },
+    }
+}
+
+/// `subdiv d 1 x` has a trivial inner block; leave it (used by enumeration
+/// edge cases) — but `flip d d x → x` is always removable.
+pub fn subdiv_trivial() -> Rule {
+    Rule {
+        name: "flip-same-dim",
+        apply: |e| {
+            let Expr::Flip { d1, d2, arg } = e else {
+                return None;
+            };
+            if d1 == d2 {
+                Some((**arg).clone())
+            } else {
+                None
+            }
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::*;
+    use crate::rewrite::normalize;
+
+    #[test]
+    fn flip_cancels() {
+        let e = flip(0, flip(0, input("A")));
+        assert_eq!(normalize(&e), input("A"));
+        let e2 = flip2(0, 2, flip2(2, 0, input("A")));
+        assert_eq!(normalize(&e2), input("A"));
+        // different dims do not cancel
+        let e3 = flip(0, flip(1, input("A")));
+        assert_eq!(normalize(&e3), e3);
+    }
+
+    #[test]
+    fn flatten_cancels_subdiv() {
+        let e = flatten(1, subdiv(1, 4, input("A")));
+        assert_eq!(normalize(&e), input("A"));
+        let e2 = flatten(0, subdiv(1, 4, input("A")));
+        assert_eq!(normalize(&e2), e2);
+    }
+
+    #[test]
+    fn flip_same_dim_is_identity() {
+        let e = flip2(1, 1, input("A"));
+        assert_eq!(normalize(&e), input("A"));
+    }
+}

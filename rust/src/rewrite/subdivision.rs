@@ -1,0 +1,330 @@
+//! Subdivision identities (paper eq 44 and the `rnz` analogue).
+//!
+//! Subdividing a HoF splits one loop into a loop-over-blocks of
+//! loops-within-blocks, *without changing the result*: the data is
+//! reinterpreted through `subdiv` on the consumed dimension and the HoF is
+//! nested once. All actual computation stays in the innermost HoF — the
+//! outer ones are "logical" reshapings, which is what later exchange
+//! rewrites move around to create cache-friendly traversals.
+
+use super::Ctx;
+use crate::dsl::{fresh_var, Expr};
+
+/// eq 44 (n-ary): `nzip f xs = nzip (\blk… -> nzip f blk…) (subdiv c b x)…`
+/// where `c` is each argument's consumed (outermost) dimension. `b` must
+/// divide the common outer extent.
+pub fn subdivide_nzip(e: &Expr, b: usize, ctx: &Ctx) -> Option<Expr> {
+    let Expr::Nzip { f, args } = e else {
+        return None;
+    };
+    let mut new_args = Vec::with_capacity(args.len());
+    for a in args {
+        let layout = ctx.layout_of(a).ok()?;
+        let rank = layout.rank();
+        if rank == 0 {
+            return None;
+        }
+        let outer = layout.outer().unwrap();
+        if b == 0 || outer.extent % b != 0 {
+            return None;
+        }
+        new_args.push(Expr::Subdiv {
+            d: rank - 1,
+            b,
+            arg: Box::new(a.clone()),
+        });
+    }
+    let blks: Vec<String> = (0..args.len())
+        .map(|i| fresh_var(&format!("blk{i}")))
+        .collect();
+    let inner = Expr::Nzip {
+        f: f.clone(),
+        args: blks.iter().map(|x| Expr::Var(x.clone())).collect(),
+    };
+    Some(Expr::Nzip {
+        f: Box::new(Expr::Lam {
+            params: blks,
+            body: Box::new(inner),
+        }),
+        args: new_args,
+    })
+}
+
+/// The `rnz` analogue of eq 44 (valid because the reduction operator is
+/// associative — the paper's regrouping property):
+/// `rnz r m xs = rnz r (\blk… -> rnz r m blk…) (subdiv c b x)…`.
+pub fn subdivide_rnz(e: &Expr, b: usize, ctx: &Ctx) -> Option<Expr> {
+    let Expr::Rnz { r, m, args } = e else {
+        return None;
+    };
+    let mut new_args = Vec::with_capacity(args.len());
+    for a in args {
+        let layout = ctx.layout_of(a).ok()?;
+        let rank = layout.rank();
+        if rank == 0 {
+            return None;
+        }
+        let outer = layout.outer().unwrap();
+        if b == 0 || outer.extent % b != 0 {
+            return None;
+        }
+        new_args.push(Expr::Subdiv {
+            d: rank - 1,
+            b,
+            arg: Box::new(a.clone()),
+        });
+    }
+    let blks: Vec<String> = (0..args.len())
+        .map(|i| fresh_var(&format!("blk{i}")))
+        .collect();
+    let inner = Expr::Rnz {
+        r: r.clone(),
+        m: m.clone(),
+        args: blks.iter().map(|x| Expr::Var(x.clone())).collect(),
+    };
+    Some(Expr::Rnz {
+        r: r.clone(),
+        m: Box::new(Expr::Lam {
+            params: blks,
+            body: Box::new(inner),
+        }),
+        args: new_args,
+    })
+}
+
+/// Hoist a subdivision through a HoF binder to the argument (context-free
+/// rule): if **every** use of a bound variable `x` in the body is
+/// `subdiv d b x`, then
+///
+/// ```text
+/// nzip (\x -> …(subdiv d b x)…) X  =  nzip (\x -> …x…) (subdiv d b X)
+/// ```
+///
+/// (and likewise for `rnz` parameters), because subdividing a dimension
+/// below the consumed one commutes with consuming it. This brings
+/// `subdivide_nzip`/`subdivide_rnz` output into the input-level normal form
+/// the exchange rules traverse (the paper's `A^(1a) = subdiv 0 2 A`
+/// bookkeeping).
+pub fn hoist_subdiv() -> crate::rewrite::Rule {
+    crate::rewrite::Rule {
+        name: "hoist-subdiv",
+        apply: |e| {
+            let (f, args, is_rnz, r) = match e {
+                Expr::Nzip { f, args } => (f, args, false, None),
+                Expr::Rnz { r, m, args } => (m, args, true, Some(r)),
+                _ => return None,
+            };
+            let Expr::Lam { params, body } = &**f else {
+                return None;
+            };
+            if params.len() != args.len() {
+                return None;
+            }
+            for (i, p) in params.iter().enumerate() {
+                if let Some((d, b)) = unique_subdiv_of_uses(body, p) {
+                    let new_body = strip_subdiv(body, p, d, b);
+                    let mut new_args = args.clone();
+                    new_args[i] = Expr::Subdiv {
+                        d,
+                        b,
+                        arg: Box::new(args[i].clone()),
+                    };
+                    let new_f = Box::new(Expr::Lam {
+                        params: params.clone(),
+                        body: Box::new(new_body),
+                    });
+                    return Some(if is_rnz {
+                        Expr::Rnz {
+                            r: r.unwrap().clone(),
+                            m: new_f,
+                            args: new_args,
+                        }
+                    } else {
+                        Expr::Nzip {
+                            f: new_f,
+                            args: new_args,
+                        }
+                    });
+                }
+            }
+            None
+        },
+    }
+}
+
+/// If every free occurrence of `x` in `e` is exactly `subdiv d b (var x)`
+/// with one consistent `(d, b)`, return it.
+fn unique_subdiv_of_uses(e: &Expr, x: &str) -> Option<(usize, usize)> {
+    fn walk(e: &Expr, x: &str, found: &mut Option<(usize, usize)>, ok: &mut bool) {
+        if !*ok {
+            return;
+        }
+        match e {
+            Expr::Subdiv { d, b, arg } if matches!(&**arg, Expr::Var(v) if v == x) => {
+                match found {
+                    None => *found = Some((*d, *b)),
+                    Some((fd, fb)) if *fd == *d && *fb == *b => {}
+                    _ => *ok = false,
+                }
+            }
+            Expr::Var(v) if v == x => *ok = false, // bare use blocks hoisting
+            Expr::Lam { params, body } => {
+                if !params.iter().any(|p| p == x) {
+                    walk(body, x, found, ok);
+                }
+            }
+            _ => {
+                crate::rewrite::engine::map_children(e, |c| {
+                    walk(c, x, found, ok);
+                    c.clone()
+                });
+            }
+        }
+    }
+    let mut found = None;
+    let mut ok = true;
+    walk(e, x, &mut found, &mut ok);
+    if ok {
+        found
+    } else {
+        None
+    }
+}
+
+/// Replace every `subdiv d b (var x)` with `var x` (shadow-aware).
+fn strip_subdiv(e: &Expr, x: &str, d: usize, b: usize) -> Expr {
+    match e {
+        Expr::Subdiv {
+            d: ed,
+            b: eb,
+            arg,
+        } if *ed == d && *eb == b && matches!(&**arg, Expr::Var(v) if v == x) => {
+            Expr::Var(x.to_string())
+        }
+        Expr::Lam { params, body } if params.iter().any(|p| p == x) => e.clone(),
+        _ => crate::rewrite::engine::map_children(e, |c| strip_subdiv(c, x, d, b)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::*;
+    use crate::eval::{eval, ArrVal, Inputs};
+    use crate::layout::Layout;
+    use crate::typecheck::Env;
+
+    #[test]
+    fn hoist_moves_subdiv_to_input() {
+        // map (\r -> reduce + (subdiv 0 2 r)) A
+        let e = map(
+            lam1(
+                "r",
+                rnz(
+                    add(),
+                    lam1("c", reduce(add(), var("c"))),
+                    vec![subdiv(0, 2, var("r"))],
+                ),
+            ),
+            input("A"),
+        );
+        let rule = hoist_subdiv();
+        let out = crate::rewrite::rewrite_bottom_up(&[rule], &e);
+        // subdiv must now wrap the input, not the bound var
+        let s = pretty(&out);
+        assert!(
+            s.contains("(subdiv 0 2 (in A))"),
+            "subdiv not hoisted: {s}"
+        );
+        assert!(!s.contains("(subdiv 0 2 r)"), "{s}");
+        // semantics preserved
+        let mut inp = Inputs::new();
+        inp.insert(
+            "A".into(),
+            ArrVal::dense((0..12).map(|i| i as f64).collect(), &[3, 4]),
+        );
+        assert_eq!(
+            eval(&e, &inp).unwrap().to_dense(),
+            eval(&out, &inp).unwrap().to_dense()
+        );
+    }
+
+    #[test]
+    fn hoist_blocked_by_bare_use() {
+        // r used both subdivided and bare — cannot hoist
+        let e = map(
+            lam1(
+                "r",
+                zip(
+                    add(),
+                    flatten(0, subdiv(0, 2, var("r"))),
+                    var("r"),
+                ),
+            ),
+            input("A"),
+        );
+        assert!((hoist_subdiv().apply)(&e).is_none());
+    }
+
+    #[test]
+    fn subdivided_map_same_dense_result() {
+        let mut inp = Inputs::new();
+        inp.insert(
+            "v".into(),
+            ArrVal::dense((0..12).map(|i| i as f64).collect(), &[12]),
+        );
+        let env = Env::new().with("v", Layout::row_major(&[12]));
+        let ctx = Ctx::new(env);
+        let e = map(lam1("x", app2(mul(), var("x"), lit(3.0))), input("v"));
+        let s = subdivide_nzip(&e, 4, &ctx).unwrap();
+        assert_eq!(
+            eval(&e, &inp).unwrap().to_dense(),
+            eval(&s, &inp).unwrap().to_dense()
+        );
+        // repeated subdivision also holds (paper: "or even over repeated
+        // subdivisions")
+        let s2 = subdivide_nzip(&s, 2, &ctx);
+        // outer extent of subdivided arg is 12/4 = 3, not divisible by 2
+        assert!(s2.is_none());
+    }
+
+    #[test]
+    fn subdivided_rnz_same_scalar_result() {
+        let mut inp = Inputs::new();
+        inp.insert(
+            "u".into(),
+            ArrVal::dense((0..16).map(|i| (i % 5) as f64).collect(), &[16]),
+        );
+        inp.insert(
+            "v".into(),
+            ArrVal::dense((0..16).map(|i| (i % 3) as f64).collect(), &[16]),
+        );
+        let env = Env::new()
+            .with("u", Layout::row_major(&[16]))
+            .with("v", Layout::row_major(&[16]));
+        let ctx = Ctx::new(env);
+        let e = dot(input("u"), input("v"));
+        let s = subdivide_rnz(&e, 4, &ctx).unwrap();
+        let a = eval(&e, &inp).unwrap().as_scalar().unwrap();
+        let b = eval(&s, &inp).unwrap().as_scalar().unwrap();
+        assert!((a - b).abs() < 1e-12);
+        // and the subdivided form still lowers + executes
+        use crate::exec::run;
+        let u: Vec<f64> = (0..16).map(|i| (i % 5) as f64).collect();
+        let v: Vec<f64> = (0..16).map(|i| (i % 3) as f64).collect();
+        let env2 = Env::new()
+            .with("u", Layout::row_major(&[16]))
+            .with("v", Layout::row_major(&[16]));
+        let out = run(&s, &env2, &[("u", &u), ("v", &v)]).unwrap();
+        assert!((out[0] - a).abs() < 1e-12);
+    }
+
+    #[test]
+    fn indivisible_block_rejected() {
+        let env = Env::new().with("v", Layout::row_major(&[10]));
+        let ctx = Ctx::new(env);
+        let e = map(lam1("x", var("x")), input("v"));
+        assert!(subdivide_nzip(&e, 3, &ctx).is_none());
+        assert!(subdivide_nzip(&e, 0, &ctx).is_none());
+    }
+}

@@ -1,0 +1,240 @@
+//! PJRT runtime: load and execute AOT-compiled artifacts from rust.
+//!
+//! Wraps the `xla` crate's PJRT CPU client. Artifacts are the HLO-*text*
+//! modules produced by `python/compile/aot.py` (text, not serialized
+//! protos — jax ≥ 0.5 emits 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns them). Compiled executables
+//! are cached by artifact path, so the request path never recompiles.
+//!
+//! This layer plays the paper's *vendor library* role (their Eigen
+//! baseline): `matmul_xla_*.hlo.txt` is XLA's own dot, and
+//! `matmul_pallas_*.hlo.txt` is our tiled Pallas kernel, both invoked from
+//! the rust hot path with Python long gone.
+
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded-and-compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Number of parameters the HLO entry takes (validated on execute).
+    pub n_params: usize,
+    pub name: String,
+}
+
+/// The PJRT runtime: one CPU client plus an executable cache.
+///
+/// Not `Send`: confine to one thread (the coordinator dedicates a runtime
+/// thread and communicates via channels).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, std::rc::Rc<Executable>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PJRT client: {e}")))?;
+        Ok(Runtime {
+            client,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact, compiling it on first use.
+    pub fn load(&mut self, path: &Path) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.get(path) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {}: {e}", path.display())))?;
+        let n_params = count_entry_params(path)?;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        let exec = std::rc::Rc::new(Executable {
+            exe,
+            n_params,
+            name,
+        });
+        self.cache.insert(path.to_path_buf(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Number of cached executables.
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Execute with f32 inputs given as `(data, shape)` pairs; returns the
+    /// flattened f32 outputs of the (1-tuple) result.
+    pub fn run_f32(
+        &self,
+        exe: &Executable,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<f32>> {
+        if exe.n_params != 0 && inputs.len() != exe.n_params {
+            return Err(Error::Runtime(format!(
+                "{}: expected {} inputs, got {}",
+                exe.name,
+                exe.n_params,
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let expect: usize = shape.iter().product();
+            if expect != data.len() {
+                return Err(Error::Runtime(format!(
+                    "input shape {shape:?} does not match {} elements",
+                    data.len()
+                )));
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| Error::Runtime(format!("reshape: {e}")))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute: {e}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch: {e}")))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| Error::Runtime(format!("untuple: {e}")))?;
+        out.to_vec::<f32>()
+            .map_err(|e| Error::Runtime(format!("to_vec: {e}")))
+    }
+}
+
+/// Count the parameters of the ENTRY computation in an HLO text file.
+fn count_entry_params(path: &Path) -> Result<usize> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Runtime(format!("read {}: {e}", path.display())))?;
+    // The ENTRY computation is printed as its own block; count the
+    // parameter instructions between "ENTRY" and the block's closing brace.
+    let entry = text.find("ENTRY").unwrap_or(0);
+    let block_end = text[entry..]
+        .find("\n}")
+        .map(|i| entry + i)
+        .unwrap_or(text.len());
+    Ok(text[entry..block_end]
+        .lines()
+        .filter(|l| l.contains("parameter("))
+        .count())
+}
+
+/// Default artifact directory: `$HOFDLA_ARTIFACTS` or `artifacts/` relative
+/// to the workspace root.
+pub fn artifact_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("HOFDLA_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    // Walk up from CWD looking for artifacts/ (works from target dirs too).
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+/// Path to a named artifact.
+pub fn artifact_path(name: &str) -> PathBuf {
+    artifact_dir().join(format!("{name}.hlo.txt"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        artifact_path("matmul_xla_256").exists()
+    }
+
+    #[test]
+    fn load_and_run_xla_matmul() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::cpu().unwrap();
+        let exe = rt.load(&artifact_path("matmul_xla_256")).unwrap();
+        assert_eq!(exe.n_params, 2);
+        let n = 256usize;
+        // identity * ones = ones
+        let mut a = vec![0f32; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        let b = vec![1f32; n * n];
+        let out = rt.run_f32(&exe, &[(&a, &[n, n]), (&b, &[n, n])]).unwrap();
+        assert_eq!(out.len(), n * n);
+        assert!(out.iter().all(|&x| (x - 1.0).abs() < 1e-6));
+        // cache hit on second load
+        let _again = rt.load(&artifact_path("matmul_xla_256")).unwrap();
+        assert_eq!(rt.cache_len(), 1);
+    }
+
+    #[test]
+    fn pallas_artifact_matches_xla_artifact() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::cpu().unwrap();
+        let xla_exe = rt.load(&artifact_path("matmul_xla_256")).unwrap();
+        let pal_exe = rt.load(&artifact_path("matmul_pallas_256")).unwrap();
+        let n = 256usize;
+        let mut rng = crate::util::Rng::new(7);
+        let a: Vec<f32> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let b: Vec<f32> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let o1 = rt.run_f32(&xla_exe, &[(&a, &[n, n]), (&b, &[n, n])]).unwrap();
+        let o2 = rt.run_f32(&pal_exe, &[(&a, &[n, n]), (&b, &[n, n])]).unwrap();
+        let max = o1
+            .iter()
+            .zip(&o2)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max);
+        assert!(max < 1e-3, "pallas vs xla diverge: {max}");
+    }
+
+    #[test]
+    fn input_validation() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::cpu().unwrap();
+        let exe = rt.load(&artifact_path("matmul_xla_256")).unwrap();
+        let a = vec![0f32; 4];
+        assert!(rt.run_f32(&exe, &[(&a, &[2, 2])]).is_err()); // wrong arity
+        assert!(rt.run_f32(&exe, &[(&a, &[3, 3]), (&a, &[2, 2])]).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let mut rt = Runtime::cpu().unwrap();
+        assert!(rt.load(Path::new("/nonexistent/zz.hlo.txt")).is_err());
+    }
+}

@@ -1,0 +1,386 @@
+//! Shape/type inference for DSL expressions.
+//!
+//! Per the paper (§2.1), "all the dimension, shape and layout information is
+//! represented at the type level"; here that means every expression is
+//! assigned a [`Layout`] (rank 0 = scalar). Functions are not first-class
+//! values in checked programs — they only occur in the operator positions of
+//! `app` / `nzip` / `rnz` / `lift`, where they are checked structurally
+//! against the argument layouts. This is exactly enough to
+//!
+//! - verify that HoF arguments agree on the consumed (outermost) extent,
+//! - verify `subdiv` divisibility and `flip`/`flatten` well-formedness,
+//! - track how rewrites change the logical layout (the paper's point that
+//!   "exchanging two nested higher order functions must be done with an
+//!   appropriate flip in the subdivision structure" is *checked* here),
+//! - and signal mistakes in rewrite implementations (types "signal
+//!   potential mistakes", §3).
+
+use crate::dsl::Expr;
+use crate::layout::Layout;
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// Environment: layouts of named inputs.
+#[derive(Clone, Debug, Default)]
+pub struct Env {
+    pub inputs: HashMap<String, Layout>,
+}
+
+impl Env {
+    pub fn new() -> Self {
+        Env::default()
+    }
+
+    pub fn with(mut self, name: &str, layout: Layout) -> Self {
+        self.inputs.insert(name.to_string(), layout);
+        self
+    }
+}
+
+/// Infer the layout of `e` under `env`. Errors on any shape mismatch.
+pub fn infer(e: &Expr, env: &Env) -> Result<Layout> {
+    let mut vars: HashMap<String, Layout> = HashMap::new();
+    go(e, env, &mut vars)
+}
+
+/// Infer with an initial variable context (used by the rewrite engine when
+/// typing subexpressions under binders it has descended through).
+pub fn infer_with(e: &Expr, env: &Env, vars: &HashMap<String, Layout>) -> Result<Layout> {
+    let mut vars = vars.clone();
+    go(e, env, &mut vars)
+}
+
+fn go(e: &Expr, env: &Env, vars: &mut HashMap<String, Layout>) -> Result<Layout> {
+    match e {
+        Expr::Var(x) => vars
+            .get(x)
+            .cloned()
+            .ok_or_else(|| Error::Type(format!("unbound variable '{x}'"))),
+        Expr::Lit(_) => Ok(Layout::scalar()),
+        Expr::Prim(_) => Err(Error::Type(
+            "primitive used as a value outside operator position".into(),
+        )),
+        Expr::Lam { .. } => Err(Error::Type(
+            "lambda used as a value outside operator position".into(),
+        )),
+        Expr::Lift { .. } => Err(Error::Type(
+            "lift used as a value outside operator position".into(),
+        )),
+        Expr::Input(n) => env
+            .inputs
+            .get(n)
+            .cloned()
+            .ok_or_else(|| Error::Type(format!("unknown input '{n}'"))),
+        Expr::App { f, args } => {
+            let arg_tys = args
+                .iter()
+                .map(|a| go(a, env, vars))
+                .collect::<Result<Vec<_>>>()?;
+            apply(f, &arg_tys, env, vars)
+        }
+        Expr::Nzip { f, args } => {
+            if args.is_empty() {
+                return Err(Error::Type("nzip: needs at least one array".into()));
+            }
+            let arg_tys = args
+                .iter()
+                .map(|a| go(a, env, vars))
+                .collect::<Result<Vec<_>>>()?;
+            let extent = consumed_extent(&arg_tys, "nzip")?;
+            let elem_tys: Vec<Layout> = arg_tys
+                .iter()
+                .map(|t| t.peel_outer())
+                .collect::<Result<_>>()?;
+            let body_ty = apply(f, &elem_tys, env, vars)?;
+            Ok(push_outer(&body_ty, extent))
+        }
+        Expr::Rnz { r, m, args } => {
+            if args.is_empty() {
+                return Err(Error::Type("rnz: needs at least one array".into()));
+            }
+            let arg_tys = args
+                .iter()
+                .map(|a| go(a, env, vars))
+                .collect::<Result<Vec<_>>>()?;
+            consumed_extent(&arg_tys, "rnz")?;
+            let elem_tys: Vec<Layout> = arg_tys
+                .iter()
+                .map(|t| t.peel_outer())
+                .collect::<Result<_>>()?;
+            let body_ty = apply(m, &elem_tys, env, vars)?;
+            // The reduction operator must combine two body_ty values into one.
+            check_reducer(r, &body_ty)?;
+            Ok(body_ty)
+        }
+        Expr::Subdiv { d, b, arg } => go(arg, env, vars)?.subdiv(*d, *b),
+        Expr::Flatten { d, arg } => go(arg, env, vars)?.flatten(*d),
+        Expr::Flip { d1, d2, arg } => go(arg, env, vars)?.flip2(*d1, *d2),
+    }
+}
+
+/// Check a function expression applied to arguments of the given layouts and
+/// compute the result layout.
+fn apply(
+    f: &Expr,
+    arg_tys: &[Layout],
+    env: &Env,
+    vars: &mut HashMap<String, Layout>,
+) -> Result<Layout> {
+    match f {
+        Expr::Prim(p) => {
+            if arg_tys.len() != p.arity() {
+                return Err(Error::Type(format!(
+                    "primitive {} expects {} args, got {}",
+                    p.name(),
+                    p.arity(),
+                    arg_tys.len()
+                )));
+            }
+            for (i, t) in arg_tys.iter().enumerate() {
+                if !t.is_scalar() {
+                    return Err(Error::Type(format!(
+                        "primitive {} arg {i} must be scalar, got {t}",
+                        p.name()
+                    )));
+                }
+            }
+            Ok(Layout::scalar())
+        }
+        Expr::Lam { params, body } => {
+            if params.len() != arg_tys.len() {
+                return Err(Error::Type(format!(
+                    "lambda expects {} args, got {}",
+                    params.len(),
+                    arg_tys.len()
+                )));
+            }
+            // Bind (shadowing), infer body, restore.
+            let mut saved = Vec::with_capacity(params.len());
+            for (p, t) in params.iter().zip(arg_tys) {
+                saved.push((p.clone(), vars.insert(p.clone(), t.clone())));
+            }
+            let r = go(body, env, vars);
+            for (p, old) in saved.into_iter().rev() {
+                match old {
+                    Some(t) => {
+                        vars.insert(p, t);
+                    }
+                    None => {
+                        vars.remove(&p);
+                    }
+                }
+            }
+            r
+        }
+        Expr::Lift { f: inner } => {
+            // lift g applied to arrays: consumes the outer dimension of each
+            // argument elementwise.
+            let extent = consumed_extent(arg_tys, "lift")?;
+            let elem_tys: Vec<Layout> = arg_tys
+                .iter()
+                .map(|t| t.peel_outer())
+                .collect::<Result<_>>()?;
+            let body_ty = apply(inner, &elem_tys, env, vars)?;
+            Ok(push_outer(&body_ty, extent))
+        }
+        other => Err(Error::Type(format!(
+            "unsupported function form in operator position: {}",
+            crate::dsl::pretty(other)
+        ))),
+    }
+}
+
+/// Check that the HoF arguments all expose the same outermost extent; return
+/// it.
+fn consumed_extent(arg_tys: &[Layout], what: &str) -> Result<usize> {
+    let mut extent = None;
+    for (i, t) in arg_tys.iter().enumerate() {
+        let outer = t
+            .outer()
+            .ok_or_else(|| Error::Type(format!("{what}: arg {i} is scalar, need rank ≥ 1")))?;
+        match extent {
+            None => extent = Some(outer.extent),
+            Some(e) if e == outer.extent => {}
+            Some(e) => {
+                return Err(Error::Type(format!(
+                    "{what}: outer extent mismatch: arg {i} has {}, expected {e}",
+                    outer.extent
+                )))
+            }
+        }
+    }
+    Ok(extent.unwrap())
+}
+
+/// The reduction operator of `rnz` must be `Prim` for scalar accumulators or
+/// `lift^k prim` for rank-k array accumulators, with an associative prim
+/// (paper: "assumed to be at least associative").
+fn check_reducer(r: &Expr, acc_ty: &Layout) -> Result<()> {
+    let mut depth = 0usize;
+    let mut cur = r;
+    while let Expr::Lift { f } = cur {
+        depth += 1;
+        cur = f;
+    }
+    match cur {
+        Expr::Prim(p) => {
+            if p.arity() != 2 {
+                return Err(Error::Type(format!(
+                    "rnz reduction operator {} must be binary",
+                    p.name()
+                )));
+            }
+            if !p.is_associative() {
+                return Err(Error::Type(format!(
+                    "rnz reduction operator {} must be associative",
+                    p.name()
+                )));
+            }
+            if depth != acc_ty.rank() {
+                return Err(Error::Type(format!(
+                    "rnz reduction operator lift^{depth} {} does not match accumulator rank {} ({acc_ty})",
+                    p.name(),
+                    acc_ty.rank()
+                )));
+            }
+            Ok(())
+        }
+        other => Err(Error::Type(format!(
+            "unsupported rnz reduction operator: {}",
+            crate::dsl::pretty(other)
+        ))),
+    }
+}
+
+/// Result layout of a HoF: the element layout with a fresh dense outer
+/// dimension appended (fresh results are stored densely).
+fn push_outer(elem: &Layout, extent: usize) -> Layout {
+    let mut dims = elem.dims.clone();
+    let inner_len: usize = elem.len().max(1);
+    dims.push(crate::layout::Dim::new(extent, inner_len));
+    Layout { dims }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::*;
+
+    fn mat_env(n: usize, m: usize) -> Env {
+        Env::new()
+            .with("A", Layout::row_major(&[n, m]))
+            .with("v", Layout::row_major(&[m]))
+    }
+
+    #[test]
+    fn matvec_types_as_vector() {
+        let env = mat_env(4, 6);
+        let e = matvec_naive(input("A"), input("v"));
+        let t = infer(&e, &env).unwrap();
+        assert_eq!(t.rank(), 1);
+        assert_eq!(t.dims[0].extent, 4);
+    }
+
+    #[test]
+    fn matmul_types_as_matrix() {
+        let env = Env::new()
+            .with("A", Layout::row_major(&[4, 6]))
+            .with("B", Layout::row_major(&[6, 8]));
+        let e = matmul_naive(input("A"), input("B"));
+        let t = infer(&e, &env).unwrap();
+        assert_eq!(
+            t.dims.iter().map(|d| d.extent).collect::<Vec<_>>(),
+            vec![8, 4] // innermost first: 8 columns within each of 4 rows
+        );
+    }
+
+    #[test]
+    fn extent_mismatch_rejected() {
+        // dot of length-4 and length-6 vectors
+        let env = Env::new()
+            .with("u", Layout::row_major(&[4]))
+            .with("v", Layout::row_major(&[6]));
+        let e = dot(input("u"), input("v"));
+        assert!(infer(&e, &env).is_err());
+    }
+
+    #[test]
+    fn row_of_flipped_matrix_is_column() {
+        // map over flip 0 A yields columns with the row stride
+        let env = mat_env(4, 6);
+        let e = map(lam1("c", var("c")), flip(0, input("A")));
+        let t = infer(&e, &env).unwrap();
+        // 6 columns, each of 4 elements
+        assert_eq!(
+            t.dims.iter().map(|d| d.extent).collect::<Vec<_>>(),
+            vec![4, 6]
+        );
+    }
+
+    #[test]
+    fn reducer_rank_must_match() {
+        let env = mat_env(4, 6);
+        // reduce rows of A with scalar +: accumulator is a row (rank 1) → error
+        let bad = rnz(add(), lam1("r", var("r")), vec![input("A")]);
+        assert!(infer(&bad, &env).is_err());
+        // with lift (+) it typechecks
+        let good = rnz(lift(add()), lam1("r", var("r")), vec![input("A")]);
+        let t = infer(&good, &env).unwrap();
+        assert_eq!(t.dims[0].extent, 6);
+    }
+
+    #[test]
+    fn nonassociative_reducer_rejected() {
+        let env = Env::new().with("u", Layout::row_major(&[4]));
+        let bad = rnz(sub(), lam1("x", var("x")), vec![input("u")]);
+        assert!(infer(&bad, &env).is_err());
+    }
+
+    #[test]
+    fn subdiv_divisibility_checked_at_expr_level() {
+        let env = Env::new().with("u", Layout::row_major(&[10]));
+        assert!(infer(&subdiv(0, 2, input("u")), &env).is_ok());
+        assert!(infer(&subdiv(0, 3, input("u")), &env).is_err());
+    }
+
+    #[test]
+    fn unbound_and_unknown_errors() {
+        let env = Env::new();
+        assert!(infer(&var("x"), &env).is_err());
+        assert!(infer(&input("Z"), &env).is_err());
+        assert!(matches!(
+            infer(&add(), &env),
+            Err(Error::Type(_))
+        ));
+    }
+
+    #[test]
+    fn scalar_prims_reject_arrays() {
+        let env = Env::new().with("u", Layout::row_major(&[4]));
+        let e = app2(add(), input("u"), lit(1.0));
+        assert!(infer(&e, &env).is_err());
+    }
+
+    #[test]
+    fn subdivided_dot_via_nested_rnz() {
+        // 1a form for matvec: map (\r -> rnz (+) (\b c -> dot b c) r' u') A'
+        let env = mat_env(4, 8);
+        let e = map(
+            lam1(
+                "r",
+                rnz(
+                    add(),
+                    lam2("b", "c", dot(var("b"), var("c"))),
+                    vec![subdiv(0, 2, var("r")), subdiv(0, 2, input("v"))],
+                ),
+            ),
+            input("A"),
+        );
+        let env = Env::new()
+            .with("A", Layout::row_major(&[4, 8]))
+            .with("v", Layout::row_major(&[8]));
+        let t = infer(&e, &env).unwrap();
+        assert_eq!(t.dims[0].extent, 4);
+        let _ = env;
+    }
+}

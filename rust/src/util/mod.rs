@@ -1,0 +1,73 @@
+//! Small self-contained utilities: a deterministic PRNG (no `rand` crate is
+//! available offline) and assorted helpers shared across modules.
+
+mod rng;
+
+pub use rng::Rng;
+
+/// Greatest common divisor.
+pub fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+/// All divisors of `n` in ascending order.
+pub fn divisors(n: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut i = 1;
+    while i * i <= n {
+        if n % i == 0 {
+            out.push(i);
+            if i != n / i {
+                out.push(n / i);
+            }
+        }
+        i += 1;
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Max relative/absolute difference between two equally-sized slices.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "max_abs_diff: length mismatch");
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+/// `true` if slices agree within `tol` absolutely.
+pub fn allclose(a: &[f64], b: &[f64], tol: f64) -> bool {
+    a.len() == b.len() && max_abs_diff(a, b) <= tol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gcd_basic() {
+        assert_eq!(gcd(12, 18), 6);
+        assert_eq!(gcd(7, 13), 1);
+        assert_eq!(gcd(0, 5), 5);
+        assert_eq!(gcd(5, 0), 5);
+    }
+
+    #[test]
+    fn divisors_basic() {
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(16), vec![1, 2, 4, 8, 16]);
+    }
+
+    #[test]
+    fn allclose_basic() {
+        assert!(allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-13], 1e-12));
+        assert!(!allclose(&[1.0], &[1.1], 1e-12));
+        assert!(!allclose(&[1.0], &[1.0, 2.0], 1e-12));
+    }
+}

@@ -1,0 +1,214 @@
+//! Cross-module integration tests: coordinator service over the full
+//! pipeline, PJRT runtime against interpreter numerics, and the cache
+//! simulator's reproduction of the paper's orderings.
+
+use hofdla::coordinator::{Config, Coordinator, OptimizeSpec, RankBy, Request, Response};
+use hofdla::util::Rng;
+
+fn matmul_src() -> String {
+    "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))".into()
+}
+
+#[test]
+fn service_optimizes_and_executes_under_concurrency() {
+    let c = Coordinator::start(Config {
+        workers: 3,
+        max_batch: 4,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut rng = Rng::new(42);
+    // Mixed workload: optimize jobs with varying shapes + artifact execs.
+    let mut opt_handles = Vec::new();
+    for _ in 0..12 {
+        let n = 8 * rng.range(1, 5);
+        let spec = OptimizeSpec {
+            source: matmul_src(),
+            inputs: vec![("A".into(), vec![n, n]), ("B".into(), vec![n, n])],
+            rank_by: RankBy::CostModel,
+            subdivide_rnz: if rng.chance(0.5) { Some(4) } else { None },
+            top_k: 12,
+        };
+        let expected = if spec.subdivide_rnz.is_some() { 12 } else { 6 };
+        opt_handles.push((n, expected, c.submit(Request::Optimize(spec)).unwrap()));
+    }
+    for (n, expected, h) in opt_handles {
+        let Response::Optimized(r) = h.wait().unwrap() else {
+            panic!()
+        };
+        assert_eq!(r.variants_explored, expected, "n={n}");
+        assert_eq!(r.input_elems, 2 * n * n);
+    }
+    assert_eq!(c.metrics.in_flight(), 0);
+}
+
+#[test]
+fn interpreter_matches_pjrt_artifact_numerics() {
+    let art = hofdla::runtime::artifact_path("weighted_matmul_64");
+    if !art.exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    // Paper eq 2: C_ik = Σ_j A_ij B_jk g_j — DSL form executed by the
+    // interpreter vs the fused Pallas artifact through PJRT.
+    use hofdla::dsl::*;
+    use hofdla::layout::Layout;
+    use hofdla::typecheck::Env;
+    let n = 64usize;
+    let mut rng = Rng::new(5);
+    let a: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let b: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let g: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+
+    // DSL: map (\rA -> map (\cB -> rnz + (\x y w -> x*y*w) rA cB g) …) A
+    let e = map(
+        lam1(
+            "rA",
+            map(
+                lam1(
+                    "cB",
+                    rnz(
+                        add(),
+                        lam3(
+                            "x",
+                            "y",
+                            "w",
+                            app2(mul(), app2(mul(), var("x"), var("y")), var("w")),
+                        ),
+                        vec![var("rA"), var("cB"), input("g")],
+                    ),
+                ),
+                flip(0, input("B")),
+            ),
+        ),
+        input("A"),
+    );
+    let env = Env::new()
+        .with("A", Layout::row_major(&[n, n]))
+        .with("B", Layout::row_major(&[n, n]))
+        .with("g", Layout::row_major(&[n]));
+    let ours = hofdla::exec::run(&e, &env, &[("A", &a), ("B", &b), ("g", &g)]).unwrap();
+
+    let mut rt = hofdla::runtime::Runtime::cpu().unwrap();
+    let exe = rt.load(&art).unwrap();
+    let af: Vec<f32> = a.iter().map(|&x| x as f32).collect();
+    let bf: Vec<f32> = b.iter().map(|&x| x as f32).collect();
+    let gf: Vec<f32> = g.iter().map(|&x| x as f32).collect();
+    let theirs = rt
+        .run_f32(&exe, &[(&af, &[n, n]), (&bf, &[n, n]), (&gf, &[n])])
+        .unwrap();
+    let max_err = ours
+        .iter()
+        .zip(&theirs)
+        .map(|(x, y)| (x - *y as f64).abs())
+        .fold(0.0f64, f64::max);
+    assert!(max_err < 1e-3, "eq2 interpreter vs pallas artifact: {max_err}");
+}
+
+#[test]
+fn fused_matvec_artifact_matches_dsl_fusion() {
+    let art = hofdla::runtime::artifact_path("fused_matvec_64x96");
+    if !art.exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    use hofdla::dsl::*;
+    use hofdla::layout::Layout;
+    use hofdla::rewrite::fusion;
+    use hofdla::typecheck::Env;
+    let (m, j) = (64usize, 96);
+    let mut rng = Rng::new(6);
+    let a: Vec<f64> = (0..m * j).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let b: Vec<f64> = (0..m * j).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let v: Vec<f64> = (0..j).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let u: Vec<f64> = (0..j).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+
+    // Paper eq 1 as an unfused DSL pipeline; fusion collapses it.
+    let e = map(
+        lam1(
+            "r",
+            rnz(
+                add(),
+                mul(),
+                vec![var("r"), zip(add(), input("v"), input("u"))],
+            ),
+        ),
+        zip(lift(add()), input("A"), input("B")),
+    );
+    let fused = fusion::fuse(&e);
+    let env = Env::new()
+        .with("A", Layout::row_major(&[m, j]))
+        .with("B", Layout::row_major(&[m, j]))
+        .with("v", Layout::row_major(&[j]))
+        .with("u", Layout::row_major(&[j]));
+    let ours = hofdla::exec::run(
+        &fused,
+        &env,
+        &[("A", &a), ("B", &b), ("v", &v), ("u", &u)],
+    )
+    .unwrap();
+
+    let mut rt = hofdla::runtime::Runtime::cpu().unwrap();
+    let exe = rt.load(&art).unwrap();
+    let to_f32 = |x: &[f64]| x.iter().map(|&v| v as f32).collect::<Vec<f32>>();
+    let (af, bf, vf, uf) = (to_f32(&a), to_f32(&b), to_f32(&v), to_f32(&u));
+    let theirs = rt
+        .run_f32(
+            &exe,
+            &[(&af, &[m, j]), (&bf, &[m, j]), (&vf, &[j]), (&uf, &[j])],
+        )
+        .unwrap();
+    let max_err = ours
+        .iter()
+        .zip(&theirs)
+        .map(|(x, y)| (x - *y as f64).abs())
+        .fold(0.0f64, f64::max);
+    assert!(max_err < 1e-3, "eq1 fusion vs pallas artifact: {max_err}");
+}
+
+#[test]
+fn cachesim_reproduces_table1_extremes_on_cpu_hierarchy() {
+    use hofdla::cachesim::{simulate, HierarchyConfig};
+    use hofdla::enumerate::{enumerate_all, starts};
+    use hofdla::layout::Layout;
+    use hofdla::rewrite::Ctx;
+    use hofdla::typecheck::Env;
+    let n = 128usize; // larger than L1, traceable
+    let env = Env::new()
+        .with("A", Layout::row_major(&[n, n]))
+        .with("B", Layout::row_major(&[n, n]));
+    let ctx = Ctx::new(env.clone());
+    let variants = enumerate_all(&starts::matmul_naive_variant(), &ctx, 16).unwrap();
+    let mut costs = std::collections::HashMap::new();
+    for v in &variants {
+        let prog = hofdla::exec::lower(&v.expr, &env).unwrap();
+        let r = simulate(&prog, &HierarchyConfig::cpu_i5_7300hq()).unwrap();
+        costs.insert(v.display_key(), r.cost_cycles());
+    }
+    // Paper Table 1 extremes: mapB-innermost beats the naive form, and the
+    // mapA-innermost forms (column-wise B AND A) are the worst.
+    assert!(costs["mapA rnz mapB"] < costs["mapA mapB rnz"]);
+    assert!(costs["mapA mapB rnz"] < costs["mapB rnz mapA"]);
+    assert!(costs["mapA rnz mapB"] < costs["rnz mapB mapA"]);
+}
+
+#[test]
+fn fig4_and_fig6_variant_sets_verify_end_to_end() {
+    use hofdla::bench_support::BenchConfig;
+    use hofdla::experiments::{self, MatmulOpts};
+    let opts = MatmulOpts {
+        n: 32,
+        b: 4,
+        bench: BenchConfig {
+            warmup: 0,
+            runs: 1,
+            max_total: std::time::Duration::from_secs(30),
+        },
+        measure_time: false,
+        simulate: false,
+    };
+    let f4 = experiments::fig4(&opts).unwrap();
+    assert!(f4.rows.len() >= 30, "fig4 rows: {}", f4.rows.len());
+    let f6 = experiments::fig6(&opts).unwrap();
+    assert!(f6.rows.len() >= 60, "fig6 rows: {}", f6.rows.len());
+}

@@ -1,0 +1,172 @@
+//! Property tests for the layout algebra (DESIGN.md §7 invariants).
+//! proptest is unavailable offline; these use the crate's deterministic
+//! PRNG with many random cases per property.
+
+use hofdla::layout::{Dim, Layout, View};
+use hofdla::util::{divisors, Rng};
+
+/// Random dense row-major layout with rank 1-4 and small extents.
+fn random_layout(rng: &mut Rng) -> Layout {
+    let rank = rng.range(1, 5);
+    let shape: Vec<usize> = (0..rank).map(|_| rng.range(1, 7)).collect();
+    Layout::row_major(&shape)
+}
+
+/// Random chain of layout ops applied to a dense layout (always valid).
+fn random_view_chain(rng: &mut Rng, base: &Layout, ops: usize) -> Layout {
+    let mut l = base.clone();
+    for _ in 0..ops {
+        match rng.below(3) {
+            0 => {
+                let d = rng.below(l.rank());
+                let divs = divisors(l.dims[d].extent);
+                let b = *rng.pick(&divs);
+                l = l.subdiv(d, b).unwrap();
+            }
+            1 => {
+                if l.rank() >= 2 {
+                    let d1 = rng.below(l.rank());
+                    let d2 = rng.below(l.rank());
+                    l = l.flip2(d1, d2).unwrap();
+                }
+            }
+            _ => {
+                // flatten only when it chains
+                if l.rank() >= 2 {
+                    let d = rng.below(l.rank() - 1);
+                    if l.dims[d + 1].stride == l.dims[d].extent * l.dims[d].stride {
+                        l = l.flatten(d).unwrap();
+                    }
+                }
+            }
+        }
+    }
+    l
+}
+
+#[test]
+fn prop_subdiv_flatten_roundtrip() {
+    let mut rng = Rng::new(101);
+    for _ in 0..500 {
+        let l = random_layout(&mut rng);
+        let d = rng.below(l.rank());
+        let divs = divisors(l.dims[d].extent);
+        let b = *rng.pick(&divs);
+        let round = l.subdiv(d, b).unwrap().flatten(d).unwrap();
+        assert_eq!(round, l, "subdiv({d},{b}) then flatten on {l}");
+    }
+}
+
+#[test]
+fn prop_flip_involution() {
+    let mut rng = Rng::new(102);
+    for _ in 0..500 {
+        let base = random_layout(&mut rng);
+        let l = random_view_chain(&mut rng, &base, 3);
+        if l.rank() < 2 {
+            continue;
+        }
+        let d1 = rng.below(l.rank());
+        let d2 = rng.below(l.rank());
+        let twice = l.flip2(d1, d2).unwrap().flip2(d1, d2).unwrap();
+        assert_eq!(twice, l);
+        // commutativity in arguments
+        assert_eq!(l.flip2(d1, d2).unwrap(), l.flip2(d2, d1).unwrap());
+    }
+}
+
+#[test]
+fn prop_layout_ops_preserve_element_set() {
+    // subdiv/flip are logical reshapes: the set of flat offsets reachable
+    // must not change (flatten requires chaining, so it's included via
+    // random_view_chain's guard).
+    let mut rng = Rng::new(103);
+    for _ in 0..300 {
+        let base = random_layout(&mut rng);
+        let mut expect = base.offsets();
+        expect.sort_unstable();
+        let chained = random_view_chain(&mut rng, &base, 4);
+        let mut got = chained.offsets();
+        got.sort_unstable();
+        assert_eq!(got, expect, "{base} vs {chained}");
+    }
+}
+
+#[test]
+fn prop_dense_views_stay_injective() {
+    let mut rng = Rng::new(104);
+    for _ in 0..300 {
+        let base = random_layout(&mut rng);
+        let l = random_view_chain(&mut rng, &base, 4);
+        assert!(l.is_injective(), "{l}");
+    }
+}
+
+#[test]
+fn prop_index_outer_matches_offsets() {
+    // Walking the outermost dimension and recursing must visit exactly
+    // layout.offsets() in logical order.
+    fn collect(v: &View, out: &mut Vec<usize>) {
+        if v.layout.is_scalar() {
+            out.push(v.offset);
+            return;
+        }
+        let outer = v.layout.outer().unwrap();
+        for i in 0..outer.extent {
+            collect(&v.index_outer(i).unwrap(), out);
+        }
+    }
+    let mut rng = Rng::new(105);
+    for _ in 0..200 {
+        let base = random_layout(&mut rng);
+        let l = random_view_chain(&mut rng, &base, 3);
+        let v = View::of(l.clone());
+        let mut walked = Vec::new();
+        collect(&v, &mut walked);
+        // offsets() iterates innermost-fastest; index_outer recursion is
+        // outermost-first — both enumerate the same logical order.
+        let direct = l.offsets();
+        let mut sorted_w = walked.clone();
+        let mut sorted_d = direct.clone();
+        sorted_w.sort_unstable();
+        sorted_d.sort_unstable();
+        assert_eq!(sorted_w, sorted_d);
+        // and same cardinality as the layout's logical size
+        assert_eq!(walked.len(), l.len());
+    }
+}
+
+#[test]
+fn prop_required_span_bounds_offsets() {
+    let mut rng = Rng::new(106);
+    for _ in 0..300 {
+        let base = random_layout(&mut rng);
+        let l = random_view_chain(&mut rng, &base, 4);
+        let max = l.offsets().into_iter().max().unwrap_or(0);
+        assert_eq!(l.required_span(), max + 1);
+    }
+}
+
+#[test]
+fn paper_subdiv_equations_hold_pointwise() {
+    // The subdiv equations from §2.1, checked literally.
+    let mut rng = Rng::new(107);
+    for _ in 0..200 {
+        let l = random_layout(&mut rng);
+        let d = rng.below(l.rank());
+        let divs = divisors(l.dims[d].extent);
+        let b = *rng.pick(&divs);
+        let s = l.subdiv(d, b).unwrap();
+        for i in 0..d {
+            assert_eq!(s.dims[i], l.dims[i]);
+        }
+        assert_eq!(s.dims[d], Dim::new(b, l.dims[d].stride));
+        assert_eq!(
+            s.dims[d + 1],
+            Dim::new(l.dims[d].extent / b, b * l.dims[d].stride)
+        );
+        for i in d + 2..s.rank() {
+            assert_eq!(s.dims[i], l.dims[i - 1]);
+        }
+    }
+}

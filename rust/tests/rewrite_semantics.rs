@@ -1,0 +1,236 @@
+//! Property tests: every rewrite rule preserves evaluation semantics
+//! (DESIGN.md §7). Random shapes, random data, many seeds; the reference
+//! evaluator is the oracle, and the fast executor must agree with it on
+//! every enumerated variant.
+
+use hofdla::dsl::*;
+use hofdla::enumerate::{enumerate_all, starts};
+use hofdla::eval::{eval, ArrVal, Inputs};
+use hofdla::exec;
+use hofdla::layout::Layout;
+use hofdla::rewrite::{exchange, fusion, normalize, subdivision, Ctx};
+use hofdla::typecheck::Env;
+use hofdla::util::{allclose, Rng};
+
+fn dense(rng: &mut Rng, shape: &[usize]) -> ArrVal {
+    let n: usize = shape.iter().product();
+    ArrVal::dense(rng.fill_vec(n), shape)
+}
+
+/// Random sizes with a divisor for blocking.
+fn sizes(rng: &mut Rng) -> (usize, usize, usize, usize) {
+    let b = *rng.pick(&[2usize, 3, 4]);
+    let n = b * rng.range(1, 4);
+    let j = b * rng.range(1, 4);
+    let k = b * rng.range(1, 4);
+    (n, j, k, b)
+}
+
+#[test]
+fn prop_fusion_preserves_semantics() {
+    let mut rng = Rng::new(201);
+    for _ in 0..100 {
+        let (n, j, _, _) = sizes(&mut rng);
+        let mut inp = Inputs::new();
+        inp.insert("A".into(), dense(&mut rng, &[n, j]));
+        inp.insert("u".into(), dense(&mut rng, &[j]));
+        inp.insert("v".into(), dense(&mut rng, &[j]));
+        // eq 1: map (\r -> rnz + * r (zip + u v)) A — with extra map noise
+        let e = map(
+            lam1(
+                "r",
+                rnz(
+                    add(),
+                    mul(),
+                    vec![
+                        var("r"),
+                        zip(
+                            add(),
+                            map(lam1("x", app2(mul(), var("x"), lit(2.0))), input("u")),
+                            input("v"),
+                        ),
+                    ],
+                ),
+            ),
+            input("A"),
+        );
+        let fused = fusion::fuse(&e);
+        let a = eval(&e, &inp).unwrap().to_dense();
+        let b = eval(&fused, &inp).unwrap().to_dense();
+        assert!(allclose(&a, &b, 1e-10));
+        // fused form must be executor-lowerable
+        let env = Env::new()
+            .with("A", Layout::row_major(&[n, j]))
+            .with("u", Layout::row_major(&[j]))
+            .with("v", Layout::row_major(&[j]));
+        assert!(exec::lower(&fused, &env).is_ok());
+    }
+}
+
+#[test]
+fn prop_map_rnz_exchange_preserves_semantics_exactly() {
+    // eq 42 does not reorder multiplications, only regroups additions —
+    // we still allow fp tolerance for the regrouping.
+    let mut rng = Rng::new(202);
+    for _ in 0..100 {
+        let (n, j, _, _) = sizes(&mut rng);
+        let mut inp = Inputs::new();
+        inp.insert("A".into(), dense(&mut rng, &[n, j]));
+        inp.insert("v".into(), dense(&mut rng, &[j]));
+        let env = Env::new()
+            .with("A", Layout::row_major(&[n, j]))
+            .with("v", Layout::row_major(&[j]));
+        let ctx = Ctx::new(env);
+        let e = matvec_naive(input("A"), input("v"));
+        let x = normalize(&exchange::map_rnz(&e, &ctx).unwrap());
+        let a = eval(&e, &inp).unwrap().to_dense();
+        let b = eval(&x, &inp).unwrap().to_dense();
+        assert!(allclose(&a, &b, 1e-10));
+        // and back
+        let back = normalize(&exchange::rnz_map(&x, &ctx).unwrap());
+        let c = eval(&back, &inp).unwrap().to_dense();
+        assert!(allclose(&a, &c, 1e-10));
+    }
+}
+
+#[test]
+fn prop_subdivision_preserves_semantics() {
+    let mut rng = Rng::new(203);
+    for _ in 0..100 {
+        let (_, j, _, b) = sizes(&mut rng);
+        let mut inp = Inputs::new();
+        inp.insert("u".into(), dense(&mut rng, &[j]));
+        inp.insert("v".into(), dense(&mut rng, &[j]));
+        let env = Env::new()
+            .with("u", Layout::row_major(&[j]))
+            .with("v", Layout::row_major(&[j]));
+        let ctx = Ctx::new(env);
+        let e = dot(input("u"), input("v"));
+        let s = subdivision::subdivide_rnz(&e, b, &ctx).unwrap();
+        let a = eval(&e, &inp).unwrap().as_scalar().unwrap();
+        let c = eval(&s, &inp).unwrap().as_scalar().unwrap();
+        assert!((a - c).abs() < 1e-9, "{a} vs {c} (b={b}, j={j})");
+    }
+}
+
+#[test]
+fn prop_all_table1_variants_match_oracle_and_executor() {
+    let mut rng = Rng::new(204);
+    for round in 0..12 {
+        let (n, j, k, _) = sizes(&mut rng);
+        let env = Env::new()
+            .with("A", Layout::row_major(&[n, j]))
+            .with("B", Layout::row_major(&[j, k]));
+        let ctx = Ctx::new(env.clone());
+        let mut inp = Inputs::new();
+        let a = dense(&mut rng, &[n, j]);
+        let b = dense(&mut rng, &[j, k]);
+        inp.insert("A".into(), a.clone());
+        inp.insert("B".into(), b.clone());
+        let a_flat = a.to_dense();
+        let b_flat = b.to_dense();
+        let variants = enumerate_all(&starts::matmul_naive_variant(), &ctx, 16).unwrap();
+        assert_eq!(variants.len(), 6, "round {round}");
+        for v in &variants {
+            // oracle
+            let oracle = eval(&v.expr, &inp).unwrap().to_dense();
+            // fast executor agrees with the oracle elementwise
+            let got = exec::run(&v.expr, &env, &[("A", &a_flat), ("B", &b_flat)])
+                .unwrap_or_else(|e| panic!("{}: {e}", v.display_key()));
+            assert!(
+                allclose(&oracle, &got, 1e-9),
+                "executor diverges from oracle on {}",
+                v.display_key()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_table2_variants_match_oracle_and_executor() {
+    let mut rng = Rng::new(205);
+    for _ in 0..6 {
+        let (n, j, k, b) = sizes(&mut rng);
+        let env = Env::new()
+            .with("A", Layout::row_major(&[n, j]))
+            .with("B", Layout::row_major(&[j, k]));
+        let ctx = Ctx::new(env.clone());
+        let mut inp = Inputs::new();
+        let a = dense(&mut rng, &[n, j]);
+        let bb = dense(&mut rng, &[j, k]);
+        inp.insert("A".into(), a.clone());
+        inp.insert("B".into(), bb.clone());
+        let a_flat = a.to_dense();
+        let b_flat = bb.to_dense();
+        let variants =
+            enumerate_all(&starts::matmul_rnz_subdivided_variant(b), &ctx, 64).unwrap();
+        assert_eq!(variants.len(), 12);
+        for v in &variants {
+            let oracle = eval(&v.expr, &inp).unwrap().to_dense();
+            let got = exec::run(&v.expr, &env, &[("A", &a_flat), ("B", &b_flat)])
+                .unwrap_or_else(|e| panic!("{}: {e}", v.display_key()));
+            assert!(
+                allclose(&oracle, &got, 1e-9),
+                "executor diverges from oracle on {}",
+                v.display_key()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_hoist_subdiv_preserves_semantics() {
+    let mut rng = Rng::new(206);
+    for _ in 0..60 {
+        let (n, j, _, b) = sizes(&mut rng);
+        let mut inp = Inputs::new();
+        inp.insert("A".into(), dense(&mut rng, &[n, j]));
+        inp.insert("v".into(), dense(&mut rng, &[j]));
+        // map (\r -> rnz + (\u w -> dot u w) (subdiv 0 b r) (subdiv 0 b v)) A
+        let e = map(
+            lam1(
+                "r",
+                rnz(
+                    add(),
+                    lam2("u", "w", dot(var("u"), var("w"))),
+                    vec![subdiv(0, b, var("r")), subdiv(0, b, input("v"))],
+                ),
+            ),
+            input("A"),
+        );
+        let hoisted =
+            hofdla::rewrite::rewrite_bottom_up(&[subdivision::hoist_subdiv()], &e);
+        let x = eval(&e, &inp).unwrap().to_dense();
+        let y = eval(&hoisted, &inp).unwrap().to_dense();
+        assert!(allclose(&x, &y, 1e-10));
+        assert!(
+            hofdla::dsl::pretty(&hoisted).contains("(subdiv 0"),
+            "hoist dropped the subdivision"
+        );
+    }
+}
+
+#[test]
+fn prop_enumeration_count_is_stable_under_shapes() {
+    // Table 1 = 6 and Table 2 = 12 for every valid shape.
+    let mut rng = Rng::new(207);
+    for _ in 0..10 {
+        let (n, j, k, b) = sizes(&mut rng);
+        let env = Env::new()
+            .with("A", Layout::row_major(&[n, j]))
+            .with("B", Layout::row_major(&[j, k]));
+        let ctx = Ctx::new(env);
+        assert_eq!(
+            enumerate_all(&starts::matmul_naive_variant(), &ctx, 64)
+                .unwrap()
+                .len(),
+            6
+        );
+        assert_eq!(
+            enumerate_all(&starts::matmul_rnz_subdivided_variant(b), &ctx, 64)
+                .unwrap()
+                .len(),
+            12
+        );
+    }
+}
