@@ -155,7 +155,7 @@ fn main() -> hofdla::Result<()> {
     // ---- 7. Cross-check against the AOT artifact through PJRT (the
     //         vendor-library path; artifacts are built at 256).
     let art = "matmul_xla_256";
-    if hofdla::runtime::artifact_path(art).exists() {
+    if hofdla::runtime::artifact_path(art).exists() && hofdla::runtime::pjrt_available() {
         let an = 256usize;
         let mut rt = hofdla::runtime::Runtime::cpu()?;
         let exe = rt.load(&hofdla::runtime::artifact_path(art))?;
@@ -188,7 +188,7 @@ fn main() -> hofdla::Result<()> {
         });
         println!("    XLA artifact time at 256²: {}", fmt_duration(xt.median));
     } else {
-        println!("[6] (artifacts not built — skipping PJRT cross-check)");
+        println!("[6] (artifacts not built or PJRT unavailable — skipping cross-check)");
     }
 
     println!("\n== e2e pipeline complete ==");

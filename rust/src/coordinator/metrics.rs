@@ -15,19 +15,22 @@ pub struct Metrics {
     pub max_batch_seen: AtomicU64,
     /// Executable-cache hits on the runtime thread.
     pub exec_cache_hits: AtomicU64,
+    /// Optimize jobs answered from the coordinator's result LRU.
+    pub opt_cache_hits: AtomicU64,
 }
 
 impl Metrics {
     /// Human-readable one-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "submitted={} completed={} failed={} exec_batches={} max_batch={} cache_hits={}",
+            "submitted={} completed={} failed={} exec_batches={} max_batch={} cache_hits={} opt_cache_hits={}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
             self.exec_batches.load(Ordering::Relaxed),
             self.max_batch_seen.load(Ordering::Relaxed),
             self.exec_cache_hits.load(Ordering::Relaxed),
+            self.opt_cache_hits.load(Ordering::Relaxed),
         )
     }
 

@@ -37,6 +37,10 @@ pub struct Config {
     pub max_batch: usize,
     /// Artifact directory for the runtime thread.
     pub artifact_dir: PathBuf,
+    /// Capacity of the optimize-result LRU (entries keyed by the full
+    /// [`OptimizeSpec`]); repeated service traffic short-circuits the
+    /// pipeline entirely. `0` keeps the floor of one entry.
+    pub opt_cache_cap: usize,
 }
 
 impl Default for Config {
@@ -45,6 +49,7 @@ impl Default for Config {
             workers: 2,
             max_batch: 8,
             artifact_dir: crate::runtime::artifact_dir(),
+            opt_cache_cap: 128,
         }
     }
 }
@@ -117,10 +122,16 @@ impl Coordinator {
         let metrics = Arc::new(Metrics::default());
         let (opt_tx, opt_rx) = sync_channel::<Work>(1024);
         let opt_rx = Arc::new(Mutex::new(opt_rx));
+        // Result LRU shared by all workers: repeated optimize traffic
+        // (same source, shapes, metric) short-circuits the pipeline.
+        let opt_cache = Arc::new(Mutex::new(
+            crate::util::Lru::<OptimizeSpec, OptimizeResult>::new(cfg.opt_cache_cap),
+        ));
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers.max(1) {
             let rx = opt_rx.clone();
             let m = metrics.clone();
+            let cache = opt_cache.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("hofdla-opt-{w}"))
@@ -128,7 +139,20 @@ impl Coordinator {
                         let job = { rx.lock().unwrap().recv() };
                         match job {
                             Ok(Work::Opt { spec, reply }) => {
-                                let r = pipeline::optimize(&spec).map(Response::Optimized);
+                                let cached = cache.lock().unwrap().get(&spec);
+                                let r = match cached {
+                                    Some(hit) => {
+                                        m.opt_cache_hits.fetch_add(1, Ordering::Relaxed);
+                                        Ok(Response::Optimized(hit))
+                                    }
+                                    None => {
+                                        let r = pipeline::optimize(&spec);
+                                        if let Ok(res) = &r {
+                                            cache.lock().unwrap().put(spec, res.clone());
+                                        }
+                                        r.map(Response::Optimized)
+                                    }
+                                };
                                 if r.is_ok() {
                                     m.completed.fetch_add(1, Ordering::Relaxed);
                                 } else {
@@ -350,6 +374,30 @@ mod tests {
     }
 
     #[test]
+    fn optimize_results_are_cached() {
+        let c = Coordinator::start(Config {
+            workers: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        for _ in 0..3 {
+            let Response::Optimized(r) = c.call(Request::Optimize(opt_spec(16))).unwrap() else {
+                panic!("wrong response type")
+            };
+            assert_eq!(r.variants_explored, 6);
+            assert_eq!(r.best, "map1 rnz map2");
+        }
+        // Serial identical calls: first misses, the rest hit the LRU.
+        assert_eq!(c.metrics.opt_cache_hits.load(Ordering::Relaxed), 2);
+        assert_eq!(c.metrics.completed.load(Ordering::Relaxed), 3);
+        // A different spec misses.
+        let Response::Optimized(_) = c.call(Request::Optimize(opt_spec(8))).unwrap() else {
+            panic!("wrong response type")
+        };
+        assert_eq!(c.metrics.opt_cache_hits.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
     fn parse_errors_fail_cleanly() {
         let c = Coordinator::start(Config::default()).unwrap();
         let bad = OptimizeSpec {
@@ -367,6 +415,10 @@ mod tests {
     fn artifact_execution_and_batching() {
         if !crate::runtime::artifact_path("matmul_xla_256").exists() {
             eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        if !crate::runtime::pjrt_available() {
+            eprintln!("skipping: PJRT runtime unavailable");
             return;
         }
         let c = Coordinator::start(Config {

@@ -15,7 +15,7 @@ use crate::typecheck::Env;
 use crate::{Error, Result};
 
 /// How variants are ranked.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum RankBy {
     /// Analytical cost model (fast; the "early cut" metric).
     CostModel,
@@ -24,8 +24,9 @@ pub enum RankBy {
     CacheSim,
 }
 
-/// An optimization request.
-#[derive(Clone, Debug)]
+/// An optimization request. `Eq + Hash` so the coordinator can key its
+/// result cache directly by the spec.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct OptimizeSpec {
     /// DSL source (s-expression; see [`crate::dsl::parse`]).
     pub source: String,
@@ -91,20 +92,19 @@ pub fn optimize(spec: &OptimizeSpec) -> Result<OptimizeResult> {
     let start = Variant::new(start_expr, &label_refs);
 
     let variants = enumerate_all(&start, &ctx, 4096)?;
-    let mut ranking: Vec<(String, f64)> = Vec::with_capacity(variants.len());
-    let mut best_expr = None;
-    for v in &variants {
-        let prog = lower(&v.expr, &env)?;
-        let score = match spec.rank_by {
-            RankBy::CostModel => estimate(&prog).score(),
-            RankBy::CacheSim => {
-                simulate(&prog, &HierarchyConfig::cpu_i5_7300hq())?.cost_cycles()
-            }
-        };
-        ranking.push((v.display_key(), score));
+    let scores = rank_variants(&variants, &env, spec.rank_by)?;
+    let mut ranking: Vec<(String, f64)> = variants
+        .iter()
+        .zip(&scores)
+        .map(|(v, &s)| (v.display_key(), s))
+        .collect();
+    // Winner: the first variant attaining the minimum score (matches the
+    // serial path's tie-breaking).
+    let mut best_expr: Option<(f64, &dsl::Expr)> = None;
+    for (v, &score) in variants.iter().zip(&scores) {
         best_expr = match best_expr {
-            None => Some((score, v.expr.clone())),
-            Some((s, _)) if score < s => Some((score, v.expr.clone())),
+            None => Some((score, &v.expr)),
+            Some((s, _)) if score < s => Some((score, &v.expr)),
             keep => keep,
         };
     }
@@ -116,10 +116,65 @@ pub fn optimize(spec: &OptimizeSpec) -> Result<OptimizeResult> {
     Ok(OptimizeResult {
         variants_explored,
         best: ranking[0].0.clone(),
-        best_expr: dsl::pretty(&best_e),
+        best_expr: dsl::pretty(best_e),
         ranking,
         input_elems,
     })
+}
+
+/// Score one variant under the chosen metric.
+fn score_one(v: &Variant, env: &Env, rank_by: RankBy) -> Result<f64> {
+    let prog = lower(&v.expr, env)?;
+    Ok(match rank_by {
+        RankBy::CostModel => estimate(&prog).score(),
+        RankBy::CacheSim => simulate(&prog, &HierarchyConfig::cpu_i5_7300hq())?.cost_cycles(),
+    })
+}
+
+/// Rank all variants, fanning the work out across scoped threads when the
+/// job is heavy enough to amortize spawning (cache simulation is always
+/// heavy; analytic cost-model scoring only pays off for large variant
+/// sets). Scores come back in variant order; the first error (by variant
+/// index) is reported, as on the serial path.
+fn rank_variants(variants: &[Variant], env: &Env, rank_by: RankBy) -> Result<Vec<f64>> {
+    let n = variants.len();
+    let hw = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    let heavy = matches!(rank_by, RankBy::CacheSim) || n >= 32;
+    // Cap the per-job fan-out: several coordinator workers may each be
+    // ranking at once, and hw threads per job would oversubscribe the
+    // machine workers-fold.
+    let threads = if heavy { hw.min(n).min(4) } else { 1 };
+    if threads <= 1 {
+        return variants.iter().map(|v| score_one(v, env, rank_by)).collect();
+    }
+    let chunk = (n + threads - 1) / threads;
+    let per_chunk: Vec<Result<Vec<f64>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = variants
+            .chunks(chunk)
+            .map(|slice| {
+                s.spawn(move || {
+                    slice
+                        .iter()
+                        .map(|v| score_one(v, env, rank_by))
+                        .collect::<Result<Vec<f64>>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(Error::Coordinator("ranking thread panicked".into())))
+            })
+            .collect()
+    });
+    let mut out = Vec::with_capacity(n);
+    for c in per_chunk {
+        out.extend(c?);
+    }
+    Ok(out)
 }
 
 /// Default spine labels: map1, map2, …, rnz1, … by kind and order.

@@ -1,0 +1,346 @@
+//! Hash-consed expression arena: structurally-equal subtrees stored once.
+//!
+//! # Why (paper §3–4)
+//!
+//! The paper's search enumerates every rearrangement of the HoF spine —
+//! all permutations reachable by adjacent exchanges, each paired with
+//! layout `flip`s — and every candidate is normalized and typechecked
+//! before ranking. The subdivided reductions of §4 (Table 2) multiply the
+//! variant count, and the variants share almost all of their subtrees:
+//! two rearrangements of a subdivided matmul differ only along the spine
+//! path that was swapped. With the plain [`Box<Expr>`](crate::dsl::Expr)
+//! representation, every normalize / dedup step re-traverses and re-clones
+//! those shared subtrees, so an optimize job does
+//! O(variants × tree-size) redundant work.
+//!
+//! Hash-consing fixes the asymptotics at the representation level:
+//!
+//! - [`ExprArena::intern`] maps a tree to an [`ExprId`] such that two
+//!   structurally-equal trees get the *same* id — equality and hashing of
+//!   interned expressions are O(1) integer operations;
+//! - [`crate::rewrite::MemoRewriter`] keys a rewrite memo table by
+//!   `ExprId`, so a shared subtree is normalized once per rule set, no
+//!   matter how many variants (or optimize jobs on the same worker
+//!   thread) contain it;
+//! - [`crate::enumerate::enumerate_all`] uses interned ids to recognise
+//!   already-visited candidate expressions without structural comparison.
+//!
+//! This is the same dedup/memoization move that makes generate-and-rank
+//! search tractable in Linnea (Barthels et al.) and in e-graph-based
+//! array compilers: the expression *space* is a DAG, so represent it as
+//! one.
+//!
+//! The arena is deliberately a thin layer: the `Box<Expr>` API remains
+//! the lingua franca of the parser, interpreter, typechecker and Python
+//! side. [`ExprArena::intern`] / [`ExprArena::extract`] convert at the
+//! boundary.
+//!
+//! # Notes
+//!
+//! - Interning is *structural*, not alpha-equivalence: `λx.x` and `λy.y`
+//!   get different ids. That is what the memoized rewriter needs (rules
+//!   see concrete names) and what dedup wants (display keys are computed
+//!   from labels, not ids).
+//! - `f64` literals are stored by bit pattern so nodes are `Eq + Hash`;
+//!   `extract` restores the exact bits.
+
+use super::expr::{Expr, Prim};
+use std::cell::Cell;
+use std::collections::HashMap;
+
+/// Identity of an interned expression. Two `ExprId`s from the same arena
+/// are equal iff the expressions are structurally equal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ExprId(u32);
+
+impl ExprId {
+    /// Index into the owning arena.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// One expression level with interned children — the arena's node type.
+/// Mirrors [`Expr`] except that children are [`ExprId`]s and literals are
+/// stored by bit pattern (so the node is `Eq + Hash`).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Node {
+    Var(String),
+    /// `f64::to_bits` of the literal.
+    Lit(u64),
+    Prim(Prim),
+    Lam { params: Vec<String>, body: ExprId },
+    App { f: ExprId, args: Vec<ExprId> },
+    Nzip { f: ExprId, args: Vec<ExprId> },
+    Rnz { r: ExprId, m: ExprId, args: Vec<ExprId> },
+    Lift { f: ExprId },
+    Subdiv { d: usize, b: usize, arg: ExprId },
+    Flatten { d: usize, arg: ExprId },
+    Flip { d1: usize, d2: usize, arg: ExprId },
+    Input(String),
+}
+
+impl Node {
+    /// Rebuild the node with each child id transformed by `f`.
+    pub fn map_children(&self, mut f: impl FnMut(ExprId) -> ExprId) -> Node {
+        match self {
+            Node::Var(_) | Node::Lit(_) | Node::Prim(_) | Node::Input(_) => self.clone(),
+            Node::Lam { params, body } => Node::Lam {
+                params: params.clone(),
+                body: f(*body),
+            },
+            Node::App { f: g, args } => Node::App {
+                f: f(*g),
+                args: args.iter().map(|&a| f(a)).collect(),
+            },
+            Node::Nzip { f: g, args } => Node::Nzip {
+                f: f(*g),
+                args: args.iter().map(|&a| f(a)).collect(),
+            },
+            Node::Rnz { r, m, args } => Node::Rnz {
+                r: f(*r),
+                m: f(*m),
+                args: args.iter().map(|&a| f(a)).collect(),
+            },
+            Node::Lift { f: g } => Node::Lift { f: f(*g) },
+            Node::Subdiv { d, b, arg } => Node::Subdiv {
+                d: *d,
+                b: *b,
+                arg: f(*arg),
+            },
+            Node::Flatten { d, arg } => Node::Flatten {
+                d: *d,
+                arg: f(*arg),
+            },
+            Node::Flip { d1, d2, arg } => Node::Flip {
+                d1: *d1,
+                d2: *d2,
+                arg: f(*arg),
+            },
+        }
+    }
+}
+
+/// The hash-consing arena. Structurally-equal subtrees are stored exactly
+/// once; [`intern`](ExprArena::intern) of equal trees returns equal ids.
+#[derive(Debug, Default)]
+pub struct ExprArena {
+    nodes: Vec<Node>,
+    dedup: HashMap<Node, ExprId>,
+}
+
+impl ExprArena {
+    pub fn new() -> Self {
+        ExprArena::default()
+    }
+
+    /// Number of distinct nodes stored.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Intern a node whose children are already interned, returning the
+    /// canonical id for it.
+    pub fn insert(&mut self, node: Node) -> ExprId {
+        if let Some(&id) = self.dedup.get(&node) {
+            return id;
+        }
+        let id = ExprId(self.nodes.len() as u32);
+        self.nodes.push(node.clone());
+        self.dedup.insert(node, id);
+        id
+    }
+
+    /// The node behind an id.
+    pub fn get(&self, id: ExprId) -> &Node {
+        &self.nodes[id.index()]
+    }
+
+    /// Intern a whole tree bottom-up.
+    pub fn intern(&mut self, e: &Expr) -> ExprId {
+        let node = match e {
+            Expr::Var(x) => Node::Var(x.clone()),
+            Expr::Lit(v) => Node::Lit(v.to_bits()),
+            Expr::Prim(p) => Node::Prim(*p),
+            Expr::Lam { params, body } => Node::Lam {
+                params: params.clone(),
+                body: self.intern(body),
+            },
+            Expr::App { f, args } => Node::App {
+                f: self.intern(f),
+                args: args.iter().map(|a| self.intern(a)).collect(),
+            },
+            Expr::Nzip { f, args } => Node::Nzip {
+                f: self.intern(f),
+                args: args.iter().map(|a| self.intern(a)).collect(),
+            },
+            Expr::Rnz { r, m, args } => Node::Rnz {
+                r: self.intern(r),
+                m: self.intern(m),
+                args: args.iter().map(|a| self.intern(a)).collect(),
+            },
+            Expr::Lift { f } => Node::Lift { f: self.intern(f) },
+            Expr::Subdiv { d, b, arg } => Node::Subdiv {
+                d: *d,
+                b: *b,
+                arg: self.intern(arg),
+            },
+            Expr::Flatten { d, arg } => Node::Flatten {
+                d: *d,
+                arg: self.intern(arg),
+            },
+            Expr::Flip { d1, d2, arg } => Node::Flip {
+                d1: *d1,
+                d2: *d2,
+                arg: self.intern(arg),
+            },
+        };
+        self.insert(node)
+    }
+
+    /// Reconstruct the `Box<Expr>` tree behind an id (the conversion layer
+    /// back to the parser/interpreter representation).
+    pub fn extract(&self, id: ExprId) -> Expr {
+        match self.get(id).clone() {
+            Node::Var(x) => Expr::Var(x),
+            Node::Lit(bits) => Expr::Lit(f64::from_bits(bits)),
+            Node::Prim(p) => Expr::Prim(p),
+            Node::Lam { params, body } => Expr::Lam {
+                params,
+                body: Box::new(self.extract(body)),
+            },
+            Node::App { f, args } => Expr::App {
+                f: Box::new(self.extract(f)),
+                args: args.iter().map(|&a| self.extract(a)).collect(),
+            },
+            Node::Nzip { f, args } => Expr::Nzip {
+                f: Box::new(self.extract(f)),
+                args: args.iter().map(|&a| self.extract(a)).collect(),
+            },
+            Node::Rnz { r, m, args } => Expr::Rnz {
+                r: Box::new(self.extract(r)),
+                m: Box::new(self.extract(m)),
+                args: args.iter().map(|&a| self.extract(a)).collect(),
+            },
+            Node::Lift { f } => Expr::Lift {
+                f: Box::new(self.extract(f)),
+            },
+            Node::Subdiv { d, b, arg } => Expr::Subdiv {
+                d,
+                b,
+                arg: Box::new(self.extract(arg)),
+            },
+            Node::Flatten { d, arg } => Expr::Flatten {
+                d,
+                arg: Box::new(self.extract(arg)),
+            },
+            Node::Flip { d1, d2, arg } => Expr::Flip {
+                d1,
+                d2,
+                arg: Box::new(self.extract(arg)),
+            },
+        }
+    }
+}
+
+thread_local! {
+    static MEMO_ENABLED: Cell<bool> = const { Cell::new(true) };
+}
+
+/// Whether rewrite memoization is enabled on this thread (it is by
+/// default). Differential tests disable it to reproduce the unmemoized
+/// seed behavior.
+pub fn memo_enabled() -> bool {
+    MEMO_ENABLED.with(|c| c.get())
+}
+
+/// Run `f` with rewrite memoization disabled on this thread — the rewrite
+/// engine falls back to the plain (seed) bottom-up strategy. Used by the
+/// differential tests that compare the interned and uninterned paths.
+pub fn with_memo_disabled<R>(f: impl FnOnce() -> R) -> R {
+    let prev = MEMO_ENABLED.with(|c| c.replace(false));
+    let out = f();
+    MEMO_ENABLED.with(|c| c.set(prev));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::builder::*;
+    use crate::dsl::Expr;
+
+    #[test]
+    fn intern_is_stable_and_shares() {
+        let mut arena = ExprArena::new();
+        let e = matmul_naive(input("A"), input("B"));
+        let id1 = arena.intern(&e);
+        let id2 = arena.intern(&e.clone());
+        assert_eq!(id1, id2);
+        // Far fewer nodes than two copies of the tree.
+        assert!(arena.len() <= e.size());
+    }
+
+    #[test]
+    fn extract_round_trips() {
+        let mut arena = ExprArena::new();
+        let e = rnz(
+            add(),
+            lam2("x", "y", app2(mul(), var("x"), var("y"))),
+            vec![subdiv(0, 4, input("u")), flip(0, input("v"))],
+        );
+        let id = arena.intern(&e);
+        assert_eq!(arena.extract(id), e);
+    }
+
+    #[test]
+    fn literal_bits_round_trip() {
+        let mut arena = ExprArena::new();
+        for v in [0.0, -0.0, 1.5, -3.25, f64::MIN_POSITIVE] {
+            let id = arena.intern(&lit(v));
+            let Expr::Lit(back) = arena.extract(id) else {
+                panic!("expected literal")
+            };
+            assert_eq!(back.to_bits(), v.to_bits());
+        }
+        // -0.0 and 0.0 have distinct bits, hence distinct ids.
+        let a = arena.intern(&lit(0.0));
+        let b = arena.intern(&lit(-0.0));
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn distinct_structure_distinct_ids() {
+        let mut arena = ExprArena::new();
+        let a = arena.intern(&lam1("x", var("x")));
+        let b = arena.intern(&lam1("y", var("y")));
+        // Structural interning distinguishes binder names (alpha-variants
+        // are distinct on purpose).
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn shared_subtrees_stored_once() {
+        let mut arena = ExprArena::new();
+        let shared = dot(input("u"), input("v"));
+        let e = zip(add(), shared.clone(), shared.clone());
+        arena.intern(&e);
+        // dot + 2 inputs + prim(+)/prim(*) + the zip node ≪ 2 full copies.
+        assert!(arena.len() < e.size());
+    }
+
+    #[test]
+    fn memo_toggle_restores() {
+        assert!(memo_enabled());
+        let inner = with_memo_disabled(|| {
+            assert!(!memo_enabled());
+            7
+        });
+        assert_eq!(inner, 7);
+        assert!(memo_enabled());
+    }
+}

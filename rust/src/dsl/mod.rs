@@ -8,6 +8,7 @@
 
 mod builder;
 mod expr;
+pub mod intern;
 mod parser;
 mod pretty;
 

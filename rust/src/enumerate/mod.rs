@@ -15,6 +15,7 @@ pub mod starts;
 
 pub use sjt::sjt_permutations;
 
+use crate::dsl::intern::{ExprArena, ExprId};
 use crate::dsl::Expr;
 use crate::rewrite::{exchange, normalize, Ctx};
 use crate::{Error, Result};
@@ -158,6 +159,13 @@ pub fn enumerate_all(start: &Variant, ctx: &Ctx, limit: usize) -> Result<Vec<Var
         )));
     }
     crate::typecheck::infer(&start.expr, &ctx.env)?;
+    // Hash-consing arena for the BFS: interning a candidate gives O(1)
+    // structural identity, so a tree reached along several swap paths is
+    // typechecked once instead of once per path.
+    let mut arena = ExprArena::new();
+    let mut checked: HashMap<ExprId, bool> = HashMap::new();
+    let start_id = arena.intern(&start.expr);
+    checked.insert(start_id, true);
     let mut seen: HashMap<String, usize> = HashMap::new();
     let mut out: Vec<Variant> = Vec::new();
     let mut queue: VecDeque<Variant> = VecDeque::new();
@@ -170,8 +178,13 @@ pub fn enumerate_all(start: &Variant, ctx: &Ctx, limit: usize) -> Result<Vec<Var
         }
         for d in 0..n.saturating_sub(1) {
             if let Some(new_expr) = try_swap_at(&v.expr, d, ctx) {
-                // Defensive: drop rewrites that no longer typecheck.
-                if crate::typecheck::infer(&new_expr, &ctx.env).is_err() {
+                // Defensive: drop rewrites that no longer typecheck —
+                // paying for inference once per distinct interned tree.
+                let id = arena.intern(&new_expr);
+                let ok = *checked
+                    .entry(id)
+                    .or_insert_with(|| crate::typecheck::infer(&new_expr, &ctx.env).is_ok());
+                if !ok {
                     continue;
                 }
                 let mut labels = v.labels.clone();

@@ -46,6 +46,7 @@ pub fn execute(prog: &Program, inputs: &[&[f64]], out: &mut [f64]) -> Result<()>
             prog.out_size
         )));
     }
+    check_reduction_ops(&prog.root)?;
     let mut ctx = Ctx {
         bufs: inputs,
         off: vec![0usize; prog.n_tracks()],
@@ -94,7 +95,31 @@ fn identity(op: Prim) -> f64 {
         Prim::Mul => 1.0,
         Prim::Max => f64::NEG_INFINITY,
         Prim::Min => f64::INFINITY,
-        _ => unreachable!("non-associative reduction op"),
+        // Non-associative ops are rejected by `check_reduction_ops` before
+        // execution starts; kept total so the interpreter has no panicking
+        // paths.
+        _ => 0.0,
+    }
+}
+
+/// Reject programs whose reductions use a non-associative operator — the
+/// interpreter's accumulator strategies (identity init, register
+/// re-association) are only valid for associative ops, and lowering is the
+/// layer meant to guarantee that. Returning an error here keeps a bad
+/// `Program` from silently computing garbage (or panicking).
+fn check_reduction_ops(node: &Node) -> Result<()> {
+    match node {
+        Node::MapLoop { body, .. } => check_reduction_ops(body),
+        Node::RedLoop { op, body, .. } => {
+            if !op.is_associative() {
+                return Err(Error::Eval(format!(
+                    "reduction operator '{}' is not associative",
+                    op.name()
+                )));
+            }
+            check_reduction_ops(body)
+        }
+        Node::Leaf(_) => Ok(()),
     }
 }
 

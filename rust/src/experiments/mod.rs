@@ -431,7 +431,13 @@ pub fn baselines_experiment(n: usize, cfg: &BenchConfig) -> Result<Experiment> {
         if !path.exists() {
             continue;
         }
-        let mut rt = crate::runtime::Runtime::cpu()?;
+        // Artifacts on disk but no PJRT client (e.g. built without the
+        // `pjrt` feature): skip the vendor rows rather than failing the
+        // whole experiment.
+        let Ok(mut rt) = crate::runtime::Runtime::cpu() else {
+            eprintln!("skipping {artifact}: PJRT runtime unavailable");
+            continue;
+        };
         let exe = rt.load(&path)?;
         let af: Vec<f32> = a.iter().map(|&x| x as f32).collect();
         let bf: Vec<f32> = b.iter().map(|&x| x as f32).collect();

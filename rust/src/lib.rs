@@ -57,25 +57,36 @@ pub mod util;
 pub use dsl::{Expr, Prim};
 pub use layout::{Dim, Layout};
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type. Implemented by hand (rather than via
+/// `thiserror`) so the default build has zero dependencies and works
+/// offline.
+#[derive(Debug)]
 pub enum Error {
-    #[error("layout error: {0}")]
     Layout(String),
-    #[error("type error: {0}")]
     Type(String),
-    #[error("parse error: {0}")]
     Parse(String),
-    #[error("lowering error: {0}")]
     Lower(String),
-    #[error("eval error: {0}")]
     Eval(String),
-    #[error("rewrite error: {0}")]
     Rewrite(String),
-    #[error("runtime error: {0}")]
     Runtime(String),
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 }
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Layout(m) => write!(f, "layout error: {m}"),
+            Error::Type(m) => write!(f, "type error: {m}"),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Lower(m) => write!(f, "lowering error: {m}"),
+            Error::Eval(m) => write!(f, "eval error: {m}"),
+            Error::Rewrite(m) => write!(f, "rewrite error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
 
 pub type Result<T> = std::result::Result<T, Error>;

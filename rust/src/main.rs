@@ -193,7 +193,7 @@ fn run(args: &[String]) -> hofdla::Result<()> {
                 top_k: 12,
             };
             let Response::Optimized(r) = c.call(Request::Optimize(spec))? else {
-                unreachable!()
+                return Err(err("optimize job returned a non-optimize response".into()));
             };
             println!(
                 "explored {} rearrangements; best = {}",

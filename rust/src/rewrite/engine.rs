@@ -1,8 +1,18 @@
 //! Generic traversal machinery: one-level child maps (the catamorphism
 //! workhorse the paper implements with recursion schemes), first-match
-//! application, and bottom-up fixpoint rewriting.
+//! application, bottom-up fixpoint rewriting, and a memoized variant built
+//! on the hash-consing arena of [`crate::dsl::intern`] so shared subtrees
+//! are never re-normalized.
 
+use crate::dsl::intern::{memo_enabled, ExprArena, ExprId};
 use crate::dsl::Expr;
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+/// Global rewrite-step budget: guards against non-terminating rule sets.
+/// Accounted once per `rewrite_bottom_up` / `MemoRewriter::rewrite` call,
+/// shared across every re-pass that call performs.
+pub(crate) const MAX_STEPS: usize = 100_000;
 
 /// A context-free rewrite rule: returns `Some(new)` when the pattern
 /// matches at the given node.
@@ -57,82 +67,298 @@ pub fn map_children(e: &Expr, mut f: impl FnMut(&Expr) -> Expr) -> Expr {
     }
 }
 
+/// Replace the first child (pre-order, left-to-right) whose subtree
+/// rewrites; siblings are cloned only when a rewrite actually lands.
+fn rewrite_once_args(rule: &Rule, args: &[Expr]) -> Option<Vec<Expr>> {
+    for (i, a) in args.iter().enumerate() {
+        if let Some(na) = rewrite_once(rule, a) {
+            let mut out = args.to_vec();
+            out[i] = na;
+            return Some(out);
+        }
+    }
+    None
+}
+
 /// Apply `rule` at the first matching node in pre-order; `None` if no node
-/// matches.
+/// matches. Nothing is cloned or rebuilt unless a match lands, and then
+/// only the spine from the root to the match (plus one clone of each
+/// untouched sibling along it).
 pub fn rewrite_once(rule: &Rule, e: &Expr) -> Option<Expr> {
     if let Some(new) = (rule.apply)(e) {
         return Some(new);
     }
-    // Try children left-to-right; rebuild on the first success.
-    let mut done = false;
-    let new = map_children(e, |c| {
-        if done {
-            return c.clone();
-        }
-        match rewrite_once(rule, c) {
-            Some(n) => {
-                done = true;
-                n
+    match e {
+        Expr::Var(_) | Expr::Lit(_) | Expr::Prim(_) | Expr::Input(_) => None,
+        Expr::Lam { params, body } => rewrite_once(rule, body).map(|nb| Expr::Lam {
+            params: params.clone(),
+            body: Box::new(nb),
+        }),
+        Expr::App { f, args } => {
+            if let Some(nf) = rewrite_once(rule, f) {
+                return Some(Expr::App {
+                    f: Box::new(nf),
+                    args: args.clone(),
+                });
             }
-            None => c.clone(),
+            rewrite_once_args(rule, args).map(|na| Expr::App {
+                f: f.clone(),
+                args: na,
+            })
         }
-    });
-    if done {
-        Some(new)
-    } else {
-        None
+        Expr::Nzip { f, args } => {
+            if let Some(nf) = rewrite_once(rule, f) {
+                return Some(Expr::Nzip {
+                    f: Box::new(nf),
+                    args: args.clone(),
+                });
+            }
+            rewrite_once_args(rule, args).map(|na| Expr::Nzip {
+                f: f.clone(),
+                args: na,
+            })
+        }
+        Expr::Rnz { r, m, args } => {
+            if let Some(nr) = rewrite_once(rule, r) {
+                return Some(Expr::Rnz {
+                    r: Box::new(nr),
+                    m: m.clone(),
+                    args: args.clone(),
+                });
+            }
+            if let Some(nm) = rewrite_once(rule, m) {
+                return Some(Expr::Rnz {
+                    r: r.clone(),
+                    m: Box::new(nm),
+                    args: args.clone(),
+                });
+            }
+            rewrite_once_args(rule, args).map(|na| Expr::Rnz {
+                r: r.clone(),
+                m: m.clone(),
+                args: na,
+            })
+        }
+        Expr::Lift { f } => rewrite_once(rule, f).map(|nf| Expr::Lift { f: Box::new(nf) }),
+        Expr::Subdiv { d, b, arg } => rewrite_once(rule, arg).map(|na| Expr::Subdiv {
+            d: *d,
+            b: *b,
+            arg: Box::new(na),
+        }),
+        Expr::Flatten { d, arg } => rewrite_once(rule, arg).map(|na| Expr::Flatten {
+            d: *d,
+            arg: Box::new(na),
+        }),
+        Expr::Flip { d1, d2, arg } => rewrite_once(rule, arg).map(|na| Expr::Flip {
+            d1: *d1,
+            d2: *d2,
+            arg: Box::new(na),
+        }),
     }
 }
 
-/// Exhaustively apply a rule set bottom-up until fixpoint. A step budget
-/// guards against non-terminating rule sets.
-pub fn rewrite_bottom_up(rules: &[Rule], e: &Expr) -> Expr {
-    const MAX_STEPS: usize = 100_000;
-    let steps = 0usize;
-    fn pass(rules: &[Rule], e: &Expr, steps: &mut usize) -> (Expr, bool) {
-        let mut changed = false;
-        // children first
-        let mut cur = map_children(e, |c| {
-            let (n, ch) = pass(rules, c, steps);
-            changed |= ch;
-            n
-        });
-        // then this node, repeatedly
-        'outer: loop {
-            if *steps >= MAX_STEPS {
-                break;
-            }
+/// One bottom-up pass to a subtree fixpoint: children first, then rules at
+/// this node; when a rule fires, loop — the next iteration re-passes the
+/// rewritten node's children (reducing any newly exposed redexes) before
+/// retrying rules at the root. Returns whether anything changed, so the
+/// caller can iterate to a global fixpoint.
+///
+/// Iterating (rather than recursing) per fired rule keeps the recursion
+/// depth bounded by the tree height, so the [`MAX_STEPS`] budget — not the
+/// stack — is what stops a non-terminating rule set.
+fn pass(rules: &[Rule], e: &Expr, steps: &mut usize) -> (Expr, bool) {
+    let mut changed = false;
+    // Children first (recursion depth = tree height).
+    let mut cur = map_children(e, |c| {
+        let (n, ch) = pass(rules, c, steps);
+        changed |= ch;
+        n
+    });
+    loop {
+        // Rules at this node.
+        let mut fired = false;
+        if *steps < MAX_STEPS {
             for r in rules {
                 if let Some(n) = (r.apply)(&cur) {
                     *steps += 1;
                     changed = true;
-                    // The rewrite may expose new redexes in children.
-                    let (n2, _) = pass(rules, &n, steps);
-                    cur = n2;
-                    continue 'outer;
+                    fired = true;
+                    cur = n;
+                    break;
                 }
             }
+        }
+        if !fired {
             break;
         }
-        (cur, changed)
+        // The fire may have exposed redexes in the new node's children;
+        // re-pass them before retrying rules at the root.
+        cur = map_children(&cur, |c| {
+            let (n, ch) = pass(rules, c, steps);
+            changed |= ch;
+            n
+        });
     }
-    let mut steps_taken = steps;
-    let (out, _) = pass(rules, e, &mut steps_taken);
-    out
+    (cur, changed)
 }
 
-/// The standard cleanup set: β-reduction, η-reduction, layout-op
-/// simplification. Run after structural rewrites to keep expressions in
-/// normal form.
-pub fn normalize(e: &Expr) -> Expr {
-    let rules = [
+/// Exhaustively apply a rule set bottom-up until fixpoint. A single step
+/// budget ([`MAX_STEPS`]) is accounted globally across all passes and
+/// re-passes, guarding against non-terminating rule sets.
+pub fn rewrite_bottom_up(rules: &[Rule], e: &Expr) -> Expr {
+    let mut steps = 0usize;
+    let (mut cur, mut changed) = pass(rules, e, &mut steps);
+    while changed && steps < MAX_STEPS {
+        let (next, ch) = pass(rules, &cur, &mut steps);
+        cur = next;
+        changed = ch;
+    }
+    cur
+}
+
+/// When the arena of a [`MemoRewriter`] outgrows this many distinct nodes
+/// it is dropped and rebuilt, bounding long-lived worker memory.
+const ARENA_RESET_NODES: usize = 1 << 20;
+
+/// A bottom-up rewriter for one fixed rule set with a memo table keyed by
+/// interned [`ExprId`]: a shared subtree is normalized at most once, no
+/// matter how many expressions (or repeated calls) contain it.
+///
+/// Equivalent to [`rewrite_bottom_up`] up to the alpha-renaming introduced
+/// by rules that invent fresh binders — memoized results reuse the names
+/// chosen the first time a subtree was rewritten.
+pub struct MemoRewriter {
+    rules: Vec<Rule>,
+    arena: ExprArena,
+    memo: HashMap<ExprId, ExprId>,
+    steps: usize,
+}
+
+impl MemoRewriter {
+    pub fn new(rules: &[Rule]) -> Self {
+        MemoRewriter {
+            rules: rules.to_vec(),
+            arena: ExprArena::new(),
+            memo: HashMap::new(),
+            steps: 0,
+        }
+    }
+
+    /// Distinct nodes currently interned (diagnostics / tests).
+    pub fn arena_len(&self) -> usize {
+        self.arena.len()
+    }
+
+    /// Memoized subtrees currently known (diagnostics / tests).
+    pub fn memo_len(&self) -> usize {
+        self.memo.len()
+    }
+
+    fn reset(&mut self) {
+        self.arena = ExprArena::new();
+        self.memo.clear();
+    }
+
+    /// Rewrite `e` to fixpoint under this rewriter's rule set, reusing
+    /// memoized results for every shared subtree.
+    pub fn rewrite(&mut self, e: &Expr) -> Expr {
+        if self.arena.len() > ARENA_RESET_NODES {
+            self.reset();
+        }
+        self.steps = 0;
+        let id = self.arena.intern(e);
+        let out = self.rewrite_id(id);
+        let result = self.arena.extract(out);
+        if self.steps >= MAX_STEPS {
+            // Budget exhausted: partially-rewritten forms may have been
+            // memoized as if final. Drop the tables so the truncation only
+            // affects this call (matching the unmemoized engine).
+            self.reset();
+        }
+        result
+    }
+
+    fn rewrite_id(&mut self, id: ExprId) -> ExprId {
+        if let Some(&r) = self.memo.get(&id) {
+            return r;
+        }
+        let mut cur = id;
+        // Same strategy as `pass`: children first, rules at the node, and
+        // on a fire loop back so the rewritten node's children (where new
+        // redexes can appear) are reduced — memoized, so re-visiting an
+        // already-normal child is an O(1) table hit. Iterating per fired
+        // rule keeps recursion depth bounded by tree height.
+        loop {
+            if let Some(&r) = self.memo.get(&cur) {
+                cur = r;
+                break;
+            }
+            let rebuilt = self
+                .arena
+                .get(cur)
+                .clone()
+                .map_children(|c| self.rewrite_id(c));
+            cur = self.arena.insert(rebuilt);
+            if let Some(&r) = self.memo.get(&cur) {
+                cur = r;
+                break;
+            }
+            let expr = self.arena.extract(cur);
+            let mut fired = None;
+            if self.steps < MAX_STEPS {
+                for r in &self.rules {
+                    if let Some(n) = (r.apply)(&expr) {
+                        fired = Some(n);
+                        break;
+                    }
+                }
+            }
+            match fired {
+                Some(n) => {
+                    self.steps += 1;
+                    cur = self.arena.intern(&n);
+                }
+                None => break,
+            }
+        }
+        self.memo.insert(id, cur);
+        self.memo.insert(cur, cur);
+        cur
+    }
+}
+
+fn normalize_rules() -> [Rule; 5] {
+    [
         super::lambda::beta(),
         super::lambda::eta(),
         super::simplify::flip_flip(),
         super::simplify::flatten_subdiv(),
         super::simplify::subdiv_trivial(),
-    ];
-    rewrite_bottom_up(&rules, e)
+    ]
+}
+
+thread_local! {
+    static NORMALIZE_MEMO: RefCell<MemoRewriter> =
+        RefCell::new(MemoRewriter::new(&normalize_rules()));
+}
+
+/// The standard cleanup set: β-reduction, η-reduction, layout-op
+/// simplification. Run after structural rewrites to keep expressions in
+/// normal form. Memoized per thread over the hash-consing arena — shared
+/// subtrees (ubiquitous across enumeration variants) are normalized once.
+pub fn normalize(e: &Expr) -> Expr {
+    if memo_enabled() {
+        NORMALIZE_MEMO.with(|m| m.borrow_mut().rewrite(e))
+    } else {
+        normalize_uncached(e)
+    }
+}
+
+/// The unmemoized reference implementation of [`normalize`] (the seed
+/// path). Used by differential tests and when memoization is disabled via
+/// [`crate::dsl::intern::with_memo_disabled`].
+pub fn normalize_uncached(e: &Expr) -> Expr {
+    rewrite_bottom_up(&normalize_rules(), e)
 }
 
 #[cfg(test)]
@@ -167,6 +393,24 @@ mod tests {
     }
 
     #[test]
+    fn rewrite_once_rewrites_only_first_match() {
+        let rule = Rule {
+            name: "one-to-two",
+            apply: |e| match e {
+                Expr::Lit(x) if *x == 1.0 => Some(Expr::Lit(2.0)),
+                _ => None,
+            },
+        };
+        // Two matching leaves: only the leftmost is rewritten per call.
+        let e = app2(add(), lit(1.0), lit(1.0));
+        let out = rewrite_once(&rule, &e).unwrap();
+        assert_eq!(out, app2(add(), lit(2.0), lit(1.0)));
+        let out2 = rewrite_once(&rule, &out).unwrap();
+        assert_eq!(out2, app2(add(), lit(2.0), lit(2.0)));
+        assert!(rewrite_once(&rule, &out2).is_none());
+    }
+
+    #[test]
     fn bottom_up_fixpoint_terminates() {
         let rule = Rule {
             name: "dec",
@@ -177,5 +421,90 @@ mod tests {
         };
         let out = rewrite_bottom_up(&[rule], &lit(5.0));
         assert_eq!(out, lit(0.0));
+    }
+
+    /// Regression (ISSUE 1): a rule set that only converges through the
+    /// re-pass after a rule fires — `wrap` keeps introducing a `neg` node
+    /// whose operand needs further rewriting, and `unwrap` strips it.
+    /// An engine that dropped the re-pass (or its `changed` flag) would
+    /// return an intermediate form.
+    #[test]
+    fn bottom_up_converges_via_re_pass() {
+        let wrap = Rule {
+            name: "wrap-dec",
+            apply: |e| match e {
+                Expr::Lit(x) if *x >= 1.0 => Some(Expr::App {
+                    f: Box::new(Expr::Prim(Prim::Neg)),
+                    args: vec![Expr::Lit(x - 1.0)],
+                }),
+                _ => None,
+            },
+        };
+        let unwrap = Rule {
+            name: "unwrap-neg",
+            apply: |e| match e {
+                Expr::App { f, args } if matches!(&**f, Expr::Prim(Prim::Neg)) => {
+                    Some(args[0].clone())
+                }
+                _ => None,
+            },
+        };
+        let out = rewrite_bottom_up(&[unwrap, wrap], &lit(3.0));
+        assert_eq!(out, lit(0.0));
+        // Memoized engine agrees.
+        let mut memo = MemoRewriter::new(&[unwrap, wrap]);
+        assert_eq!(memo.rewrite(&lit(3.0)), lit(0.0));
+    }
+
+    /// The step budget is accounted once, globally across re-passes: a
+    /// long (but converging) chain completes with the correct result.
+    #[test]
+    fn budget_is_accounted_globally() {
+        let inc = Rule {
+            name: "inc-to-1000",
+            apply: |e| match e {
+                Expr::Lit(x) if *x < 1000.0 => Some(Expr::Lit(x + 1.0)),
+                _ => None,
+            },
+        };
+        assert_eq!(rewrite_bottom_up(&[inc], &lit(0.0)), lit(1000.0));
+        let mut memo = MemoRewriter::new(&[inc]);
+        assert_eq!(memo.rewrite(&lit(0.0)), lit(1000.0));
+    }
+
+    #[test]
+    fn memo_rewriter_caches_across_calls() {
+        let rule = Rule {
+            name: "dec",
+            apply: |e| match e {
+                Expr::Lit(x) if *x > 0.0 => Some(Expr::Lit(x - 1.0)),
+                _ => None,
+            },
+        };
+        let mut memo = MemoRewriter::new(&[rule]);
+        let e = app2(add(), lit(3.0), lit(3.0));
+        assert_eq!(memo.rewrite(&e), app2(add(), lit(0.0), lit(0.0)));
+        let after_first = memo.memo_len();
+        // Second call over a tree sharing every subtree: pure memo hits,
+        // no growth in the memo table.
+        assert_eq!(memo.rewrite(&e), app2(add(), lit(0.0), lit(0.0)));
+        assert_eq!(memo.memo_len(), after_first);
+    }
+
+    #[test]
+    fn memoized_normalize_matches_uncached() {
+        // A beta/eta/layout mix; memoized and plain paths agree.
+        let e = map(
+            lam1("x", app1(lam1("q", var("q")), var("x"))),
+            flip(0, flip(0, input("A"))),
+        );
+        let plain = normalize_uncached(&e);
+        let memoized = normalize(&e);
+        assert!(
+            memoized.alpha_eq(&plain),
+            "{} vs {}",
+            crate::dsl::pretty(&memoized),
+            crate::dsl::pretty(&plain)
+        );
     }
 }

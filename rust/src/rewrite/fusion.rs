@@ -61,12 +61,10 @@ pub fn nzip_nzip() -> Rule {
             let Expr::Nzip { f, args } = e else {
                 return None;
             };
-            let i = args
-                .iter()
-                .position(|a| matches!(a, Expr::Nzip { .. }))?;
-            let Expr::Nzip { f: g, args: ys } = &args[i] else {
-                unreachable!()
-            };
+            let (i, (g, ys)) = args.iter().enumerate().find_map(|(i, a)| match a {
+                Expr::Nzip { f, args } => Some((i, (f.as_ref(), args.as_slice()))),
+                _ => None,
+            })?;
             let n = args.len();
             let m = ys.len();
             // Sanity: declared arities must match the usage.
@@ -95,12 +93,10 @@ pub fn rnz_nzip() -> Rule {
             let Expr::Rnz { r, m, args } = e else {
                 return None;
             };
-            let i = args
-                .iter()
-                .position(|a| matches!(a, Expr::Nzip { .. }))?;
-            let Expr::Nzip { f: g, args: ys } = &args[i] else {
-                unreachable!()
-            };
+            let (i, (g, ys)) = args.iter().enumerate().find_map(|(i, a)| match a {
+                Expr::Nzip { f, args } => Some((i, (f.as_ref(), args.as_slice()))),
+                _ => None,
+            })?;
             let n = args.len();
             let gm = ys.len();
             if arity_of(m).is_some_and(|a| a != n) || arity_of(g).is_some_and(|a| a != gm) {
@@ -141,16 +137,30 @@ pub fn lift_app() -> Rule {
     }
 }
 
-/// The full fusion pass: fuse all pipelines, then β/η-normalize.
-pub fn fuse(e: &Expr) -> Expr {
-    let rules = [
+fn fuse_rules() -> [super::engine::Rule; 5] {
+    [
         nzip_nzip(),
         rnz_nzip(),
         lift_app(),
         super::lambda::beta(),
         super::lambda::eta(),
-    ];
-    super::engine::rewrite_bottom_up(&rules, e)
+    ]
+}
+
+thread_local! {
+    static FUSE_MEMO: std::cell::RefCell<super::engine::MemoRewriter> =
+        std::cell::RefCell::new(super::engine::MemoRewriter::new(&fuse_rules()));
+}
+
+/// The full fusion pass: fuse all pipelines, then β/η-normalize. Memoized
+/// per thread over the hash-consing arena (repeated optimize jobs on the
+/// same source fuse for free).
+pub fn fuse(e: &Expr) -> Expr {
+    if crate::dsl::intern::memo_enabled() {
+        FUSE_MEMO.with(|m| m.borrow_mut().rewrite(e))
+    } else {
+        super::engine::rewrite_bottom_up(&fuse_rules(), e)
+    }
 }
 
 #[cfg(test)]

@@ -24,7 +24,9 @@ pub mod products;
 pub mod simplify;
 pub mod subdivision;
 
-pub use engine::{normalize, rewrite_bottom_up, rewrite_once, Rule};
+pub use engine::{
+    normalize, normalize_uncached, rewrite_bottom_up, rewrite_once, MemoRewriter, Rule,
+};
 
 use crate::layout::Layout;
 use crate::typecheck::Env;

@@ -10,134 +10,208 @@
 //! baseline): `matmul_xla_*.hlo.txt` is XLA's own dot, and
 //! `matmul_pallas_*.hlo.txt` is our tiled Pallas kernel, both invoked from
 //! the rust hot path with Python long gone.
+//!
+//! The `xla` crate (and its PJRT shared library) is only available behind
+//! the **`pjrt` cargo feature**. Without it, this module exposes the same
+//! API but [`Runtime::cpu`] returns an error, so every runtime-dependent
+//! path (coordinator exec jobs, artifact tests, the `run-artifact` CLI)
+//! degrades to a clear "PJRT unavailable" result instead of failing to
+//! build on machines without the toolchain.
 
-use crate::{Error, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
-/// A loaded-and-compiled artifact ready to execute.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    /// Number of parameters the HLO entry takes (validated on execute).
-    pub n_params: usize,
-    pub name: String,
-}
+#[cfg(feature = "pjrt")]
+mod backend {
+    use crate::{Error, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
 
-/// The PJRT runtime: one CPU client plus an executable cache.
-///
-/// Not `Send`: confine to one thread (the coordinator dedicates a runtime
-/// thread and communicates via channels).
-pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: HashMap<PathBuf, std::rc::Rc<Executable>>,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| Error::Runtime(format!("PJRT client: {e}")))?;
-        Ok(Runtime {
-            client,
-            cache: HashMap::new(),
-        })
+    /// A loaded-and-compiled artifact ready to execute.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        /// Number of parameters the HLO entry takes (validated on execute).
+        pub n_params: usize,
+        pub name: String,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// The PJRT runtime: one CPU client plus an executable cache.
+    ///
+    /// Not `Send`: confine to one thread (the coordinator dedicates a
+    /// runtime thread and communicates via channels).
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        cache: HashMap<PathBuf, std::rc::Rc<Executable>>,
     }
 
-    /// Load an HLO-text artifact, compiling it on first use.
-    pub fn load(&mut self, path: &Path) -> Result<std::rc::Rc<Executable>> {
-        if let Some(e) = self.cache.get(path) {
-            return Ok(e.clone());
+    impl Runtime {
+        /// Create a CPU PJRT client.
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| Error::Runtime(format!("PJRT client: {e}")))?;
+            Ok(Runtime {
+                client,
+                cache: HashMap::new(),
+            })
         }
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| Error::Runtime(format!("compile {}: {e}", path.display())))?;
-        let n_params = count_entry_params(path)?;
-        let name = path
-            .file_stem()
-            .map(|s| s.to_string_lossy().into_owned())
-            .unwrap_or_default();
-        let exec = std::rc::Rc::new(Executable {
-            exe,
-            n_params,
-            name,
-        });
-        self.cache.insert(path.to_path_buf(), exec.clone());
-        Ok(exec)
-    }
 
-    /// Number of cached executables.
-    pub fn cache_len(&self) -> usize {
-        self.cache.len()
-    }
-
-    /// Execute with f32 inputs given as `(data, shape)` pairs; returns the
-    /// flattened f32 outputs of the (1-tuple) result.
-    pub fn run_f32(
-        &self,
-        exe: &Executable,
-        inputs: &[(&[f32], &[usize])],
-    ) -> Result<Vec<f32>> {
-        if exe.n_params != 0 && inputs.len() != exe.n_params {
-            return Err(Error::Runtime(format!(
-                "{}: expected {} inputs, got {}",
-                exe.name,
-                exe.n_params,
-                inputs.len()
-            )));
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, shape) in inputs {
-            let expect: usize = shape.iter().product();
-            if expect != data.len() {
+
+        /// Load an HLO-text artifact, compiling it on first use.
+        pub fn load(&mut self, path: &Path) -> Result<std::rc::Rc<Executable>> {
+            if let Some(e) = self.cache.get(path) {
+                return Ok(e.clone());
+            }
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile {}: {e}", path.display())))?;
+            let n_params = count_entry_params(path)?;
+            let name = path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default();
+            let exec = std::rc::Rc::new(Executable {
+                exe,
+                n_params,
+                name,
+            });
+            self.cache.insert(path.to_path_buf(), exec.clone());
+            Ok(exec)
+        }
+
+        /// Number of cached executables.
+        pub fn cache_len(&self) -> usize {
+            self.cache.len()
+        }
+
+        /// Execute with f32 inputs given as `(data, shape)` pairs; returns
+        /// the flattened f32 outputs of the (1-tuple) result.
+        pub fn run_f32(
+            &self,
+            exe: &Executable,
+            inputs: &[(&[f32], &[usize])],
+        ) -> Result<Vec<f32>> {
+            if exe.n_params != 0 && inputs.len() != exe.n_params {
                 return Err(Error::Runtime(format!(
-                    "input shape {shape:?} does not match {} elements",
-                    data.len()
+                    "{}: expected {} inputs, got {}",
+                    exe.name,
+                    exe.n_params,
+                    inputs.len()
                 )));
             }
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims)
-                .map_err(|e| Error::Runtime(format!("reshape: {e}")))?;
-            literals.push(lit);
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (data, shape) in inputs {
+                let expect: usize = shape.iter().product();
+                if expect != data.len() {
+                    return Err(Error::Runtime(format!(
+                        "input shape {shape:?} does not match {} elements",
+                        data.len()
+                    )));
+                }
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| Error::Runtime(format!("reshape: {e}")))?;
+                literals.push(lit);
+            }
+            let result = exe
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| Error::Runtime(format!("execute: {e}")))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| Error::Runtime(format!("fetch: {e}")))?;
+            // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+            let out = result
+                .to_tuple1()
+                .map_err(|e| Error::Runtime(format!("untuple: {e}")))?;
+            out.to_vec::<f32>()
+                .map_err(|e| Error::Runtime(format!("to_vec: {e}")))
         }
-        let result = exe
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| Error::Runtime(format!("execute: {e}")))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| Error::Runtime(format!("fetch: {e}")))?;
-        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
-        let out = result
-            .to_tuple1()
-            .map_err(|e| Error::Runtime(format!("untuple: {e}")))?;
-        out.to_vec::<f32>()
-            .map_err(|e| Error::Runtime(format!("to_vec: {e}")))
+    }
+
+    /// Count the parameters of the ENTRY computation in an HLO text file.
+    fn count_entry_params(path: &Path) -> Result<usize> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Runtime(format!("read {}: {e}", path.display())))?;
+        // The ENTRY computation is printed as its own block; count the
+        // parameter instructions between "ENTRY" and the block's closing
+        // brace.
+        let entry = text.find("ENTRY").unwrap_or(0);
+        let block_end = text[entry..]
+            .find("\n}")
+            .map(|i| entry + i)
+            .unwrap_or(text.len());
+        Ok(text[entry..block_end]
+            .lines()
+            .filter(|l| l.contains("parameter("))
+            .count())
     }
 }
 
-/// Count the parameters of the ENTRY computation in an HLO text file.
-fn count_entry_params(path: &Path) -> Result<usize> {
-    let text = std::fs::read_to_string(path)
-        .map_err(|e| Error::Runtime(format!("read {}: {e}", path.display())))?;
-    // The ENTRY computation is printed as its own block; count the
-    // parameter instructions between "ENTRY" and the block's closing brace.
-    let entry = text.find("ENTRY").unwrap_or(0);
-    let block_end = text[entry..]
-        .find("\n}")
-        .map(|i| entry + i)
-        .unwrap_or(text.len());
-    Ok(text[entry..block_end]
-        .lines()
-        .filter(|l| l.contains("parameter("))
-        .count())
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use crate::{Error, Result};
+    use std::path::Path;
+
+    /// Stand-in for the PJRT executable when the crate is built without
+    /// the `pjrt` feature. Never produced: [`Runtime::cpu`] always errors.
+    pub struct Executable {
+        pub n_params: usize,
+        pub name: String,
+    }
+
+    enum Void {}
+
+    /// Stand-in runtime: construction always fails with a clear message,
+    /// so callers take their "PJRT unavailable" paths. The struct is
+    /// uninhabited, which makes the remaining methods trivially total.
+    pub struct Runtime {
+        void: Void,
+    }
+
+    impl Runtime {
+        pub fn cpu() -> Result<Self> {
+            Err(Error::Runtime(
+                "PJRT runtime unavailable: crate built without the `pjrt` feature \
+                 (rebuild with `cargo build --features pjrt`)"
+                    .into(),
+            ))
+        }
+
+        pub fn platform(&self) -> String {
+            match self.void {}
+        }
+
+        pub fn load(&mut self, _path: &Path) -> Result<std::rc::Rc<Executable>> {
+            match self.void {}
+        }
+
+        pub fn cache_len(&self) -> usize {
+            match self.void {}
+        }
+
+        pub fn run_f32(
+            &self,
+            _exe: &Executable,
+            _inputs: &[(&[f32], &[usize])],
+        ) -> Result<Vec<f32>> {
+            match self.void {}
+        }
+    }
+}
+
+pub use backend::{Executable, Runtime};
+
+/// `true` when a PJRT client can be constructed in this build/environment.
+/// Tests and benches use this (plus artifact existence) to skip instead of
+/// fail on machines without the toolchain.
+pub fn pjrt_available() -> bool {
+    Runtime::cpu().is_ok()
 }
 
 /// Default artifact directory: `$HOFDLA_ARTIFACTS` or `artifacts/` relative
@@ -167,18 +241,32 @@ pub fn artifact_path(name: &str) -> PathBuf {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::Path;
 
     fn have_artifacts() -> bool {
         artifact_path("matmul_xla_256").exists()
     }
 
+    /// Skip helper: PJRT tests need both a client and AOT artifacts.
+    fn runtime_or_skip(need_artifacts: bool) -> Option<Runtime> {
+        if need_artifacts && !have_artifacts() {
+            eprintln!("skipping: no AOT artifacts (run `make artifacts` first)");
+            return None;
+        }
+        match Runtime::cpu() {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("skipping: PJRT runtime unavailable ({e})");
+                None
+            }
+        }
+    }
+
     #[test]
     fn load_and_run_xla_matmul() {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
+        let Some(mut rt) = runtime_or_skip(true) else {
             return;
-        }
-        let mut rt = Runtime::cpu().unwrap();
+        };
         let exe = rt.load(&artifact_path("matmul_xla_256")).unwrap();
         assert_eq!(exe.n_params, 2);
         let n = 256usize;
@@ -198,11 +286,9 @@ mod tests {
 
     #[test]
     fn pallas_artifact_matches_xla_artifact() {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
+        let Some(mut rt) = runtime_or_skip(true) else {
             return;
-        }
-        let mut rt = Runtime::cpu().unwrap();
+        };
         let xla_exe = rt.load(&artifact_path("matmul_xla_256")).unwrap();
         let pal_exe = rt.load(&artifact_path("matmul_pallas_256")).unwrap();
         let n = 256usize;
@@ -221,11 +307,9 @@ mod tests {
 
     #[test]
     fn input_validation() {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
+        let Some(mut rt) = runtime_or_skip(true) else {
             return;
-        }
-        let mut rt = Runtime::cpu().unwrap();
+        };
         let exe = rt.load(&artifact_path("matmul_xla_256")).unwrap();
         let a = vec![0f32; 4];
         assert!(rt.run_f32(&exe, &[(&a, &[2, 2])]).is_err()); // wrong arity
@@ -234,7 +318,9 @@ mod tests {
 
     #[test]
     fn missing_artifact_errors() {
-        let mut rt = Runtime::cpu().unwrap();
+        let Some(mut rt) = runtime_or_skip(false) else {
+            return;
+        };
         assert!(rt.load(Path::new("/nonexistent/zz.hlo.txt")).is_err());
     }
 }

@@ -1,0 +1,103 @@
+//! A small least-recently-used cache (no external crates are available
+//! offline). Eviction scans for the oldest entry, which is O(capacity) —
+//! fine for the coordinator's result cache (capacity ≲ a few hundred);
+//! swap in a linked structure if a hot path ever needs more.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// Bounded map evicting the least-recently-touched entry on overflow.
+#[derive(Debug)]
+pub struct Lru<K, V> {
+    cap: usize,
+    tick: u64,
+    map: HashMap<K, (V, u64)>,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Lru<K, V> {
+    /// Create a cache holding at most `cap` entries (minimum 1).
+    pub fn new(cap: usize) -> Self {
+        Lru {
+            cap: cap.max(1),
+            tick: 0,
+            map: HashMap::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Look up and refresh an entry.
+    pub fn get(&mut self, k: &K) -> Option<V> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(k).map(|(v, t)| {
+            *t = tick;
+            v.clone()
+        })
+    }
+
+    /// Insert (or refresh) an entry, evicting the least-recently-used one
+    /// if the cache is full.
+    pub fn put(&mut self, k: K, v: V) {
+        self.tick += 1;
+        if !self.map.contains_key(&k) && self.map.len() >= self.cap {
+            if let Some(oldest) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, t))| *t)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&oldest);
+            }
+        }
+        let tick = self.tick;
+        self.map.insert(k, (v, tick));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_and_put_round_trip() {
+        let mut c: Lru<String, u32> = Lru::new(4);
+        assert!(c.is_empty());
+        assert_eq!(c.get(&"a".into()), None);
+        c.put("a".into(), 1);
+        assert_eq!(c.get(&"a".into()), Some(1));
+        c.put("a".into(), 2);
+        assert_eq!(c.get(&"a".into()), Some(2));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c: Lru<u32, u32> = Lru::new(2);
+        c.put(1, 10);
+        c.put(2, 20);
+        // Touch 1 so 2 becomes the LRU entry.
+        assert_eq!(c.get(&1), Some(10));
+        c.put(3, 30);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&2), None, "LRU entry should have been evicted");
+        assert_eq!(c.get(&1), Some(10));
+        assert_eq!(c.get(&3), Some(30));
+    }
+
+    #[test]
+    fn capacity_has_a_floor_of_one() {
+        let mut c: Lru<u32, u32> = Lru::new(0);
+        c.put(1, 10);
+        assert_eq!(c.get(&1), Some(10));
+        c.put(2, 20);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&2), Some(20));
+    }
+}

@@ -1,8 +1,10 @@
 //! Small self-contained utilities: a deterministic PRNG (no `rand` crate is
 //! available offline) and assorted helpers shared across modules.
 
+mod lru;
 mod rng;
 
+pub use lru::Lru;
 pub use rng::Rng;
 
 /// Greatest common divisor.

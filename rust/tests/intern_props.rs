@@ -1,0 +1,218 @@
+//! Property and differential tests for the hash-consed expression arena
+//! (`dsl::intern`) and the memoized rewrite engine built on it (ISSUE 1):
+//!
+//! - random `Expr` trees round-trip through the arena unchanged, and
+//!   structurally-equal trees intern to the same id;
+//! - the memoized `normalize` agrees node-for-node (up to the
+//!   alpha-renaming inherent in fresh-binder rules) with the unmemoized
+//!   seed implementation;
+//! - `enumerate_all` and the full optimize pipeline produce the same
+//!   variant set and the same cost-model ranking with interning on and
+//!   off.
+
+use hofdla::coordinator::{optimize, OptimizeSpec, RankBy};
+use hofdla::dsl::intern::{with_memo_disabled, ExprArena};
+use hofdla::dsl::{self, Expr, Prim};
+use hofdla::enumerate::{enumerate_all, starts};
+use hofdla::layout::Layout;
+use hofdla::rewrite::{normalize, normalize_uncached, Ctx};
+use hofdla::typecheck::Env;
+use hofdla::util::Rng;
+
+/// Generate a random expression. Function positions only ever hold `Prim`
+/// or `Lam` (never a variable), which keeps the fragment strongly
+/// normalizing under β — the generator can safely produce β/η redexes
+/// without risking divergence in `normalize`.
+fn gen_expr(rng: &mut Rng, depth: usize, scope: &mut Vec<String>) -> Expr {
+    if depth == 0 || rng.chance(0.25) {
+        return match rng.below(4) {
+            0 if !scope.is_empty() => Expr::Var(rng.pick(scope.as_slice()).clone()),
+            1 => dsl::lit((rng.below(16) as f64) - 8.0),
+            2 => dsl::input(&format!("in{}", rng.below(3))),
+            _ => dsl::lit(rng.range_f64(-4.0, 4.0)),
+        };
+    }
+    match rng.below(8) {
+        0 => gen_lam(rng, depth, scope),
+        1 => {
+            // Application of a primitive.
+            let p = *rng.pick(&[Prim::Add, Prim::Mul, Prim::Sub, Prim::Neg, Prim::Relu]);
+            let args = (0..p.arity())
+                .map(|_| gen_expr(rng, depth - 1, scope))
+                .collect();
+            Expr::App {
+                f: Box::new(Expr::Prim(p)),
+                args,
+            }
+        }
+        2 => {
+            // A β-redex: a lambda applied to matching arguments.
+            let k = 1 + rng.below(2);
+            let f = gen_lam_with_arity(rng, depth, scope, k);
+            let args = (0..k)
+                .map(|_| gen_expr(rng, depth.saturating_sub(2), scope))
+                .collect();
+            Expr::App {
+                f: Box::new(f),
+                args,
+            }
+        }
+        3 => {
+            let k = 1 + rng.below(2);
+            let f = gen_lam_with_arity(rng, depth, scope, k);
+            let args = (0..k)
+                .map(|_| gen_expr(rng, depth - 1, scope))
+                .collect();
+            Expr::Nzip {
+                f: Box::new(f),
+                args,
+            }
+        }
+        4 => {
+            let k = 1 + rng.below(2);
+            let r = Expr::Prim(*rng.pick(&[Prim::Add, Prim::Mul, Prim::Max]));
+            let m = gen_lam_with_arity(rng, depth, scope, k);
+            let args = (0..k)
+                .map(|_| gen_expr(rng, depth - 1, scope))
+                .collect();
+            Expr::Rnz {
+                r: Box::new(r),
+                m: Box::new(m),
+                args,
+            }
+        }
+        5 => dsl::lift(if rng.chance(0.5) {
+            Expr::Prim(Prim::Add)
+        } else {
+            gen_lam_with_arity(rng, depth, scope, 1)
+        }),
+        6 => dsl::subdiv(
+            rng.below(2),
+            1 + rng.below(4),
+            gen_expr(rng, depth - 1, scope),
+        ),
+        _ => match rng.below(3) {
+            0 => dsl::flatten(rng.below(2), gen_expr(rng, depth - 1, scope)),
+            1 => dsl::flip2(rng.below(3), rng.below(3), gen_expr(rng, depth - 1, scope)),
+            _ => dsl::flip(rng.below(2), gen_expr(rng, depth - 1, scope)),
+        },
+    }
+}
+
+fn gen_lam(rng: &mut Rng, depth: usize, scope: &mut Vec<String>) -> Expr {
+    let k = 1 + rng.below(2);
+    gen_lam_with_arity(rng, depth, scope, k)
+}
+
+fn gen_lam_with_arity(rng: &mut Rng, depth: usize, scope: &mut Vec<String>, k: usize) -> Expr {
+    let params: Vec<String> = (0..k)
+        .map(|i| format!("p{}_{}", scope.len(), i))
+        .collect();
+    scope.extend(params.iter().cloned());
+    let body = gen_expr(rng, depth - 1, scope);
+    scope.truncate(scope.len() - k);
+    Expr::Lam {
+        params,
+        body: Box::new(body),
+    }
+}
+
+#[test]
+fn prop_arena_round_trip_preserves_structure() {
+    let mut rng = Rng::new(0x1a7e);
+    let mut arena = ExprArena::new();
+    for _ in 0..300 {
+        let depth = 1 + rng.below(5);
+        let e = gen_expr(&mut rng, depth, &mut Vec::new());
+        let id = arena.intern(&e);
+        let back = arena.extract(id);
+        assert_eq!(back, e, "arena round trip changed the tree");
+        // Hash-consing: interning the same structure again is the same id.
+        assert_eq!(arena.intern(&e.clone()), id);
+    }
+}
+
+#[test]
+fn prop_arena_shares_equal_subtrees() {
+    let mut rng = Rng::new(0xc0de);
+    for _ in 0..50 {
+        let mut arena = ExprArena::new();
+        let sub = gen_expr(&mut rng, 3, &mut Vec::new());
+        let e = Expr::App {
+            f: Box::new(Expr::Prim(Prim::Add)),
+            args: vec![sub.clone(), sub.clone()],
+        };
+        arena.intern(&e);
+        // Both copies of `sub` collapse onto one set of nodes: the arena
+        // holds at most (sub nodes + the App + the Prim).
+        assert!(
+            arena.len() <= sub.size() + 2,
+            "arena stored duplicate subtrees: {} nodes for sub of size {}",
+            arena.len(),
+            sub.size()
+        );
+    }
+}
+
+#[test]
+fn prop_memoized_normalize_agrees_with_seed_implementation() {
+    let mut rng = Rng::new(0xbeef);
+    for i in 0..300 {
+        let depth = 1 + rng.below(5);
+        let e = gen_expr(&mut rng, depth, &mut Vec::new());
+        let memoized = normalize(&e);
+        let reference = normalize_uncached(&e);
+        assert!(
+            memoized.alpha_eq(&reference),
+            "case {i}: memoized and seed normalize disagree\n  input: {}\n  memo:  {}\n  seed:  {}",
+            dsl::pretty(&e),
+            dsl::pretty(&memoized),
+            dsl::pretty(&reference)
+        );
+    }
+}
+
+/// `with_memo_disabled` switches `normalize`/`fuse` to the unmemoized
+/// seed engine; `enumerate_all`'s interned typecheck dedup is
+/// behavior-neutral and runs in both arms (its output invariants — the
+/// exact 6/12 variant counts — are pinned by the enumerate/pipeline unit
+/// tests). So this differential isolates the memoized rewrite path.
+#[test]
+fn differential_enumerate_same_variants_with_and_without_rewrite_memo() {
+    let env = Env::new()
+        .with("A", Layout::row_major(&[4, 8]))
+        .with("B", Layout::row_major(&[8, 4]));
+    let ctx = Ctx::new(env);
+    let start = starts::matmul_rnz_subdivided_variant(2);
+    let with_intern = enumerate_all(&start, &ctx, 200).unwrap();
+    let without = with_memo_disabled(|| enumerate_all(&start, &ctx, 200)).unwrap();
+    assert_eq!(with_intern.len(), without.len(), "variant count diverged");
+    for (a, b) in with_intern.iter().zip(&without) {
+        assert_eq!(a.display_key(), b.display_key(), "variant order diverged");
+        assert_eq!(a.labels, b.labels);
+        assert!(
+            a.expr.alpha_eq(&b.expr),
+            "{}: interned and seed variants differ structurally",
+            a.display_key()
+        );
+    }
+}
+
+#[test]
+fn differential_pipeline_same_ranking_with_and_without_rewrite_memo() {
+    let spec = OptimizeSpec {
+        source: "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))"
+            .into(),
+        inputs: vec![("A".into(), vec![32, 32]), ("B".into(), vec![32, 32])],
+        rank_by: RankBy::CostModel,
+        subdivide_rnz: Some(4),
+        top_k: 12,
+    };
+    let with_intern = optimize(&spec).unwrap();
+    let without = with_memo_disabled(|| optimize(&spec)).unwrap();
+    assert_eq!(with_intern.variants_explored, 12, "Table 2 count");
+    assert_eq!(with_intern.variants_explored, without.variants_explored);
+    assert_eq!(with_intern.best, without.best);
+    // Identical top-k: same keys, bit-identical scores.
+    assert_eq!(with_intern.ranking, without.ranking);
+}
