@@ -41,6 +41,7 @@ fn main() -> hofdla::Result<()> {
         rank_by: RankBy::CostModel,
         subdivide_rnz: Some(b),
         top_k: 12,
+        prune: false,
     };
     let t = std::time::Instant::now();
     let report = optimize(&spec)?;

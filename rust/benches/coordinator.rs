@@ -1,20 +1,25 @@
 //! Coordinator throughput: optimize-job latency and artifact-execution
 //! batching overhead (L3 §Perf driver).
 //!
-//! The headline workload is the ISSUE 1 acceptance case: the subdivided
+//! The headline workload is the ISSUE 1/2 acceptance case: the subdivided
 //! matmul (n=64, `subdivide_rnz: Some(4)`, Table 2's 12 rearrangements).
-//! Three numbers are reported:
+//! Four numbers are reported:
 //!
-//! - the *cold* pipeline latency (no result cache in front) — improved by
-//!   the hash-consing arena + memoized normalize,
+//! - the *cold* pipeline latency (no result cache in front) — the
+//!   id-native sharded search path, exhaustive mode,
+//! - the *pruned* pipeline latency — same, with the branch-and-bound
+//!   cost cut enabled,
 //! - the *warm* service latency — repeated traffic hits the coordinator's
 //!   result LRU and never re-runs the pipeline,
 //! - pipelined submission throughput over the worker pool.
+//!
+//! The cold/warm/pruned rows are also written to `BENCH_coordinator.json`
+//! (nanosecond medians) so the perf trajectory is tracked across PRs.
 
-use hofdla::bench_support::{bench, fmt_duration, BenchConfig};
+use hofdla::bench_support::{bench, fmt_duration, BenchConfig, Measurement};
 use hofdla::coordinator::{self, Config, Coordinator, OptimizeSpec, RankBy, Request, Response};
 
-fn subdivided_matmul_spec() -> OptimizeSpec {
+fn subdivided_matmul_spec(prune: bool) -> OptimizeSpec {
     OptimizeSpec {
         source: "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))"
             .into(),
@@ -22,32 +27,72 @@ fn subdivided_matmul_spec() -> OptimizeSpec {
         rank_by: RankBy::CostModel,
         subdivide_rnz: Some(4),
         top_k: 12,
+        prune,
+    }
+}
+
+fn write_bench_json(rows: &[(&str, &Measurement)], jobs_per_s: f64) {
+    let mut s = String::from(
+        "{\n  \"bench\": \"coordinator\",\n  \"workload\": \"matmul n=64 subdivide_rnz=4 (Table 2, 12 variants)\",\n  \"rows\": [\n",
+    );
+    for (i, (name, m)) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{name}\", \"median_ns\": {}, \"min_ns\": {}, \"runs\": {}}}{}\n",
+            m.median.as_nanos(),
+            m.min.as_nanos(),
+            m.runs,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str(&format!(
+        "  ],\n  \"jobs_per_s\": {jobs_per_s:.1}\n}}\n"
+    ));
+    match std::fs::write("BENCH_coordinator.json", &s) {
+        Ok(()) => println!("wrote BENCH_coordinator.json"),
+        Err(e) => eprintln!("could not write BENCH_coordinator.json: {e}"),
     }
 }
 
 fn main() {
     let cfg = BenchConfig::quick();
-    let spec = subdivided_matmul_spec();
+    let spec = subdivided_matmul_spec(false);
+    let pruned_spec = subdivided_matmul_spec(true);
 
     // Cold path: the pipeline itself, bypassing the coordinator's LRU.
-    let m = bench("pipeline optimize 64x64 subdiv=4 (cold)", &cfg, || {
+    let cold = bench("pipeline optimize 64x64 subdiv=4 (cold)", &cfg, || {
         let r = coordinator::optimize(&spec).expect("optimize");
         std::hint::black_box(r.variants_explored);
     });
-    println!("pipeline (cold) median latency: {}", fmt_duration(m.median));
+    println!(
+        "pipeline (cold) median latency: {}",
+        fmt_duration(cold.median)
+    );
+
+    // Pruned path: cold pipeline with the in-BFS cost bound enabled.
+    let pruned = bench("pipeline optimize 64x64 subdiv=4 (pruned)", &cfg, || {
+        let r = coordinator::optimize(&pruned_spec).expect("optimize");
+        std::hint::black_box(r.variants_explored);
+    });
+    println!(
+        "pipeline (pruned) median latency: {}",
+        fmt_duration(pruned.median)
+    );
 
     let c = Coordinator::start(Config::default()).expect("start");
 
     // Warm path: repeated identical service traffic short-circuits in the
     // result LRU.
-    let m = bench("coordinator optimize (warm LRU)", &cfg, || {
+    let warm = bench("coordinator optimize (warm LRU)", &cfg, || {
         let Response::Optimized(r) = c.call(Request::Optimize(spec.clone())).expect("call")
         else {
             panic!("wrong response type")
         };
         std::hint::black_box(r.variants_explored);
     });
-    println!("service (warm) median latency: {}", fmt_duration(m.median));
+    println!(
+        "service (warm) median latency: {}",
+        fmt_duration(warm.median)
+    );
 
     // Pipelined submission throughput (the batching path).
     let t = std::time::Instant::now();
@@ -59,12 +104,18 @@ fn main() {
         h.wait().unwrap();
     }
     let dt = t.elapsed();
+    let jobs_per_s = jobs as f64 / dt.as_secs_f64();
     println!(
         "{} concurrent optimize jobs (subdivided matmul): {} total ({:.1} jobs/s); metrics: {}",
         jobs,
         fmt_duration(dt),
-        jobs as f64 / dt.as_secs_f64(),
+        jobs_per_s,
         c.metrics.summary()
+    );
+
+    write_bench_json(
+        &[("cold", &cold), ("warm", &warm), ("pruned", &pruned)],
+        jobs_per_s,
     );
 
     if hofdla::runtime::artifact_path("matmul_xla_256").exists()

@@ -17,13 +17,16 @@ pub struct Metrics {
     pub exec_cache_hits: AtomicU64,
     /// Optimize jobs answered from the coordinator's result LRU.
     pub opt_cache_hits: AtomicU64,
+    /// Generation advances of the optimize-result cache
+    /// ([`crate::coordinator::Coordinator::flush_opt_cache`]).
+    pub opt_cache_flushes: AtomicU64,
 }
 
 impl Metrics {
     /// Human-readable one-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "submitted={} completed={} failed={} exec_batches={} max_batch={} cache_hits={} opt_cache_hits={}",
+            "submitted={} completed={} failed={} exec_batches={} max_batch={} cache_hits={} opt_cache_hits={} opt_cache_flushes={}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -31,6 +34,7 @@ impl Metrics {
             self.max_batch_seen.load(Ordering::Relaxed),
             self.exec_cache_hits.load(Ordering::Relaxed),
             self.opt_cache_hits.load(Ordering::Relaxed),
+            self.opt_cache_flushes.load(Ordering::Relaxed),
         )
     }
 

@@ -37,9 +37,10 @@ pub struct Config {
     pub max_batch: usize,
     /// Artifact directory for the runtime thread.
     pub artifact_dir: PathBuf,
-    /// Capacity of the optimize-result LRU (entries keyed by the full
-    /// [`OptimizeSpec`]); repeated service traffic short-circuits the
-    /// pipeline entirely. `0` keeps the floor of one entry.
+    /// Capacity of the optimize-result LRU (entries keyed by the current
+    /// cache generation plus the full [`OptimizeSpec`]); repeated service
+    /// traffic short-circuits the pipeline entirely. `0` keeps the floor
+    /// of one entry.
     pub opt_cache_cap: usize,
 }
 
@@ -114,6 +115,12 @@ pub struct Coordinator {
     workers: Vec<JoinHandle<()>>,
     rt_thread: Option<JoinHandle<()>>,
     n_workers: usize,
+    /// Generation stamp mixed into every optimize-cache key. Seeded from
+    /// [`crate::costmodel::COST_MODEL_VERSION`] (so a cost-model bump
+    /// invalidates results cached under the old model) and advanced by
+    /// [`Coordinator::flush_opt_cache`]; old-generation entries simply
+    /// stop matching and age out of the LRU.
+    opt_generation: Arc<std::sync::atomic::AtomicU64>,
 }
 
 impl Coordinator {
@@ -124,14 +131,20 @@ impl Coordinator {
         let opt_rx = Arc::new(Mutex::new(opt_rx));
         // Result LRU shared by all workers: repeated optimize traffic
         // (same source, shapes, metric) short-circuits the pipeline.
+        // Keys carry the cache generation so a flush (or a cost-model
+        // version bump) invalidates without touching entries.
         let opt_cache = Arc::new(Mutex::new(
-            crate::util::Lru::<OptimizeSpec, OptimizeResult>::new(cfg.opt_cache_cap),
+            crate::util::Lru::<(u64, OptimizeSpec), OptimizeResult>::new(cfg.opt_cache_cap),
+        ));
+        let opt_generation = Arc::new(std::sync::atomic::AtomicU64::new(
+            crate::costmodel::COST_MODEL_VERSION,
         ));
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers.max(1) {
             let rx = opt_rx.clone();
             let m = metrics.clone();
             let cache = opt_cache.clone();
+            let generation = opt_generation.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("hofdla-opt-{w}"))
@@ -139,16 +152,18 @@ impl Coordinator {
                         let job = { rx.lock().unwrap().recv() };
                         match job {
                             Ok(Work::Opt { spec, reply }) => {
-                                let cached = cache.lock().unwrap().get(&spec);
+                                let stamp = generation.load(Ordering::Relaxed);
+                                let key = (stamp, spec);
+                                let cached = cache.lock().unwrap().get(&key);
                                 let r = match cached {
                                     Some(hit) => {
                                         m.opt_cache_hits.fetch_add(1, Ordering::Relaxed);
                                         Ok(Response::Optimized(hit))
                                     }
                                     None => {
-                                        let r = pipeline::optimize(&spec);
+                                        let r = pipeline::optimize(&key.1);
                                         if let Ok(res) = &r {
-                                            cache.lock().unwrap().put(spec, res.clone());
+                                            cache.lock().unwrap().put(key, res.clone());
                                         }
                                         r.map(Response::Optimized)
                                     }
@@ -231,7 +246,23 @@ impl Coordinator {
             n_workers: cfg.workers.max(1),
             workers,
             rt_thread: Some(rt_thread),
+            opt_generation,
         })
+    }
+
+    /// Invalidate every cached optimize result by advancing the cache
+    /// generation (ROADMAP: cache invalidation policy for the coordinator
+    /// LRU). Call after anything that changes ranking semantics — e.g. a
+    /// cost model that learns online. In-flight jobs are unaffected; stale
+    /// entries age out of the LRU on their own.
+    pub fn flush_opt_cache(&self) {
+        self.opt_generation.fetch_add(1, Ordering::Relaxed);
+        self.metrics.opt_cache_flushes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The current optimize-cache generation (diagnostics / tests).
+    pub fn opt_cache_generation(&self) -> u64 {
+        self.opt_generation.load(Ordering::Relaxed)
     }
 
     fn run_batch(
@@ -330,6 +361,7 @@ mod tests {
             rank_by: RankBy::CostModel,
             subdivide_rnz: None,
             top_k: 6,
+            prune: false,
         }
     }
 
@@ -398,6 +430,30 @@ mod tests {
     }
 
     #[test]
+    fn flush_invalidates_optimize_cache() {
+        let c = Coordinator::start(Config {
+            workers: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        let g0 = c.opt_cache_generation();
+        assert_eq!(g0, crate::costmodel::COST_MODEL_VERSION);
+        // Warm the cache, hit it once.
+        c.call(Request::Optimize(opt_spec(16))).unwrap();
+        c.call(Request::Optimize(opt_spec(16))).unwrap();
+        assert_eq!(c.metrics.opt_cache_hits.load(Ordering::Relaxed), 1);
+        // Flush: the same spec must re-run the pipeline (no new hit), and
+        // the refreshed entry must serve hits again afterwards.
+        c.flush_opt_cache();
+        assert_eq!(c.opt_cache_generation(), g0 + 1);
+        assert_eq!(c.metrics.opt_cache_flushes.load(Ordering::Relaxed), 1);
+        c.call(Request::Optimize(opt_spec(16))).unwrap();
+        assert_eq!(c.metrics.opt_cache_hits.load(Ordering::Relaxed), 1);
+        c.call(Request::Optimize(opt_spec(16))).unwrap();
+        assert_eq!(c.metrics.opt_cache_hits.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
     fn parse_errors_fail_cleanly() {
         let c = Coordinator::start(Config::default()).unwrap();
         let bad = OptimizeSpec {
@@ -406,6 +462,7 @@ mod tests {
             rank_by: RankBy::CostModel,
             subdivide_rnz: None,
             top_k: 3,
+            prune: false,
         };
         assert!(c.call(Request::Optimize(bad)).is_err());
         assert_eq!(c.metrics.failed.load(Ordering::Relaxed), 1);

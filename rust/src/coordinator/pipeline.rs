@@ -7,7 +7,7 @@
 use crate::cachesim::{simulate, HierarchyConfig};
 use crate::costmodel::estimate;
 use crate::dsl;
-use crate::enumerate::{enumerate_all, Variant};
+use crate::enumerate::{enumerate_search, SearchOptions, Variant, DEFAULT_PRUNE_SLACK};
 use crate::exec::lower;
 use crate::layout::Layout;
 use crate::rewrite::{fusion, normalize, subdivision, Ctx};
@@ -38,6 +38,10 @@ pub struct OptimizeSpec {
     pub subdivide_rnz: Option<usize>,
     /// Keep this many rows in the report.
     pub top_k: usize,
+    /// Cut dominated candidates inside the enumeration BFS (branch-and-
+    /// bound against the shared cost bound, with the conservative
+    /// [`DEFAULT_PRUNE_SLACK`]). `false` keeps the search exhaustive.
+    pub prune: bool,
 }
 
 /// The pipeline's report.
@@ -91,8 +95,24 @@ pub fn optimize(spec: &OptimizeSpec) -> Result<OptimizeResult> {
     let label_refs: Vec<&str> = labels.iter().map(|s| s.as_str()).collect();
     let start = Variant::new(start_expr, &label_refs);
 
-    let variants = enumerate_all(&start, &ctx, 4096)?;
-    let scores = rank_variants(&variants, &env, spec.rank_by)?;
+    // Sharded, id-native BFS; cost-model scores come back with the
+    // variants, so the CostModel ranking below is free.
+    let opts = SearchOptions {
+        limit: 4096,
+        shards: 0, // auto: fan one job out across the worker pool
+        prune_slack: if spec.prune {
+            Some(DEFAULT_PRUNE_SLACK)
+        } else {
+            None
+        },
+        score: matches!(spec.rank_by, RankBy::CostModel),
+    };
+    let search = enumerate_search(&start, &ctx, &opts)?;
+    let variants = search.variants;
+    let scores = match spec.rank_by {
+        RankBy::CostModel if search.scores.len() == variants.len() => search.scores,
+        _ => rank_variants(&variants, &env, spec.rank_by)?,
+    };
     let mut ranking: Vec<(String, f64)> = variants
         .iter()
         .zip(&scores)
@@ -247,6 +267,7 @@ mod tests {
             rank_by,
             subdivide_rnz: None,
             top_k: 10,
+            prune: false,
         }
     }
 
@@ -274,6 +295,23 @@ mod tests {
     }
 
     #[test]
+    fn pruned_pipeline_matches_exhaustive_on_subdivided_matmul() {
+        // ISSUE 2 acceptance: on the n=64 / b=4 matmul workload the
+        // pruned + sharded search returns the same best variant (and the
+        // same full ranking) as exhaustive mode.
+        let mut exhaustive = matmul_spec(64, RankBy::CostModel);
+        exhaustive.subdivide_rnz = Some(4);
+        let mut pruned = exhaustive.clone();
+        pruned.prune = true;
+        let a = optimize(&exhaustive).unwrap();
+        let b = optimize(&pruned).unwrap();
+        assert_eq!(a.variants_explored, 12); // Table 2
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.variants_explored, b.variants_explored);
+        assert_eq!(a.ranking, b.ranking);
+    }
+
+    #[test]
     fn pipeline_fuses_before_enumerating() {
         // an unfused pipeline over vectors: map f (map g v) reduced
         let spec = OptimizeSpec {
@@ -282,6 +320,7 @@ mod tests {
             rank_by: RankBy::CostModel,
             subdivide_rnz: None,
             top_k: 3,
+            prune: false,
         };
         let r = optimize(&spec).unwrap();
         assert_eq!(r.variants_explored, 1); // single rnz after fusion

@@ -19,6 +19,21 @@
 
 use crate::exec::{Node, Program};
 
+/// Monotone version stamp of the analytical model. The coordinator mixes
+/// this into its optimize-result cache generation, so bumping it whenever
+/// [`estimate`]'s scoring changes invalidates every cached ranking
+/// computed under the old model (ROADMAP: "needs a version stamp once the
+/// cost model learns online").
+///
+/// Branch-and-bound pruning in [`crate::enumerate`] also leans on a
+/// property of the current constants: per leaf iteration, each input
+/// track costs between 0.01 (register reuse) and 1.0 (fresh line), plus
+/// a fixed 0.125 for the destination, so for kernels with ≤ ~20 input
+/// tracks no rearrangement can score worse than ~64× the best one. Keep
+/// [`crate::enumerate::DEFAULT_PRUNE_SLACK`] above that ratio when
+/// changing these constants.
+pub const COST_MODEL_VERSION: u64 = 1;
+
 /// Static cost estimate for one lowered variant.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CostEstimate {

@@ -44,9 +44,9 @@
 //! - `f64` literals are stored by bit pattern so nodes are `Eq + Hash`;
 //!   `extract` restores the exact bits.
 
-use super::expr::{Expr, Prim};
+use super::expr::{fresh_var, Expr, Prim};
 use std::cell::Cell;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 /// Identity of an interned expression. Two `ExprId`s from the same arena
 /// are equal iff the expressions are structurally equal.
@@ -202,6 +202,125 @@ impl ExprArena {
         self.insert(node)
     }
 
+    /// Free variables of the expression behind `id` (shadow-aware), the
+    /// arena twin of [`Expr::free_vars`]. Used by the id-native rewrite
+    /// rules so pattern guards never have to extract a `Box<Expr>` tree.
+    pub fn free_vars_id(&self, id: ExprId) -> HashSet<String> {
+        let mut out = HashSet::new();
+        self.collect_free(id, &mut Vec::new(), &mut out);
+        out
+    }
+
+    fn collect_free(&self, id: ExprId, bound: &mut Vec<String>, out: &mut HashSet<String>) {
+        match self.get(id) {
+            Node::Var(x) => {
+                if !bound.iter().any(|b| b == x) {
+                    out.insert(x.clone());
+                }
+            }
+            Node::Lit(_) | Node::Prim(_) | Node::Input(_) => {}
+            Node::Lam { params, body } => {
+                let n = params.len();
+                bound.extend(params.iter().cloned());
+                self.collect_free(*body, bound, out);
+                bound.truncate(bound.len() - n);
+            }
+            Node::App { f, args } | Node::Nzip { f, args } => {
+                self.collect_free(*f, bound, out);
+                for &a in args {
+                    self.collect_free(a, bound, out);
+                }
+            }
+            Node::Rnz { r, m, args } => {
+                self.collect_free(*r, bound, out);
+                self.collect_free(*m, bound, out);
+                for &a in args {
+                    self.collect_free(a, bound, out);
+                }
+            }
+            Node::Lift { f } => self.collect_free(*f, bound, out),
+            Node::Subdiv { arg, .. } | Node::Flatten { arg, .. } | Node::Flip { arg, .. } => {
+                self.collect_free(*arg, bound, out)
+            }
+        }
+    }
+
+    /// `true` iff `x` occurs free in the expression behind `id` — the
+    /// cheap membership query the rule guards use (no set allocation).
+    pub fn contains_free(&self, id: ExprId, x: &str) -> bool {
+        match self.get(id) {
+            Node::Var(v) => v == x,
+            Node::Lit(_) | Node::Prim(_) | Node::Input(_) => false,
+            Node::Lam { params, body } => {
+                !params.iter().any(|p| p == x) && self.contains_free(*body, x)
+            }
+            Node::App { f, args } | Node::Nzip { f, args } => {
+                self.contains_free(*f, x) || args.iter().any(|&a| self.contains_free(a, x))
+            }
+            Node::Rnz { r, m, args } => {
+                self.contains_free(*r, x)
+                    || self.contains_free(*m, x)
+                    || args.iter().any(|&a| self.contains_free(a, x))
+            }
+            Node::Lift { f } => self.contains_free(*f, x),
+            Node::Subdiv { arg, .. } | Node::Flatten { arg, .. } | Node::Flip { arg, .. } => {
+                self.contains_free(*arg, x)
+            }
+        }
+    }
+
+    /// Capture-avoiding substitution `id[x := val]` performed entirely in
+    /// the arena — the id-native twin of [`Expr::subst`]. Shared subtrees
+    /// that do not mention `x` come back as the *same* id, so the result
+    /// stays maximally shared.
+    pub fn subst_id(&mut self, id: ExprId, x: &str, val: ExprId) -> ExprId {
+        match self.get(id).clone() {
+            Node::Var(ref y) => {
+                if y == x {
+                    val
+                } else {
+                    id
+                }
+            }
+            Node::Lit(_) | Node::Prim(_) | Node::Input(_) => id,
+            Node::Lam { params, body } => {
+                if params.iter().any(|p| p == x) {
+                    // x is shadowed; nothing to do below.
+                    return id;
+                }
+                let val_free = self.free_vars_id(val);
+                if params.iter().any(|p| val_free.contains(p)) {
+                    // Rename clashing binders to fresh names first.
+                    let mut new_params = Vec::with_capacity(params.len());
+                    let mut new_body = body;
+                    for p in &params {
+                        if val_free.contains(p) {
+                            let np = fresh_var(p.split('%').next().unwrap_or(p));
+                            let npv = self.insert(Node::Var(np.clone()));
+                            new_body = self.subst_id(new_body, p, npv);
+                            new_params.push(np);
+                        } else {
+                            new_params.push(p.clone());
+                        }
+                    }
+                    let nb = self.subst_id(new_body, x, val);
+                    self.insert(Node::Lam {
+                        params: new_params,
+                        body: nb,
+                    })
+                } else {
+                    let nb = self.subst_id(body, x, val);
+                    self.insert(Node::Lam { params, body: nb })
+                }
+            }
+            other => {
+                // Lam is handled above, so map_children never sees a binder.
+                let rebuilt = other.map_children(|c| self.subst_id(c, x, val));
+                self.insert(rebuilt)
+            }
+        }
+    }
+
     /// Reconstruct the `Box<Expr>` tree behind an id (the conversion layer
     /// back to the parser/interpreter representation).
     pub fn extract(&self, id: ExprId) -> Expr {
@@ -331,6 +450,42 @@ mod tests {
         arena.intern(&e);
         // dot + 2 inputs + prim(+)/prim(*) + the zip node ≪ 2 full copies.
         assert!(arena.len() < e.size());
+    }
+
+    #[test]
+    fn free_vars_id_matches_expr_free_vars() {
+        let mut arena = ExprArena::new();
+        let e = lam1("x", app2(add(), var("x"), var("y")));
+        let id = arena.intern(&e);
+        assert_eq!(arena.free_vars_id(id), e.free_vars());
+        assert!(arena.contains_free(id, "y"));
+        assert!(!arena.contains_free(id, "x"));
+    }
+
+    #[test]
+    fn subst_id_avoids_capture_like_expr_subst() {
+        // (\y -> x + y)[x := y] must rename the binder, exactly as the
+        // Box<Expr> substitution does (checked up to alpha).
+        let mut arena = ExprArena::new();
+        let e = lam1("y", app2(add(), var("x"), var("y")));
+        let id = arena.intern(&e);
+        let val = arena.intern(&var("y"));
+        let out = arena.subst_id(id, "x", val);
+        let expected = e.subst("x", &var("y"));
+        assert!(
+            arena.extract(out).alpha_eq(&expected),
+            "{} vs {}",
+            crate::dsl::pretty(&arena.extract(out)),
+            crate::dsl::pretty(&expected)
+        );
+    }
+
+    #[test]
+    fn subst_id_shadowed_is_identity() {
+        let mut arena = ExprArena::new();
+        let id = arena.intern(&lam1("x", var("x")));
+        let val = arena.intern(&lit(1.0));
+        assert_eq!(arena.subst_id(id, "x", val), id);
     }
 
     #[test]

@@ -9,17 +9,54 @@
 //! graph and deduplicating on the paper's display form (the two/three
 //! `rnz`s of a subdivided reduction are "not differentiated", so 4 HoFs
 //! with two rnzs yield the paper's 12 cases, not 24).
+//!
+//! # The search engine (ISSUE 2)
+//!
+//! [`enumerate_search`] runs the BFS natively on
+//! [`ExprId`]s: candidate generation ([`try_swap_at_id`]), normalization
+//! (an [`IdRewriter`] over the id-native rule set) and typechecking
+//! ([`crate::typecheck::infer_id`]) all happen inside per-shard
+//! [`ExprArena`]s, so `Box<Expr>` trees are rebuilt only once per *kept*
+//! candidate at the output boundary — never per node per rule probe.
+//!
+//! - **Sharding** — each BFS level's frontier is split round-robin across
+//!   worker shards (own arena, own normalize memo, own typecheck cache);
+//!   a deterministic merge step dedups in frontier order, so the result
+//!   order is identical to the serial queue BFS no matter how many shards
+//!   run. One large job fans out across the pool, not just many small
+//!   jobs.
+//! - **Pruning** — with [`SearchOptions::prune_slack`] set, candidates
+//!   are scored incrementally with the analytic cost model and a
+//!   best-known bound is shared across shards through an atomic; a
+//!   candidate scoring worse than `slack × bound` is cut (neither kept
+//!   nor expanded). The bound only tightens at level boundaries, so
+//!   pruning decisions stay deterministic under any shard count.
+//! - **Dedup** — candidates are deduplicated on an integer label-token
+//!   key (the collapsed spine permutation), not on formatted
+//!   `display_key()` strings; display strings are produced only at the
+//!   output boundary. (Dedup *cannot* key on raw `ExprId`s: fresh-binder
+//!   rules make alpha-variants of the same permutation intern to
+//!   different ids, which would break the paper's 6/12 counts — the
+//!   per-shard typecheck cache is what keys on `ExprId`.)
+//!
+//! The seed `Box<Expr>` expansion path is kept alive behind
+//! [`crate::dsl::intern::with_memo_disabled`] and the differential tests
+//! hold both engines to identical variant sets and orders.
 
 mod sjt;
 pub mod starts;
 
 pub use sjt::sjt_permutations;
 
-use crate::dsl::intern::{ExprArena, ExprId};
+use crate::costmodel::estimate;
+use crate::dsl::intern::{memo_enabled, ExprArena, ExprId, Node};
 use crate::dsl::Expr;
-use crate::rewrite::{exchange, normalize, Ctx};
+use crate::exec::lower;
+use crate::rewrite::{exchange, normalize, normalize_id_rules, Ctx, IdRewriter};
+use crate::typecheck::Env;
 use crate::{Error, Result};
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// One rearrangement of the computation: the expression plus the spine
 /// labels from outermost to innermost (`["mapA", "rnz", "mapB"]` reads as
@@ -146,10 +183,401 @@ pub fn try_swap_at(e: &Expr, depth: usize, ctx: &Ctx) -> Option<Expr> {
     rec(e, depth, ctx).map(|x| normalize(&x))
 }
 
-/// Breadth-first enumeration of all rearrangements reachable by adjacent
-/// exchanges, deduplicated on the display key. Every returned variant
-/// typechecks under `ctx.env`.
-pub fn enumerate_all(start: &Variant, ctx: &Ctx, limit: usize) -> Result<Vec<Variant>> {
+/// Id-native twin of [`try_swap_at`]: descend the interned spine to
+/// `depth` (binding parameter layouts as it goes) and apply an exchange
+/// rule there. Unlike [`try_swap_at`] the result is **not** normalized —
+/// the caller runs its own [`IdRewriter`] over the same arena so the
+/// normalize memo is shared across every candidate of the search.
+pub fn try_swap_at_id(
+    arena: &mut ExprArena,
+    id: ExprId,
+    depth: usize,
+    ctx: &Ctx,
+) -> Option<ExprId> {
+    if depth == 0 {
+        if let Some(r) = exchange::map_map_id(arena, id, ctx) {
+            return Some(r);
+        }
+        if let Some(r) = exchange::map_map_nested_id(arena, id, ctx) {
+            return Some(r);
+        }
+        if let Some(r) = exchange::map_rnz_id(arena, id, ctx) {
+            return Some(r);
+        }
+        if let Some(r) = exchange::rnz_map_id(arena, id, ctx) {
+            return Some(r);
+        }
+        return exchange::rnz_rnz_id(arena, id, ctx);
+    }
+    match arena.get(id).clone() {
+        Node::Nzip { f, args } => {
+            let Node::Lam { params, body } = arena.get(f).clone() else {
+                return None;
+            };
+            if params.len() != args.len() {
+                return None;
+            }
+            let mut ctx2 = ctx.clone();
+            for (p, &a) in params.iter().zip(&args) {
+                let elem = ctx.layout_of_id(arena, a).ok()?.peel_outer().ok()?;
+                ctx2.vars.insert(p.clone(), elem);
+            }
+            let new_body = try_swap_at_id(arena, body, depth - 1, &ctx2)?;
+            let lam = arena.insert(Node::Lam {
+                params,
+                body: new_body,
+            });
+            Some(arena.insert(Node::Nzip { f: lam, args }))
+        }
+        Node::Rnz { r, m, args } => {
+            let Node::Lam { params, body } = arena.get(m).clone() else {
+                return None;
+            };
+            if params.len() != args.len() {
+                return None;
+            }
+            let mut ctx2 = ctx.clone();
+            for (p, &a) in params.iter().zip(&args) {
+                let elem = ctx.layout_of_id(arena, a).ok()?.peel_outer().ok()?;
+                ctx2.vars.insert(p.clone(), elem);
+            }
+            let new_body = try_swap_at_id(arena, body, depth - 1, &ctx2)?;
+            let lam = arena.insert(Node::Lam {
+                params,
+                body: new_body,
+            });
+            Some(arena.insert(Node::Rnz { r, m: lam, args }))
+        }
+        _ => None,
+    }
+}
+
+/// Default branch-and-bound slack for [`SearchOptions::prune_slack`].
+///
+/// Chosen so pruning is *provably lossless* for every workload this crate
+/// ships: under the current cost model a leaf iteration costs between
+/// `0.01·tracks + 0.125` and `1.0·tracks + 0.125 (+0.1·acc/iters ≤ 0.125)`
+/// per iteration, so for kernels with up to ~20 input tracks no
+/// rearrangement of the same computation can score worse than ~64× the
+/// optimum — i.e. nothing inside the reachable swap graph is ever cut,
+/// and the pruned search returns exactly the exhaustive result while the
+/// bound machinery stands ready to cut genuinely degenerate candidates
+/// (deep fused nests with many tracks). Callers that accept heuristic
+/// cuts can pass a tighter slack explicitly.
+pub const DEFAULT_PRUNE_SLACK: f64 = 64.0;
+
+/// Cap on automatic shard fan-out: several coordinator workers may each
+/// be searching at once, and one shard per core per job would
+/// oversubscribe the machine workers-fold (same rationale as the ranking
+/// fan-out cap in the pipeline).
+const MAX_SEARCH_SHARDS: usize = 4;
+
+/// Knobs for [`enumerate_search`].
+#[derive(Clone, Copy, Debug)]
+pub struct SearchOptions {
+    /// Stop once this many variants have been kept.
+    pub limit: usize,
+    /// Worker shards for frontier expansion: `1` = serial, `0` = auto
+    /// (one per available core, capped at [`MAX_SEARCH_SHARDS`]).
+    pub shards: usize,
+    /// Branch-and-bound slack: a candidate scoring worse than
+    /// `slack × best-known-score` is cut — neither kept nor expanded.
+    /// `None` keeps the search exhaustive.
+    pub prune_slack: Option<f64>,
+    /// Score candidates with the analytic cost model during the BFS and
+    /// return the scores (implied by `prune_slack`; the pipeline reuses
+    /// them as the ranking, skipping a second scoring pass).
+    pub score: bool,
+}
+
+impl Default for SearchOptions {
+    fn default() -> Self {
+        SearchOptions {
+            limit: 4096,
+            shards: 0,
+            prune_slack: None,
+            score: false,
+        }
+    }
+}
+
+/// Aggregate counters from one [`enumerate_search`] run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SearchStats {
+    /// Successful exchange applications (pre-dedup).
+    pub generated: usize,
+    /// Variants kept in the result set.
+    pub kept: usize,
+    /// Candidates cut by the cost bound.
+    pub pruned: usize,
+    /// Candidates dropped because they no longer typechecked.
+    pub type_rejects: usize,
+    /// Worker shards used.
+    pub shards: usize,
+}
+
+/// Everything [`enumerate_search`] produces.
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub variants: Vec<Variant>,
+    /// Cost-model score per variant (same order as `variants`; empty when
+    /// scoring was off).
+    pub scores: Vec<f64>,
+    pub stats: SearchStats,
+}
+
+/// The shared best-known score: an `f64` min over an atomic word, the
+/// bound every shard consults when pruning.
+struct AtomicScore(AtomicU64);
+
+impl AtomicScore {
+    fn new(v: f64) -> Self {
+        AtomicScore(AtomicU64::new(v.to_bits()))
+    }
+
+    fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    fn fetch_min(&self, v: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        while v < f64::from_bits(cur) {
+            match self.0.compare_exchange_weak(
+                cur,
+                v.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(c) => cur = c,
+            }
+        }
+    }
+}
+
+/// Collapse a label sequence to its integer token key — the dedup key of
+/// the BFS (two permutations collide exactly when their `display_key()`s
+/// would be equal, but no `String` is ever formatted here).
+fn label_key(labels: &[String], tokens: &mut Vec<String>) -> Vec<u8> {
+    labels
+        .iter()
+        .map(|l| {
+            let c = collapse(l);
+            match tokens.iter().position(|t| t == c) {
+                Some(i) => i as u8,
+                None => {
+                    tokens.push(c.to_string());
+                    (tokens.len() - 1) as u8
+                }
+            }
+        })
+        .collect()
+}
+
+/// Analytic cost-model score of one candidate (the paper's early-cut
+/// metric): lower the loop nest, estimate, collapse to the scalar score.
+/// Candidates that do not lower score `+∞`; they are kept (ranked last)
+/// and explicitly never pruned, so pruned and exhaustive mode always see
+/// the same variant set. (The seed pipeline instead failed the whole job
+/// on the first unlowerable variant; ranking it last keeps the job
+/// useful.)
+fn score_expr(e: &Expr, env: &Env) -> f64 {
+    match lower(e, env) {
+        Ok(prog) => estimate(&prog).score(),
+        Err(_) => f64::INFINITY,
+    }
+}
+
+/// What one shard returns for one expanded parent: surviving children in
+/// swap-depth order plus the counters the merge step aggregates.
+#[derive(Default)]
+struct Expansion {
+    children: Vec<(Variant, Option<f64>)>,
+    generated: usize,
+    pruned: usize,
+    type_rejects: usize,
+}
+
+/// One search worker: its own hash-consing arena, its own memoized
+/// id-native normalizer over that arena, and its own `ExprId`-keyed
+/// typecheck cache. Shards persist across BFS levels so all three warm up
+/// over the whole search.
+struct Shard {
+    arena: ExprArena,
+    norm: IdRewriter,
+    checked: HashMap<ExprId, bool>,
+    /// Cost-model score per interned candidate — scoring is structural,
+    /// so a variant reached along several swap paths is lowered and
+    /// estimated once, not once per path.
+    scored: HashMap<ExprId, f64>,
+}
+
+impl Shard {
+    fn new() -> Self {
+        Shard {
+            arena: ExprArena::new(),
+            norm: IdRewriter::new(&normalize_id_rules()),
+            checked: HashMap::new(),
+            scored: HashMap::new(),
+        }
+    }
+
+    /// Expand one parent variant: try every adjacent swap, normalize,
+    /// typecheck, score, prune. Children come back in swap-depth order so
+    /// the merge step can reproduce the serial BFS order exactly.
+    #[allow(clippy::too_many_arguments)]
+    fn expand(
+        &mut self,
+        parent: &Variant,
+        n: usize,
+        ctx: &Ctx,
+        id_native: bool,
+        scoring: bool,
+        slack: Option<f64>,
+        bound: &AtomicScore,
+    ) -> Expansion {
+        let mut exp = Expansion::default();
+        // The id-native engine is the production path; the seed
+        // `Box<Expr>` path stays reachable via `with_memo_disabled` for
+        // differential testing. The flag is sampled once on the search's
+        // calling thread (`memo_enabled` is thread-local and would read
+        // `true` inside freshly spawned shard threads).
+        let pid = if id_native {
+            Some(self.arena.intern(&parent.expr))
+        } else {
+            None
+        };
+        for d in 0..n.saturating_sub(1) {
+            let (nid, extracted) = match pid {
+                Some(pid) => {
+                    let Some(swapped) = try_swap_at_id(&mut self.arena, pid, d, ctx) else {
+                        continue;
+                    };
+                    (self.norm.rewrite(&mut self.arena, swapped), None)
+                }
+                None => {
+                    let Some(new_expr) = try_swap_at(&parent.expr, d, ctx) else {
+                        continue;
+                    };
+                    (self.arena.intern(&new_expr), Some(new_expr))
+                }
+            };
+            exp.generated += 1;
+            // Defensive: drop rewrites that no longer typecheck — paying
+            // for inference once per distinct interned tree.
+            let ok = match self.checked.get(&nid) {
+                Some(&ok) => ok,
+                None => {
+                    let ok = crate::typecheck::infer_id(&self.arena, nid, &ctx.env).is_ok();
+                    self.checked.insert(nid, ok);
+                    ok
+                }
+            };
+            if !ok {
+                exp.type_rejects += 1;
+                continue;
+            }
+            // Output boundary: the one extract per surviving candidate.
+            let expr = match extracted {
+                Some(e) => e,
+                None => self.arena.extract(nid),
+            };
+            let score = if scoring {
+                Some(match self.scored.get(&nid) {
+                    Some(&s) => s,
+                    None => {
+                        let s = score_expr(&expr, &ctx.env);
+                        self.scored.insert(nid, s);
+                        s
+                    }
+                })
+            } else {
+                None
+            };
+            if let (Some(s), Some(sl)) = (score, slack) {
+                // The bound only moves at level boundaries, so this read
+                // is the same in every shard — pruning is deterministic
+                // under any shard count. Unlowerable (infinite-score)
+                // candidates are never cut: pruning must not change the
+                // variant set relative to exhaustive mode.
+                if s.is_finite() && s > sl * bound.get() {
+                    exp.pruned += 1;
+                    continue;
+                }
+            }
+            let mut labels = parent.labels.clone();
+            labels.swap(d, d + 1);
+            exp.children.push((Variant { expr, labels }, score));
+        }
+        exp
+    }
+}
+
+/// Expand a whole frontier level across the shard pool, returning one
+/// [`Expansion`] per parent **in frontier order** (parents are dealt
+/// round-robin; results are reassembled by index).
+#[allow(clippy::too_many_arguments)]
+fn parallel_expand(
+    shards: &mut [Shard],
+    frontier: &[Variant],
+    n: usize,
+    ctx: &Ctx,
+    scoring: bool,
+    slack: Option<f64>,
+    bound: &AtomicScore,
+) -> Result<Vec<Expansion>> {
+    let nshards = shards.len();
+    let mut results: Vec<Option<Expansion>> = Vec::new();
+    results.resize_with(frontier.len(), || None);
+    let mut panicked = false;
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (k, shard) in shards.iter_mut().enumerate() {
+            let parents: Vec<(usize, &Variant)> = frontier
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i % nshards == k)
+                .collect();
+            if parents.is_empty() {
+                continue;
+            }
+            handles.push(s.spawn(move || {
+                parents
+                    .into_iter()
+                    .map(|(i, v)| (i, shard.expand(v, n, ctx, true, scoring, slack, bound)))
+                    .collect::<Vec<_>>()
+            }));
+        }
+        for h in handles {
+            match h.join() {
+                Ok(rs) => {
+                    for (i, r) in rs {
+                        results[i] = Some(r);
+                    }
+                }
+                Err(_) => panicked = true,
+            }
+        }
+    });
+    if panicked {
+        return Err(Error::Rewrite("search shard panicked".into()));
+    }
+    Ok(results
+        .into_iter()
+        .map(|r| r.expect("every parent expanded"))
+        .collect())
+}
+
+/// Breadth-first enumeration of rearrangements reachable by adjacent
+/// exchanges, sharded across a worker pool and (optionally) pruned by a
+/// shared cost bound. Every returned variant typechecks under `ctx.env`;
+/// the result order is the serial BFS discovery order regardless of shard
+/// count or pruning settings.
+pub fn enumerate_search(
+    start: &Variant,
+    ctx: &Ctx,
+    opts: &SearchOptions,
+) -> Result<SearchResult> {
     let n = start.labels.len();
     if spine_kinds(&start.expr).len() != n {
         return Err(Error::Rewrite(format!(
@@ -159,50 +587,114 @@ pub fn enumerate_all(start: &Variant, ctx: &Ctx, limit: usize) -> Result<Vec<Var
         )));
     }
     crate::typecheck::infer(&start.expr, &ctx.env)?;
-    // Hash-consing arena for the BFS: interning a candidate gives O(1)
-    // structural identity, so a tree reached along several swap paths is
-    // typechecked once instead of once per path.
-    let mut arena = ExprArena::new();
-    let mut checked: HashMap<ExprId, bool> = HashMap::new();
-    let start_id = arena.intern(&start.expr);
-    checked.insert(start_id, true);
-    let mut seen: HashMap<String, usize> = HashMap::new();
-    let mut out: Vec<Variant> = Vec::new();
-    let mut queue: VecDeque<Variant> = VecDeque::new();
-    seen.insert(start.display_key(), 0);
-    out.push(start.clone());
-    queue.push_back(start.clone());
-    while let Some(v) = queue.pop_front() {
-        if out.len() >= limit {
-            break;
+    let scoring = opts.score || opts.prune_slack.is_some();
+    let start_score = if scoring {
+        Some(score_expr(&start.expr, &ctx.env))
+    } else {
+        None
+    };
+    // Sampled once here: `memo_enabled` is thread-local, so shard threads
+    // cannot consult it themselves. The seed engine also stays serial —
+    // it exists to reproduce seed behavior exactly.
+    let id_native = memo_enabled();
+    let threads = if !id_native {
+        1
+    } else {
+        match opts.shards {
+            0 => std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1)
+                .min(MAX_SEARCH_SHARDS),
+            t => t,
         }
-        for d in 0..n.saturating_sub(1) {
-            if let Some(new_expr) = try_swap_at(&v.expr, d, ctx) {
-                // Defensive: drop rewrites that no longer typecheck —
-                // paying for inference once per distinct interned tree.
-                let id = arena.intern(&new_expr);
-                let ok = *checked
-                    .entry(id)
-                    .or_insert_with(|| crate::typecheck::infer(&new_expr, &ctx.env).is_ok());
-                if !ok {
-                    continue;
+        .max(1)
+    };
+
+    let mut tokens: Vec<String> = Vec::new();
+    let mut seen: HashSet<Vec<u8>> = HashSet::new();
+    seen.insert(label_key(&start.labels, &mut tokens));
+    let mut out: Vec<Variant> = vec![start.clone()];
+    let mut scores: Vec<f64> = Vec::new();
+    if let Some(s) = start_score {
+        scores.push(s);
+    }
+    let bound = AtomicScore::new(start_score.unwrap_or(f64::INFINITY));
+    let mut stats = SearchStats {
+        shards: threads,
+        ..Default::default()
+    };
+    let mut shards: Vec<Shard> = (0..threads).map(|_| Shard::new()).collect();
+    let mut frontier: Vec<Variant> = vec![start.clone()];
+
+    while !frontier.is_empty() && out.len() < opts.limit {
+        let expansions: Vec<Expansion> = if threads > 1 && frontier.len() > 1 {
+            parallel_expand(
+                &mut shards,
+                &frontier,
+                n,
+                ctx,
+                scoring,
+                opts.prune_slack,
+                &bound,
+            )?
+        } else {
+            frontier
+                .iter()
+                .map(|v| {
+                    shards[0].expand(v, n, ctx, id_native, scoring, opts.prune_slack, &bound)
+                })
+                .collect()
+        };
+        // Deterministic merge: parents in frontier order, children in
+        // swap-depth order — exactly the serial queue BFS sequence.
+        let mut next: Vec<Variant> = Vec::new();
+        for exp in expansions {
+            // Count the whole level's work even past the limit — the
+            // shards already did it; only *keeping* stops (mirroring the
+            // serial per-pop limit check for the kept set).
+            stats.generated += exp.generated;
+            stats.pruned += exp.pruned;
+            stats.type_rejects += exp.type_rejects;
+            if out.len() >= opts.limit {
+                continue;
+            }
+            for (v, s) in exp.children {
+                if let Some(s) = s {
+                    bound.fetch_min(s);
                 }
-                let mut labels = v.labels.clone();
-                labels.swap(d, d + 1);
-                let nv = Variant {
-                    expr: new_expr,
-                    labels,
-                };
-                let key = nv.display_key();
-                if !seen.contains_key(&key) {
-                    seen.insert(key, out.len());
-                    out.push(nv.clone());
-                    queue.push_back(nv);
+                let key = label_key(&v.labels, &mut tokens);
+                if seen.insert(key) {
+                    out.push(v.clone());
+                    if let Some(s) = s {
+                        scores.push(s);
+                    }
+                    next.push(v);
                 }
             }
         }
+        frontier = next;
     }
-    Ok(out)
+    stats.kept = out.len();
+    Ok(SearchResult {
+        variants: out,
+        scores,
+        stats,
+    })
+}
+
+/// Breadth-first enumeration of all rearrangements reachable by adjacent
+/// exchanges, deduplicated on the display form. Every returned variant
+/// typechecks under `ctx.env`. Serial and exhaustive — the compatibility
+/// entry point; the pipeline calls [`enumerate_search`] for the sharded,
+/// cost-bounded engine.
+pub fn enumerate_all(start: &Variant, ctx: &Ctx, limit: usize) -> Result<Vec<Variant>> {
+    let opts = SearchOptions {
+        limit,
+        shards: 1,
+        prune_slack: None,
+        score: false,
+    };
+    Ok(enumerate_search(start, ctx, &opts)?.variants)
 }
 
 /// Compare a variant's executed output against reference candidates (the

@@ -33,7 +33,7 @@ fn main() {
 }
 
 fn usage() -> String {
-    "usage:\n  hofdla optimize <file.dsl> --input NAME=DIMxDIM [--rank cost|cachesim] [--subdivide-rnz B] [--top K]\n  hofdla enumerate --family naive|rnz|maps|rnz2|all [--n N] [--b B]\n  hofdla bench table1|table2|fig3|fig4|fig5|fig6|gpu|baselines|all [--n N] [--b B] [--sim]\n  hofdla run-artifact <name> [--n N]\n  hofdla serve --demo".to_string()
+    "usage:\n  hofdla optimize <file.dsl> --input NAME=DIMxDIM [--rank cost|cachesim] [--subdivide-rnz B] [--top K] [--prune]\n  hofdla enumerate --family naive|rnz|maps|rnz2|all [--n N] [--b B]\n  hofdla bench table1|table2|fig3|fig4|fig5|fig6|gpu|baselines|all [--n N] [--b B] [--sim]\n  hofdla run-artifact <name> [--n N]\n  hofdla serve --demo".to_string()
 }
 
 fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
@@ -84,6 +84,7 @@ fn run(args: &[String]) -> hofdla::Result<()> {
                 subdivide_rnz: flag_value(args, "--subdivide-rnz")
                     .and_then(|v| v.parse().ok()),
                 top_k: flag_usize(args, "--top", 12),
+                prune: args.iter().any(|a| a == "--prune"),
             };
             let r = hofdla::coordinator::optimize(&spec)?;
             println!("explored {} rearrangements", r.variants_explored);
@@ -191,6 +192,7 @@ fn run(args: &[String]) -> hofdla::Result<()> {
                 rank_by: RankBy::CacheSim,
                 subdivide_rnz: Some(16),
                 top_k: 12,
+                prune: false,
             };
             let Response::Optimized(r) = c.call(Request::Optimize(spec))? else {
                 return Err(err("optimize job returned a non-optimize response".into()));

@@ -216,9 +216,9 @@ pub fn rewrite_bottom_up(rules: &[Rule], e: &Expr) -> Expr {
     cur
 }
 
-/// When the arena of a [`MemoRewriter`] outgrows this many distinct nodes
-/// it is dropped and rebuilt, bounding long-lived worker memory.
-const ARENA_RESET_NODES: usize = 1 << 20;
+/// When a long-lived rewriter arena outgrows this many distinct nodes it
+/// is dropped and rebuilt, bounding worker memory.
+pub(crate) const ARENA_RESET_NODES: usize = 1 << 20;
 
 /// A bottom-up rewriter for one fixed rule set with a memo table keyed by
 /// interned [`ExprId`]: a shared subtree is normalized at most once, no
@@ -327,6 +327,120 @@ impl MemoRewriter {
     }
 }
 
+/// An id-native rewrite rule: matches and rebuilds directly against
+/// [`ExprArena`] nodes, so applying it allocates nothing and never
+/// round-trips through `Box<Expr>`. The id-native twin of [`Rule`]; every
+/// rule on the search hot path has both forms, and the differential tests
+/// hold them equivalent.
+#[derive(Clone, Copy)]
+pub struct IdRule {
+    pub name: &'static str,
+    pub apply: fn(&mut ExprArena, ExprId) -> Option<ExprId>,
+}
+
+impl std::fmt::Debug for IdRule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "IdRule({})", self.name)
+    }
+}
+
+/// A memoized bottom-up rewriter for one fixed [`IdRule`] set that runs
+/// *entirely* on interned ids: unlike [`MemoRewriter`] (which extracts a
+/// `Box<Expr>` at every node to apply its `fn(&Expr)` rules), no tree is
+/// ever rebuilt between rule applications. The caller owns the arena and
+/// must pass the *same* arena on every call — the memo table is keyed by
+/// that arena's ids; call [`IdRewriter::clear`] when swapping arenas.
+///
+/// The strategy mirrors [`rewrite_bottom_up`] / [`MemoRewriter`] exactly
+/// (children first, first-match rules at the node, re-pass children after
+/// a fire, global [`MAX_STEPS`] budget), so results agree with the
+/// `Box<Expr>` path up to the alpha-renaming of fresh-binder rules.
+pub struct IdRewriter {
+    rules: Vec<IdRule>,
+    memo: HashMap<ExprId, ExprId>,
+    steps: usize,
+}
+
+impl IdRewriter {
+    pub fn new(rules: &[IdRule]) -> Self {
+        IdRewriter {
+            rules: rules.to_vec(),
+            memo: HashMap::new(),
+            steps: 0,
+        }
+    }
+
+    /// Memoized subtrees currently known (diagnostics / tests).
+    pub fn memo_len(&self) -> usize {
+        self.memo.len()
+    }
+
+    /// Forget all memoized results. Must be called when the caller swaps
+    /// in a different (or rebuilt) arena.
+    pub fn clear(&mut self) {
+        self.memo.clear();
+    }
+
+    /// Rewrite `id` to fixpoint under this rewriter's rule set within
+    /// `arena`, reusing memoized results for every shared subtree.
+    pub fn rewrite(&mut self, arena: &mut ExprArena, id: ExprId) -> ExprId {
+        self.steps = 0;
+        let out = self.rewrite_id(arena, id);
+        if self.steps >= MAX_STEPS {
+            // Budget exhausted: partially-rewritten forms may have been
+            // memoized as if final. Drop the memo so the truncation only
+            // affects this call (matching the unmemoized engine).
+            self.memo.clear();
+        }
+        out
+    }
+
+    fn rewrite_id(&mut self, arena: &mut ExprArena, id: ExprId) -> ExprId {
+        if let Some(&r) = self.memo.get(&id) {
+            return r;
+        }
+        let mut cur = id;
+        // Same strategy as `pass`/`MemoRewriter::rewrite_id`: children
+        // first, rules at the node, and on a fire loop back so the
+        // rewritten node's children are reduced before retrying rules at
+        // the root. Recursion depth stays bounded by tree height.
+        loop {
+            if let Some(&r) = self.memo.get(&cur) {
+                cur = r;
+                break;
+            }
+            let rebuilt = arena
+                .get(cur)
+                .clone()
+                .map_children(|c| self.rewrite_id(arena, c));
+            cur = arena.insert(rebuilt);
+            if let Some(&r) = self.memo.get(&cur) {
+                cur = r;
+                break;
+            }
+            let mut fired = None;
+            if self.steps < MAX_STEPS {
+                for r in &self.rules {
+                    if let Some(n) = (r.apply)(arena, cur) {
+                        fired = Some(n);
+                        break;
+                    }
+                }
+            }
+            match fired {
+                Some(n) => {
+                    self.steps += 1;
+                    cur = n;
+                }
+                None => break,
+            }
+        }
+        self.memo.insert(id, cur);
+        self.memo.insert(cur, cur);
+        cur
+    }
+}
+
 fn normalize_rules() -> [Rule; 5] {
     [
         super::lambda::beta(),
@@ -337,18 +451,49 @@ fn normalize_rules() -> [Rule; 5] {
     ]
 }
 
+/// The id-native normalize rule set — same rules, same order, as
+/// [`normalize_uncached`]'s `Box<Expr>` set. Public so the enumeration
+/// search can run normalization inside its own per-shard arenas.
+pub fn normalize_id_rules() -> [IdRule; 5] {
+    [
+        super::lambda::beta_id(),
+        super::lambda::eta_id(),
+        super::simplify::flip_flip_id(),
+        super::simplify::flatten_subdiv_id(),
+        super::simplify::flip_same_dim_id(),
+    ]
+}
+
 thread_local! {
-    static NORMALIZE_MEMO: RefCell<MemoRewriter> =
-        RefCell::new(MemoRewriter::new(&normalize_rules()));
+    static NORMALIZE_ID: RefCell<(ExprArena, IdRewriter)> =
+        RefCell::new((ExprArena::new(), IdRewriter::new(&normalize_id_rules())));
+}
+
+/// Run a thread-local `(arena, rewriter)` pair over one expression:
+/// reset when the arena outgrows its budget, intern, rewrite on ids,
+/// extract at the boundary. Shared by [`normalize`] and
+/// [`super::fusion::fuse`].
+pub(crate) fn rewrite_interned(cell: &RefCell<(ExprArena, IdRewriter)>, e: &Expr) -> Expr {
+    let mut guard = cell.borrow_mut();
+    let (arena, rw) = &mut *guard;
+    if arena.len() > ARENA_RESET_NODES {
+        *arena = ExprArena::new();
+        rw.clear();
+    }
+    let id = arena.intern(e);
+    let out = rw.rewrite(arena, id);
+    arena.extract(out)
 }
 
 /// The standard cleanup set: β-reduction, η-reduction, layout-op
 /// simplification. Run after structural rewrites to keep expressions in
-/// normal form. Memoized per thread over the hash-consing arena — shared
-/// subtrees (ubiquitous across enumeration variants) are normalized once.
+/// normal form. Memoized per thread over the hash-consing arena and
+/// executed by the id-native engine — shared subtrees (ubiquitous across
+/// enumeration variants) are normalized once, and conversion to/from
+/// `Box<Expr>` happens only at this function's boundary, not per node.
 pub fn normalize(e: &Expr) -> Expr {
     if memo_enabled() {
-        NORMALIZE_MEMO.with(|m| m.borrow_mut().rewrite(e))
+        NORMALIZE_ID.with(|cell| rewrite_interned(cell, e))
     } else {
         normalize_uncached(e)
     }
@@ -489,6 +634,63 @@ mod tests {
         // no growth in the memo table.
         assert_eq!(memo.rewrite(&e), app2(add(), lit(0.0), lit(0.0)));
         assert_eq!(memo.memo_len(), after_first);
+    }
+
+    #[test]
+    fn id_rewriter_agrees_with_memo_rewriter() {
+        use crate::dsl::intern::Node;
+        let dec = Rule {
+            name: "dec",
+            apply: |e| match e {
+                Expr::Lit(x) if *x > 0.0 => Some(Expr::Lit(x - 1.0)),
+                _ => None,
+            },
+        };
+        let dec_id = IdRule {
+            name: "dec",
+            apply: |arena, id| {
+                let &Node::Lit(bits) = arena.get(id) else {
+                    return None;
+                };
+                let x = f64::from_bits(bits);
+                if x > 0.0 {
+                    Some(arena.insert(Node::Lit((x - 1.0).to_bits())))
+                } else {
+                    None
+                }
+            },
+        };
+        let e = app2(add(), lit(3.0), lit(3.0));
+        let mut memo = MemoRewriter::new(&[dec]);
+        let mut arena = ExprArena::new();
+        let mut idr = IdRewriter::new(&[dec_id]);
+        let id = arena.intern(&e);
+        let out = idr.rewrite(&mut arena, id);
+        assert_eq!(arena.extract(out), memo.rewrite(&e));
+        // Second call over the same tree: pure memo hits, no growth.
+        let before = idr.memo_len();
+        assert_eq!(idr.rewrite(&mut arena, id), out);
+        assert_eq!(idr.memo_len(), before);
+    }
+
+    #[test]
+    fn id_normalize_rules_match_box_normalize() {
+        let e = map(
+            lam1("x", app1(lam1("q", var("q")), var("x"))),
+            flip(0, flip(0, input("A"))),
+        );
+        let mut arena = ExprArena::new();
+        let mut idr = IdRewriter::new(&normalize_id_rules());
+        let id = arena.intern(&e);
+        let oid = idr.rewrite(&mut arena, id);
+        let out = arena.extract(oid);
+        let reference = normalize_uncached(&e);
+        assert!(
+            out.alpha_eq(&reference),
+            "{} vs {}",
+            crate::dsl::pretty(&out),
+            crate::dsl::pretty(&reference)
+        );
     }
 
     #[test]

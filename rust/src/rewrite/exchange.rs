@@ -15,7 +15,12 @@
 //! These rules are context-sensitive (they need ranks to place the flips),
 //! so they take a typing [`Ctx`] rather than being plain [`super::Rule`]s.
 
+//! Each rule also has an id-native `*_id` twin operating directly on
+//! [`ExprArena`] nodes; the enumeration search uses those so candidate
+//! generation never rebuilds `Box<Expr>` trees.
+
 use super::Ctx;
+use crate::dsl::intern::{ExprArena, ExprId, Node};
 use crate::dsl::{fresh_var, Expr};
 
 /// eq 36-37. `map (\x -> map (\y -> body) U) V  =  map (\y -> map (\x ->
@@ -77,6 +82,73 @@ pub fn map_map(e: &Expr, _ctx: &Ctx) -> Option<Expr> {
         }),
         args: vec![u_arr.clone()],
     })
+}
+
+/// Id-native twin of [`map_map`]: same match conditions and guards, the
+/// result is built (and maximally shared) in the arena.
+pub fn map_map_id(arena: &mut ExprArena, id: ExprId, _ctx: &Ctx) -> Option<ExprId> {
+    let Node::Nzip { f, args } = arena.get(id).clone() else {
+        return None;
+    };
+    let [v_arr] = args.as_slice() else {
+        return None;
+    };
+    let v_arr = *v_arr;
+    let Node::Lam { params, body } = arena.get(f).clone() else {
+        return None;
+    };
+    let [x] = params.as_slice() else { return None };
+    let x = x.clone();
+    let Node::Nzip {
+        f: inner_f,
+        args: inner_args,
+    } = arena.get(body).clone()
+    else {
+        return None;
+    };
+    let [u_arr] = inner_args.as_slice() else {
+        return None;
+    };
+    let u_arr = *u_arr;
+    let Node::Lam {
+        params: inner_params,
+        body: inner_body,
+    } = arena.get(inner_f).clone()
+    else {
+        return None;
+    };
+    let [y] = inner_params.as_slice() else {
+        return None;
+    };
+    let y = y.clone();
+    // U must not depend on x (it must be a loop-invariant array).
+    if arena.contains_free(u_arr, &x) {
+        return None;
+    }
+    // Rename binders apart so V (which sits under y's binder in the result)
+    // cannot capture.
+    let nx = fresh_var(x.split('%').next().unwrap_or(&x));
+    let ny = fresh_var(y.split('%').next().unwrap_or(&y));
+    let nxv = arena.insert(Node::Var(nx.clone()));
+    let nyv = arena.insert(Node::Var(ny.clone()));
+    let nb = arena.subst_id(inner_body, &x, nxv);
+    let new_body = arena.subst_id(nb, &y, nyv);
+    let inner_lam = arena.insert(Node::Lam {
+        params: vec![nx],
+        body: new_body,
+    });
+    let inner_nzip = arena.insert(Node::Nzip {
+        f: inner_lam,
+        args: vec![v_arr],
+    });
+    let outer_lam = arena.insert(Node::Lam {
+        params: vec![ny],
+        body: inner_nzip,
+    });
+    Some(arena.insert(Node::Nzip {
+        f: outer_lam,
+        args: vec![u_arr],
+    }))
 }
 
 /// The *nested-dependent* variant of eq 36-37: both maps traverse the same
@@ -152,6 +224,80 @@ pub fn map_map_nested(e: &Expr, ctx: &Ctx) -> Option<Expr> {
             arg: Box::new(m_arr.clone()),
         }],
     })
+}
+
+/// Id-native twin of [`map_map_nested`].
+pub fn map_map_nested_id(arena: &mut ExprArena, id: ExprId, ctx: &Ctx) -> Option<ExprId> {
+    let Node::Nzip { f, args } = arena.get(id).clone() else {
+        return None;
+    };
+    let [m_arr] = args.as_slice() else {
+        return None;
+    };
+    let m_arr = *m_arr;
+    let Node::Lam { params, body } = arena.get(f).clone() else {
+        return None;
+    };
+    let [x] = params.as_slice() else { return None };
+    let x = x.clone();
+    let Node::Nzip {
+        f: inner_f,
+        args: inner_args,
+    } = arena.get(body).clone()
+    else {
+        return None;
+    };
+    let [iterated] = inner_args.as_slice() else {
+        return None;
+    };
+    if !matches!(arena.get(*iterated), Node::Var(v) if *v == x) {
+        return None;
+    }
+    let Node::Lam {
+        params: inner_params,
+        body: inner_body,
+    } = arena.get(inner_f).clone()
+    else {
+        return None;
+    };
+    let [y] = inner_params.as_slice() else {
+        return None;
+    };
+    let y = y.clone();
+    // x may not leak into the body except through y.
+    if arena.contains_free(inner_body, &x) {
+        return None;
+    }
+    let rm = ctx.layout_of_id(arena, m_arr).ok()?.rank();
+    if rm < 2 {
+        return None;
+    }
+    let nx = fresh_var("x");
+    let ny = fresh_var("y");
+    let nyv = arena.insert(Node::Var(ny.clone()));
+    let new_body = arena.subst_id(inner_body, &y, nyv);
+    let inner_lam = arena.insert(Node::Lam {
+        params: vec![ny],
+        body: new_body,
+    });
+    let nxv = arena.insert(Node::Var(nx.clone()));
+    let inner_nzip = arena.insert(Node::Nzip {
+        f: inner_lam,
+        args: vec![nxv],
+    });
+    let outer_lam = arena.insert(Node::Lam {
+        params: vec![nx],
+        body: inner_nzip,
+    });
+    let flipped = arena.insert(Node::Flip {
+        d1: rm - 2,
+        d2: rm - 1,
+        arg: m_arr,
+    });
+    Some(arena.insert(Node::Nzip {
+        f: outer_lam,
+        args: vec![flipped],
+    }))
 }
 
 /// eq 42, left to right:
@@ -247,6 +393,94 @@ pub fn map_rnz(e: &Expr, ctx: &Ctx) -> Option<Expr> {
     })
 }
 
+/// Id-native twin of [`map_rnz`].
+pub fn map_rnz_id(arena: &mut ExprArena, id: ExprId, ctx: &Ctx) -> Option<ExprId> {
+    let Node::Nzip { f, args } = arena.get(id).clone() else {
+        return None;
+    };
+    let [a_arr] = args.as_slice() else {
+        return None;
+    };
+    let a_arr = *a_arr;
+    let Node::Lam { params, body } = arena.get(f).clone() else {
+        return None;
+    };
+    let [a] = params.as_slice() else { return None };
+    let a = a.clone();
+    let Node::Rnz {
+        r,
+        m,
+        args: rnz_args,
+    } = arena.get(body).clone()
+    else {
+        return None;
+    };
+    // Locate the bound row among the reduction's arguments.
+    let pos = rnz_args
+        .iter()
+        .position(|&x| matches!(arena.get(x), Node::Var(v) if *v == a))?;
+    // All other arguments must be independent of the row.
+    for (i, &other) in rnz_args.iter().enumerate() {
+        if i != pos && arena.contains_free(other, &a) {
+            return None;
+        }
+    }
+    // Rank of A decides the flip: the map consumed dim ra-1, the reduction
+    // consumes ra-2 — exchange them.
+    let ra = ctx.layout_of_id(arena, a_arr).ok()?.rank();
+    if ra < 2 {
+        return None;
+    }
+    let n = rnz_args.len();
+    let na = fresh_var("a");
+    let alpha = fresh_var("al");
+    let qs: Vec<String> = (0..n - 1).map(|i| fresh_var(&format!("q{i}"))).collect();
+    // m's argument list in original positions: α at pos, q's elsewhere.
+    let mut m_args: Vec<ExprId> = Vec::with_capacity(n);
+    let mut qi = 0usize;
+    for i in 0..n {
+        if i == pos {
+            m_args.push(arena.insert(Node::Var(alpha.clone())));
+        } else {
+            m_args.push(arena.insert(Node::Var(qs[qi].clone())));
+            qi += 1;
+        }
+    }
+    let m_call = arena.insert(Node::App { f: m, args: m_args });
+    let alpha_lam = arena.insert(Node::Lam {
+        params: vec![alpha],
+        body: m_call,
+    });
+    let nav = arena.insert(Node::Var(na.clone()));
+    let new_m_body = arena.insert(Node::Nzip {
+        f: alpha_lam,
+        args: vec![nav],
+    });
+    let mut new_params = vec![na];
+    new_params.extend(qs);
+    let mut new_args: Vec<ExprId> = Vec::with_capacity(n);
+    new_args.push(arena.insert(Node::Flip {
+        d1: ra - 2,
+        d2: ra - 1,
+        arg: a_arr,
+    }));
+    for (i, &other) in rnz_args.iter().enumerate() {
+        if i != pos {
+            new_args.push(other);
+        }
+    }
+    let lifted = arena.insert(Node::Lift { f: r });
+    let new_m = arena.insert(Node::Lam {
+        params: new_params,
+        body: new_m_body,
+    });
+    Some(arena.insert(Node::Rnz {
+        r: lifted,
+        m: new_m,
+        args: new_args,
+    }))
+}
+
 /// eq 42, right to left: recognise the flipped form and pull the map back
 /// outside.
 pub fn rnz_map(e: &Expr, ctx: &Ctx) -> Option<Expr> {
@@ -318,6 +552,87 @@ pub fn rnz_map(e: &Expr, ctx: &Ctx) -> Option<Expr> {
             arg: Box::new(args[j].clone()),
         }],
     })
+}
+
+/// Id-native twin of [`rnz_map`].
+pub fn rnz_map_id(arena: &mut ExprArena, id: ExprId, ctx: &Ctx) -> Option<ExprId> {
+    let Node::Rnz { r, m, args } = arena.get(id).clone() else {
+        return None;
+    };
+    // Reduction operator must be a lift (the accumulator is an array).
+    let &Node::Lift { f: r0 } = arena.get(r) else {
+        return None;
+    };
+    let Node::Lam { params, body } = arena.get(m).clone() else {
+        return None;
+    };
+    let Node::Nzip {
+        f: inner_f,
+        args: inner_args,
+    } = arena.get(body).clone()
+    else {
+        return None;
+    };
+    let [mapped_id] = inner_args.as_slice() else {
+        return None;
+    };
+    let Node::Var(mapped) = arena.get(*mapped_id).clone() else {
+        return None;
+    };
+    // Which parameter is the mapped one? Its position j also locates the
+    // flipped array among the rnz arguments.
+    let j = params.iter().position(|p| *p == mapped)?;
+    if args.len() != params.len() {
+        return None;
+    }
+    let Node::Lam {
+        params: alpha_params,
+        body: m_body,
+    } = arena.get(inner_f).clone()
+    else {
+        return None;
+    };
+    let [alpha] = alpha_params.as_slice() else {
+        return None;
+    };
+    let alpha = alpha.clone();
+    // The mapped parameter must not occur in the body beyond the map.
+    if arena.contains_free(m_body, &mapped) {
+        return None;
+    }
+    let ra = ctx.layout_of_id(arena, args[j]).ok()?.rank();
+    if ra < 2 {
+        return None;
+    }
+    // Rebuild: map (\a -> rnz r0 (\.. α at j ..) [.. Var a at j ..]) (flip A)
+    let na = fresh_var("a");
+    let mut inner_m_params: Vec<String> = params.clone();
+    inner_m_params[j] = alpha;
+    let nav = arena.insert(Node::Var(na.clone()));
+    let mut new_rnz_args: Vec<ExprId> = args.clone();
+    new_rnz_args[j] = nav;
+    let inner_m = arena.insert(Node::Lam {
+        params: inner_m_params,
+        body: m_body,
+    });
+    let inner_rnz = arena.insert(Node::Rnz {
+        r: r0,
+        m: inner_m,
+        args: new_rnz_args,
+    });
+    let outer_lam = arena.insert(Node::Lam {
+        params: vec![na],
+        body: inner_rnz,
+    });
+    let flipped = arena.insert(Node::Flip {
+        d1: ra - 2,
+        d2: ra - 1,
+        arg: args[j],
+    });
+    Some(arena.insert(Node::Nzip {
+        f: outer_lam,
+        args: vec![flipped],
+    }))
 }
 
 /// eq 43: interchange two nested reductions with the same (associative and
@@ -414,6 +729,111 @@ pub fn rnz_rnz(e: &Expr, ctx: &Ctx) -> Option<Expr> {
         }),
         args: new_args,
     })
+}
+
+/// Id-native twin of [`rnz_rnz`]. Operator equality is an O(1) id
+/// comparison here — structurally equal reducers always intern to the
+/// same id.
+pub fn rnz_rnz_id(arena: &mut ExprArena, id: ExprId, ctx: &Ctx) -> Option<ExprId> {
+    let Node::Rnz { r, m, args } = arena.get(id).clone() else {
+        return None;
+    };
+    let Node::Lam { params, body } = arena.get(m).clone() else {
+        return None;
+    };
+    let Node::Rnz {
+        r: r2,
+        m: m2,
+        args: inner_args,
+    } = arena.get(body).clone()
+    else {
+        return None;
+    };
+    // Same reduction operator (structurally = same id), commutative base.
+    if r != r2 {
+        return None;
+    }
+    let mut base = r;
+    while let &Node::Lift { f } = arena.get(base) {
+        base = f;
+    }
+    let &Node::Prim(p) = arena.get(base) else {
+        return None;
+    };
+    if !p.is_commutative() || !p.is_associative() {
+        return None;
+    }
+    // Inner args must start with exactly the outer params (in order),
+    // followed by extras independent of them.
+    let n = params.len();
+    if inner_args.len() < n || args.len() != n {
+        return None;
+    }
+    for (p_name, &ia) in params.iter().zip(&inner_args[..n]) {
+        if !matches!(arena.get(ia), Node::Var(v) if v == p_name) {
+            return None;
+        }
+    }
+    let extras = &inner_args[n..];
+    for &ex in extras {
+        if params.iter().any(|p| arena.contains_free(ex, p)) {
+            return None;
+        }
+    }
+    // Flip each outer array (they must all have rank ≥ 2).
+    let mut flipped = Vec::with_capacity(n);
+    for &a in &args {
+        let ra = ctx.layout_of_id(arena, a).ok()?.rank();
+        if ra < 2 {
+            return None;
+        }
+        flipped.push(arena.insert(Node::Flip {
+            d1: ra - 2,
+            d2: ra - 1,
+            arg: a,
+        }));
+    }
+    let k = extras.len();
+    let new_as: Vec<String> = (0..n).map(|i| fresh_var(&format!("a{i}"))).collect();
+    let new_bs: Vec<String> = (0..k).map(|i| fresh_var(&format!("b{i}"))).collect();
+    let alphas: Vec<String> = (0..n).map(|i| fresh_var(&format!("al{i}"))).collect();
+    let mut m2_args: Vec<ExprId> = alphas
+        .iter()
+        .map(|a| arena.insert(Node::Var(a.clone())))
+        .collect();
+    for b in &new_bs {
+        m2_args.push(arena.insert(Node::Var(b.clone())));
+    }
+    let m2_call = arena.insert(Node::App {
+        f: m2,
+        args: m2_args,
+    });
+    let alpha_lam = arena.insert(Node::Lam {
+        params: alphas,
+        body: m2_call,
+    });
+    let inner_rnz_args: Vec<ExprId> = new_as
+        .iter()
+        .map(|a| arena.insert(Node::Var(a.clone())))
+        .collect();
+    let inner = arena.insert(Node::Rnz {
+        r,
+        m: alpha_lam,
+        args: inner_rnz_args,
+    });
+    let mut new_params = new_as;
+    new_params.extend(new_bs);
+    let mut new_args = flipped;
+    new_args.extend(extras.iter().copied());
+    let new_m = arena.insert(Node::Lam {
+        params: new_params,
+        body: inner,
+    });
+    Some(arena.insert(Node::Rnz {
+        r,
+        m: new_m,
+        args: new_args,
+    }))
 }
 
 #[cfg(test)]
@@ -541,6 +961,71 @@ mod tests {
         let a = eval(&e, &inp).unwrap().as_scalar().unwrap();
         let b = eval(&x, &inp).unwrap().as_scalar().unwrap();
         assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+    }
+
+    #[test]
+    fn id_exchange_rules_match_box_rules() {
+        use crate::dsl::intern::{ExprArena, ExprId};
+        let env = Env::new()
+            .with("A", Layout::row_major(&[3, 4]))
+            .with("B", Layout::row_major(&[4, 5]))
+            .with("v", Layout::row_major(&[4]))
+            .with("u", Layout::row_major(&[8]))
+            .with("w", Layout::row_major(&[8]));
+        let ctx = Ctx::new(env);
+        let matvec = matvec_naive(input("A"), input("v"));
+        let flipped_matvec = normalize(&map_rnz(&matvec, &ctx).unwrap());
+        let cases: Vec<Expr> = vec![
+            matvec.clone(),
+            flipped_matvec, // rnz_map fires here
+            matmul_naive(input("A"), input("B")),
+            map(
+                lam1(
+                    "x",
+                    map(lam1("y", app2(mul(), var("y"), lit(2.0))), var("x")),
+                ),
+                input("A"),
+            ), // map_map_nested fires here
+            rnz(
+                add(),
+                lam2("bu", "bv", dot(var("bu"), var("bv"))),
+                vec![subdiv(0, 2, input("u")), subdiv(0, 2, input("w"))],
+            ), // rnz_rnz fires here
+            input("A"), // nothing fires
+        ];
+        type BoxRule = fn(&Expr, &Ctx) -> Option<Expr>;
+        type IdRuleFn = fn(&mut ExprArena, ExprId, &Ctx) -> Option<ExprId>;
+        let pairs: [(&str, BoxRule, IdRuleFn); 5] = [
+            ("map_map", map_map, map_map_id),
+            ("map_map_nested", map_map_nested, map_map_nested_id),
+            ("map_rnz", map_rnz, map_rnz_id),
+            ("rnz_map", rnz_map, rnz_map_id),
+            ("rnz_rnz", rnz_rnz, rnz_rnz_id),
+        ];
+        for e in &cases {
+            for (name, br, ir) in pairs {
+                let mut arena = ExprArena::new();
+                let id = arena.intern(e);
+                let a = br(e, &ctx);
+                let b = ir(&mut arena, id, &ctx);
+                match (&a, &b) {
+                    (Some(x), Some(y)) => assert!(
+                        arena.extract(*y).alpha_eq(x),
+                        "{name} on {}:\n  box: {}\n  id:  {}",
+                        pretty(e),
+                        pretty(x),
+                        pretty(&arena.extract(*y))
+                    ),
+                    (None, None) => {}
+                    _ => panic!(
+                        "{name} fired differently on {}: box={} id={}",
+                        pretty(e),
+                        a.is_some(),
+                        b.is_some()
+                    ),
+                }
+            }
+        }
     }
 
     #[test]

@@ -11,7 +11,8 @@
 //! This eliminates the materialisation of every intermediate array — the
 //! motivating "too many temporaries" problem of §2 (eq 1-2).
 
-use super::engine::Rule;
+use super::engine::{IdRule, Rule};
+use crate::dsl::intern::{ExprArena, ExprId, Node};
 use crate::dsl::{fresh_var, Expr};
 
 /// Build `ncomp i f g`: the function applying `g` to the `m` arguments at
@@ -49,6 +50,46 @@ fn arity_of(f: &Expr) -> Option<usize> {
         Expr::Lam { params, .. } => Some(params.len()),
         Expr::Prim(p) => Some(p.arity()),
         Expr::Lift { f } => arity_of(f),
+        _ => None,
+    }
+}
+
+/// Id-native twin of [`ncomp`], built entirely in the arena.
+pub fn ncomp_id(
+    arena: &mut ExprArena,
+    i: usize,
+    f: ExprId,
+    n: usize,
+    g: ExprId,
+    m: usize,
+) -> ExprId {
+    let a_params: Vec<String> = (0..n).map(|k| fresh_var(&format!("a{k}"))).collect();
+    let b_params: Vec<String> = (0..m).map(|k| fresh_var(&format!("b{k}"))).collect();
+    let b_vars: Vec<ExprId> = b_params
+        .iter()
+        .map(|b| arena.insert(Node::Var(b.clone())))
+        .collect();
+    let g_call = arena.insert(Node::App { f: g, args: b_vars });
+    let mut f_args: Vec<ExprId> = a_params
+        .iter()
+        .map(|a| arena.insert(Node::Var(a.clone())))
+        .collect();
+    f_args[i] = g_call;
+    let body = arena.insert(Node::App { f, args: f_args });
+    // parameter order: a0..a_{i-1}, b0..b_{m-1}, a_{i+1}..a_{n-1}
+    let mut params: Vec<String> = Vec::with_capacity(n - 1 + m);
+    params.extend(a_params[..i].iter().cloned());
+    params.extend(b_params);
+    params.extend(a_params[i + 1..].iter().cloned());
+    arena.insert(Node::Lam { params, body })
+}
+
+/// Id-native twin of [`arity_of`].
+fn arity_of_id(arena: &ExprArena, f: ExprId) -> Option<usize> {
+    match arena.get(f) {
+        Node::Lam { params, .. } => Some(params.len()),
+        Node::Prim(p) => Some(p.arity()),
+        Node::Lift { f } => arity_of_id(arena, *f),
         _ => None,
     }
 }
@@ -137,6 +178,95 @@ pub fn lift_app() -> Rule {
     }
 }
 
+/// Id-native twin of [`nzip_nzip`] (eq 25).
+pub fn nzip_nzip_id() -> IdRule {
+    IdRule {
+        name: "nzip-nzip-fusion",
+        apply: |arena, id| {
+            let Node::Nzip { f, args } = arena.get(id).clone() else {
+                return None;
+            };
+            let mut found = None;
+            for (i, &a) in args.iter().enumerate() {
+                if let Node::Nzip { f: g, args: ys } = arena.get(a) {
+                    found = Some((i, *g, ys.clone()));
+                    break;
+                }
+            }
+            let (i, g, ys) = found?;
+            let n = args.len();
+            let m = ys.len();
+            if arity_of_id(arena, f).is_some_and(|a| a != n)
+                || arity_of_id(arena, g).is_some_and(|a| a != m)
+            {
+                return None;
+            }
+            let fused_f = ncomp_id(arena, i, f, n, g, m);
+            let mut new_args = Vec::with_capacity(n - 1 + m);
+            new_args.extend(args[..i].iter().copied());
+            new_args.extend(ys.iter().copied());
+            new_args.extend(args[i + 1..].iter().copied());
+            Some(arena.insert(Node::Nzip {
+                f: fused_f,
+                args: new_args,
+            }))
+        },
+    }
+}
+
+/// Id-native twin of [`rnz_nzip`] (eq 27-28).
+pub fn rnz_nzip_id() -> IdRule {
+    IdRule {
+        name: "rnz-nzip-fusion",
+        apply: |arena, id| {
+            let Node::Rnz { r, m, args } = arena.get(id).clone() else {
+                return None;
+            };
+            let mut found = None;
+            for (i, &a) in args.iter().enumerate() {
+                if let Node::Nzip { f: g, args: ys } = arena.get(a) {
+                    found = Some((i, *g, ys.clone()));
+                    break;
+                }
+            }
+            let (i, g, ys) = found?;
+            let n = args.len();
+            let gm = ys.len();
+            if arity_of_id(arena, m).is_some_and(|a| a != n)
+                || arity_of_id(arena, g).is_some_and(|a| a != gm)
+            {
+                return None;
+            }
+            let fused_m = ncomp_id(arena, i, m, n, g, gm);
+            let mut new_args = Vec::with_capacity(n - 1 + gm);
+            new_args.extend(args[..i].iter().copied());
+            new_args.extend(ys.iter().copied());
+            new_args.extend(args[i + 1..].iter().copied());
+            Some(arena.insert(Node::Rnz {
+                r,
+                m: fused_m,
+                args: new_args,
+            }))
+        },
+    }
+}
+
+/// Id-native twin of [`lift_app`] (eq 41).
+pub fn lift_app_id() -> IdRule {
+    IdRule {
+        name: "lift-app-to-nzip",
+        apply: |arena, id| {
+            let Node::App { f, args } = arena.get(id).clone() else {
+                return None;
+            };
+            let &Node::Lift { f: g } = arena.get(f) else {
+                return None;
+            };
+            Some(arena.insert(Node::Nzip { f: g, args }))
+        },
+    }
+}
+
 fn fuse_rules() -> [super::engine::Rule; 5] {
     [
         nzip_nzip(),
@@ -147,17 +277,33 @@ fn fuse_rules() -> [super::engine::Rule; 5] {
     ]
 }
 
+/// The id-native fuse rule set — same rules, same order, as the
+/// `Box<Expr>` set the seed engine uses.
+pub fn fuse_id_rules() -> [IdRule; 5] {
+    [
+        nzip_nzip_id(),
+        rnz_nzip_id(),
+        lift_app_id(),
+        super::lambda::beta_id(),
+        super::lambda::eta_id(),
+    ]
+}
+
 thread_local! {
-    static FUSE_MEMO: std::cell::RefCell<super::engine::MemoRewriter> =
-        std::cell::RefCell::new(super::engine::MemoRewriter::new(&fuse_rules()));
+    static FUSE_ID: std::cell::RefCell<(ExprArena, super::engine::IdRewriter)> =
+        std::cell::RefCell::new((
+            ExprArena::new(),
+            super::engine::IdRewriter::new(&fuse_id_rules()),
+        ));
 }
 
 /// The full fusion pass: fuse all pipelines, then β/η-normalize. Memoized
-/// per thread over the hash-consing arena (repeated optimize jobs on the
-/// same source fuse for free).
+/// per thread over the hash-consing arena and executed by the id-native
+/// engine (repeated optimize jobs on the same source fuse for free, and
+/// no `Box<Expr>` tree is rebuilt between rule applications).
 pub fn fuse(e: &Expr) -> Expr {
     if crate::dsl::intern::memo_enabled() {
-        FUSE_MEMO.with(|m| m.borrow_mut().rewrite(e))
+        FUSE_ID.with(|cell| super::engine::rewrite_interned(cell, e))
     } else {
         super::engine::rewrite_bottom_up(&fuse_rules(), e)
     }
@@ -236,6 +382,38 @@ mod tests {
             eval(&e, &inp).unwrap().to_dense(),
             eval(&fused, &inp).unwrap().to_dense()
         );
+    }
+
+    #[test]
+    fn id_fuse_matches_box_fuse() {
+        let cases = [
+            map(
+                lam1("y", app2(mul(), var("y"), lit(2.0))),
+                map(lam1("x", app2(add(), var("x"), lit(1.0))), input("u")),
+            ),
+            rnz(
+                add(),
+                mul(),
+                vec![zip(add(), input("u"), input("v")), input("w")],
+            ),
+            app2(lift(add()), input("u"), input("v")),
+            zip(
+                add(),
+                zip(mul(), input("u"), input("v")),
+                zip(add(), input("v"), input("w")),
+            ),
+        ];
+        for e in &cases {
+            let id_path = fuse(e); // memoized id-native engine
+            let box_path = super::super::engine::rewrite_bottom_up(&fuse_rules(), e);
+            assert!(
+                id_path.alpha_eq(&box_path),
+                "fuse divergence on {}:\n  id:  {}\n  box: {}",
+                pretty(e),
+                pretty(&id_path),
+                pretty(&box_path)
+            );
+        }
     }
 
     #[test]

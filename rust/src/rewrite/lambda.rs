@@ -2,7 +2,8 @@
 //! "standard lambda calculus transformations" the paper's DataView system
 //! also implements.
 
-use super::engine::Rule;
+use super::engine::{IdRule, Rule};
+use crate::dsl::intern::Node;
 use crate::dsl::Expr;
 
 /// β: `(\x1..xn -> body) a1..an  →  body[xi := ai]`.
@@ -31,6 +32,42 @@ pub fn beta() -> Rule {
             }
             for (np, a) in fresh.iter().zip(args) {
                 out = out.subst(np, a);
+            }
+            Some(out)
+        },
+    }
+}
+
+/// Id-native twin of [`beta`]: β-reduction performed entirely in the
+/// arena via [`crate::dsl::intern::ExprArena::subst_id`]. Same
+/// simultaneous-substitution-through-fresh-renames strategy, so the two
+/// engines agree up to alpha.
+pub fn beta_id() -> IdRule {
+    IdRule {
+        name: "beta",
+        apply: |arena, id| {
+            let Node::App { f, args } = arena.get(id).clone() else {
+                return None;
+            };
+            let Node::Lam { params, body } = arena.get(f).clone() else {
+                return None;
+            };
+            if params.len() != args.len() {
+                return None;
+            }
+            let mut out = body;
+            // Substitute simultaneously: rename params apart first to avoid
+            // one substitution capturing another's argument.
+            let fresh: Vec<String> = params
+                .iter()
+                .map(|p| crate::dsl::fresh_var(p))
+                .collect();
+            for (p, np) in params.iter().zip(&fresh) {
+                let npv = arena.insert(Node::Var(np.clone()));
+                out = arena.subst_id(out, p, npv);
+            }
+            for (np, &a) in fresh.iter().zip(&args) {
+                out = arena.subst_id(out, np, a);
             }
             Some(out)
         },
@@ -67,6 +104,36 @@ pub fn eta() -> Rule {
     }
 }
 
+/// Id-native twin of [`eta`].
+pub fn eta_id() -> IdRule {
+    IdRule {
+        name: "eta",
+        apply: |arena, id| {
+            let Node::Lam { params, body } = arena.get(id) else {
+                return None;
+            };
+            let Node::App { f, args } = arena.get(*body) else {
+                return None;
+            };
+            if args.len() != params.len() {
+                return None;
+            }
+            let all_vars = params
+                .iter()
+                .zip(args)
+                .all(|(p, &a)| matches!(arena.get(a), Node::Var(x) if x == p));
+            if !all_vars {
+                return None;
+            }
+            let f = *f;
+            if params.iter().any(|p| arena.contains_free(f, p)) {
+                return None;
+            }
+            Some(f)
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,6 +163,50 @@ mod tests {
         let e = lam1("x", app1(lam1("q", var("q")), var("x")));
         let out = (eta().apply)(&e).unwrap();
         assert_eq!(out, lam1("q", var("q")));
+    }
+
+    #[test]
+    fn id_rules_match_box_rules() {
+        use crate::dsl::intern::ExprArena;
+        let cases = [
+            app2(
+                lam2("x", "y", app2(add(), var("x"), var("y"))),
+                lit(1.0),
+                lit(2.0),
+            ),
+            app2(
+                lam2("x", "y", app2(add(), var("x"), var("y"))),
+                var("y"),
+                lit(3.0),
+            ),
+            lam1("x", app1(lam1("q", var("q")), var("x"))),
+            lam1("x", app1(app1(var("f"), var("x")), var("x"))),
+        ];
+        for e in &cases {
+            let mut arena = ExprArena::new();
+            let id = arena.intern(e);
+            for (r, ir) in [(beta(), beta_id()), (eta(), eta_id())] {
+                let a = (r.apply)(e);
+                let b = (ir.apply)(&mut arena, id);
+                match (&a, &b) {
+                    (Some(x), Some(y)) => assert!(
+                        arena.extract(*y).alpha_eq(x),
+                        "{}: {} vs {}",
+                        r.name,
+                        pretty(x),
+                        pretty(&arena.extract(*y))
+                    ),
+                    (None, None) => {}
+                    _ => panic!(
+                        "box/id {} divergence on {}: {:?} vs {:?}",
+                        r.name,
+                        pretty(e),
+                        a.is_some(),
+                        b.is_some()
+                    ),
+                }
+            }
+        }
     }
 
     #[test]

@@ -15,6 +15,19 @@
 //! Plus the **subdivision identities** (eq 44 and the associativity-based
 //! `rnz` analogue) in [`subdivision`], standard lambda-calculus rules
 //! (β, η) in [`lambda`], and layout-operator cleanups in [`simplify`].
+//!
+//! # Two engines: `Box<Expr>` and id-native
+//!
+//! Every rule on the optimize hot path exists in two forms. The original
+//! [`Rule`]s pattern-match on `Box<Expr>` trees and drive
+//! [`rewrite_bottom_up`] — the seed engine, kept alive behind
+//! [`crate::dsl::intern::with_memo_disabled`] as the reference for
+//! differential tests. The [`IdRule`]s (and the context-sensitive
+//! `*_id` functions in [`exchange`]/[`subdivision`]) match and build
+//! directly against [`crate::dsl::intern::ExprArena`] nodes, so
+//! [`IdRewriter`] and the enumeration search run natively on
+//! [`crate::dsl::intern::ExprId`]s: conversion to/from `Box<Expr>`
+//! happens once at the pipeline boundary, not per node per rule probe.
 
 pub mod engine;
 pub mod exchange;
@@ -25,7 +38,8 @@ pub mod simplify;
 pub mod subdivision;
 
 pub use engine::{
-    normalize, normalize_uncached, rewrite_bottom_up, rewrite_once, MemoRewriter, Rule,
+    normalize, normalize_id_rules, normalize_uncached, rewrite_bottom_up, rewrite_once, IdRule,
+    IdRewriter, MemoRewriter, Rule,
 };
 
 use crate::layout::Layout;
@@ -51,6 +65,17 @@ impl Ctx {
     /// Layout of a subexpression under this context.
     pub fn layout_of(&self, e: &crate::dsl::Expr) -> crate::Result<Layout> {
         crate::typecheck::infer_with(e, &self.env, &self.vars)
+    }
+
+    /// Layout of an interned subexpression under this context — the
+    /// id-native twin of [`Ctx::layout_of`], used by the `*_id` exchange
+    /// and subdivision rules so guards never extract a tree.
+    pub fn layout_of_id(
+        &self,
+        arena: &crate::dsl::intern::ExprArena,
+        id: crate::dsl::intern::ExprId,
+    ) -> crate::Result<Layout> {
+        crate::typecheck::infer_id_with(arena, id, &self.env, &self.vars)
     }
 
     /// Context extended with a variable binding.

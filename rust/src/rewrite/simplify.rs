@@ -2,7 +2,8 @@
 //! these rules cancel and canonicalise the resulting chains so that
 //! repeated exchanges do not grow expressions without bound.
 
-use super::engine::Rule;
+use super::engine::{IdRule, Rule};
+use crate::dsl::intern::Node;
 use crate::dsl::Expr;
 
 /// `flip d1 d2 (flip d1 d2 x) → x` — flip is an involution (paper §2.1).
@@ -68,6 +69,76 @@ pub fn subdiv_trivial() -> Rule {
             };
             if d1 == d2 {
                 Some((**arg).clone())
+            } else {
+                None
+            }
+        },
+    }
+}
+
+/// Id-native twin of [`flip_flip`]: the cancelled subtree comes back as
+/// the id it already had — zero allocation.
+pub fn flip_flip_id() -> IdRule {
+    IdRule {
+        name: "flip-flip",
+        apply: |arena, id| {
+            let &Node::Flip { d1, d2, arg } = arena.get(id) else {
+                return None;
+            };
+            let &Node::Flip {
+                d1: e1,
+                d2: e2,
+                arg: inner,
+            } = arena.get(arg)
+            else {
+                return None;
+            };
+            // flip is commutative in its arguments
+            let same = (d1 == e1 && d2 == e2) || (d1 == e2 && d2 == e1);
+            if same {
+                Some(inner)
+            } else {
+                None
+            }
+        },
+    }
+}
+
+/// Id-native twin of [`flatten_subdiv`].
+pub fn flatten_subdiv_id() -> IdRule {
+    IdRule {
+        name: "flatten-subdiv",
+        apply: |arena, id| {
+            let &Node::Flatten { d, arg } = arena.get(id) else {
+                return None;
+            };
+            let &Node::Subdiv {
+                d: sd,
+                b: _,
+                arg: inner,
+            } = arena.get(arg)
+            else {
+                return None;
+            };
+            if d == sd {
+                Some(inner)
+            } else {
+                None
+            }
+        },
+    }
+}
+
+/// Id-native twin of [`subdiv_trivial`] (`flip d d x → x`).
+pub fn flip_same_dim_id() -> IdRule {
+    IdRule {
+        name: "flip-same-dim",
+        apply: |arena, id| {
+            let &Node::Flip { d1, d2, arg } = arena.get(id) else {
+                return None;
+            };
+            if d1 == d2 {
+                Some(arg)
             } else {
                 None
             }

@@ -8,6 +8,7 @@
 //! rewrites move around to create cache-friendly traversals.
 
 use super::Ctx;
+use crate::dsl::intern::{ExprArena, ExprId, Node};
 use crate::dsl::{fresh_var, Expr};
 
 /// eq 44 (n-ary): `nzip f xs = nzip (\blk… -> nzip f blk…) (subdiv c b x)…`
@@ -90,6 +91,103 @@ pub fn subdivide_rnz(e: &Expr, b: usize, ctx: &Ctx) -> Option<Expr> {
         }),
         args: new_args,
     })
+}
+
+/// Id-native twin of [`subdivide_nzip`] (eq 44): matches, checks
+/// divisibility through [`Ctx::layout_of_id`], and builds the nested form
+/// in the arena.
+pub fn subdivide_nzip_id(
+    arena: &mut ExprArena,
+    id: ExprId,
+    b: usize,
+    ctx: &Ctx,
+) -> Option<ExprId> {
+    let Node::Nzip { f, args } = arena.get(id).clone() else {
+        return None;
+    };
+    let mut new_args = Vec::with_capacity(args.len());
+    for &a in &args {
+        let layout = ctx.layout_of_id(arena, a).ok()?;
+        let rank = layout.rank();
+        if rank == 0 {
+            return None;
+        }
+        let outer = layout.outer().unwrap();
+        if b == 0 || outer.extent % b != 0 {
+            return None;
+        }
+        new_args.push(arena.insert(Node::Subdiv {
+            d: rank - 1,
+            b,
+            arg: a,
+        }));
+    }
+    let blks: Vec<String> = (0..args.len())
+        .map(|i| fresh_var(&format!("blk{i}")))
+        .collect();
+    let blk_vars: Vec<ExprId> = blks
+        .iter()
+        .map(|x| arena.insert(Node::Var(x.clone())))
+        .collect();
+    let inner = arena.insert(Node::Nzip { f, args: blk_vars });
+    let lam = arena.insert(Node::Lam {
+        params: blks,
+        body: inner,
+    });
+    Some(arena.insert(Node::Nzip {
+        f: lam,
+        args: new_args,
+    }))
+}
+
+/// Id-native twin of [`subdivide_rnz`].
+pub fn subdivide_rnz_id(
+    arena: &mut ExprArena,
+    id: ExprId,
+    b: usize,
+    ctx: &Ctx,
+) -> Option<ExprId> {
+    let Node::Rnz { r, m, args } = arena.get(id).clone() else {
+        return None;
+    };
+    let mut new_args = Vec::with_capacity(args.len());
+    for &a in &args {
+        let layout = ctx.layout_of_id(arena, a).ok()?;
+        let rank = layout.rank();
+        if rank == 0 {
+            return None;
+        }
+        let outer = layout.outer().unwrap();
+        if b == 0 || outer.extent % b != 0 {
+            return None;
+        }
+        new_args.push(arena.insert(Node::Subdiv {
+            d: rank - 1,
+            b,
+            arg: a,
+        }));
+    }
+    let blks: Vec<String> = (0..args.len())
+        .map(|i| fresh_var(&format!("blk{i}")))
+        .collect();
+    let blk_vars: Vec<ExprId> = blks
+        .iter()
+        .map(|x| arena.insert(Node::Var(x.clone())))
+        .collect();
+    let inner = arena.insert(Node::Rnz {
+        r,
+        m,
+        args: blk_vars,
+    });
+    let lam = arena.insert(Node::Lam {
+        params: blks,
+        body: inner,
+    });
+    Some(arena.insert(Node::Rnz {
+        r,
+        m: lam,
+        args: new_args,
+    }))
 }
 
 /// Hoist a subdivision through a HoF binder to the argument (context-free
@@ -317,6 +415,50 @@ mod tests {
             .with("v", Layout::row_major(&[16]));
         let out = run(&s, &env2, &[("u", &u), ("v", &v)]).unwrap();
         assert!((out[0] - a).abs() < 1e-12);
+    }
+
+    #[test]
+    fn id_subdivide_matches_box_subdivide() {
+        use crate::dsl::intern::ExprArena;
+        let env = Env::new()
+            .with("u", Layout::row_major(&[16]))
+            .with("v", Layout::row_major(&[16]));
+        let ctx = Ctx::new(env);
+        let cases = [
+            (dot(input("u"), input("v")), 4usize),
+            (map(lam1("x", var("x")), input("u")), 2),
+            (map(lam1("x", var("x")), input("u")), 3), // indivisible
+        ];
+        for (e, b) in &cases {
+            let mut arena = ExprArena::new();
+            let id = arena.intern(e);
+            let (bx, ix) = match e {
+                Expr::Rnz { .. } => (
+                    subdivide_rnz(e, *b, &ctx),
+                    subdivide_rnz_id(&mut arena, id, *b, &ctx),
+                ),
+                _ => (
+                    subdivide_nzip(e, *b, &ctx),
+                    subdivide_nzip_id(&mut arena, id, *b, &ctx),
+                ),
+            };
+            match (&bx, &ix) {
+                (Some(x), Some(y)) => assert!(
+                    arena.extract(*y).alpha_eq(x),
+                    "b={b} on {}:\n  box: {}\n  id:  {}",
+                    pretty(e),
+                    pretty(x),
+                    pretty(&arena.extract(*y))
+                ),
+                (None, None) => {}
+                _ => panic!(
+                    "subdivide b={b} fired differently on {}: box={} id={}",
+                    pretty(e),
+                    bx.is_some(),
+                    ix.is_some()
+                ),
+            }
+        }
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! - and signal mistakes in rewrite implementations (types "signal
 //!   potential mistakes", §3).
 
+use crate::dsl::intern::{ExprArena, ExprId, Node};
 use crate::dsl::Expr;
 use crate::layout::Layout;
 use crate::{Error, Result};
@@ -48,6 +49,208 @@ pub fn infer(e: &Expr, env: &Env) -> Result<Layout> {
 pub fn infer_with(e: &Expr, env: &Env, vars: &HashMap<String, Layout>) -> Result<Layout> {
     let mut vars = vars.clone();
     go(e, env, &mut vars)
+}
+
+/// Infer the layout of an interned expression directly from the arena —
+/// the id-native twin of [`infer`]. The search hot path uses this so no
+/// `Box<Expr>` tree is ever rebuilt just to typecheck a candidate; the
+/// accept/reject decisions are identical to [`infer`] by construction
+/// (`go_id` mirrors `go` case for case).
+pub fn infer_id(arena: &ExprArena, id: ExprId, env: &Env) -> Result<Layout> {
+    let mut vars: HashMap<String, Layout> = HashMap::new();
+    go_id(arena, id, env, &mut vars)
+}
+
+/// [`infer_id`] with an initial variable context (the id-native twin of
+/// [`infer_with`]; used when typing subexpressions under binders the
+/// caller has descended through).
+pub fn infer_id_with(
+    arena: &ExprArena,
+    id: ExprId,
+    env: &Env,
+    vars: &HashMap<String, Layout>,
+) -> Result<Layout> {
+    let mut vars = vars.clone();
+    go_id(arena, id, env, &mut vars)
+}
+
+fn go_id(
+    arena: &ExprArena,
+    id: ExprId,
+    env: &Env,
+    vars: &mut HashMap<String, Layout>,
+) -> Result<Layout> {
+    match arena.get(id) {
+        Node::Var(x) => vars
+            .get(x)
+            .cloned()
+            .ok_or_else(|| Error::Type(format!("unbound variable '{x}'"))),
+        Node::Lit(_) => Ok(Layout::scalar()),
+        Node::Prim(_) => Err(Error::Type(
+            "primitive used as a value outside operator position".into(),
+        )),
+        Node::Lam { .. } => Err(Error::Type(
+            "lambda used as a value outside operator position".into(),
+        )),
+        Node::Lift { .. } => Err(Error::Type(
+            "lift used as a value outside operator position".into(),
+        )),
+        Node::Input(n) => env
+            .inputs
+            .get(n)
+            .cloned()
+            .ok_or_else(|| Error::Type(format!("unknown input '{n}'"))),
+        Node::App { f, args } => {
+            let arg_tys = args
+                .iter()
+                .map(|&a| go_id(arena, a, env, vars))
+                .collect::<Result<Vec<_>>>()?;
+            apply_id(arena, *f, &arg_tys, env, vars)
+        }
+        Node::Nzip { f, args } => {
+            if args.is_empty() {
+                return Err(Error::Type("nzip: needs at least one array".into()));
+            }
+            let arg_tys = args
+                .iter()
+                .map(|&a| go_id(arena, a, env, vars))
+                .collect::<Result<Vec<_>>>()?;
+            let extent = consumed_extent(&arg_tys, "nzip")?;
+            let elem_tys: Vec<Layout> = arg_tys
+                .iter()
+                .map(|t| t.peel_outer())
+                .collect::<Result<_>>()?;
+            let body_ty = apply_id(arena, *f, &elem_tys, env, vars)?;
+            Ok(push_outer(&body_ty, extent))
+        }
+        Node::Rnz { r, m, args } => {
+            if args.is_empty() {
+                return Err(Error::Type("rnz: needs at least one array".into()));
+            }
+            let arg_tys = args
+                .iter()
+                .map(|&a| go_id(arena, a, env, vars))
+                .collect::<Result<Vec<_>>>()?;
+            consumed_extent(&arg_tys, "rnz")?;
+            let elem_tys: Vec<Layout> = arg_tys
+                .iter()
+                .map(|t| t.peel_outer())
+                .collect::<Result<_>>()?;
+            let body_ty = apply_id(arena, *m, &elem_tys, env, vars)?;
+            check_reducer_id(arena, *r, &body_ty)?;
+            Ok(body_ty)
+        }
+        Node::Subdiv { d, b, arg } => go_id(arena, *arg, env, vars)?.subdiv(*d, *b),
+        Node::Flatten { d, arg } => go_id(arena, *arg, env, vars)?.flatten(*d),
+        Node::Flip { d1, d2, arg } => go_id(arena, *arg, env, vars)?.flip2(*d1, *d2),
+    }
+}
+
+/// Id-native twin of [`apply`].
+fn apply_id(
+    arena: &ExprArena,
+    f: ExprId,
+    arg_tys: &[Layout],
+    env: &Env,
+    vars: &mut HashMap<String, Layout>,
+) -> Result<Layout> {
+    match arena.get(f) {
+        Node::Prim(p) => {
+            if arg_tys.len() != p.arity() {
+                return Err(Error::Type(format!(
+                    "primitive {} expects {} args, got {}",
+                    p.name(),
+                    p.arity(),
+                    arg_tys.len()
+                )));
+            }
+            for (i, t) in arg_tys.iter().enumerate() {
+                if !t.is_scalar() {
+                    return Err(Error::Type(format!(
+                        "primitive {} arg {i} must be scalar, got {t}",
+                        p.name()
+                    )));
+                }
+            }
+            Ok(Layout::scalar())
+        }
+        Node::Lam { params, body } => {
+            if params.len() != arg_tys.len() {
+                return Err(Error::Type(format!(
+                    "lambda expects {} args, got {}",
+                    params.len(),
+                    arg_tys.len()
+                )));
+            }
+            let mut saved = Vec::with_capacity(params.len());
+            for (p, t) in params.iter().zip(arg_tys) {
+                saved.push((p.clone(), vars.insert(p.clone(), t.clone())));
+            }
+            let r = go_id(arena, *body, env, vars);
+            for (p, old) in saved.into_iter().rev() {
+                match old {
+                    Some(t) => {
+                        vars.insert(p, t);
+                    }
+                    None => {
+                        vars.remove(&p);
+                    }
+                }
+            }
+            r
+        }
+        Node::Lift { f: inner } => {
+            let extent = consumed_extent(arg_tys, "lift")?;
+            let elem_tys: Vec<Layout> = arg_tys
+                .iter()
+                .map(|t| t.peel_outer())
+                .collect::<Result<_>>()?;
+            let body_ty = apply_id(arena, *inner, &elem_tys, env, vars)?;
+            Ok(push_outer(&body_ty, extent))
+        }
+        _ => Err(Error::Type(format!(
+            "unsupported function form in operator position: {}",
+            crate::dsl::pretty(&arena.extract(f))
+        ))),
+    }
+}
+
+/// Id-native twin of [`check_reducer`].
+fn check_reducer_id(arena: &ExprArena, r: ExprId, acc_ty: &Layout) -> Result<()> {
+    let mut depth = 0usize;
+    let mut cur = r;
+    while let Node::Lift { f } = arena.get(cur) {
+        depth += 1;
+        cur = *f;
+    }
+    match arena.get(cur) {
+        Node::Prim(p) => {
+            if p.arity() != 2 {
+                return Err(Error::Type(format!(
+                    "rnz reduction operator {} must be binary",
+                    p.name()
+                )));
+            }
+            if !p.is_associative() {
+                return Err(Error::Type(format!(
+                    "rnz reduction operator {} must be associative",
+                    p.name()
+                )));
+            }
+            if depth != acc_ty.rank() {
+                return Err(Error::Type(format!(
+                    "rnz reduction operator lift^{depth} {} does not match accumulator rank {} ({acc_ty})",
+                    p.name(),
+                    acc_ty.rank()
+                )));
+            }
+            Ok(())
+        }
+        _ => Err(Error::Type(format!(
+            "unsupported rnz reduction operator: {}",
+            crate::dsl::pretty(&arena.extract(cur))
+        ))),
+    }
 }
 
 fn go(e: &Expr, env: &Env, vars: &mut HashMap<String, Layout>) -> Result<Layout> {
@@ -359,6 +562,31 @@ mod tests {
         let env = Env::new().with("u", Layout::row_major(&[4]));
         let e = app2(add(), input("u"), lit(1.0));
         assert!(infer(&e, &env).is_err());
+    }
+
+    #[test]
+    fn infer_id_agrees_with_infer() {
+        let env = Env::new()
+            .with("A", Layout::row_major(&[4, 6]))
+            .with("B", Layout::row_major(&[6, 8]))
+            .with("v", Layout::row_major(&[6]));
+        let mut arena = ExprArena::new();
+        for e in [
+            matmul_naive(input("A"), input("B")),
+            matvec_naive(input("A"), input("v")),
+            subdiv(0, 2, input("v")),
+            subdiv(0, 4, input("v")),                          // indivisible
+            dot(input("v"), input("A")),                       // extent clash
+            rnz(sub(), lam1("x", var("x")), vec![input("v")]), // non-assoc
+            map(lam1("c", var("c")), flip(0, input("A"))),
+        ] {
+            let id = arena.intern(&e);
+            match (infer(&e, &env), infer_id(&arena, id, &env)) {
+                (Ok(x), Ok(y)) => assert_eq!(x, y, "{}", crate::dsl::pretty(&e)),
+                (Err(_), Err(_)) => {}
+                (x, y) => panic!("infer/infer_id diverge: {x:?} vs {y:?}"),
+            }
+        }
     }
 
     #[test]

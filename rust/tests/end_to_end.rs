@@ -28,6 +28,7 @@ fn service_optimizes_and_executes_under_concurrency() {
             rank_by: RankBy::CostModel,
             subdivide_rnz: if rng.chance(0.5) { Some(4) } else { None },
             top_k: 12,
+            prune: rng.chance(0.5),
         };
         let expected = if spec.subdivide_rnz.is_some() { 12 } else { 6 };
         opt_handles.push((n, expected, c.submit(Request::Optimize(spec)).unwrap()));

@@ -207,6 +207,7 @@ fn differential_pipeline_same_ranking_with_and_without_rewrite_memo() {
         rank_by: RankBy::CostModel,
         subdivide_rnz: Some(4),
         top_k: 12,
+        prune: false,
     };
     let with_intern = optimize(&spec).unwrap();
     let without = with_memo_disabled(|| optimize(&spec)).unwrap();
