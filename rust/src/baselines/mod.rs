@@ -4,7 +4,7 @@
 //!   (4.9 s at 1024² on their i5): textbook ijk triple loop.
 //! - [`blocked_matmul`] — the paper's "improved blocked version" (278 ms):
 //!   three-level tiling with a contiguous inner kernel.
-//! - [`xla` via [`crate::runtime`]] plays the Eigen role (333/60 ms).
+//! - `xla` (via [`crate::runtime`]) plays the Eigen role (333/60 ms).
 //!
 //! These run the same f64 workloads as the generated variants so the
 //! paper's ratios (naive / best-variant / blocked) can be reproduced.

@@ -1,6 +1,13 @@
 //! Service metrics: cheap atomic counters surfaced by the CLI's `serve`
 //! status output and asserted on by the invariant tests.
+//!
+//! Besides the job-lifecycle counters, the coordinator folds each fresh
+//! optimize run's [`SearchStats`] into the `search_*` aggregates (cache
+//! hits do not re-record — the counters describe work actually performed),
+//! so pruning effectiveness and the no-extraction invariant of the
+//! candidate score path are observable on production traffic.
 
+use crate::enumerate::SearchStats;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Counters for the whole service lifetime.
@@ -20,13 +27,43 @@ pub struct Metrics {
     /// Generation advances of the optimize-result cache
     /// ([`crate::coordinator::Coordinator::flush_opt_cache`]).
     pub opt_cache_flushes: AtomicU64,
+    /// BFS frontier parents expanded across all fresh optimize runs.
+    pub search_expanded: AtomicU64,
+    /// Exchange applications generated across all fresh optimize runs.
+    pub search_generated: AtomicU64,
+    /// Candidates cut by the lower-bound branch-and-bound.
+    pub search_pruned: AtomicU64,
+    /// Candidates dropped because they no longer typechecked.
+    pub search_type_rejects: AtomicU64,
+    /// Times a search's shared best-known score tightened.
+    pub search_bound_updates: AtomicU64,
+    /// `Box<Expr>` trees extracted from search arenas (output-boundary
+    /// extraction of kept candidates; the score path contributes zero).
+    pub search_extractions: AtomicU64,
 }
 
 impl Metrics {
+    /// Fold one search run's counters into the service aggregates. Called
+    /// by the optimize workers for fresh pipeline runs only, never for
+    /// result-cache hits.
+    pub fn record_search(&self, s: &SearchStats) {
+        self.search_expanded
+            .fetch_add(s.expanded as u64, Ordering::Relaxed);
+        self.search_generated
+            .fetch_add(s.generated as u64, Ordering::Relaxed);
+        self.search_pruned.fetch_add(s.pruned as u64, Ordering::Relaxed);
+        self.search_type_rejects
+            .fetch_add(s.type_rejects as u64, Ordering::Relaxed);
+        self.search_bound_updates
+            .fetch_add(s.bound_updates as u64, Ordering::Relaxed);
+        self.search_extractions
+            .fetch_add(s.extracted(), Ordering::Relaxed);
+    }
+
     /// Human-readable one-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "submitted={} completed={} failed={} exec_batches={} max_batch={} cache_hits={} opt_cache_hits={} opt_cache_flushes={}",
+            "submitted={} completed={} failed={} exec_batches={} max_batch={} cache_hits={} opt_cache_hits={} opt_cache_flushes={} search_expanded={} search_generated={} search_pruned={} search_type_rejects={} search_bound_updates={} search_extractions={}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -35,6 +72,12 @@ impl Metrics {
             self.exec_cache_hits.load(Ordering::Relaxed),
             self.opt_cache_hits.load(Ordering::Relaxed),
             self.opt_cache_flushes.load(Ordering::Relaxed),
+            self.search_expanded.load(Ordering::Relaxed),
+            self.search_generated.load(Ordering::Relaxed),
+            self.search_pruned.load(Ordering::Relaxed),
+            self.search_type_rejects.load(Ordering::Relaxed),
+            self.search_bound_updates.load(Ordering::Relaxed),
+            self.search_extractions.load(Ordering::Relaxed),
         )
     }
 
@@ -60,5 +103,29 @@ mod tests {
         m.failed.store(1, Ordering::Relaxed);
         assert_eq!(m.in_flight(), 1);
         assert!(m.summary().contains("submitted=5"));
+    }
+
+    #[test]
+    fn record_search_accumulates() {
+        let m = Metrics::default();
+        let stats = SearchStats {
+            expanded: 3,
+            generated: 10,
+            kept: 6,
+            pruned: 2,
+            type_rejects: 1,
+            bound_updates: 4,
+            shards: 2,
+            extracted_per_shard: vec![3, 2],
+        };
+        m.record_search(&stats);
+        m.record_search(&stats);
+        assert_eq!(m.search_expanded.load(Ordering::Relaxed), 6);
+        assert_eq!(m.search_generated.load(Ordering::Relaxed), 20);
+        assert_eq!(m.search_pruned.load(Ordering::Relaxed), 4);
+        assert_eq!(m.search_type_rejects.load(Ordering::Relaxed), 2);
+        assert_eq!(m.search_bound_updates.load(Ordering::Relaxed), 8);
+        assert_eq!(m.search_extractions.load(Ordering::Relaxed), 10);
+        assert!(m.summary().contains("search_pruned=4"));
     }
 }

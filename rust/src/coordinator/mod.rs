@@ -163,6 +163,12 @@ impl Coordinator {
                                     None => {
                                         let r = pipeline::optimize(&key.1);
                                         if let Ok(res) = &r {
+                                            // Fold the fresh run's search
+                                            // counters into the service
+                                            // metrics (cache hits describe
+                                            // no new search work and are
+                                            // not re-recorded).
+                                            m.record_search(&res.stats);
                                             cache.lock().unwrap().put(key, res.clone());
                                         }
                                         r.map(Response::Optimized)
@@ -412,21 +418,32 @@ mod tests {
             ..Default::default()
         })
         .unwrap();
-        for _ in 0..3 {
+        let mut after_first = 0;
+        for i in 0..3 {
             let Response::Optimized(r) = c.call(Request::Optimize(opt_spec(16))).unwrap() else {
                 panic!("wrong response type")
             };
             assert_eq!(r.variants_explored, 6);
             assert_eq!(r.best, "map1 rnz map2");
+            if i == 0 {
+                after_first = c.metrics.search_generated.load(Ordering::Relaxed);
+                assert!(after_first > 0, "fresh run must record search work");
+            }
         }
         // Serial identical calls: first misses, the rest hit the LRU.
         assert_eq!(c.metrics.opt_cache_hits.load(Ordering::Relaxed), 2);
         assert_eq!(c.metrics.completed.load(Ordering::Relaxed), 3);
-        // A different spec misses.
+        // Cache hits describe no new search work: counters are unchanged.
+        assert_eq!(
+            c.metrics.search_generated.load(Ordering::Relaxed),
+            after_first
+        );
+        // A different spec misses — and records fresh search work.
         let Response::Optimized(_) = c.call(Request::Optimize(opt_spec(8))).unwrap() else {
             panic!("wrong response type")
         };
         assert_eq!(c.metrics.opt_cache_hits.load(Ordering::Relaxed), 2);
+        assert!(c.metrics.search_generated.load(Ordering::Relaxed) > after_first);
     }
 
     #[test]

@@ -7,7 +7,9 @@
 use crate::cachesim::{simulate, HierarchyConfig};
 use crate::costmodel::estimate;
 use crate::dsl;
-use crate::enumerate::{enumerate_search, SearchOptions, Variant, DEFAULT_PRUNE_SLACK};
+use crate::enumerate::{
+    enumerate_search, SearchOptions, SearchResult, SearchStats, Variant, DEFAULT_PRUNE_SLACK,
+};
 use crate::exec::lower;
 use crate::layout::Layout;
 use crate::rewrite::{fusion, normalize, subdivision, Ctx};
@@ -38,9 +40,15 @@ pub struct OptimizeSpec {
     pub subdivide_rnz: Option<usize>,
     /// Keep this many rows in the report.
     pub top_k: usize,
-    /// Cut dominated candidates inside the enumeration BFS (branch-and-
-    /// bound against the shared cost bound, with the conservative
-    /// [`DEFAULT_PRUNE_SLACK`]). `false` keeps the search exhaustive.
+    /// Cut dominated candidates inside the enumeration BFS: branch-and-
+    /// bound comparing each candidate's partial-spine lower bound
+    /// ([`crate::costmodel::spine_lower_bound_id`]) against the shared
+    /// best-known score, with [`DEFAULT_PRUNE_SLACK`]. Cut candidates are
+    /// never lowered, scored, or extracted; the winner can never be cut.
+    /// `false` keeps the search exhaustive. Applies to
+    /// [`RankBy::CostModel`] jobs only — the bound is a cost-model bound,
+    /// and CacheSim jobs re-rank the kept variants with the simulator, so
+    /// maintaining it there would be pure overhead.
     pub prune: bool,
 }
 
@@ -56,6 +64,10 @@ pub struct OptimizeResult {
     pub best_expr: String,
     /// Total input elements (diagnostic; ties results to requests).
     pub input_elems: usize,
+    /// Counters from the enumeration BFS (expansion, pruning, bound
+    /// tightenings, per-shard extraction counts). The coordinator folds
+    /// these into its service [`super::Metrics`] per fresh pipeline run.
+    pub stats: SearchStats,
 }
 
 /// Run the pipeline synchronously.
@@ -97,20 +109,29 @@ pub fn optimize(spec: &OptimizeSpec) -> Result<OptimizeResult> {
 
     // Sharded, id-native BFS; cost-model scores come back with the
     // variants, so the CostModel ranking below is free.
+    // The branch-and-bound cut maintains a cost-model bound; for CacheSim
+    // jobs those scores are discarded (the simulator re-ranks the kept
+    // variants), so enabling it there would only add per-candidate
+    // lower+estimate work. The knob therefore applies to cost-model
+    // ranking only.
+    let cost_ranked = matches!(spec.rank_by, RankBy::CostModel);
     let opts = SearchOptions {
         limit: 4096,
         shards: 0, // auto: fan one job out across the worker pool
-        prune_slack: if spec.prune {
+        prune_slack: if spec.prune && cost_ranked {
             Some(DEFAULT_PRUNE_SLACK)
         } else {
             None
         },
-        score: matches!(spec.rank_by, RankBy::CostModel),
+        score: cost_ranked,
     };
-    let search = enumerate_search(&start, &ctx, &opts)?;
-    let variants = search.variants;
+    let SearchResult {
+        variants,
+        scores: bfs_scores,
+        stats,
+    } = enumerate_search(&start, &ctx, &opts)?;
     let scores = match spec.rank_by {
-        RankBy::CostModel if search.scores.len() == variants.len() => search.scores,
+        RankBy::CostModel if bfs_scores.len() == variants.len() => bfs_scores,
         _ => rank_variants(&variants, &env, spec.rank_by)?,
     };
     let mut ranking: Vec<(String, f64)> = variants
@@ -129,6 +150,14 @@ pub fn optimize(spec: &OptimizeSpec) -> Result<OptimizeResult> {
         };
     }
     ranking.sort_by(|a, b| a.1.total_cmp(&b.1));
+    // Unlowerable variants rank last with score +∞, so one bad
+    // rearrangement cannot fail the whole job (unlike the seed path) —
+    // but when *nothing* lowers there is no executable winner to report.
+    if ranking.first().map_or(false, |(_, s)| s.is_infinite()) {
+        return Err(Error::Lower(
+            "no enumerated variant lowers (is the program fully fused?)".into(),
+        ));
+    }
     let variants_explored = ranking.len();
     ranking.truncate(spec.top_k.max(1));
     let (_, best_e) =
@@ -139,6 +168,7 @@ pub fn optimize(spec: &OptimizeSpec) -> Result<OptimizeResult> {
         best_expr: dsl::pretty(best_e),
         ranking,
         input_elems,
+        stats,
     })
 }
 
@@ -309,6 +339,13 @@ mod tests {
         assert_eq!(a.best, b.best);
         assert_eq!(a.variants_explored, b.variants_explored);
         assert_eq!(a.ranking, b.ranking);
+        // The default slack is lossless: the lower bound of a reachable
+        // rearrangement never exceeds the best true score.
+        assert_eq!(b.stats.pruned, 0);
+        // Kept candidates are extracted once at the output boundary; the
+        // score path itself never extracts.
+        assert!(a.stats.extracted() > 0);
+        assert!(a.stats.expanded > 0);
     }
 
     #[test]

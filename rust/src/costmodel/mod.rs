@@ -16,8 +16,24 @@
 //!
 //! The estimate ranks variants for pruning; exact ranking comes from the
 //! cache simulator or real execution.
+//!
+//! # Arena-native entry points
+//!
+//! The enumeration search scores every candidate it generates, so the
+//! scoring path must never rebuild a `Box<Expr>` tree. [`estimate_id`]
+//! lowers and estimates an interned expression straight from its
+//! [`ExprArena`], and [`spine_lower_bound_id`] computes a *provable lower
+//! bound* on the true score from the HoF spine alone — without lowering —
+//! which is what the search's branch-and-bound compares against the
+//! best-known score before paying for a full lower + estimate.
 
-use crate::exec::{Node, Program};
+use crate::dsl::intern::{ExprArena, ExprId, Node as ENode};
+use crate::exec::{lower_id, Node, Program};
+use crate::layout::Layout;
+use crate::rewrite::Ctx;
+use crate::typecheck::{infer_id_scratch, Env};
+use crate::Result;
+use std::collections::HashMap;
 
 /// Monotone version stamp of the analytical model. The coordinator mixes
 /// this into its optimize-result cache generation, so bumping it whenever
@@ -25,14 +41,25 @@ use crate::exec::{Node, Program};
 /// computed under the old model (ROADMAP: "needs a version stamp once the
 /// cost model learns online").
 ///
-/// Branch-and-bound pruning in [`crate::enumerate`] also leans on a
-/// property of the current constants: per leaf iteration, each input
-/// track costs between 0.01 (register reuse) and 1.0 (fresh line), plus
-/// a fixed 0.125 for the destination, so for kernels with ≤ ~20 input
-/// tracks no rearrangement can score worse than ~64× the best one. Keep
-/// [`crate::enumerate::DEFAULT_PRUNE_SLACK`] above that ratio when
-/// changing these constants.
+/// Branch-and-bound pruning in [`crate::enumerate`] compares
+/// [`spine_lower_bound_id`] against the best-known true score. The bound
+/// charges only the per-iteration destination write
+/// ([`UNIT_STRIDE_COST`]), so it stays a true lower bound for any
+/// constants under which every leaf iteration writes its destination at
+/// unit stride; keep that invariant (or re-derive the bound) when
+/// changing these constants, and bump this stamp whenever the scoring
+/// itself changes.
 pub const COST_MODEL_VERSION: u64 = 1;
+
+/// Cache-line cost charged per access at unit stride: one f64 out of an
+/// 8-element (64-byte) line. Also the per-iteration destination-write
+/// charge — fresh results are stored densely — which is what makes it the
+/// substrate of [`spine_lower_bound_id`].
+pub const UNIT_STRIDE_COST: f64 = 0.125;
+
+/// Per-access cost of a register-resident input track (stride 0, or a
+/// track advanced only by loops outside the innermost one).
+pub const REG_REUSE_COST: f64 = 0.01;
 
 /// Static cost estimate for one lowered variant.
 #[derive(Clone, Debug, PartialEq)]
@@ -67,6 +94,85 @@ pub fn estimate(prog: &Program) -> CostEstimate {
     };
     walk(&prog.root, 1.0, &mut est, &mut Vec::new(), true);
     est
+}
+
+/// Estimate the cost of an interned expression straight from the arena:
+/// [`crate::exec::lower_id`] + [`estimate`], with no `Box<Expr>` tree ever
+/// materialized. This is the search's per-candidate scoring path; it
+/// produces exactly `estimate(&lower(&arena.extract(id), env)?)` (pinned
+/// by `tests/lower_id_props.rs`).
+pub fn estimate_id(arena: &ExprArena, id: ExprId, env: &Env) -> Result<CostEstimate> {
+    Ok(estimate(&lower_id(arena, id, env)?))
+}
+
+/// A provable lower bound on [`CostEstimate::score`] for the expression
+/// behind `id`, computed from the HoF spine alone — no lowering, no
+/// `Box<Expr>`, no per-leaf walk.
+///
+/// The bound multiplies the consumed (outermost) extents down the spine —
+/// every spine level becomes a loop of exactly that extent, and whatever
+/// the body lowers to executes at least once per iteration — and charges
+/// only the destination write ([`UNIT_STRIDE_COST`]) for each of those
+/// iterations. The true score additionally pays per-track input traffic,
+/// inner-loop iterations and the accumulator penalty, so
+/// `spine_lower_bound_id(..) ≤ estimate_id(..).score()` whenever the
+/// expression lowers at all (pinned by a property test in
+/// `tests/lower_id_props.rs`; unlowerable candidates score `+∞`, which
+/// bounds trivially).
+///
+/// *Partial spine*: descent stops — returning the bound accumulated so
+/// far, still sound — as soon as a level's operator is not a lambda or an
+/// argument layout cannot be resolved, so the function can be called on
+/// candidates in any intermediate rewrite state.
+pub fn spine_lower_bound_id(arena: &ExprArena, id: ExprId, ctx: &Ctx) -> f64 {
+    // The descent follows a single spine path, so one mutable binding map
+    // (shadowing as it goes, never needing restoration) replaces a full
+    // `Ctx` clone per level — this runs once per generated candidate on
+    // the prune hot path.
+    fn spine_iters(
+        arena: &ExprArena,
+        id: ExprId,
+        env: &Env,
+        vars: &mut HashMap<String, Layout>,
+        acc: f64,
+    ) -> f64 {
+        let (fid, args) = match arena.get(id) {
+            ENode::Nzip { f, args } => (*f, args),
+            ENode::Rnz { m, args, .. } => (*m, args),
+            _ => return acc,
+        };
+        let mut extent = None;
+        let mut elem_tys = Vec::with_capacity(args.len());
+        for &a in args {
+            let Ok(layout) = infer_id_scratch(arena, a, env, vars) else {
+                return acc;
+            };
+            let Some(outer) = layout.outer() else {
+                return acc;
+            };
+            if extent.is_none() {
+                extent = Some(outer.extent as f64);
+            }
+            let Ok(elem) = layout.peel_outer() else {
+                return acc;
+            };
+            elem_tys.push(elem);
+        }
+        let Some(extent) = extent else {
+            return acc;
+        };
+        if let ENode::Lam { params, body } = arena.get(fid) {
+            if params.len() == args.len() {
+                for (p, elem) in params.iter().zip(elem_tys) {
+                    vars.insert(p.clone(), elem);
+                }
+                return spine_iters(arena, *body, env, vars, acc * extent);
+            }
+        }
+        acc * extent
+    }
+    let mut vars = ctx.vars.clone();
+    spine_iters(arena, id, &ctx.env, &mut vars, 1.0) * UNIT_STRIDE_COST
 }
 
 /// `iters`: product of enclosing loop extents. `stack`: per-level advance
@@ -118,14 +224,14 @@ fn walk(
                     }
                 }
                 let per_access = match stride {
-                    None | Some(0) => 0.01,
-                    Some(1) => 0.125,
-                    Some(s) if s < 8 => s as f64 * 0.125,
+                    None | Some(0) => REG_REUSE_COST,
+                    Some(1) => UNIT_STRIDE_COST,
+                    Some(s) if s < 8 => s as f64 * UNIT_STRIDE_COST,
                     _ => 1.0,
                 };
                 est.traffic += iters * per_access;
             }
-            est.traffic += iters * 0.125; // destination
+            est.traffic += iters * UNIT_STRIDE_COST; // destination
         }
     }
 }
@@ -196,5 +302,40 @@ mod tests {
         vs.sort_by(|a, b| a.1.score().total_cmp(&b.1.score()));
         let kept: Vec<&String> = vs.iter().take(3).map(|(k, _)| k).collect();
         assert!(kept.contains(&&"mapA rnz mapB".to_string()));
+    }
+
+    #[test]
+    fn estimate_id_matches_boxed_estimate() {
+        use crate::dsl::intern::ExprArena;
+        let env = Env::new()
+            .with("A", Layout::row_major(&[8, 8]))
+            .with("B", Layout::row_major(&[8, 8]));
+        let e = crate::dsl::matmul_naive(crate::dsl::input("A"), crate::dsl::input("B"));
+        let mut arena = ExprArena::new();
+        let id = arena.intern(&e);
+        let by_id = estimate_id(&arena, id, &env).unwrap();
+        let boxed = estimate(&lower(&e, &env).unwrap());
+        assert_eq!(by_id, boxed);
+    }
+
+    #[test]
+    fn spine_lower_bound_never_exceeds_score() {
+        use crate::dsl::intern::ExprArena;
+        let env = Env::new()
+            .with("A", Layout::row_major(&[16, 16]))
+            .with("B", Layout::row_major(&[16, 16]));
+        let ctx = Ctx::new(env.clone());
+        let mut arena = ExprArena::new();
+        for v in enumerate_all(&starts::matmul_naive_variant(), &ctx, 10).unwrap() {
+            let id = arena.intern(&v.expr);
+            let lb = spine_lower_bound_id(&arena, id, &ctx);
+            let score = estimate_id(&arena, id, &env).unwrap().score();
+            assert!(
+                lb <= score,
+                "{}: bound {lb} exceeds true score {score}",
+                v.display_key()
+            );
+            assert!(lb > 0.0, "{}: bound should be positive", v.display_key());
+        }
     }
 }

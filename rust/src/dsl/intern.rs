@@ -81,6 +81,27 @@ pub enum Node {
 }
 
 impl Node {
+    /// Short kind name for diagnostics (`"lambda"`, `"nzip"`, …).
+    /// Deliberately shallow: error paths that run per candidate on the
+    /// search hot path (id-native typecheck, lowering) must not
+    /// pretty-print, which would extract a `Box<Expr>` subtree.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Node::Var(_) => "variable",
+            Node::Lit(_) => "literal",
+            Node::Prim(_) => "primitive",
+            Node::Lam { .. } => "lambda",
+            Node::App { .. } => "application",
+            Node::Nzip { .. } => "nzip",
+            Node::Rnz { .. } => "rnz",
+            Node::Lift { .. } => "lift",
+            Node::Subdiv { .. } => "subdiv",
+            Node::Flatten { .. } => "flatten",
+            Node::Flip { .. } => "flip",
+            Node::Input(_) => "input",
+        }
+    }
+
     /// Rebuild the node with each child id transformed by `f`.
     pub fn map_children(&self, mut f: impl FnMut(ExprId) -> ExprId) -> Node {
         match self {
@@ -127,6 +148,11 @@ impl Node {
 pub struct ExprArena {
     nodes: Vec<Node>,
     dedup: HashMap<Node, ExprId>,
+    /// How many times [`extract`](ExprArena::extract) rebuilt a
+    /// `Box<Expr>` tree from this arena (root calls, not per node). The
+    /// search surfaces this through `SearchStats` so "no extraction on the
+    /// per-candidate hot path" is observable, not just asserted in tests.
+    extractions: Cell<u64>,
 }
 
 impl ExprArena {
@@ -198,6 +224,7 @@ impl ExprArena {
                 d2: *d2,
                 arg: self.intern(arg),
             },
+            Expr::Input(n) => Node::Input(n.clone()),
         };
         self.insert(node)
     }
@@ -322,46 +349,59 @@ impl ExprArena {
     }
 
     /// Reconstruct the `Box<Expr>` tree behind an id (the conversion layer
-    /// back to the parser/interpreter representation).
+    /// back to the parser/interpreter representation). Counted: see
+    /// [`extractions`](ExprArena::extractions).
     pub fn extract(&self, id: ExprId) -> Expr {
+        self.extractions.set(self.extractions.get() + 1);
+        self.extract_tree(id)
+    }
+
+    /// Number of [`extract`](ExprArena::extract) calls made against this
+    /// arena so far — the count of `Box<Expr>` trees rebuilt from it.
+    pub fn extractions(&self) -> u64 {
+        self.extractions.get()
+    }
+
+    fn extract_tree(&self, id: ExprId) -> Expr {
         match self.get(id).clone() {
             Node::Var(x) => Expr::Var(x),
             Node::Lit(bits) => Expr::Lit(f64::from_bits(bits)),
             Node::Prim(p) => Expr::Prim(p),
             Node::Lam { params, body } => Expr::Lam {
                 params,
-                body: Box::new(self.extract(body)),
+                body: Box::new(self.extract_tree(body)),
             },
             Node::App { f, args } => Expr::App {
-                f: Box::new(self.extract(f)),
-                args: args.iter().map(|&a| self.extract(a)).collect(),
+                f: Box::new(self.extract_tree(f)),
+                args: args.iter().map(|&a| self.extract_tree(a)).collect(),
             },
             Node::Nzip { f, args } => Expr::Nzip {
-                f: Box::new(self.extract(f)),
-                args: args.iter().map(|&a| self.extract(a)).collect(),
+                f: Box::new(self.extract_tree(f)),
+                args: args.iter().map(|&a| self.extract_tree(a)).collect(),
             },
             Node::Rnz { r, m, args } => Expr::Rnz {
-                r: Box::new(self.extract(r)),
-                m: Box::new(self.extract(m)),
-                args: args.iter().map(|&a| self.extract(a)).collect(),
+                r: Box::new(self.extract_tree(r)),
+                m: Box::new(self.extract_tree(m)),
+                args: args.iter().map(|&a| self.extract_tree(a)).collect(),
             },
             Node::Lift { f } => Expr::Lift {
-                f: Box::new(self.extract(f)),
+                f: Box::new(self.extract_tree(f)),
             },
             Node::Subdiv { d, b, arg } => Expr::Subdiv {
                 d,
                 b,
-                arg: Box::new(self.extract(arg)),
+                arg: Box::new(self.extract_tree(arg)),
             },
             Node::Flatten { d, arg } => Expr::Flatten {
                 d,
-                arg: Box::new(self.extract(arg)),
+                arg: Box::new(self.extract_tree(arg)),
             },
             Node::Flip { d1, d2, arg } => Expr::Flip {
                 d1,
                 d2,
-                arg: Box::new(self.extract(arg)),
+                arg: Box::new(self.extract_tree(arg)),
             },
+            Node::Input(n) => Expr::Input(n),
         }
     }
 }
@@ -486,6 +526,18 @@ mod tests {
         let id = arena.intern(&lam1("x", var("x")));
         let val = arena.intern(&lit(1.0));
         assert_eq!(arena.subst_id(id, "x", val), id);
+    }
+
+    #[test]
+    fn extraction_counter_counts_root_calls() {
+        let mut arena = ExprArena::new();
+        let e = matmul_naive(input("A"), input("B"));
+        let id = arena.intern(&e);
+        assert_eq!(arena.extractions(), 0, "interning must not extract");
+        let _ = arena.extract(id);
+        assert_eq!(arena.extractions(), 1, "one root call, not one per node");
+        let _ = arena.extract(id);
+        assert_eq!(arena.extractions(), 2);
     }
 
     #[test]

@@ -25,12 +25,23 @@
 //!   order is identical to the serial queue BFS no matter how many shards
 //!   run. One large job fans out across the pool, not just many small
 //!   jobs.
-//! - **Pruning** — with [`SearchOptions::prune_slack`] set, candidates
-//!   are scored incrementally with the analytic cost model and a
-//!   best-known bound is shared across shards through an atomic; a
-//!   candidate scoring worse than `slack × bound` is cut (neither kept
-//!   nor expanded). The bound only tightens at level boundaries, so
-//!   pruning decisions stay deterministic under any shard count.
+//! - **Scoring** — with [`SearchOptions::score`] set (implied by
+//!   pruning), candidates are lowered and cost-estimated *in the arena*
+//!   via [`crate::costmodel::estimate_id`]; the per-candidate path
+//!   allocates no `Box<Expr>` tree (ISSUE 3 — extraction happens once per
+//!   *kept* candidate at the output boundary, and [`SearchStats`] reports
+//!   the per-shard extraction counts so that stays observable).
+//! - **Pruning (branch-and-bound)** — with
+//!   [`SearchOptions::prune_slack`] set, each candidate's
+//!   [`crate::costmodel::spine_lower_bound_id`] — a provable lower bound
+//!   on its true score, computed from the spine without lowering — is
+//!   compared against `slack × best-known-score` (an atomic shared across
+//!   shards). A candidate whose *bound* already exceeds the threshold is
+//!   cut before it is lowered, scored, or extracted. Because the bound
+//!   never exceeds the true score, the default slack
+//!   ([`DEFAULT_PRUNE_SLACK`] = 1.0) can never cut the eventual winner.
+//!   The bound only tightens at level boundaries, so pruning decisions
+//!   stay deterministic under any shard count.
 //! - **Dedup** — candidates are deduplicated on an integer label-token
 //!   key (the collapsed spine permutation), not on formatted
 //!   `display_key()` strings; display strings are produced only at the
@@ -48,10 +59,9 @@ pub mod starts;
 
 pub use sjt::sjt_permutations;
 
-use crate::costmodel::estimate;
+use crate::costmodel::{estimate_id, spine_lower_bound_id};
 use crate::dsl::intern::{memo_enabled, ExprArena, ExprId, Node};
 use crate::dsl::Expr;
-use crate::exec::lower;
 use crate::rewrite::{exchange, normalize, normalize_id_rules, Ctx, IdRewriter};
 use crate::typecheck::Env;
 use crate::{Error, Result};
@@ -254,23 +264,32 @@ pub fn try_swap_at_id(
 
 /// Default branch-and-bound slack for [`SearchOptions::prune_slack`].
 ///
-/// Chosen so pruning is *provably lossless* for every workload this crate
-/// ships: under the current cost model a leaf iteration costs between
-/// `0.01·tracks + 0.125` and `1.0·tracks + 0.125 (+0.1·acc/iters ≤ 0.125)`
-/// per iteration, so for kernels with up to ~20 input tracks no
-/// rearrangement of the same computation can score worse than ~64× the
-/// optimum — i.e. nothing inside the reachable swap graph is ever cut,
-/// and the pruned search returns exactly the exhaustive result while the
-/// bound machinery stands ready to cut genuinely degenerate candidates
-/// (deep fused nests with many tracks). Callers that accept heuristic
-/// cuts can pass a tighter slack explicitly.
-pub const DEFAULT_PRUNE_SLACK: f64 = 64.0;
+/// The cut compares [`crate::costmodel::spine_lower_bound_id`] — a
+/// *provable lower bound* on a candidate's true cost-model score, never
+/// exceeding it (pinned by `tests/lower_id_props.rs`) — against
+/// `slack × best-known-score`. At slack `1.0` a cut candidate therefore
+/// provably scores worse than a variant already in hand, so the winner
+/// can never be cut, on *any* workload — unlike the earlier heuristic
+/// (PR 2) that compared full scores and needed a ~64× cushion derived
+/// from the cost-model constants and a ≤ ~20-track assumption.
+///
+/// Be clear-eyed about the flip side: the current bound charges only the
+/// destination-write term, and spine extents are permutation-invariant
+/// within one search family, so at slack `1.0` the cut is provably
+/// *inert* — `pruned` is always 0 and pruned mode returns exactly the
+/// exhaustive result (the property tests assert both). What pruned mode
+/// buys today is the sound branch-and-bound substrate (bound maintenance,
+/// deterministic cuts, stats) at near-zero overhead; cuts start to fire
+/// when the bound gains rearrangement-sensitive terms (per-track input
+/// traffic — see ROADMAP) or when a caller passes a sub-`1.0` slack to
+/// accept heuristic cuts (as the cut-path tests do).
+pub const DEFAULT_PRUNE_SLACK: f64 = 1.0;
 
 /// Cap on automatic shard fan-out: several coordinator workers may each
 /// be searching at once, and one shard per core per job would
 /// oversubscribe the machine workers-fold (same rationale as the ranking
 /// fan-out cap in the pipeline).
-const MAX_SEARCH_SHARDS: usize = 4;
+pub const MAX_SEARCH_SHARDS: usize = 4;
 
 /// Knobs for [`enumerate_search`].
 #[derive(Clone, Copy, Debug)]
@@ -280,9 +299,12 @@ pub struct SearchOptions {
     /// Worker shards for frontier expansion: `1` = serial, `0` = auto
     /// (one per available core, capped at [`MAX_SEARCH_SHARDS`]).
     pub shards: usize,
-    /// Branch-and-bound slack: a candidate scoring worse than
-    /// `slack × best-known-score` is cut — neither kept nor expanded.
-    /// `None` keeps the search exhaustive.
+    /// Branch-and-bound slack: a candidate whose partial-spine lower
+    /// bound ([`crate::costmodel::spine_lower_bound_id`]) exceeds
+    /// `slack × best-known-score` is cut *before* it is lowered, scored,
+    /// or extracted — neither kept nor expanded. Because the bound never
+    /// exceeds the true score, [`DEFAULT_PRUNE_SLACK`] (= 1.0) never cuts
+    /// the eventual winner. `None` keeps the search exhaustive.
     pub prune_slack: Option<f64>,
     /// Score candidates with the analytic cost model during the BFS and
     /// return the scores (implied by `prune_slack`; the pipeline reuses
@@ -301,19 +323,40 @@ impl Default for SearchOptions {
     }
 }
 
-/// Aggregate counters from one [`enumerate_search`] run.
-#[derive(Clone, Copy, Debug, Default)]
+/// Aggregate counters from one [`enumerate_search`] run. Surfaced through
+/// [`crate::coordinator::Metrics`] on production traffic so pruning
+/// effectiveness (and the no-extraction invariant of the score path) is
+/// observable, not just asserted in tests.
+#[derive(Clone, Debug, Default)]
 pub struct SearchStats {
+    /// Frontier parents expanded (BFS nodes whose swaps were tried).
+    pub expanded: usize,
     /// Successful exchange applications (pre-dedup).
     pub generated: usize,
     /// Variants kept in the result set.
     pub kept: usize,
-    /// Candidates cut by the cost bound.
+    /// Candidates cut by the lower-bound branch-and-bound (before being
+    /// lowered, scored, or extracted).
     pub pruned: usize,
     /// Candidates dropped because they no longer typechecked.
     pub type_rejects: usize,
+    /// Times the shared best-known score tightened during the merge step.
+    pub bound_updates: usize,
     /// Worker shards used.
     pub shards: usize,
+    /// `Box<Expr>` trees rebuilt from each shard's arena (one entry per
+    /// shard). On the id-native path this is exactly the output-boundary
+    /// extraction of *kept* candidates (`kept - 1`: the start is never
+    /// extracted, duplicates are deduped before extraction) — the
+    /// per-candidate score/lower path never extracts.
+    pub extracted_per_shard: Vec<u64>,
+}
+
+impl SearchStats {
+    /// Total `Box<Expr>` extractions across all shards.
+    pub fn extracted(&self) -> u64 {
+        self.extracted_per_shard.iter().sum()
+    }
 }
 
 /// Everything [`enumerate_search`] produces.
@@ -339,7 +382,9 @@ impl AtomicScore {
         f64::from_bits(self.0.load(Ordering::Relaxed))
     }
 
-    fn fetch_min(&self, v: f64) {
+    /// Lower the bound to `v` if `v` is smaller; returns whether the
+    /// bound actually tightened.
+    fn fetch_min(&self, v: f64) -> bool {
         let mut cur = self.0.load(Ordering::Relaxed);
         while v < f64::from_bits(cur) {
             match self.0.compare_exchange_weak(
@@ -348,10 +393,11 @@ impl AtomicScore {
                 Ordering::Relaxed,
                 Ordering::Relaxed,
             ) {
-                Ok(_) => return,
+                Ok(_) => return true,
                 Err(c) => cur = c,
             }
         }
+        false
     }
 }
 
@@ -374,28 +420,45 @@ fn label_key(labels: &[String], tokens: &mut Vec<String>) -> Vec<u8> {
         .collect()
 }
 
-/// Analytic cost-model score of one candidate (the paper's early-cut
-/// metric): lower the loop nest, estimate, collapse to the scalar score.
-/// Candidates that do not lower score `+∞`; they are kept (ranked last)
-/// and explicitly never pruned, so pruned and exhaustive mode always see
-/// the same variant set. (The seed pipeline instead failed the whole job
-/// on the first unlowerable variant; ranking it last keeps the job
-/// useful.)
-fn score_expr(e: &Expr, env: &Env) -> f64 {
-    match lower(e, env) {
-        Ok(prog) => estimate(&prog).score(),
+/// Analytic cost-model score of one interned candidate (the paper's
+/// early-cut metric): lower the loop nest and estimate *in the arena*
+/// ([`crate::costmodel::estimate_id`] — no `Box<Expr>` is ever rebuilt to
+/// score a candidate), then collapse to the scalar score. Candidates that
+/// do not lower score `+∞`; they are kept (ranked last) rather than
+/// failing the job, as on the seed path — and since `+∞` can never become
+/// the shared bound, they are also never the reason something else gets
+/// cut.
+fn score_expr_id(arena: &ExprArena, id: ExprId, env: &Env) -> f64 {
+    match estimate_id(arena, id, env) {
+        Ok(est) => est.score(),
         Err(_) => f64::INFINITY,
     }
+}
+
+/// One surviving child candidate, still unextracted: the id-native path
+/// carries only the interned id (plus which shard's arena owns it) and
+/// the merge step rebuilds a `Box<Expr>` *only* for children that survive
+/// dedup — so duplicates reached along several swap paths never cost a
+/// tree. The seed `Box<Expr>` engine already owns the tree and passes it
+/// through.
+struct Child {
+    labels: Vec<String>,
+    /// `Some` on the seed engine path; `None` means "extract `nid` from
+    /// the owning shard's arena iff kept".
+    expr: Option<Expr>,
+    nid: ExprId,
 }
 
 /// What one shard returns for one expanded parent: surviving children in
 /// swap-depth order plus the counters the merge step aggregates.
 #[derive(Default)]
 struct Expansion {
-    children: Vec<(Variant, Option<f64>)>,
+    children: Vec<(Child, Option<f64>)>,
     generated: usize,
     pruned: usize,
     type_rejects: usize,
+    /// Index of the shard whose arena owns the children's `nid`s.
+    shard: usize,
 }
 
 /// One search worker: its own hash-consing arena, its own memoized
@@ -410,6 +473,10 @@ struct Shard {
     /// so a variant reached along several swap paths is lowered and
     /// estimated once, not once per path.
     scored: HashMap<ExprId, f64>,
+    /// Partial-spine lower bound per interned candidate — like `scored`,
+    /// a candidate reached along several swap paths pays the spine walk
+    /// once.
+    bounded: HashMap<ExprId, f64>,
 }
 
 impl Shard {
@@ -419,6 +486,7 @@ impl Shard {
             norm: IdRewriter::new(&normalize_id_rules()),
             checked: HashMap::new(),
             scored: HashMap::new(),
+            bounded: HashMap::new(),
         }
     }
 
@@ -477,16 +545,35 @@ impl Shard {
                 exp.type_rejects += 1;
                 continue;
             }
-            // Output boundary: the one extract per surviving candidate.
-            let expr = match extracted {
-                Some(e) => e,
-                None => self.arena.extract(nid),
-            };
+            // Branch-and-bound: compare the candidate's partial-spine
+            // lower bound against the shared best-known score *before*
+            // lowering, scoring, or extracting it. The bound only moves
+            // at level boundaries, so this read is the same in every
+            // shard — pruning is deterministic under any shard count —
+            // and since the bound never exceeds the true score, the
+            // default slack (1.0) can never cut the eventual winner.
+            if let Some(sl) = slack {
+                let lb = match self.bounded.get(&nid) {
+                    Some(&lb) => lb,
+                    None => {
+                        let lb = spine_lower_bound_id(&self.arena, nid, ctx);
+                        self.bounded.insert(nid, lb);
+                        lb
+                    }
+                };
+                if lb > sl * bound.get() {
+                    exp.pruned += 1;
+                    continue;
+                }
+            }
+            // Score in the arena — a variant reached along several swap
+            // paths is lowered and estimated once, not once per path, and
+            // never as a `Box<Expr>` tree.
             let score = if scoring {
                 Some(match self.scored.get(&nid) {
                     Some(&s) => s,
                     None => {
-                        let s = score_expr(&expr, &ctx.env);
+                        let s = score_expr_id(&self.arena, nid, &ctx.env);
                         self.scored.insert(nid, s);
                         s
                     }
@@ -494,20 +581,18 @@ impl Shard {
             } else {
                 None
             };
-            if let (Some(s), Some(sl)) = (score, slack) {
-                // The bound only moves at level boundaries, so this read
-                // is the same in every shard — pruning is deterministic
-                // under any shard count. Unlowerable (infinite-score)
-                // candidates are never cut: pruning must not change the
-                // variant set relative to exhaustive mode.
-                if s.is_finite() && s > sl * bound.get() {
-                    exp.pruned += 1;
-                    continue;
-                }
-            }
+            // No extraction here: the merge step rebuilds a tree only for
+            // children that survive dedup (the output boundary).
             let mut labels = parent.labels.clone();
             labels.swap(d, d + 1);
-            exp.children.push((Variant { expr, labels }, score));
+            exp.children.push((
+                Child {
+                    labels,
+                    expr: extracted,
+                    nid,
+                },
+                score,
+            ));
         }
         exp
     }
@@ -544,7 +629,11 @@ fn parallel_expand(
             handles.push(s.spawn(move || {
                 parents
                     .into_iter()
-                    .map(|(i, v)| (i, shard.expand(v, n, ctx, true, scoring, slack, bound)))
+                    .map(|(i, v)| {
+                        let mut exp = shard.expand(v, n, ctx, true, scoring, slack, bound);
+                        exp.shard = k;
+                        (i, exp)
+                    })
                     .collect::<Vec<_>>()
             }));
         }
@@ -588,11 +677,6 @@ pub fn enumerate_search(
     }
     crate::typecheck::infer(&start.expr, &ctx.env)?;
     let scoring = opts.score || opts.prune_slack.is_some();
-    let start_score = if scoring {
-        Some(score_expr(&start.expr, &ctx.env))
-    } else {
-        None
-    };
     // Sampled once here: `memo_enabled` is thread-local, so shard threads
     // cannot consult it themselves. The seed engine also stays serial —
     // it exists to reproduce seed behavior exactly.
@@ -609,6 +693,17 @@ pub fn enumerate_search(
         }
         .max(1)
     };
+    let mut shards: Vec<Shard> = (0..threads).map(|_| Shard::new()).collect();
+    // The start variant is scored through the same arena-native path as
+    // every candidate (and warms shard 0's arena and score cache).
+    let start_score = if scoring {
+        let sid = shards[0].arena.intern(&start.expr);
+        let s = score_expr_id(&shards[0].arena, sid, &ctx.env);
+        shards[0].scored.insert(sid, s);
+        Some(s)
+    } else {
+        None
+    };
 
     let mut tokens: Vec<String> = Vec::new();
     let mut seen: HashSet<Vec<u8>> = HashSet::new();
@@ -623,31 +718,37 @@ pub fn enumerate_search(
         shards: threads,
         ..Default::default()
     };
-    let mut shards: Vec<Shard> = (0..threads).map(|_| Shard::new()).collect();
-    let mut frontier: Vec<Variant> = vec![start.clone()];
+    // The current BFS level is a range of `out` (each level's kept
+    // variants are exactly the next level's parents), so no tree is ever
+    // cloned into a separate frontier vector.
+    let mut level = 0..1usize;
 
-    while !frontier.is_empty() && out.len() < opts.limit {
-        let expansions: Vec<Expansion> = if threads > 1 && frontier.len() > 1 {
-            parallel_expand(
-                &mut shards,
-                &frontier,
-                n,
-                ctx,
-                scoring,
-                opts.prune_slack,
-                &bound,
-            )?
-        } else {
-            frontier
-                .iter()
-                .map(|v| {
-                    shards[0].expand(v, n, ctx, id_native, scoring, opts.prune_slack, &bound)
-                })
-                .collect()
+    while !level.is_empty() && out.len() < opts.limit {
+        stats.expanded += level.len();
+        let expansions: Vec<Expansion> = {
+            let frontier = &out[level.clone()];
+            if threads > 1 && frontier.len() > 1 {
+                parallel_expand(
+                    &mut shards,
+                    frontier,
+                    n,
+                    ctx,
+                    scoring,
+                    opts.prune_slack,
+                    &bound,
+                )?
+            } else {
+                frontier
+                    .iter()
+                    .map(|v| {
+                        shards[0].expand(v, n, ctx, id_native, scoring, opts.prune_slack, &bound)
+                    })
+                    .collect()
+            }
         };
         // Deterministic merge: parents in frontier order, children in
         // swap-depth order — exactly the serial queue BFS sequence.
-        let mut next: Vec<Variant> = Vec::new();
+        let level_start = out.len();
         for exp in expansions {
             // Count the whole level's work even past the limit — the
             // shards already did it; only *keeping* stops (mirroring the
@@ -658,23 +759,34 @@ pub fn enumerate_search(
             if out.len() >= opts.limit {
                 continue;
             }
-            for (v, s) in exp.children {
+            for (child, s) in exp.children {
                 if let Some(s) = s {
-                    bound.fetch_min(s);
+                    if bound.fetch_min(s) {
+                        stats.bound_updates += 1;
+                    }
                 }
-                let key = label_key(&v.labels, &mut tokens);
+                let key = label_key(&child.labels, &mut tokens);
                 if seen.insert(key) {
-                    out.push(v.clone());
+                    // Output boundary: the one extract per *kept*
+                    // candidate — duplicates never rebuild a tree.
+                    let expr = match child.expr {
+                        Some(e) => e,
+                        None => shards[exp.shard].arena.extract(child.nid),
+                    };
+                    out.push(Variant {
+                        expr,
+                        labels: child.labels,
+                    });
                     if let Some(s) = s {
                         scores.push(s);
                     }
-                    next.push(v);
                 }
             }
         }
-        frontier = next;
+        level = level_start..out.len();
     }
     stats.kept = out.len();
+    stats.extracted_per_shard = shards.iter().map(|s| s.arena.extractions()).collect();
     Ok(SearchResult {
         variants: out,
         scores,

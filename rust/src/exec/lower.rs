@@ -7,8 +7,27 @@
 //! independent offset cursor), so aliased views of one buffer traverse
 //! independently — offsets are derived per iteration as
 //! `off[child] = off[parent] + base + i * stride`.
+//!
+//! # Two front ends, one machine
+//!
+//! Lowering has two entry points over the same machinery:
+//!
+//! - [`lower`] consumes the `Box<Expr>` AST — the parser/interpreter
+//!   lingua franca, and the entry point for one-off lowering jobs;
+//! - [`lower_id`] consumes an interned [`ExprId`] directly from an
+//!   [`ExprArena`] — the search hot path, where thousands of candidates
+//!   are lowered for cost estimation and rebuilding a `Box<Expr>` tree per
+//!   candidate would dominate the cost of scoring it.
+//!
+//! Everything that determines the *identity* of the produced [`Program`] —
+//! input-slot interning order, track allocation, temp-region layout, the
+//! bound-variable table — lives in the shared `LowerState`, which both
+//! front ends drive case-for-case. That is what makes
+//! `lower_id(arena, id) ≡ lower(&arena.extract(id))` hold bit-for-bit
+//! (pinned by the differential tests in `tests/lower_id_props.rs`).
 
 use super::program::{Adv, Kernel, KernelOp, Node, Program, SlotId, TrackId};
+use crate::dsl::intern::{ExprArena, ExprId, Node as ENode};
 use crate::dsl::{Expr, Prim};
 use crate::layout::Layout;
 use crate::typecheck::{self, Env};
@@ -20,22 +39,28 @@ pub fn lower(e: &Expr, env: &Env) -> Result<Program> {
     // Typecheck up front: lowering relies on the shape guarantees.
     typecheck::infer(e, env)?;
     let mut lw = Lowerer {
-        env,
-        input_names: Vec::new(),
-        input_lens: Vec::new(),
-        track_slot: Vec::new(),
-        temp_sizes: Vec::new(),
-        vars: HashMap::new(),
+        st: LowerState::new(env),
     };
     let (root, out_size) = lw.lower_node(e, None)?;
-    Ok(Program {
-        root,
-        input_names: lw.input_names,
-        track_slot: lw.track_slot,
-        input_lens: lw.input_lens,
-        out_size,
-        temp_sizes: lw.temp_sizes,
-    })
+    Ok(lw.st.into_program(root, out_size))
+}
+
+/// Lower an interned expression to an executable [`Program`] directly from
+/// the arena — the id-native twin of [`lower`], and the per-candidate
+/// lowering path of the enumeration search. No `Box<Expr>` tree is ever
+/// materialized: traversal, view resolution and kernel compilation all
+/// read [`ExprArena`] nodes, and even diagnostics describe nodes shallowly
+/// instead of extracting subtrees. Produces bit-identical programs to
+/// `lower(&arena.extract(id), env)`.
+pub fn lower_id(arena: &ExprArena, id: ExprId, env: &Env) -> Result<Program> {
+    // Typecheck up front: lowering relies on the shape guarantees.
+    typecheck::infer_id(arena, id, env)?;
+    let mut lw = IdLowerer {
+        arena,
+        st: LowerState::new(env),
+    };
+    let (root, out_size) = lw.lower_node(id, None)?;
+    Ok(lw.st.into_program(root, out_size))
 }
 
 /// A resolved array view: which buffer, derived from which track, with what
@@ -54,7 +79,13 @@ struct VarInfo {
     layout: Layout,
 }
 
-struct Lowerer<'a> {
+/// Expression-independent lowering state and mechanics, shared by the
+/// `Box<Expr>` and arena-native front ends: input-slot interning, track
+/// allocation, reduction temp regions, the bound-variable table, and every
+/// node-construction step that does not inspect expression syntax. Both
+/// lowerers are thin syntax adapters over this machine, which is what
+/// keeps their outputs identical.
+struct LowerState<'a> {
     env: &'a Env,
     input_names: Vec<String>,
     input_lens: Vec<usize>,
@@ -63,7 +94,29 @@ struct Lowerer<'a> {
     vars: HashMap<String, VarInfo>,
 }
 
-impl<'a> Lowerer<'a> {
+impl<'a> LowerState<'a> {
+    fn new(env: &'a Env) -> Self {
+        LowerState {
+            env,
+            input_names: Vec::new(),
+            input_lens: Vec::new(),
+            track_slot: Vec::new(),
+            temp_sizes: Vec::new(),
+            vars: HashMap::new(),
+        }
+    }
+
+    fn into_program(self, root: Node, out_size: usize) -> Program {
+        Program {
+            root,
+            input_names: self.input_names,
+            track_slot: self.track_slot,
+            input_lens: self.input_lens,
+            out_size,
+            temp_sizes: self.temp_sizes,
+        }
+    }
+
     fn slot_of(&mut self, name: &str) -> Result<(SlotId, Layout)> {
         let layout = self
             .env
@@ -84,57 +137,30 @@ impl<'a> Lowerer<'a> {
         self.track_slot.len() - 1
     }
 
-    /// Resolve an expression in HoF-argument position to a strided view.
-    fn resolve_view(&mut self, e: &Expr) -> Result<ViewSpec> {
-        match e {
-            Expr::Input(n) => {
-                let (slot, layout) = self.slot_of(n)?;
-                Ok(ViewSpec {
-                    slot,
-                    src: None,
-                    base: 0,
-                    layout,
-                })
-            }
-            Expr::Var(x) => {
-                let info = self
-                    .vars
-                    .get(x)
-                    .cloned()
-                    .ok_or_else(|| Error::Lower(format!("unbound variable '{x}'")))?;
-                Ok(ViewSpec {
-                    slot: self.track_slot[info.track],
-                    src: Some(info.track),
-                    base: 0,
-                    layout: info.layout,
-                })
-            }
-            Expr::Subdiv { d, b, arg } => {
-                let v = self.resolve_view(arg)?;
-                Ok(ViewSpec {
-                    layout: v.layout.subdiv(*d, *b)?,
-                    ..v
-                })
-            }
-            Expr::Flatten { d, arg } => {
-                let v = self.resolve_view(arg)?;
-                Ok(ViewSpec {
-                    layout: v.layout.flatten(*d)?,
-                    ..v
-                })
-            }
-            Expr::Flip { d1, d2, arg } => {
-                let v = self.resolve_view(arg)?;
-                Ok(ViewSpec {
-                    layout: v.layout.flip2(*d1, *d2)?,
-                    ..v
-                })
-            }
-            other => Err(Error::Lower(format!(
-                "HoF argument is not a view of an input (fuse first): {}",
-                crate::dsl::pretty(other)
-            ))),
-        }
+    /// Root view of a named input buffer.
+    fn input_view(&mut self, name: &str) -> Result<ViewSpec> {
+        let (slot, layout) = self.slot_of(name)?;
+        Ok(ViewSpec {
+            slot,
+            src: None,
+            base: 0,
+            layout,
+        })
+    }
+
+    /// View of a variable bound by an enclosing HoF.
+    fn var_view(&self, x: &str) -> Result<ViewSpec> {
+        let info = self
+            .vars
+            .get(x)
+            .cloned()
+            .ok_or_else(|| Error::Lower(format!("unbound variable '{x}'")))?;
+        Ok(ViewSpec {
+            slot: self.track_slot[info.track],
+            src: Some(info.track),
+            base: 0,
+            layout: info.layout,
+        })
     }
 
     /// Consume the outermost dimension of each argument view: create one
@@ -176,200 +202,130 @@ impl<'a> Lowerer<'a> {
         Ok((extent.unwrap(), advances, elems))
     }
 
-    /// Bind a function-position expression to element views and lower its
-    /// body. Handles `Lam`, bare `Prim`, and `lift^k`.
-    fn bind_and_lower(
+    /// Bind lambda parameters to element views (which are always
+    /// track-rooted post `consume_outer`), returning the shadowed entries
+    /// for [`LowerState::restore_params`].
+    fn bind_params(
         &mut self,
-        f: &Expr,
-        elems: Vec<ViewSpec>,
-        under_op: Option<Prim>,
-    ) -> Result<(Node, usize)> {
-        match f {
-            Expr::Lam { params, body } => {
-                if params.len() != elems.len() {
-                    return Err(Error::Lower(format!(
-                        "lambda arity {} vs {} args",
-                        params.len(),
-                        elems.len()
-                    )));
+        params: &[String],
+        elems: &[ViewSpec],
+    ) -> Result<Vec<(String, Option<VarInfo>)>> {
+        let mut saved = Vec::new();
+        for (p, v) in params.iter().zip(elems) {
+            let track = match (v.src, v.base) {
+                (Some(t), 0) => t,
+                _ => {
+                    return Err(Error::Lower(
+                        "internal: element view not track-rooted".into(),
+                    ))
                 }
-                // Bind each element view through a dedicated track when it
-                // is not already track-rooted (it always is, post
-                // consume_outer).
-                let mut saved = Vec::new();
-                for (p, v) in params.iter().zip(&elems) {
-                    let track = match (v.src, v.base) {
-                        (Some(t), 0) => t,
-                        _ => {
-                            return Err(Error::Lower(
-                                "internal: element view not track-rooted".into(),
-                            ))
-                        }
-                    };
-                    let info = VarInfo {
-                        track,
-                        layout: v.layout.clone(),
-                    };
-                    saved.push((p.clone(), self.vars.insert(p.clone(), info)));
+            };
+            let info = VarInfo {
+                track,
+                layout: v.layout.clone(),
+            };
+            saved.push((p.clone(), self.vars.insert(p.clone(), info)));
+        }
+        Ok(saved)
+    }
+
+    /// Undo [`LowerState::bind_params`] (restoring any shadowed bindings).
+    fn restore_params(&mut self, saved: Vec<(String, Option<VarInfo>)>) {
+        for (p, old) in saved.into_iter().rev() {
+            match old {
+                Some(v) => {
+                    self.vars.insert(p, v);
                 }
-                let r = self.lower_node(body, under_op);
-                for (p, old) in saved.into_iter().rev() {
-                    match old {
-                        Some(v) => {
-                            self.vars.insert(p, v);
-                        }
-                        None => {
-                            self.vars.remove(&p);
-                        }
-                    }
+                None => {
+                    self.vars.remove(&p);
                 }
-                r
             }
-            Expr::Prim(p) => {
-                // rnz (+) (*) u v — the zipper is a bare primitive over
-                // scalar elements.
-                if elems.len() != p.arity() {
-                    return Err(Error::Lower(format!(
-                        "primitive {} arity {} vs {} args",
-                        p.name(),
-                        p.arity(),
-                        elems.len()
-                    )));
-                }
-                let mut tracks = Vec::with_capacity(elems.len());
-                let mut ops = Vec::with_capacity(elems.len() + 1);
-                for (i, v) in elems.iter().enumerate() {
-                    if !v.layout.is_scalar() {
-                        return Err(Error::Lower(format!(
-                            "primitive {} over non-scalar element",
-                            p.name()
-                        )));
-                    }
-                    tracks.push(v.src.expect("track-rooted"));
-                    ops.push(KernelOp::In(i as u8));
-                }
-                ops.push(KernelOp::Prim(*p));
-                Ok((Node::Leaf(Kernel { ops, tracks }), 1))
-            }
-            Expr::Lift { f: inner } => {
-                // lift g elementwise: one more map loop over the elements.
-                let (extent, advances, sub_elems) = self.consume_outer(elems)?;
-                let (body, body_size) = self.bind_and_lower(inner, sub_elems, under_op)?;
-                Ok((
-                    Node::MapLoop {
-                        extent,
-                        advances,
-                        body_size,
-                        body: Box::new(body),
-                    },
-                    extent * body_size,
-                ))
-            }
-            other => Err(Error::Lower(format!(
-                "unsupported function form: {}",
-                crate::dsl::pretty(other)
-            ))),
         }
     }
 
-    fn lower_node(&mut self, e: &Expr, under_op: Option<Prim>) -> Result<(Node, usize)> {
-        match e {
-            Expr::Nzip { f, args } => {
-                let views = args
-                    .iter()
-                    .map(|a| self.resolve_view(a))
-                    .collect::<Result<Vec<_>>>()?;
-                let (extent, advances, elems) = self.consume_outer(views)?;
-                let (body, body_size) = self.bind_and_lower(f, elems, under_op)?;
-                Ok((
-                    Node::MapLoop {
-                        extent,
-                        advances,
-                        body_size,
-                        body: Box::new(body),
-                    },
-                    extent * body_size,
-                ))
+    /// `rnz (+) (*) u v` — the zipper is a bare primitive over scalar
+    /// elements; emit the one-kernel leaf.
+    fn prim_leaf(&mut self, p: Prim, elems: &[ViewSpec]) -> Result<(Node, usize)> {
+        if elems.len() != p.arity() {
+            return Err(Error::Lower(format!(
+                "primitive {} arity {} vs {} args",
+                p.name(),
+                p.arity(),
+                elems.len()
+            )));
+        }
+        let mut tracks = Vec::with_capacity(elems.len());
+        let mut ops = Vec::with_capacity(elems.len() + 1);
+        for (i, v) in elems.iter().enumerate() {
+            if !v.layout.is_scalar() {
+                return Err(Error::Lower(format!(
+                    "primitive {} over non-scalar element",
+                    p.name()
+                )));
             }
-            Expr::Rnz { r, m, args } => {
-                let op = reducer_prim(r)?;
-                let views = args
-                    .iter()
-                    .map(|a| self.resolve_view(a))
-                    .collect::<Result<Vec<_>>>()?;
-                let (extent, advances, elems) = self.consume_outer(views)?;
-                let (body, body_size) = self.bind_and_lower(m, elems, Some(op))?;
-                // A reduction running under a different (or non-commutative)
-                // enclosing accumulator needs a private region.
-                let temp = match under_op {
-                    Some(o) if o == op && op.is_commutative() => None,
-                    None => None,
-                    Some(_) => {
-                        self.temp_sizes.push(body_size);
-                        Some(self.temp_sizes.len() - 1)
-                    }
-                };
-                Ok((
-                    Node::RedLoop {
-                        extent,
-                        advances,
-                        op,
-                        body_size,
-                        temp,
-                        body: Box::new(body),
-                    },
-                    body_size,
-                ))
+            tracks.push(v.src.expect("track-rooted"));
+            ops.push(KernelOp::In(i as u8));
+        }
+        ops.push(KernelOp::Prim(p));
+        Ok((Node::Leaf(Kernel { ops, tracks }), 1))
+    }
+
+    /// A reduction running under a different (or non-commutative) enclosing
+    /// accumulator needs a private temp region; allocate it.
+    fn reduction_temp(
+        &mut self,
+        op: Prim,
+        under_op: Option<Prim>,
+        body_size: usize,
+    ) -> Option<usize> {
+        match under_op {
+            Some(o) if o == op && op.is_commutative() => None,
+            None => None,
+            Some(_) => {
+                self.temp_sizes.push(body_size);
+                Some(self.temp_sizes.len() - 1)
             }
-            // An array-typed body (identity zipper, bare view) lowers to a
-            // copy nest.
-            Expr::Var(_) | Expr::Input(_) | Expr::Subdiv { .. } | Expr::Flatten { .. }
-            | Expr::Flip { .. } => {
-                let v = self.resolve_view(e)?;
-                if v.layout.is_scalar() {
-                    let t = match (v.src, v.base) {
-                        (Some(t), 0) => t,
-                        _ => {
-                            let t = self.new_track(v.slot);
-                            // Constant-offset scalar view of an input: model
-                            // as a 1-iteration advance-less track via base.
-                            return Ok((
-                                Node::MapLoop {
-                                    extent: 1,
-                                    advances: vec![Adv {
-                                        dst: t,
-                                        src: v.src,
-                                        base: v.base,
-                                        stride: 0,
-                                    }],
-                                    body_size: 1,
-                                    body: Box::new(Node::Leaf(Kernel {
-                                        ops: vec![KernelOp::In(0)],
-                                        tracks: vec![t],
-                                    })),
-                                },
-                                1,
-                            ));
-                        }
-                    };
+        }
+    }
+
+    /// Lower an array-typed body (identity zipper, bare view) to a copy
+    /// nest — or a scalar view to its leaf form.
+    fn view_node(&mut self, v: ViewSpec) -> Result<(Node, usize)> {
+        if v.layout.is_scalar() {
+            let t = match (v.src, v.base) {
+                (Some(t), 0) => t,
+                _ => {
+                    let t = self.new_track(v.slot);
+                    // Constant-offset scalar view of an input: model as a
+                    // 1-iteration advance-less track via base.
                     return Ok((
-                        Node::Leaf(Kernel {
-                            ops: vec![KernelOp::In(0)],
-                            tracks: vec![t],
-                        }),
+                        Node::MapLoop {
+                            extent: 1,
+                            advances: vec![Adv {
+                                dst: t,
+                                src: v.src,
+                                base: v.base,
+                                stride: 0,
+                            }],
+                            body_size: 1,
+                            body: Box::new(Node::Leaf(Kernel {
+                                ops: vec![KernelOp::In(0)],
+                                tracks: vec![t],
+                            })),
+                        },
                         1,
                     ));
                 }
-                self.lower_copy(v)
-            }
-            // Scalar computation leaf.
-            _ => {
-                let mut tracks = Vec::new();
-                let mut ops = Vec::new();
-                self.compile_kernel(e, &mut ops, &mut tracks)?;
-                Ok((Node::Leaf(Kernel { ops, tracks }), 1))
-            }
+            };
+            return Ok((
+                Node::Leaf(Kernel {
+                    ops: vec![KernelOp::In(0)],
+                    tracks: vec![t],
+                }),
+                1,
+            ));
         }
+        self.lower_copy(v)
     }
 
     /// Copy an array view to the destination: one map loop per dimension.
@@ -398,6 +354,172 @@ impl<'a> Lowerer<'a> {
         ))
     }
 
+    /// Emit the bytecode for a scalar variable read inside a leaf kernel.
+    fn kernel_var(
+        &mut self,
+        x: &str,
+        ops: &mut Vec<KernelOp>,
+        tracks: &mut Vec<TrackId>,
+    ) -> Result<()> {
+        let info = self
+            .vars
+            .get(x)
+            .cloned()
+            .ok_or_else(|| Error::Lower(format!("unbound variable '{x}'")))?;
+        if !info.layout.is_scalar() {
+            return Err(Error::Lower(format!(
+                "array variable '{x}' used in scalar position"
+            )));
+        }
+        if tracks.len() >= u8::MAX as usize {
+            return Err(Error::Lower("kernel has too many inputs".into()));
+        }
+        ops.push(KernelOp::In(tracks.len() as u8));
+        tracks.push(info.track);
+        Ok(())
+    }
+}
+
+/// The `Box<Expr>` front end.
+struct Lowerer<'a> {
+    st: LowerState<'a>,
+}
+
+impl<'a> Lowerer<'a> {
+    /// Resolve an expression in HoF-argument position to a strided view.
+    fn resolve_view(&mut self, e: &Expr) -> Result<ViewSpec> {
+        match e {
+            Expr::Input(n) => self.st.input_view(n),
+            Expr::Var(x) => self.st.var_view(x),
+            Expr::Subdiv { d, b, arg } => {
+                let v = self.resolve_view(arg)?;
+                Ok(ViewSpec {
+                    layout: v.layout.subdiv(*d, *b)?,
+                    ..v
+                })
+            }
+            Expr::Flatten { d, arg } => {
+                let v = self.resolve_view(arg)?;
+                Ok(ViewSpec {
+                    layout: v.layout.flatten(*d)?,
+                    ..v
+                })
+            }
+            Expr::Flip { d1, d2, arg } => {
+                let v = self.resolve_view(arg)?;
+                Ok(ViewSpec {
+                    layout: v.layout.flip2(*d1, *d2)?,
+                    ..v
+                })
+            }
+            other => Err(Error::Lower(format!(
+                "HoF argument is not a view of an input (fuse first): {}",
+                crate::dsl::pretty(other)
+            ))),
+        }
+    }
+
+    /// Bind a function-position expression to element views and lower its
+    /// body. Handles `Lam`, bare `Prim`, and `lift^k`.
+    fn bind_and_lower(
+        &mut self,
+        f: &Expr,
+        elems: Vec<ViewSpec>,
+        under_op: Option<Prim>,
+    ) -> Result<(Node, usize)> {
+        match f {
+            Expr::Lam { params, body } => {
+                if params.len() != elems.len() {
+                    return Err(Error::Lower(format!(
+                        "lambda arity {} vs {} args",
+                        params.len(),
+                        elems.len()
+                    )));
+                }
+                let saved = self.st.bind_params(params, &elems)?;
+                let r = self.lower_node(body, under_op);
+                self.st.restore_params(saved);
+                r
+            }
+            Expr::Prim(p) => self.st.prim_leaf(*p, &elems),
+            Expr::Lift { f: inner } => {
+                // lift g elementwise: one more map loop over the elements.
+                let (extent, advances, sub_elems) = self.st.consume_outer(elems)?;
+                let (body, body_size) = self.bind_and_lower(inner, sub_elems, under_op)?;
+                Ok((
+                    Node::MapLoop {
+                        extent,
+                        advances,
+                        body_size,
+                        body: Box::new(body),
+                    },
+                    extent * body_size,
+                ))
+            }
+            other => Err(Error::Lower(format!(
+                "unsupported function form: {}",
+                crate::dsl::pretty(other)
+            ))),
+        }
+    }
+
+    fn lower_node(&mut self, e: &Expr, under_op: Option<Prim>) -> Result<(Node, usize)> {
+        match e {
+            Expr::Nzip { f, args } => {
+                let views = args
+                    .iter()
+                    .map(|a| self.resolve_view(a))
+                    .collect::<Result<Vec<_>>>()?;
+                let (extent, advances, elems) = self.st.consume_outer(views)?;
+                let (body, body_size) = self.bind_and_lower(f, elems, under_op)?;
+                Ok((
+                    Node::MapLoop {
+                        extent,
+                        advances,
+                        body_size,
+                        body: Box::new(body),
+                    },
+                    extent * body_size,
+                ))
+            }
+            Expr::Rnz { r, m, args } => {
+                let op = reducer_prim(r)?;
+                let views = args
+                    .iter()
+                    .map(|a| self.resolve_view(a))
+                    .collect::<Result<Vec<_>>>()?;
+                let (extent, advances, elems) = self.st.consume_outer(views)?;
+                let (body, body_size) = self.bind_and_lower(m, elems, Some(op))?;
+                let temp = self.st.reduction_temp(op, under_op, body_size);
+                Ok((
+                    Node::RedLoop {
+                        extent,
+                        advances,
+                        op,
+                        body_size,
+                        temp,
+                        body: Box::new(body),
+                    },
+                    body_size,
+                ))
+            }
+            // An array-typed body (identity zipper, bare view) lowers to a
+            // copy nest.
+            Expr::Var(_) | Expr::Input(_) | Expr::Subdiv { .. } | Expr::Flatten { .. }
+            | Expr::Flip { .. } => {
+                let v = self.resolve_view(e)?;
+                self.st.view_node(v)
+            }
+            // Scalar computation leaf.
+            _ => {
+                let mut tracks = Vec::new();
+                let mut ops = Vec::new();
+                self.compile_kernel(e, &mut ops, &mut tracks)?;
+                Ok((Node::Leaf(Kernel { ops, tracks }), 1))
+            }
+        }
+    }
+
     /// Compile a scalar expression to stack bytecode.
     fn compile_kernel(
         &mut self,
@@ -410,24 +532,7 @@ impl<'a> Lowerer<'a> {
                 ops.push(KernelOp::Const(*x));
                 Ok(())
             }
-            Expr::Var(x) => {
-                let info = self
-                    .vars
-                    .get(x)
-                    .cloned()
-                    .ok_or_else(|| Error::Lower(format!("unbound variable '{x}'")))?;
-                if !info.layout.is_scalar() {
-                    return Err(Error::Lower(format!(
-                        "array variable '{x}' used in scalar position"
-                    )));
-                }
-                if tracks.len() >= u8::MAX as usize {
-                    return Err(Error::Lower("kernel has too many inputs".into()));
-                }
-                ops.push(KernelOp::In(tracks.len() as u8));
-                tracks.push(info.track);
-                Ok(())
-            }
+            Expr::Var(x) => self.st.kernel_var(x, ops, tracks),
             Expr::App { f, args } => match &**f {
                 Expr::Prim(p) => {
                     if args.len() != p.arity() {
@@ -458,6 +563,196 @@ impl<'a> Lowerer<'a> {
     }
 }
 
+/// The arena-native front end: mirrors [`Lowerer`] case-for-case against
+/// [`ExprArena`] nodes, driving the same [`LowerState`].
+struct IdLowerer<'a> {
+    arena: &'a ExprArena,
+    st: LowerState<'a>,
+}
+
+impl<'a> IdLowerer<'a> {
+    /// Resolve an interned expression in HoF-argument position to a
+    /// strided view.
+    fn resolve_view(&mut self, id: ExprId) -> Result<ViewSpec> {
+        let arena = self.arena;
+        match arena.get(id) {
+            ENode::Input(n) => self.st.input_view(n),
+            ENode::Var(x) => self.st.var_view(x),
+            ENode::Subdiv { d, b, arg } => {
+                let v = self.resolve_view(*arg)?;
+                Ok(ViewSpec {
+                    layout: v.layout.subdiv(*d, *b)?,
+                    ..v
+                })
+            }
+            ENode::Flatten { d, arg } => {
+                let v = self.resolve_view(*arg)?;
+                Ok(ViewSpec {
+                    layout: v.layout.flatten(*d)?,
+                    ..v
+                })
+            }
+            ENode::Flip { d1, d2, arg } => {
+                let v = self.resolve_view(*arg)?;
+                Ok(ViewSpec {
+                    layout: v.layout.flip2(*d1, *d2)?,
+                    ..v
+                })
+            }
+            other => Err(Error::Lower(format!(
+                "HoF argument is not a view of an input (fuse first): {}",
+                other.kind()
+            ))),
+        }
+    }
+
+    /// Bind an interned function-position expression to element views and
+    /// lower its body. Handles `Lam`, bare `Prim`, and `lift^k`.
+    fn bind_and_lower(
+        &mut self,
+        f: ExprId,
+        elems: Vec<ViewSpec>,
+        under_op: Option<Prim>,
+    ) -> Result<(Node, usize)> {
+        let arena = self.arena;
+        match arena.get(f) {
+            ENode::Lam { params, body } => {
+                if params.len() != elems.len() {
+                    return Err(Error::Lower(format!(
+                        "lambda arity {} vs {} args",
+                        params.len(),
+                        elems.len()
+                    )));
+                }
+                let saved = self.st.bind_params(params, &elems)?;
+                let r = self.lower_node(*body, under_op);
+                self.st.restore_params(saved);
+                r
+            }
+            ENode::Prim(p) => self.st.prim_leaf(*p, &elems),
+            ENode::Lift { f: inner } => {
+                // lift g elementwise: one more map loop over the elements.
+                let (extent, advances, sub_elems) = self.st.consume_outer(elems)?;
+                let (body, body_size) = self.bind_and_lower(*inner, sub_elems, under_op)?;
+                Ok((
+                    Node::MapLoop {
+                        extent,
+                        advances,
+                        body_size,
+                        body: Box::new(body),
+                    },
+                    extent * body_size,
+                ))
+            }
+            other => Err(Error::Lower(format!(
+                "unsupported function form: {}",
+                other.kind()
+            ))),
+        }
+    }
+
+    fn lower_node(&mut self, id: ExprId, under_op: Option<Prim>) -> Result<(Node, usize)> {
+        let arena = self.arena;
+        match arena.get(id) {
+            ENode::Nzip { f, args } => {
+                let views = args
+                    .iter()
+                    .map(|&a| self.resolve_view(a))
+                    .collect::<Result<Vec<_>>>()?;
+                let (extent, advances, elems) = self.st.consume_outer(views)?;
+                let (body, body_size) = self.bind_and_lower(*f, elems, under_op)?;
+                Ok((
+                    Node::MapLoop {
+                        extent,
+                        advances,
+                        body_size,
+                        body: Box::new(body),
+                    },
+                    extent * body_size,
+                ))
+            }
+            ENode::Rnz { r, m, args } => {
+                let op = reducer_prim_id(arena, *r)?;
+                let views = args
+                    .iter()
+                    .map(|&a| self.resolve_view(a))
+                    .collect::<Result<Vec<_>>>()?;
+                let (extent, advances, elems) = self.st.consume_outer(views)?;
+                let (body, body_size) = self.bind_and_lower(*m, elems, Some(op))?;
+                let temp = self.st.reduction_temp(op, under_op, body_size);
+                Ok((
+                    Node::RedLoop {
+                        extent,
+                        advances,
+                        op,
+                        body_size,
+                        temp,
+                        body: Box::new(body),
+                    },
+                    body_size,
+                ))
+            }
+            // An array-typed body (identity zipper, bare view) lowers to a
+            // copy nest.
+            ENode::Var(_) | ENode::Input(_) | ENode::Subdiv { .. } | ENode::Flatten { .. }
+            | ENode::Flip { .. } => {
+                let v = self.resolve_view(id)?;
+                self.st.view_node(v)
+            }
+            // Scalar computation leaf.
+            _ => {
+                let mut tracks = Vec::new();
+                let mut ops = Vec::new();
+                self.compile_kernel(id, &mut ops, &mut tracks)?;
+                Ok((Node::Leaf(Kernel { ops, tracks }), 1))
+            }
+        }
+    }
+
+    /// Compile an interned scalar expression to stack bytecode.
+    fn compile_kernel(
+        &mut self,
+        id: ExprId,
+        ops: &mut Vec<KernelOp>,
+        tracks: &mut Vec<TrackId>,
+    ) -> Result<()> {
+        let arena = self.arena;
+        match arena.get(id) {
+            ENode::Lit(bits) => {
+                ops.push(KernelOp::Const(f64::from_bits(*bits)));
+                Ok(())
+            }
+            ENode::Var(x) => self.st.kernel_var(x, ops, tracks),
+            ENode::App { f, args } => match arena.get(*f) {
+                ENode::Prim(p) => {
+                    if args.len() != p.arity() {
+                        return Err(Error::Lower(format!(
+                            "primitive {} arity mismatch",
+                            p.name()
+                        )));
+                    }
+                    for &a in args {
+                        self.compile_kernel(a, ops, tracks)?;
+                    }
+                    ops.push(KernelOp::Prim(*p));
+                    Ok(())
+                }
+                ENode::Lam { .. } => Err(Error::Lower(
+                    "beta-redex in scalar position (run lambda rewrites first)".into(),
+                )),
+                other => Err(Error::Lower(format!(
+                    "unsupported scalar application head: {}",
+                    other.kind()
+                ))),
+            },
+            other => Err(Error::Lower(format!(
+                "unsupported scalar expression: {}",
+                other.kind()
+            ))),
+        }
+    }
+}
+
 /// Extract the primitive from a (possibly `lift^k`-wrapped) reduction
 /// operator.
 fn reducer_prim(r: &Expr) -> Result<Prim> {
@@ -470,6 +765,21 @@ fn reducer_prim(r: &Expr) -> Result<Prim> {
         other => Err(Error::Lower(format!(
             "unsupported reduction operator: {}",
             crate::dsl::pretty(other)
+        ))),
+    }
+}
+
+/// Id-native twin of [`reducer_prim`].
+fn reducer_prim_id(arena: &ExprArena, r: ExprId) -> Result<Prim> {
+    let mut cur = r;
+    while let ENode::Lift { f } = arena.get(cur) {
+        cur = *f;
+    }
+    match arena.get(cur) {
+        ENode::Prim(p) if p.arity() == 2 && p.is_associative() => Ok(*p),
+        other => Err(Error::Lower(format!(
+            "unsupported reduction operator: {}",
+            other.kind()
         ))),
     }
 }
@@ -545,6 +855,45 @@ mod tests {
             vec![input("A")],
         );
         let p = lower(&e, &env).unwrap();
+        assert_eq!(p.temp_sizes, vec![1]);
+    }
+
+    #[test]
+    fn lower_id_matches_lower_on_matmul() {
+        let env = Env::new()
+            .with("A", Layout::row_major(&[4, 6]))
+            .with("B", Layout::row_major(&[6, 8]));
+        let e = matmul_naive(input("A"), input("B"));
+        let mut arena = ExprArena::new();
+        let id = arena.intern(&e);
+        let pa = lower(&e, &env).unwrap();
+        let pb = lower_id(&arena, id, &env).unwrap();
+        assert_eq!(format!("{pa:?}"), format!("{pb:?}"));
+    }
+
+    #[test]
+    fn lower_id_rejects_what_lower_rejects() {
+        let env = Env::new().with("v", Layout::row_major(&[4]));
+        let e = map(
+            lam1("x", app2(mul(), var("x"), lit(2.0))),
+            map(lam1("y", app2(add(), var("y"), lit(1.0))), input("v")),
+        );
+        let mut arena = ExprArena::new();
+        let id = arena.intern(&e);
+        assert!(lower_id(&arena, id, &env).is_err());
+    }
+
+    #[test]
+    fn lower_id_allocates_temp_like_lower() {
+        let env = Env::new().with("A", Layout::row_major(&[4, 8]));
+        let e = rnz(
+            pmax(),
+            lam1("r", reduce(add(), var("r"))),
+            vec![input("A")],
+        );
+        let mut arena = ExprArena::new();
+        let id = arena.intern(&e);
+        let p = lower_id(&arena, id, &env).unwrap();
         assert_eq!(p.temp_sizes, vec![1]);
     }
 }

@@ -13,6 +13,13 @@
 //! `nzip`/`rnz` whose array arguments are views of inputs (through layout
 //! operators) or variables bound by enclosing HoFs, with scalar bodies at
 //! the leaves.
+//!
+//! Lowering has two front ends over one shared machine: [`lower`] for
+//! `Box<Expr>` trees (the parser/interpreter representation) and
+//! [`lower_id`] for interned [`crate::dsl::intern::ExprId`]s (the search
+//! hot path — candidates are lowered and cost-estimated straight from the
+//! arena, never rebuilt as trees). The two are held bit-identical by the
+//! differential tests in `tests/lower_id_props.rs`.
 
 mod interp;
 mod lower;
@@ -20,7 +27,7 @@ mod program;
 mod trace;
 
 pub use interp::execute;
-pub use lower::lower;
+pub use lower::{lower, lower_id};
 pub use program::{Adv, Kernel, KernelOp, Node, Program, WriteMode};
 pub use trace::{count_accesses, trace, Access, AccessKind};
 

@@ -11,8 +11,15 @@
 //! expression purely by **structure-induced rewrites**: fusion, exchange
 //! (HoF interchange paired with a layout `flip`), and subdivision identities.
 //!
+//! The optimize pipeline runs **arena-native end to end**: candidates are
+//! generated, normalized, typechecked, lowered and cost-estimated as
+//! hash-consed [`dsl::intern::ExprId`]s, and `Box<Expr>` trees are rebuilt
+//! only once per kept variant at the output boundary. `ARCHITECTURE.md`
+//! (repository root) walks the full request flow, the module map and the
+//! differential-test invariants that hold the twin engines together.
+//!
 //! The crate is organised as the paper's system plus every substrate it
-//! needs (see `DESIGN.md` for the full inventory):
+//! needs:
 //!
 //! - [`layout`] — the strided `(extent, stride)` layout algebra.
 //! - [`dsl`] — the expression AST, builder combinators, pretty printer and
@@ -22,13 +29,16 @@
 //!   every rewrite and for the fast executor).
 //! - [`rewrite`] — the rewrite engine and the paper's rule families.
 //! - [`enumerate`] — HoF-spine extraction and Steinhaus–Johnson–Trotter
-//!   enumeration of rearrangements.
-//! - [`exec`] — lowering to a loop-nest IR and a fast strided executor (the
-//!   measured artifact; stands in for the paper's generated C++14).
+//!   enumeration of rearrangements: a sharded, branch-and-bound BFS
+//!   running natively on interned ids.
+//! - [`exec`] — lowering to a loop-nest IR (twin front ends
+//!   [`exec::lower`] / [`exec::lower_id`]) and a fast strided executor
+//!   (the measured artifact; stands in for the paper's generated C++14).
 //! - [`cachesim`] — a set-associative multi-level cache simulator driven by
 //!   the loop IR's address stream (stands in for the paper's Core i5/HD7970).
-//! - [`costmodel`] — analytical locality cost model used for ranking and
-//!   the paper's "early cut" pruning.
+//! - [`costmodel`] — analytical locality cost model used for ranking
+//!   ([`costmodel::estimate_id`]) and the paper's "early cut" pruning
+//!   ([`costmodel::spine_lower_bound_id`]).
 //! - [`baselines`] — naive / hand-blocked native matmul (the paper's C
 //!   baselines).
 //! - [`runtime`] — PJRT client wrapping the `xla` crate; loads the

@@ -93,6 +93,16 @@ fn run(args: &[String]) -> hofdla::Result<()> {
                 println!("{k:<28} {s:>14.1}");
             }
             println!("\nbest: {}\n{}", r.best, r.best_expr);
+            println!(
+                "search: expanded={} generated={} pruned={} type_rejects={} bound_updates={} shards={} extractions={}",
+                r.stats.expanded,
+                r.stats.generated,
+                r.stats.pruned,
+                r.stats.type_rejects,
+                r.stats.bound_updates,
+                r.stats.shards,
+                r.stats.extracted(),
+            );
             Ok(())
         }
         Some("enumerate") => {

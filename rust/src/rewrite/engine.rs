@@ -10,9 +10,12 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 
 /// Global rewrite-step budget: guards against non-terminating rule sets.
-/// Accounted once per `rewrite_bottom_up` / `MemoRewriter::rewrite` call,
-/// shared across every re-pass that call performs.
-pub(crate) const MAX_STEPS: usize = 100_000;
+/// Accounted once per [`rewrite_bottom_up`] / [`MemoRewriter::rewrite`] /
+/// [`IdRewriter::rewrite`] call, shared across every re-pass that call
+/// performs. A memoized run that exhausts the budget drops its memo
+/// tables, since partially-rewritten forms must not be remembered as
+/// final.
+pub const MAX_STEPS: usize = 100_000;
 
 /// A context-free rewrite rule: returns `Some(new)` when the pattern
 /// matches at the given node.

@@ -28,6 +28,31 @@
 //! [`IdRewriter`] and the enumeration search run natively on
 //! [`crate::dsl::intern::ExprId`]s: conversion to/from `Box<Expr>`
 //! happens once at the pipeline boundary, not per node per rule probe.
+//!
+//! # Memo and generation-stamp invalidation contract
+//!
+//! Three caches sit on top of the rewrite engine, each with its own
+//! invalidation rule — keep them straight when adding caching layers:
+//!
+//! - **Rewrite memos** ([`MemoRewriter`], [`IdRewriter`]) are keyed by
+//!   [`crate::dsl::intern::ExprId`] and therefore valid only for the
+//!   arena that produced those ids: call [`IdRewriter::clear`] whenever
+//!   the arena is swapped or rebuilt. Long-lived arenas are bounded by
+//!   [`engine::ARENA_RESET_NODES`](engine) — outgrowing it drops arena
+//!   *and* memo together. A run that exhausts the global step budget
+//!   also drops its memo, since partially-rewritten forms must not be
+//!   remembered as final.
+//! - **Memoized results are canonical per rule set**: a rewriter instance
+//!   is built for one fixed rule list; reusing it with different rules
+//!   would serve stale normal forms. [`normalize`] owns a thread-local
+//!   `(arena, rewriter)` pair for exactly this reason.
+//! - **The coordinator's optimize-result LRU** caches whole pipeline
+//!   outputs, which bake in cost-model ranking. Its keys carry a
+//!   generation stamp seeded from
+//!   [`crate::costmodel::COST_MODEL_VERSION`] and advanced by
+//!   [`crate::coordinator::Coordinator::flush_opt_cache`]: bump the
+//!   version (or flush) whenever ranking semantics change, and stale
+//!   entries stop matching and age out on their own.
 
 pub mod engine;
 pub mod exchange;

@@ -74,6 +74,22 @@ pub fn infer_id_with(
     go_id(arena, id, env, &mut vars)
 }
 
+/// [`infer_id_with`] minus the defensive clone: type `id` against a
+/// caller-owned mutable binding map. Inference's own lambda binds restore
+/// shadowed entries before returning (`go_id`'s bind/restore discipline),
+/// so the map is unchanged on exit — callers that type many
+/// subexpressions under one scope (e.g.
+/// [`crate::costmodel::spine_lower_bound_id`] on the prune hot path) can
+/// reuse a single map instead of cloning per query.
+pub fn infer_id_scratch(
+    arena: &ExprArena,
+    id: ExprId,
+    env: &Env,
+    vars: &mut HashMap<String, Layout>,
+) -> Result<Layout> {
+    go_id(arena, id, env, vars)
+}
+
 fn go_id(
     arena: &ExprArena,
     id: ExprId,
@@ -208,9 +224,13 @@ fn apply_id(
             let body_ty = apply_id(arena, *inner, &elem_tys, env, vars)?;
             Ok(push_outer(&body_ty, extent))
         }
-        _ => Err(Error::Type(format!(
+        // Shallow kind name, not pretty-printing: `infer_id` rejections
+        // run per candidate on the search hot path and must not extract
+        // a `Box<Expr>` tree — `SearchStats` documents arena extraction
+        // as an output-boundary-only event.
+        other => Err(Error::Type(format!(
             "unsupported function form in operator position: {}",
-            crate::dsl::pretty(&arena.extract(f))
+            other.kind()
         ))),
     }
 }
@@ -246,9 +266,9 @@ fn check_reducer_id(arena: &ExprArena, r: ExprId, acc_ty: &Layout) -> Result<()>
             }
             Ok(())
         }
-        _ => Err(Error::Type(format!(
+        other => Err(Error::Type(format!(
             "unsupported rnz reduction operator: {}",
-            crate::dsl::pretty(&arena.extract(cur))
+            other.kind()
         ))),
     }
 }

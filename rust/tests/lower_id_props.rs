@@ -1,0 +1,162 @@
+//! Differential and property tests for arena-native lowering and cost
+//! estimation (ISSUE 3):
+//!
+//! - `lower_id(arena, intern(e))` produces *bit-identical* programs to
+//!   `lower(e)` over the full enumerated variant set of every seed matmul
+//!   / matvec workload family (and rejects exactly the same expressions);
+//! - the lowered programs do not just look alike — they execute to
+//!   identical outputs;
+//! - `estimate_id` agrees with `estimate ∘ lower`;
+//! - the partial-spine lower bound never exceeds the true cost-model
+//!   score of any lowerable variant (the soundness property the search's
+//!   branch-and-bound cut rests on).
+
+use hofdla::costmodel::{estimate, estimate_id, spine_lower_bound_id};
+use hofdla::dsl::intern::ExprArena;
+use hofdla::enumerate::{enumerate_all, starts, Variant};
+use hofdla::exec::{execute_named, lower, lower_id};
+use hofdla::layout::Layout;
+use hofdla::rewrite::Ctx;
+use hofdla::typecheck::Env;
+
+/// Shapes every start family typechecks under: A is n×j, B is j×k, v has
+/// length j, with the divisibility the subdivided families (block 2,
+/// twice-block 2·2) need.
+fn ctx() -> Ctx {
+    Ctx::new(
+        Env::new()
+            .with("A", Layout::row_major(&[4, 8]))
+            .with("B", Layout::row_major(&[8, 4]))
+            .with("v", Layout::row_major(&[8])),
+    )
+}
+
+fn families() -> Vec<(&'static str, Variant)> {
+    vec![
+        ("matmul-naive", starts::matmul_naive_variant()),
+        ("matmul-rnz-subdiv", starts::matmul_rnz_subdivided_variant(2)),
+        ("matmul-maps-subdiv", starts::matmul_maps_subdivided_variant(2)),
+        (
+            "matmul-rnz-twice",
+            starts::matmul_rnz_twice_subdivided_variant(2, 2),
+        ),
+        ("matmul-all-subdiv", starts::matmul_all_subdivided_variant(2)),
+        ("matvec-naive", starts::matvec_naive_variant()),
+        (
+            "matvec-vector-subdiv",
+            starts::matvec_vector_subdivided_variant(2),
+        ),
+    ]
+}
+
+#[test]
+fn differential_lower_id_matches_lower_over_variant_sets() {
+    let ctx = ctx();
+    for (name, start) in families() {
+        let variants = enumerate_all(&start, &ctx, 4096).unwrap();
+        let mut arena = ExprArena::new();
+        for v in &variants {
+            let id = arena.intern(&v.expr);
+            match (lower(&v.expr, &ctx.env), lower_id(&arena, id, &ctx.env)) {
+                (Ok(pa), Ok(pb)) => {
+                    // Bit-identical programs: slots, tracks, strides, temp
+                    // regions, kernels — everything the Debug form shows.
+                    assert_eq!(
+                        format!("{pa:?}"),
+                        format!("{pb:?}"),
+                        "{name}/{}: lower and lower_id emitted different programs",
+                        v.display_key()
+                    );
+                }
+                (Err(_), Err(_)) => {}
+                (a, b) => panic!(
+                    "{name}/{}: lower/lower_id accept-reject diverged: {a:?} vs {b:?}",
+                    v.display_key()
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn lower_id_programs_execute_identically() {
+    let ctx = ctx();
+    let mut rng = hofdla::util::Rng::new(7);
+    let a = rng.fill_vec(4 * 8);
+    let b = rng.fill_vec(8 * 4);
+    let v = rng.fill_vec(8);
+    let inputs: Vec<(&str, &[f64])> = vec![("A", &a), ("B", &b), ("v", &v)];
+    for (name, start) in families() {
+        let variants = enumerate_all(&start, &ctx, 4096).unwrap();
+        let mut arena = ExprArena::new();
+        for va in &variants {
+            let id = arena.intern(&va.expr);
+            let (Ok(pa), Ok(pb)) = (lower(&va.expr, &ctx.env), lower_id(&arena, id, &ctx.env))
+            else {
+                continue;
+            };
+            let mut oa = vec![0.0; pa.out_size];
+            execute_named(&pa, &inputs, &mut oa)
+                .unwrap_or_else(|e| panic!("{name}/{}: {e}", va.display_key()));
+            let mut ob = vec![0.0; pb.out_size];
+            execute_named(&pb, &inputs, &mut ob)
+                .unwrap_or_else(|e| panic!("{name}/{}: {e}", va.display_key()));
+            assert_eq!(oa, ob, "{name}/{}: outputs diverged", va.display_key());
+        }
+    }
+}
+
+#[test]
+fn estimate_id_matches_boxed_estimate_over_variant_sets() {
+    let ctx = ctx();
+    for (name, start) in families() {
+        let variants = enumerate_all(&start, &ctx, 4096).unwrap();
+        let mut arena = ExprArena::new();
+        for v in &variants {
+            let id = arena.intern(&v.expr);
+            let by_id = estimate_id(&arena, id, &ctx.env);
+            let boxed = lower(&v.expr, &ctx.env).map(|p| estimate(&p));
+            match (by_id, boxed) {
+                (Ok(x), Ok(y)) => {
+                    assert_eq!(x, y, "{name}/{}: estimates diverged", v.display_key())
+                }
+                (Err(_), Err(_)) => {}
+                (x, y) => panic!(
+                    "{name}/{}: estimate_id/estimate diverged: {x:?} vs {y:?}",
+                    v.display_key()
+                ),
+            }
+        }
+    }
+}
+
+/// Property (ISSUE 3 satellite): the partial-spine lower bound never
+/// exceeds the true cost — the soundness fact that makes the search's
+/// branch-and-bound cut at slack 1.0 unable to drop the winner.
+#[test]
+fn prop_spine_lower_bound_never_exceeds_true_cost() {
+    let ctx = ctx();
+    for (name, start) in families() {
+        let variants = enumerate_all(&start, &ctx, 4096).unwrap();
+        let mut arena = ExprArena::new();
+        for v in &variants {
+            let id = arena.intern(&v.expr);
+            let lb = spine_lower_bound_id(&arena, id, &ctx);
+            let Ok(est) = estimate_id(&arena, id, &ctx.env) else {
+                // Unlowerable variants score +∞; any bound is sound.
+                continue;
+            };
+            let score = est.score();
+            assert!(
+                lb <= score,
+                "{name}/{}: lower bound {lb} exceeds true score {score}",
+                v.display_key()
+            );
+            assert!(
+                lb > 0.0,
+                "{name}/{}: bound degenerated to zero",
+                v.display_key()
+            );
+        }
+    }
+}

@@ -100,11 +100,28 @@ fn sharded_search_matches_serial() {
         let sharded_keys: Vec<String> =
             sharded.variants.iter().map(|v| v.display_key()).collect();
         assert_eq!(serial_keys, sharded_keys, "{name}: order diverged");
-        // Scores are computed from lowered loop nests, which are
-        // insensitive to binder naming — bit-identical across shardings.
+        // Scores are computed from loop nests lowered straight from the
+        // arena (`lower_id`), which are insensitive to binder naming —
+        // bit-identical across shardings.
         assert_eq!(serial.scores, sharded.scores, "{name}: scores diverged");
         assert_eq!(serial.stats.kept, sharded.stats.kept, "{name}");
         assert_eq!(sharded.stats.shards, 4, "{name}");
+        assert_eq!(sharded.stats.extracted_per_shard.len(), 4, "{name}");
+        // Sharding is a pure parallelization of the same expansion work:
+        // the total output-boundary extraction count matches serial.
+        assert_eq!(
+            serial.stats.extracted(),
+            sharded.stats.extracted(),
+            "{name}: extraction counts diverged"
+        );
+        // Exactly one extraction per kept candidate (the start is never
+        // extracted; duplicates are deduped before extraction).
+        assert_eq!(
+            serial.stats.extracted(),
+            serial.stats.kept as u64 - 1,
+            "{name}: extraction must be once per kept variant"
+        );
+        assert_eq!(serial.stats.expanded, sharded.stats.expanded, "{name}");
     }
 }
 
@@ -151,8 +168,10 @@ fn prop_default_pruning_never_drops_best_variant() {
         assert_eq!(exhaustive.scores, pruned.scores, "{name}");
         assert_eq!(
             pruned.stats.pruned, 0,
-            "{name}: the conservative slack must be lossless on shipped \
-             workloads (see DEFAULT_PRUNE_SLACK's bound argument)"
+            "{name}: at slack 1.0 a cut requires the candidate's lower \
+             bound to exceed the best true score, which the bound's \
+             soundness (lower bound ≤ true score, and best score ≥ any \
+             variant's bound within a family) makes impossible"
         );
     }
 }
@@ -173,6 +192,11 @@ fn tight_slack_actually_prunes() {
     assert_eq!(r.variants.len(), 1, "only the start survives");
     assert_eq!(r.variants[0].display_key(), start.display_key());
     assert!(r.stats.pruned > 0, "children must have been cut");
+    // Cut candidates are rejected on the lower bound alone — before any
+    // lowering, scoring, or extraction. With every child cut, no
+    // `Box<Expr>` tree is ever rebuilt from a search arena.
+    assert_eq!(r.stats.extracted(), 0, "cut path must not extract");
+    assert_eq!(r.stats.expanded, 1, "only the start was expanded");
 }
 
 /// End-to-end (ISSUE 2 acceptance, service flavor): the pruned + sharded
