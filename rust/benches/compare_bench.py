@@ -1,0 +1,76 @@
+#!/usr/bin/env python3
+"""Advisory comparison of a fresh BENCH_coordinator.json against the
+committed baseline (BENCH_coordinator.baseline.json).
+
+Used by the CI `bench-perf` lane. The lane is non-blocking
+(continue-on-error), and the threshold is deliberately generous: shared
+runners are noisy, so only gross regressions of the cold/warm/pruned
+medians should flag. Exit codes: 0 = within threshold (or nothing to
+compare), 1 = at least one row regressed beyond THRESHOLD, 2 = usage
+error. Stdlib only — the repo's default build is dependency-free and CI
+should be too.
+"""
+
+import json
+import sys
+
+# Generous: flag only when a median is more than 3x the baseline.
+THRESHOLD = 3.0
+
+# The rows tracked across PRs (see rust/benches/README.md).
+ROWS = ("cold", "warm", "pruned")
+
+
+def rows_by_name(doc):
+    return {r.get("name"): r for r in doc.get("rows", [])}
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(f"usage: {argv[0]} CURRENT.json BASELINE.json", file=sys.stderr)
+        return 2
+    try:
+        with open(argv[1]) as f:
+            current = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"cannot read current results {argv[1]}: {e}", file=sys.stderr)
+        return 2
+    try:
+        with open(argv[2]) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        print(f"no baseline at {argv[2]}; nothing to compare (OK)")
+        return 0
+    except (OSError, ValueError) as e:
+        print(f"cannot read baseline {argv[2]}: {e}", file=sys.stderr)
+        return 2
+
+    cur, base = rows_by_name(current), rows_by_name(baseline)
+    regressed = []
+    for name in ROWS:
+        if name not in cur or name not in base:
+            print(f"{name:8} missing from current or baseline; skipping")
+            continue
+        c = cur[name].get("median_ns", 0)
+        b = base[name].get("median_ns", 0)
+        if not b or b <= 0:
+            print(f"{name:8} baseline median is 0; skipping")
+            continue
+        ratio = c / b
+        mark = "OK" if ratio <= THRESHOLD else f"REGRESSION (> {THRESHOLD}x)"
+        print(f"{name:8} median {c:>13} ns  baseline {b:>13} ns  ({ratio:6.2f}x)  {mark}")
+        if ratio > THRESHOLD:
+            regressed.append(name)
+    if regressed:
+        print(
+            f"advisory: {', '.join(regressed)} exceeded {THRESHOLD}x the committed "
+            "baseline. If the slowdown is real and intended, refresh "
+            "rust/benches/BENCH_coordinator.baseline.json from this run's artifact."
+        )
+        return 1
+    print("all tracked rows within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

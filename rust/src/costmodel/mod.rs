@@ -22,12 +22,14 @@
 //! The enumeration search scores every candidate it generates, so the
 //! scoring path must never rebuild a `Box<Expr>` tree. [`estimate_id`]
 //! lowers and estimates an interned expression straight from its
-//! [`ExprArena`], and [`spine_lower_bound_id`] computes a *provable lower
-//! bound* on the true score from the HoF spine alone — without lowering —
-//! which is what the search's branch-and-bound compares against the
-//! best-known score before paying for a full lower + estimate.
+//! [`SharedArena`], and [`spine_lower_bound_id`] computes a *provable
+//! lower bound* on the true score from the HoF spine alone — without
+//! lowering — which is what the search's branch-and-bound compares
+//! against the best-known score before paying for a full lower +
+//! estimate. Both read the concurrent arena through `&self`, so every
+//! search shard scores against the same store.
 
-use crate::dsl::intern::{ExprArena, ExprId, Node as ENode};
+use crate::dsl::intern::{ExprId, Node as ENode, SharedArena};
 use crate::exec::{lower_id, Node, Program};
 use crate::layout::Layout;
 use crate::rewrite::Ctx;
@@ -101,7 +103,7 @@ pub fn estimate(prog: &Program) -> CostEstimate {
 /// materialized. This is the search's per-candidate scoring path; it
 /// produces exactly `estimate(&lower(&arena.extract(id), env)?)` (pinned
 /// by `tests/lower_id_props.rs`).
-pub fn estimate_id(arena: &ExprArena, id: ExprId, env: &Env) -> Result<CostEstimate> {
+pub fn estimate_id(arena: &SharedArena, id: ExprId, env: &Env) -> Result<CostEstimate> {
     Ok(estimate(&lower_id(arena, id, env)?))
 }
 
@@ -124,13 +126,13 @@ pub fn estimate_id(arena: &ExprArena, id: ExprId, env: &Env) -> Result<CostEstim
 /// far, still sound — as soon as a level's operator is not a lambda or an
 /// argument layout cannot be resolved, so the function can be called on
 /// candidates in any intermediate rewrite state.
-pub fn spine_lower_bound_id(arena: &ExprArena, id: ExprId, ctx: &Ctx) -> f64 {
+pub fn spine_lower_bound_id(arena: &SharedArena, id: ExprId, ctx: &Ctx) -> f64 {
     // The descent follows a single spine path, so one mutable binding map
     // (shadowing as it goes, never needing restoration) replaces a full
     // `Ctx` clone per level — this runs once per generated candidate on
     // the prune hot path.
     fn spine_iters(
-        arena: &ExprArena,
+        arena: &SharedArena,
         id: ExprId,
         env: &Env,
         vars: &mut HashMap<String, Layout>,
@@ -306,12 +308,12 @@ mod tests {
 
     #[test]
     fn estimate_id_matches_boxed_estimate() {
-        use crate::dsl::intern::ExprArena;
+        use crate::dsl::intern::SharedArena;
         let env = Env::new()
             .with("A", Layout::row_major(&[8, 8]))
             .with("B", Layout::row_major(&[8, 8]));
         let e = crate::dsl::matmul_naive(crate::dsl::input("A"), crate::dsl::input("B"));
-        let mut arena = ExprArena::new();
+        let arena = SharedArena::new();
         let id = arena.intern(&e);
         let by_id = estimate_id(&arena, id, &env).unwrap();
         let boxed = estimate(&lower(&e, &env).unwrap());
@@ -320,12 +322,12 @@ mod tests {
 
     #[test]
     fn spine_lower_bound_never_exceeds_score() {
-        use crate::dsl::intern::ExprArena;
+        use crate::dsl::intern::SharedArena;
         let env = Env::new()
             .with("A", Layout::row_major(&[16, 16]))
             .with("B", Layout::row_major(&[16, 16]));
         let ctx = Ctx::new(env.clone());
-        let mut arena = ExprArena::new();
+        let arena = SharedArena::new();
         for v in enumerate_all(&starts::matmul_naive_variant(), &ctx, 10).unwrap() {
             let id = arena.intern(&v.expr);
             let lb = spine_lower_bound_id(&arena, id, &ctx);

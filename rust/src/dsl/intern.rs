@@ -30,10 +30,45 @@
 //! array compilers: the expression *space* is a DAG, so represent it as
 //! one.
 //!
-//! The arena is deliberately a thin layer: the `Box<Expr>` API remains
+//! The arenas are deliberately a thin layer: the `Box<Expr>` API remains
 //! the lingua franca of the parser, interpreter, typechecker and Python
-//! side. [`ExprArena::intern`] / [`ExprArena::extract`] convert at the
-//! boundary.
+//! side. `intern` / `extract` convert at the boundary.
+//!
+//! # Two arenas
+//!
+//! - [`ExprArena`] — the original single-threaded arena (`&mut self`
+//!   interning, `Cell` counters). It remains the substrate of the
+//!   `Box<Expr>`-rule memo path ([`crate::rewrite::MemoRewriter`]) and of
+//!   one-off interning jobs that never cross a thread.
+//! - [`SharedArena`] — the concurrent, hash-sharded arena (ISSUE 4). The
+//!   node space is split across [`SharedArena::SEGMENTS`] lock-striped
+//!   segments addressed by node hash; all operations take `&self`, so one
+//!   arena can be shared by every BFS shard of a search and frontier
+//!   variants cross shard (and level) boundaries as plain [`ExprId`]s —
+//!   no extract/re-intern at level boundaries. The whole id-native engine
+//!   ([`crate::rewrite::IdRule`] rules, [`crate::typecheck::infer_id`],
+//!   [`crate::exec::lower_id`], [`crate::costmodel::estimate_id`]) runs
+//!   against it.
+//!
+//! ## `SharedArena` ownership and id-stability contract
+//!
+//! - **Ids are arena-scoped.** An [`ExprId`] is only meaningful against
+//!   the arena that produced it; the search owns one `SharedArena` per
+//!   `enumerate_search` call and every per-shard cache (rewrite memo,
+//!   typecheck/score/bound maps) keyed by those ids lives no longer than
+//!   the arena. Never persist ids or mix them across arenas.
+//! - **Ids are stable across threads.** Interning structurally-equal
+//!   trees returns the *same* id no matter which thread interns first —
+//!   the segment is chosen by a fixed (per-process-deterministic) node
+//!   hash and insertion is double-checked under the segment lock. Once
+//!   returned, an id never moves, and [`SharedArena::get`] hands out a
+//!   `&Node` that stays valid for the arena's whole lifetime (nodes are
+//!   append-only and individually boxed).
+//! - **Id *values* are scheduling-dependent.** Which integer a tree gets
+//!   depends on global arrival order, so deterministic consumers (the
+//!   search's dedup and merge) must never order or key results on raw id
+//!   values — they dedup on label tokens and order on (shard, seq) merge
+//!   tags instead.
 //!
 //! # Notes
 //!
@@ -47,6 +82,8 @@
 use super::expr::{fresh_var, Expr, Prim};
 use std::cell::Cell;
 use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::RwLock;
 
 /// Identity of an interned expression. Two `ExprId`s from the same arena
 /// are equal iff the expressions are structurally equal.
@@ -54,7 +91,10 @@ use std::collections::{HashMap, HashSet};
 pub struct ExprId(u32);
 
 impl ExprId {
-    /// Index into the owning arena.
+    /// Raw index into an [`ExprArena`]'s node table. Only meaningful for
+    /// ids produced by an `ExprArena`; [`SharedArena`] ids pack a
+    /// (segment, slot) pair into the same word and are opaque — resolve
+    /// them through [`SharedArena::get`].
     pub fn index(self) -> usize {
         self.0 as usize
     }
@@ -229,6 +269,235 @@ impl ExprArena {
         self.insert(node)
     }
 
+    /// Reconstruct the `Box<Expr>` tree behind an id (the conversion layer
+    /// back to the parser/interpreter representation). Counted: see
+    /// [`extractions`](ExprArena::extractions).
+    pub fn extract(&self, id: ExprId) -> Expr {
+        self.extractions.set(self.extractions.get() + 1);
+        self.extract_tree(id)
+    }
+
+    /// Number of [`extract`](ExprArena::extract) calls made against this
+    /// arena so far — the count of `Box<Expr>` trees rebuilt from it.
+    pub fn extractions(&self) -> u64 {
+        self.extractions.get()
+    }
+
+    fn extract_tree(&self, id: ExprId) -> Expr {
+        match self.get(id).clone() {
+            Node::Var(x) => Expr::Var(x),
+            Node::Lit(bits) => Expr::Lit(f64::from_bits(bits)),
+            Node::Prim(p) => Expr::Prim(p),
+            Node::Lam { params, body } => Expr::Lam {
+                params,
+                body: Box::new(self.extract_tree(body)),
+            },
+            Node::App { f, args } => Expr::App {
+                f: Box::new(self.extract_tree(f)),
+                args: args.iter().map(|&a| self.extract_tree(a)).collect(),
+            },
+            Node::Nzip { f, args } => Expr::Nzip {
+                f: Box::new(self.extract_tree(f)),
+                args: args.iter().map(|&a| self.extract_tree(a)).collect(),
+            },
+            Node::Rnz { r, m, args } => Expr::Rnz {
+                r: Box::new(self.extract_tree(r)),
+                m: Box::new(self.extract_tree(m)),
+                args: args.iter().map(|&a| self.extract_tree(a)).collect(),
+            },
+            Node::Lift { f } => Expr::Lift {
+                f: Box::new(self.extract_tree(f)),
+            },
+            Node::Subdiv { d, b, arg } => Expr::Subdiv {
+                d,
+                b,
+                arg: Box::new(self.extract_tree(arg)),
+            },
+            Node::Flatten { d, arg } => Expr::Flatten {
+                d,
+                arg: Box::new(self.extract_tree(arg)),
+            },
+            Node::Flip { d1, d2, arg } => Expr::Flip {
+                d1,
+                d2,
+                arg: Box::new(self.extract_tree(arg)),
+            },
+            Node::Input(n) => Expr::Input(n),
+        }
+    }
+}
+
+/// log2 of [`SharedArena::SEGMENTS`]: the low `SEG_BITS` of an id select
+/// the segment, the high bits are the index within it.
+const SEG_BITS: u32 = 4;
+
+/// One lock stripe of a [`SharedArena`]: the dedup map plus the node
+/// storage for every node whose hash lands here.
+///
+/// Nodes are individually boxed (`Vec<Box<Node>>`, hence the lint allow)
+/// on purpose: pushing to the vector moves the *boxes*, never the nodes
+/// themselves, which is what lets [`SharedArena::get`] hand out `&Node`
+/// references that outlive the segment lock.
+#[allow(clippy::vec_box)]
+#[derive(Default)]
+struct Segment {
+    nodes: Vec<Box<Node>>,
+    dedup: HashMap<Node, u32>,
+}
+
+/// The concurrent hash-consing arena (ISSUE 4): [`SharedArena::SEGMENTS`]
+/// interior lock-striped segments addressed by node hash, with global
+/// [`ExprId`]s that are stable across threads. All operations take
+/// `&self`, so one arena is shared by every BFS shard of a search —
+/// frontier variants cross shard and level boundaries as plain ids
+/// instead of extracted `Box<Expr>` trees.
+///
+/// See the [module docs](self) for the ownership and id-stability
+/// contract. Functionally this is [`ExprArena`] plus thread safety; the
+/// differential tests hold the two engines built on them equivalent.
+pub struct SharedArena {
+    segments: Vec<RwLock<Segment>>,
+    /// Total distinct nodes across segments (kept separately so `len`
+    /// does not sweep every stripe).
+    len: AtomicUsize,
+    /// Root [`extract`](SharedArena::extract) calls, as on [`ExprArena`].
+    extractions: AtomicU64,
+}
+
+impl Default for SharedArena {
+    fn default() -> Self {
+        SharedArena::new()
+    }
+}
+
+impl SharedArena {
+    /// Number of lock stripes. A fixed power of two: enough that 8-way
+    /// shard fan-out rarely contends on one stripe, small enough that an
+    /// empty arena stays cheap to build per search.
+    pub const SEGMENTS: usize = 1 << SEG_BITS;
+
+    pub fn new() -> Self {
+        SharedArena {
+            segments: (0..Self::SEGMENTS).map(|_| RwLock::default()).collect(),
+            len: AtomicUsize::new(0),
+            extractions: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of distinct nodes stored (across all segments).
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Which segment a node lives in: a fixed, per-process-deterministic
+    /// hash — the same node hashes to the same stripe from every thread,
+    /// which is what makes ids agree across threads.
+    fn segment_of(node: &Node) -> usize {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        node.hash(&mut h);
+        (h.finish() as usize) & (Self::SEGMENTS - 1)
+    }
+
+    fn pack(seg: usize, local: u32) -> ExprId {
+        ExprId((local << SEG_BITS) | seg as u32)
+    }
+
+    fn unpack(id: ExprId) -> (usize, usize) {
+        ((id.0 as usize) & (Self::SEGMENTS - 1), (id.0 >> SEG_BITS) as usize)
+    }
+
+    /// A segment read guard; lock poisoning is recovered rather than
+    /// propagated — inserts keep `nodes`/`dedup` consistent at every
+    /// await-free step, so a panicked peer cannot leave torn state.
+    fn read(&self, seg: usize) -> std::sync::RwLockReadGuard<'_, Segment> {
+        self.segments[seg].read().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Intern a node whose children are already interned, returning the
+    /// canonical id for it. Double-checked under the segment lock: the
+    /// common case (already present) takes only the read lock.
+    pub fn insert(&self, node: Node) -> ExprId {
+        let seg = Self::segment_of(&node);
+        if let Some(&local) = self.read(seg).dedup.get(&node) {
+            return Self::pack(seg, local);
+        }
+        let mut st = self.segments[seg].write().unwrap_or_else(|e| e.into_inner());
+        if let Some(&local) = st.dedup.get(&node) {
+            return Self::pack(seg, local);
+        }
+        let local = st.nodes.len() as u32;
+        assert!(local < 1 << (32 - SEG_BITS), "SharedArena segment {seg} overflow");
+        st.nodes.push(Box::new(node.clone()));
+        st.dedup.insert(node, local);
+        self.len.fetch_add(1, Ordering::Relaxed);
+        Self::pack(seg, local)
+    }
+
+    /// The node behind an id. The reference stays valid for the arena's
+    /// whole lifetime even while other threads intern concurrently.
+    pub fn get(&self, id: ExprId) -> &Node {
+        let (seg, local) = Self::unpack(id);
+        let st = self.read(seg);
+        let ptr: *const Node = &*st.nodes[local];
+        drop(st);
+        // SAFETY: nodes are individually boxed and the arena is
+        // append-only — a node is never moved, mutated, or dropped after
+        // insertion, so the heap allocation behind `ptr` lives as long as
+        // `self`. Concurrent pushes may reallocate the `Vec` of boxes,
+        // but that moves the boxes, not the nodes they point to.
+        unsafe { &*ptr }
+    }
+
+    /// Intern a whole tree bottom-up (the thread-safe twin of
+    /// [`ExprArena::intern`]): structurally-equal trees get the same id
+    /// no matter which thread interns them, or in which order.
+    pub fn intern(&self, e: &Expr) -> ExprId {
+        let node = match e {
+            Expr::Var(x) => Node::Var(x.clone()),
+            Expr::Lit(v) => Node::Lit(v.to_bits()),
+            Expr::Prim(p) => Node::Prim(*p),
+            Expr::Lam { params, body } => Node::Lam {
+                params: params.clone(),
+                body: self.intern(body),
+            },
+            Expr::App { f, args } => Node::App {
+                f: self.intern(f),
+                args: args.iter().map(|a| self.intern(a)).collect(),
+            },
+            Expr::Nzip { f, args } => Node::Nzip {
+                f: self.intern(f),
+                args: args.iter().map(|a| self.intern(a)).collect(),
+            },
+            Expr::Rnz { r, m, args } => Node::Rnz {
+                r: self.intern(r),
+                m: self.intern(m),
+                args: args.iter().map(|a| self.intern(a)).collect(),
+            },
+            Expr::Lift { f } => Node::Lift { f: self.intern(f) },
+            Expr::Subdiv { d, b, arg } => Node::Subdiv {
+                d: *d,
+                b: *b,
+                arg: self.intern(arg),
+            },
+            Expr::Flatten { d, arg } => Node::Flatten {
+                d: *d,
+                arg: self.intern(arg),
+            },
+            Expr::Flip { d1, d2, arg } => Node::Flip {
+                d1: *d1,
+                d2: *d2,
+                arg: self.intern(arg),
+            },
+            Expr::Input(n) => Node::Input(n.clone()),
+        };
+        self.insert(node)
+    }
+
     /// Free variables of the expression behind `id` (shadow-aware), the
     /// arena twin of [`Expr::free_vars`]. Used by the id-native rewrite
     /// rules so pattern guards never have to extract a `Box<Expr>` tree.
@@ -300,7 +569,7 @@ impl ExprArena {
     /// the arena — the id-native twin of [`Expr::subst`]. Shared subtrees
     /// that do not mention `x` come back as the *same* id, so the result
     /// stays maximally shared.
-    pub fn subst_id(&mut self, id: ExprId, x: &str, val: ExprId) -> ExprId {
+    pub fn subst_id(&self, id: ExprId, x: &str, val: ExprId) -> ExprId {
         match self.get(id).clone() {
             Node::Var(ref y) => {
                 if y == x {
@@ -348,18 +617,19 @@ impl ExprArena {
         }
     }
 
-    /// Reconstruct the `Box<Expr>` tree behind an id (the conversion layer
-    /// back to the parser/interpreter representation). Counted: see
-    /// [`extractions`](ExprArena::extractions).
+    /// Reconstruct the `Box<Expr>` tree behind an id. Counted (root
+    /// calls, atomically): the search surfaces the counter through
+    /// `SearchStats` so "extraction happens at the output boundary only,
+    /// never at BFS level boundaries" stays observable.
     pub fn extract(&self, id: ExprId) -> Expr {
-        self.extractions.set(self.extractions.get() + 1);
+        self.extractions.fetch_add(1, Ordering::Relaxed);
         self.extract_tree(id)
     }
 
-    /// Number of [`extract`](ExprArena::extract) calls made against this
-    /// arena so far — the count of `Box<Expr>` trees rebuilt from it.
+    /// Number of [`extract`](SharedArena::extract) root calls made
+    /// against this arena so far, across all threads.
     pub fn extractions(&self) -> u64 {
-        self.extractions.get()
+        self.extractions.load(Ordering::Relaxed)
     }
 
     fn extract_tree(&self, id: ExprId) -> Expr {
@@ -403,6 +673,16 @@ impl ExprArena {
             },
             Node::Input(n) => Expr::Input(n),
         }
+    }
+}
+
+impl std::fmt::Debug for SharedArena {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SharedArena")
+            .field("len", &self.len())
+            .field("segments", &Self::SEGMENTS)
+            .field("extractions", &self.extractions())
+            .finish()
     }
 }
 
@@ -494,7 +774,7 @@ mod tests {
 
     #[test]
     fn free_vars_id_matches_expr_free_vars() {
-        let mut arena = ExprArena::new();
+        let arena = SharedArena::new();
         let e = lam1("x", app2(add(), var("x"), var("y")));
         let id = arena.intern(&e);
         assert_eq!(arena.free_vars_id(id), e.free_vars());
@@ -506,7 +786,7 @@ mod tests {
     fn subst_id_avoids_capture_like_expr_subst() {
         // (\y -> x + y)[x := y] must rename the binder, exactly as the
         // Box<Expr> substitution does (checked up to alpha).
-        let mut arena = ExprArena::new();
+        let arena = SharedArena::new();
         let e = lam1("y", app2(add(), var("x"), var("y")));
         let id = arena.intern(&e);
         let val = arena.intern(&var("y"));
@@ -522,10 +802,87 @@ mod tests {
 
     #[test]
     fn subst_id_shadowed_is_identity() {
-        let mut arena = ExprArena::new();
+        let arena = SharedArena::new();
         let id = arena.intern(&lam1("x", var("x")));
         let val = arena.intern(&lit(1.0));
         assert_eq!(arena.subst_id(id, "x", val), id);
+    }
+
+    #[test]
+    fn shared_arena_intern_is_stable_and_shares() {
+        let arena = SharedArena::new();
+        let e = matmul_naive(input("A"), input("B"));
+        let id1 = arena.intern(&e);
+        let id2 = arena.intern(&e.clone());
+        assert_eq!(id1, id2);
+        assert!(arena.len() <= e.size());
+        assert_eq!(arena.extract(id1), e);
+    }
+
+    #[test]
+    fn shared_arena_matches_expr_arena_semantics() {
+        // Same dedup behavior as the single-threaded arena: equal trees
+        // collapse, distinct structures stay distinct, literals keep bits.
+        let shared = SharedArena::new();
+        let a = shared.intern(&lam1("x", var("x")));
+        let b = shared.intern(&lam1("y", var("y")));
+        assert_ne!(a, b);
+        let z1 = shared.intern(&lit(0.0));
+        let z2 = shared.intern(&lit(-0.0));
+        assert_ne!(z1, z2);
+        let Expr::Lit(back) = shared.extract(z2) else {
+            panic!("expected literal")
+        };
+        assert_eq!(back.to_bits(), (-0.0f64).to_bits());
+    }
+
+    #[test]
+    fn shared_arena_extraction_counter_counts_root_calls() {
+        let arena = SharedArena::new();
+        let e = matmul_naive(input("A"), input("B"));
+        let id = arena.intern(&e);
+        assert_eq!(arena.extractions(), 0, "interning must not extract");
+        let _ = arena.extract(id);
+        assert_eq!(arena.extractions(), 1, "one root call, not one per node");
+        let _ = arena.extract(id);
+        assert_eq!(arena.extractions(), 2);
+    }
+
+    #[test]
+    fn shared_arena_ids_agree_across_threads() {
+        // The id-stability contract: structurally-equal trees intern to
+        // the same id no matter which thread gets there first.
+        let arena = SharedArena::new();
+        let exprs = [
+            matmul_naive(input("A"), input("B")),
+            dot(input("u"), input("v")),
+            lam1("x", app2(add(), var("x"), lit(1.0))),
+        ];
+        let ids: Vec<Vec<ExprId>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|t| {
+                    let arena = &arena;
+                    let exprs = &exprs;
+                    s.spawn(move || {
+                        // Rotate the order per thread so insertions race.
+                        (0..exprs.len())
+                            .map(|j| {
+                                let i = (j + t) % exprs.len();
+                                (i, arena.intern(&exprs[i]))
+                            })
+                            .fold(vec![ExprId(0); exprs.len()], |mut acc, (i, id)| {
+                                acc[i] = id;
+                                acc
+                            })
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let reference: Vec<ExprId> = exprs.iter().map(|e| arena.intern(e)).collect();
+        for (t, thread_ids) in ids.iter().enumerate() {
+            assert_eq!(thread_ids, &reference, "thread {t} saw different ids");
+        }
     }
 
     #[test]

@@ -10,21 +10,28 @@
 //! `rnz`s of a subdivided reduction are "not differentiated", so 4 HoFs
 //! with two rnzs yield the paper's 12 cases, not 24).
 //!
-//! # The search engine (ISSUE 2)
+//! # The search engine (ISSUE 2–4)
 //!
 //! [`enumerate_search`] runs the BFS natively on
 //! [`ExprId`]s: candidate generation ([`try_swap_at_id`]), normalization
 //! (an [`IdRewriter`] over the id-native rule set) and typechecking
-//! ([`crate::typecheck::infer_id`]) all happen inside per-shard
-//! [`ExprArena`]s, so `Box<Expr>` trees are rebuilt only once per *kept*
-//! candidate at the output boundary — never per node per rule probe.
+//! ([`crate::typecheck::infer_id`]) all happen inside one concurrent
+//! [`SharedArena`] shared by every worker shard, so `Box<Expr>` trees are
+//! rebuilt only once per *kept* candidate at the output boundary — never
+//! per node per rule probe, and never at a BFS level boundary.
 //!
 //! - **Sharding** — each BFS level's frontier is split round-robin across
-//!   worker shards (own arena, own normalize memo, own typecheck cache);
-//!   a deterministic merge step dedups in frontier order, so the result
-//!   order is identical to the serial queue BFS no matter how many shards
-//!   run. One large job fans out across the pool, not just many small
-//!   jobs.
+//!   worker shards. All shards build candidates into the *same*
+//!   hash-sharded arena (ISSUE 4), so frontier variants cross shard and
+//!   level boundaries as plain ids: a parent expanded this level was
+//!   interned exactly once, when it was first kept, no matter which shard
+//!   keeps expanding its descendants. Each shard still owns its
+//!   *caches* — normalize memo, typecheck/score/bound maps — all keyed by
+//!   the shared arena's (thread-stable) ids. Every expansion is tagged
+//!   `(shard, seq)` and the deterministic merge orders candidates by
+//!   frontier tag, parents in frontier order and children in swap-depth
+//!   order, so the result order is identical to the serial queue BFS no
+//!   matter how many shards run or how they were scheduled.
 //! - **Scoring** — with [`SearchOptions::score`] set (implied by
 //!   pruning), candidates are lowered and cost-estimated *in the arena*
 //!   via [`crate::costmodel::estimate_id`]; the per-candidate path
@@ -60,7 +67,7 @@ pub mod starts;
 pub use sjt::sjt_permutations;
 
 use crate::costmodel::{estimate_id, spine_lower_bound_id};
-use crate::dsl::intern::{memo_enabled, ExprArena, ExprId, Node};
+use crate::dsl::intern::{memo_enabled, ExprId, Node, SharedArena};
 use crate::dsl::Expr;
 use crate::rewrite::{exchange, normalize, normalize_id_rules, Ctx, IdRewriter};
 use crate::typecheck::Env;
@@ -197,9 +204,11 @@ pub fn try_swap_at(e: &Expr, depth: usize, ctx: &Ctx) -> Option<Expr> {
 /// `depth` (binding parameter layouts as it goes) and apply an exchange
 /// rule there. Unlike [`try_swap_at`] the result is **not** normalized —
 /// the caller runs its own [`IdRewriter`] over the same arena so the
-/// normalize memo is shared across every candidate of the search.
+/// normalize memo is shared across every candidate of the search. The
+/// arena comes in by shared reference: all search shards generate
+/// candidates into one [`SharedArena`] concurrently.
 pub fn try_swap_at_id(
-    arena: &mut ExprArena,
+    arena: &SharedArena,
     id: ExprId,
     depth: usize,
     ctx: &Ctx,
@@ -344,11 +353,18 @@ pub struct SearchStats {
     pub bound_updates: usize,
     /// Worker shards used.
     pub shards: usize,
-    /// `Box<Expr>` trees rebuilt from each shard's arena (one entry per
-    /// shard). On the id-native path this is exactly the output-boundary
-    /// extraction of *kept* candidates (`kept - 1`: the start is never
-    /// extracted, duplicates are deduped before extraction) — the
-    /// per-candidate score/lower path never extracts.
+    /// Output-boundary `Box<Expr>` extractions attributed to the shard
+    /// that *generated* each kept candidate. The layout is stable and
+    /// shard-count-independent in the sense coordinator `Metrics` merges
+    /// need: always exactly `shards` entries (padded with zeros for
+    /// shards that happened to generate no kept candidate), regardless of
+    /// runtime scheduling. On the id-native path the total is exactly the
+    /// output-boundary extraction of *kept* candidates (`kept - 1`: the
+    /// start is never extracted, duplicates are deduped before
+    /// extraction) and equals the shared arena's
+    /// [`SharedArena::extractions`] counter — the per-candidate
+    /// score/lower path never extracts, and nothing is extracted at BFS
+    /// level boundaries.
     pub extracted_per_shard: Vec<u64>,
 }
 
@@ -428,7 +444,7 @@ fn label_key(labels: &[String], tokens: &mut Vec<String>) -> Vec<u8> {
 /// failing the job, as on the seed path — and since `+∞` can never become
 /// the shared bound, they are also never the reason something else gets
 /// cut.
-fn score_expr_id(arena: &ExprArena, id: ExprId, env: &Env) -> f64 {
+fn score_expr_id(arena: &SharedArena, id: ExprId, env: &Env) -> f64 {
     match estimate_id(arena, id, env) {
         Ok(est) => est.score(),
         Err(_) => f64::INFINITY,
@@ -436,37 +452,44 @@ fn score_expr_id(arena: &ExprArena, id: ExprId, env: &Env) -> f64 {
 }
 
 /// One surviving child candidate, still unextracted: the id-native path
-/// carries only the interned id (plus which shard's arena owns it) and
-/// the merge step rebuilds a `Box<Expr>` *only* for children that survive
+/// carries only the interned id (in the search's shared arena) and the
+/// merge step rebuilds a `Box<Expr>` *only* for children that survive
 /// dedup — so duplicates reached along several swap paths never cost a
 /// tree. The seed `Box<Expr>` engine already owns the tree and passes it
 /// through.
 struct Child {
     labels: Vec<String>,
     /// `Some` on the seed engine path; `None` means "extract `nid` from
-    /// the owning shard's arena iff kept".
+    /// the shared arena iff kept".
     expr: Option<Expr>,
     nid: ExprId,
 }
 
 /// What one shard returns for one expanded parent: surviving children in
-/// swap-depth order plus the counters the merge step aggregates.
+/// swap-depth order plus the counters the merge step aggregates. The
+/// `(shard, seq)` pair is the merge tag — together with the BFS level
+/// (implicit in which merge round processes the expansion) it restores
+/// the serial discovery order deterministically, whatever the thread
+/// scheduling was.
 #[derive(Default)]
 struct Expansion {
     children: Vec<(Child, Option<f64>)>,
     generated: usize,
     pruned: usize,
     type_rejects: usize,
-    /// Index of the shard whose arena owns the children's `nid`s.
+    /// Which shard generated the children (extraction attribution).
     shard: usize,
+    /// The parent's index in this level's frontier (merge order).
+    seq: usize,
 }
 
-/// One search worker: its own hash-consing arena, its own memoized
-/// id-native normalizer over that arena, and its own `ExprId`-keyed
-/// typecheck cache. Shards persist across BFS levels so all three warm up
-/// over the whole search.
+/// One search worker: a memoized id-native normalizer and `ExprId`-keyed
+/// typecheck/score/bound caches, all resolving against the search's one
+/// [`SharedArena`]. Shards persist across BFS levels so every cache warms
+/// up over the whole search — and because the arena is shared, a parent
+/// kept by *any* shard reaches the next level as a plain id, with no
+/// extract/re-intern at the level boundary.
 struct Shard {
-    arena: ExprArena,
     norm: IdRewriter,
     checked: HashMap<ExprId, bool>,
     /// Cost-model score per interned candidate — scoring is structural,
@@ -482,7 +505,6 @@ struct Shard {
 impl Shard {
     fn new() -> Self {
         Shard {
-            arena: ExprArena::new(),
             norm: IdRewriter::new(&normalize_id_rules()),
             checked: HashMap::new(),
             scored: HashMap::new(),
@@ -493,10 +515,18 @@ impl Shard {
     /// Expand one parent variant: try every adjacent swap, normalize,
     /// typecheck, score, prune. Children come back in swap-depth order so
     /// the merge step can reproduce the serial BFS order exactly.
+    ///
+    /// On the id-native path the parent arrives as `pid` — the id it was
+    /// interned under when it was *kept* — so no per-level re-intern of
+    /// the parent tree happens anywhere (the cost ISSUE 4 removes). The
+    /// seed `Box<Expr>` path still swaps on the owned tree; it interns
+    /// each child once so the typecheck/score caches work identically.
     #[allow(clippy::too_many_arguments)]
     fn expand(
         &mut self,
+        arena: &SharedArena,
         parent: &Variant,
+        pid: ExprId,
         n: usize,
         ctx: &Ctx,
         id_native: bool,
@@ -505,30 +535,22 @@ impl Shard {
         bound: &AtomicScore,
     ) -> Expansion {
         let mut exp = Expansion::default();
-        // The id-native engine is the production path; the seed
-        // `Box<Expr>` path stays reachable via `with_memo_disabled` for
-        // differential testing. The flag is sampled once on the search's
-        // calling thread (`memo_enabled` is thread-local and would read
-        // `true` inside freshly spawned shard threads).
-        let pid = if id_native {
-            Some(self.arena.intern(&parent.expr))
-        } else {
-            None
-        };
         for d in 0..n.saturating_sub(1) {
-            let (nid, extracted) = match pid {
-                Some(pid) => {
-                    let Some(swapped) = try_swap_at_id(&mut self.arena, pid, d, ctx) else {
-                        continue;
-                    };
-                    (self.norm.rewrite(&mut self.arena, swapped), None)
-                }
-                None => {
-                    let Some(new_expr) = try_swap_at(&parent.expr, d, ctx) else {
-                        continue;
-                    };
-                    (self.arena.intern(&new_expr), Some(new_expr))
-                }
+            // The id-native engine is the production path; the seed
+            // `Box<Expr>` path stays reachable via `with_memo_disabled`
+            // for differential testing. The flag is sampled once on the
+            // search's calling thread (`memo_enabled` is thread-local and
+            // would read `true` inside freshly spawned shard threads).
+            let (nid, extracted) = if id_native {
+                let Some(swapped) = try_swap_at_id(arena, pid, d, ctx) else {
+                    continue;
+                };
+                (self.norm.rewrite(arena, swapped), None)
+            } else {
+                let Some(new_expr) = try_swap_at(&parent.expr, d, ctx) else {
+                    continue;
+                };
+                (arena.intern(&new_expr), Some(new_expr))
             };
             exp.generated += 1;
             // Defensive: drop rewrites that no longer typecheck — paying
@@ -536,7 +558,7 @@ impl Shard {
             let ok = match self.checked.get(&nid) {
                 Some(&ok) => ok,
                 None => {
-                    let ok = crate::typecheck::infer_id(&self.arena, nid, &ctx.env).is_ok();
+                    let ok = crate::typecheck::infer_id(arena, nid, &ctx.env).is_ok();
                     self.checked.insert(nid, ok);
                     ok
                 }
@@ -556,7 +578,7 @@ impl Shard {
                 let lb = match self.bounded.get(&nid) {
                     Some(&lb) => lb,
                     None => {
-                        let lb = spine_lower_bound_id(&self.arena, nid, ctx);
+                        let lb = spine_lower_bound_id(arena, nid, ctx);
                         self.bounded.insert(nid, lb);
                         lb
                     }
@@ -573,7 +595,7 @@ impl Shard {
                 Some(match self.scored.get(&nid) {
                     Some(&s) => s,
                     None => {
-                        let s = score_expr_id(&self.arena, nid, &ctx.env);
+                        let s = score_expr_id(arena, nid, &ctx.env);
                         self.scored.insert(nid, s);
                         s
                     }
@@ -599,12 +621,17 @@ impl Shard {
 }
 
 /// Expand a whole frontier level across the shard pool, returning one
-/// [`Expansion`] per parent **in frontier order** (parents are dealt
-/// round-robin; results are reassembled by index).
+/// [`Expansion`] per parent **in frontier order**: parents are dealt
+/// round-robin, every expansion is tagged `(shard, seq)` by the worker
+/// that produced it, and the merge sorts on the `seq` tag — so the output
+/// order is independent of thread scheduling. All shards expand against
+/// the one shared arena; parents arrive as plain ids.
 #[allow(clippy::too_many_arguments)]
 fn parallel_expand(
     shards: &mut [Shard],
+    arena: &SharedArena,
     frontier: &[Variant],
+    frontier_ids: &[ExprId],
     n: usize,
     ctx: &Ctx,
     scoring: bool,
@@ -612,16 +639,17 @@ fn parallel_expand(
     bound: &AtomicScore,
 ) -> Result<Vec<Expansion>> {
     let nshards = shards.len();
-    let mut results: Vec<Option<Expansion>> = Vec::new();
-    results.resize_with(frontier.len(), || None);
+    let mut all: Vec<Expansion> = Vec::with_capacity(frontier.len());
     let mut panicked = false;
     std::thread::scope(|s| {
         let mut handles = Vec::new();
         for (k, shard) in shards.iter_mut().enumerate() {
-            let parents: Vec<(usize, &Variant)> = frontier
+            let parents: Vec<(usize, &Variant, ExprId)> = frontier
                 .iter()
+                .zip(frontier_ids)
                 .enumerate()
                 .filter(|(i, _)| i % nshards == k)
+                .map(|(i, (v, &pid))| (i, v, pid))
                 .collect();
             if parents.is_empty() {
                 continue;
@@ -629,21 +657,19 @@ fn parallel_expand(
             handles.push(s.spawn(move || {
                 parents
                     .into_iter()
-                    .map(|(i, v)| {
-                        let mut exp = shard.expand(v, n, ctx, true, scoring, slack, bound);
+                    .map(|(i, v, pid)| {
+                        let mut exp =
+                            shard.expand(arena, v, pid, n, ctx, true, scoring, slack, bound);
                         exp.shard = k;
-                        (i, exp)
+                        exp.seq = i;
+                        exp
                     })
                     .collect::<Vec<_>>()
             }));
         }
         for h in handles {
             match h.join() {
-                Ok(rs) => {
-                    for (i, r) in rs {
-                        results[i] = Some(r);
-                    }
-                }
+                Ok(mut rs) => all.append(&mut rs),
                 Err(_) => panicked = true,
             }
         }
@@ -651,10 +677,11 @@ fn parallel_expand(
     if panicked {
         return Err(Error::Rewrite("search shard panicked".into()));
     }
-    Ok(results
-        .into_iter()
-        .map(|r| r.expect("every parent expanded"))
-        .collect())
+    // Deterministic merge: order by the frontier tag, exactly the serial
+    // parent order.
+    all.sort_by_key(|e| e.seq);
+    debug_assert_eq!(all.len(), frontier.len(), "every parent expanded once");
+    Ok(all)
 }
 
 /// Breadth-first enumeration of rearrangements reachable by adjacent
@@ -694,12 +721,18 @@ pub fn enumerate_search(
         .max(1)
     };
     let mut shards: Vec<Shard> = (0..threads).map(|_| Shard::new()).collect();
+    // One concurrent hash-sharded arena for the whole search (ISSUE 4):
+    // every shard generates, normalizes, typechecks and scores against
+    // it, and frontier variants cross shard and level boundaries as plain
+    // ids — the per-level extract/re-intern of the per-shard-arena design
+    // is gone.
+    let arena = SharedArena::new();
+    let start_id = arena.intern(&start.expr);
     // The start variant is scored through the same arena-native path as
-    // every candidate (and warms shard 0's arena and score cache).
+    // every candidate (and warms shard 0's score cache).
     let start_score = if scoring {
-        let sid = shards[0].arena.intern(&start.expr);
-        let s = score_expr_id(&shards[0].arena, sid, &ctx.env);
-        shards[0].scored.insert(sid, s);
+        let s = score_expr_id(&arena, start_id, &ctx.env);
+        shards[0].scored.insert(start_id, s);
         Some(s)
     } else {
         None
@@ -709,6 +742,10 @@ pub fn enumerate_search(
     let mut seen: HashSet<Vec<u8>> = HashSet::new();
     seen.insert(label_key(&start.labels, &mut tokens));
     let mut out: Vec<Variant> = vec![start.clone()];
+    // The interned id of each kept variant, parallel to `out`: the next
+    // level's parents are read from here, so a kept candidate is interned
+    // exactly once in its whole life.
+    let mut out_ids: Vec<ExprId> = vec![start_id];
     let mut scores: Vec<f64> = Vec::new();
     if let Some(s) = start_score {
         scores.push(s);
@@ -718,6 +755,10 @@ pub fn enumerate_search(
         shards: threads,
         ..Default::default()
     };
+    // Stable, padded layout (one slot per configured shard) so the
+    // coordinator's Metrics merge never depends on which shards happened
+    // to generate kept candidates.
+    let mut extracted_per_shard = vec![0u64; threads];
     // The current BFS level is a range of `out` (each level's kept
     // variants are exactly the next level's parents), so no tree is ever
     // cloned into a separate frontier vector.
@@ -727,10 +768,13 @@ pub fn enumerate_search(
         stats.expanded += level.len();
         let expansions: Vec<Expansion> = {
             let frontier = &out[level.clone()];
+            let frontier_ids = &out_ids[level.clone()];
             if threads > 1 && frontier.len() > 1 {
                 parallel_expand(
                     &mut shards,
+                    &arena,
                     frontier,
+                    frontier_ids,
                     n,
                     ctx,
                     scoring,
@@ -740,14 +784,26 @@ pub fn enumerate_search(
             } else {
                 frontier
                     .iter()
-                    .map(|v| {
-                        shards[0].expand(v, n, ctx, id_native, scoring, opts.prune_slack, &bound)
+                    .zip(frontier_ids)
+                    .map(|(v, &pid)| {
+                        shards[0].expand(
+                            &arena,
+                            v,
+                            pid,
+                            n,
+                            ctx,
+                            id_native,
+                            scoring,
+                            opts.prune_slack,
+                            &bound,
+                        )
                     })
                     .collect()
             }
         };
-        // Deterministic merge: parents in frontier order, children in
-        // swap-depth order — exactly the serial queue BFS sequence.
+        // Deterministic merge: parents in frontier (seq-tag) order,
+        // children in swap-depth order — exactly the serial queue BFS
+        // sequence.
         let level_start = out.len();
         for exp in expansions {
             // Count the whole level's work even past the limit — the
@@ -768,15 +824,21 @@ pub fn enumerate_search(
                 let key = label_key(&child.labels, &mut tokens);
                 if seen.insert(key) {
                     // Output boundary: the one extract per *kept*
-                    // candidate — duplicates never rebuild a tree.
+                    // candidate — duplicates never rebuild a tree, and
+                    // level boundaries never extract (the id in
+                    // `out_ids` is all the next level needs).
                     let expr = match child.expr {
                         Some(e) => e,
-                        None => shards[exp.shard].arena.extract(child.nid),
+                        None => {
+                            extracted_per_shard[exp.shard] += 1;
+                            arena.extract(child.nid)
+                        }
                     };
                     out.push(Variant {
                         expr,
                         labels: child.labels,
                     });
+                    out_ids.push(child.nid);
                     if let Some(s) = s {
                         scores.push(s);
                     }
@@ -786,7 +848,12 @@ pub fn enumerate_search(
         level = level_start..out.len();
     }
     stats.kept = out.len();
-    stats.extracted_per_shard = shards.iter().map(|s| s.arena.extractions()).collect();
+    debug_assert_eq!(
+        extracted_per_shard.iter().sum::<u64>(),
+        if id_native { arena.extractions() } else { 0 },
+        "output-boundary extraction must be the arena's only extraction"
+    );
+    stats.extracted_per_shard = extracted_per_shard;
     Ok(SearchResult {
         variants: out,
         scores,

@@ -14,10 +14,11 @@
 //!
 //! - [`lower`] consumes the `Box<Expr>` AST — the parser/interpreter
 //!   lingua franca, and the entry point for one-off lowering jobs;
-//! - [`lower_id`] consumes an interned [`ExprId`] directly from an
-//!   [`ExprArena`] — the search hot path, where thousands of candidates
+//! - [`lower_id`] consumes an interned [`ExprId`] directly from a
+//!   [`SharedArena`] — the search hot path, where thousands of candidates
 //!   are lowered for cost estimation and rebuilding a `Box<Expr>` tree per
-//!   candidate would dominate the cost of scoring it.
+//!   candidate would dominate the cost of scoring it. The arena is shared
+//!   across search shards, so concurrent lowering jobs read one store.
 //!
 //! Everything that determines the *identity* of the produced [`Program`] —
 //! input-slot interning order, track allocation, temp-region layout, the
@@ -27,7 +28,7 @@
 //! (pinned by the differential tests in `tests/lower_id_props.rs`).
 
 use super::program::{Adv, Kernel, KernelOp, Node, Program, SlotId, TrackId};
-use crate::dsl::intern::{ExprArena, ExprId, Node as ENode};
+use crate::dsl::intern::{ExprId, Node as ENode, SharedArena};
 use crate::dsl::{Expr, Prim};
 use crate::layout::Layout;
 use crate::typecheck::{self, Env};
@@ -49,10 +50,10 @@ pub fn lower(e: &Expr, env: &Env) -> Result<Program> {
 /// the arena — the id-native twin of [`lower`], and the per-candidate
 /// lowering path of the enumeration search. No `Box<Expr>` tree is ever
 /// materialized: traversal, view resolution and kernel compilation all
-/// read [`ExprArena`] nodes, and even diagnostics describe nodes shallowly
-/// instead of extracting subtrees. Produces bit-identical programs to
-/// `lower(&arena.extract(id), env)`.
-pub fn lower_id(arena: &ExprArena, id: ExprId, env: &Env) -> Result<Program> {
+/// read [`SharedArena`] nodes, and even diagnostics describe nodes
+/// shallowly instead of extracting subtrees. Produces bit-identical
+/// programs to `lower(&arena.extract(id), env)`.
+pub fn lower_id(arena: &SharedArena, id: ExprId, env: &Env) -> Result<Program> {
     // Typecheck up front: lowering relies on the shape guarantees.
     typecheck::infer_id(arena, id, env)?;
     let mut lw = IdLowerer {
@@ -564,9 +565,9 @@ impl<'a> Lowerer<'a> {
 }
 
 /// The arena-native front end: mirrors [`Lowerer`] case-for-case against
-/// [`ExprArena`] nodes, driving the same [`LowerState`].
+/// [`SharedArena`] nodes, driving the same [`LowerState`].
 struct IdLowerer<'a> {
-    arena: &'a ExprArena,
+    arena: &'a SharedArena,
     st: LowerState<'a>,
 }
 
@@ -770,7 +771,7 @@ fn reducer_prim(r: &Expr) -> Result<Prim> {
 }
 
 /// Id-native twin of [`reducer_prim`].
-fn reducer_prim_id(arena: &ExprArena, r: ExprId) -> Result<Prim> {
+fn reducer_prim_id(arena: &SharedArena, r: ExprId) -> Result<Prim> {
     let mut cur = r;
     while let ENode::Lift { f } = arena.get(cur) {
         cur = *f;
@@ -864,7 +865,7 @@ mod tests {
             .with("A", Layout::row_major(&[4, 6]))
             .with("B", Layout::row_major(&[6, 8]));
         let e = matmul_naive(input("A"), input("B"));
-        let mut arena = ExprArena::new();
+        let arena = SharedArena::new();
         let id = arena.intern(&e);
         let pa = lower(&e, &env).unwrap();
         let pb = lower_id(&arena, id, &env).unwrap();
@@ -878,7 +879,7 @@ mod tests {
             lam1("x", app2(mul(), var("x"), lit(2.0))),
             map(lam1("y", app2(add(), var("y"), lit(1.0))), input("v")),
         );
-        let mut arena = ExprArena::new();
+        let arena = SharedArena::new();
         let id = arena.intern(&e);
         assert!(lower_id(&arena, id, &env).is_err());
     }
@@ -891,7 +892,7 @@ mod tests {
             lam1("r", reduce(add(), var("r"))),
             vec![input("A")],
         );
-        let mut arena = ExprArena::new();
+        let arena = SharedArena::new();
         let id = arena.intern(&e);
         let p = lower_id(&arena, id, &env).unwrap();
         assert_eq!(p.temp_sizes, vec![1]);

@@ -4,7 +4,7 @@
 //! on the hash-consing arena of [`crate::dsl::intern`] so shared subtrees
 //! are never re-normalized.
 
-use crate::dsl::intern::{memo_enabled, ExprArena, ExprId};
+use crate::dsl::intern::{memo_enabled, ExprArena, ExprId, SharedArena};
 use crate::dsl::Expr;
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -331,14 +331,15 @@ impl MemoRewriter {
 }
 
 /// An id-native rewrite rule: matches and rebuilds directly against
-/// [`ExprArena`] nodes, so applying it allocates nothing and never
+/// [`SharedArena`] nodes, so applying it allocates nothing and never
 /// round-trips through `Box<Expr>`. The id-native twin of [`Rule`]; every
 /// rule on the search hot path has both forms, and the differential tests
-/// hold them equivalent.
+/// hold them equivalent. The arena comes in by shared reference — interning
+/// is interior-mutable — so one arena can serve every search shard at once.
 #[derive(Clone, Copy)]
 pub struct IdRule {
     pub name: &'static str,
-    pub apply: fn(&mut ExprArena, ExprId) -> Option<ExprId>,
+    pub apply: fn(&SharedArena, ExprId) -> Option<ExprId>,
 }
 
 impl std::fmt::Debug for IdRule {
@@ -351,8 +352,10 @@ impl std::fmt::Debug for IdRule {
 /// *entirely* on interned ids: unlike [`MemoRewriter`] (which extracts a
 /// `Box<Expr>` at every node to apply its `fn(&Expr)` rules), no tree is
 /// ever rebuilt between rule applications. The caller owns the arena and
-/// must pass the *same* arena on every call — the memo table is keyed by
-/// that arena's ids; call [`IdRewriter::clear`] when swapping arenas.
+/// must pass the *same* [`SharedArena`] on every call — the memo table is
+/// keyed by that arena's ids; call [`IdRewriter::clear`] when swapping
+/// arenas. The memo itself stays single-threaded (each search shard owns
+/// one rewriter) while all of them resolve against the one shared arena.
 ///
 /// The strategy mirrors [`rewrite_bottom_up`] / [`MemoRewriter`] exactly
 /// (children first, first-match rules at the node, re-pass children after
@@ -386,7 +389,7 @@ impl IdRewriter {
 
     /// Rewrite `id` to fixpoint under this rewriter's rule set within
     /// `arena`, reusing memoized results for every shared subtree.
-    pub fn rewrite(&mut self, arena: &mut ExprArena, id: ExprId) -> ExprId {
+    pub fn rewrite(&mut self, arena: &SharedArena, id: ExprId) -> ExprId {
         self.steps = 0;
         let out = self.rewrite_id(arena, id);
         if self.steps >= MAX_STEPS {
@@ -398,7 +401,7 @@ impl IdRewriter {
         out
     }
 
-    fn rewrite_id(&mut self, arena: &mut ExprArena, id: ExprId) -> ExprId {
+    fn rewrite_id(&mut self, arena: &SharedArena, id: ExprId) -> ExprId {
         if let Some(&r) = self.memo.get(&id) {
             return r;
         }
@@ -456,7 +459,7 @@ fn normalize_rules() -> [Rule; 5] {
 
 /// The id-native normalize rule set — same rules, same order, as
 /// [`normalize_uncached`]'s `Box<Expr>` set. Public so the enumeration
-/// search can run normalization inside its own per-shard arenas.
+/// search can run normalization (per-shard memo, shared arena) itself.
 pub fn normalize_id_rules() -> [IdRule; 5] {
     [
         super::lambda::beta_id(),
@@ -468,19 +471,20 @@ pub fn normalize_id_rules() -> [IdRule; 5] {
 }
 
 thread_local! {
-    static NORMALIZE_ID: RefCell<(ExprArena, IdRewriter)> =
-        RefCell::new((ExprArena::new(), IdRewriter::new(&normalize_id_rules())));
+    static NORMALIZE_ID: RefCell<(SharedArena, IdRewriter)> =
+        RefCell::new((SharedArena::new(), IdRewriter::new(&normalize_id_rules())));
 }
 
 /// Run a thread-local `(arena, rewriter)` pair over one expression:
 /// reset when the arena outgrows its budget, intern, rewrite on ids,
 /// extract at the boundary. Shared by [`normalize`] and
-/// [`super::fusion::fuse`].
-pub(crate) fn rewrite_interned(cell: &RefCell<(ExprArena, IdRewriter)>, e: &Expr) -> Expr {
+/// [`super::fusion::fuse`]. (The arena here is a [`SharedArena`] used
+/// from one thread — the id-native engine has a single arena type.)
+pub(crate) fn rewrite_interned(cell: &RefCell<(SharedArena, IdRewriter)>, e: &Expr) -> Expr {
     let mut guard = cell.borrow_mut();
     let (arena, rw) = &mut *guard;
     if arena.len() > ARENA_RESET_NODES {
-        *arena = ExprArena::new();
+        *arena = SharedArena::new();
         rw.clear();
     }
     let id = arena.intern(e);
@@ -665,14 +669,14 @@ mod tests {
         };
         let e = app2(add(), lit(3.0), lit(3.0));
         let mut memo = MemoRewriter::new(&[dec]);
-        let mut arena = ExprArena::new();
+        let arena = SharedArena::new();
         let mut idr = IdRewriter::new(&[dec_id]);
         let id = arena.intern(&e);
-        let out = idr.rewrite(&mut arena, id);
+        let out = idr.rewrite(&arena, id);
         assert_eq!(arena.extract(out), memo.rewrite(&e));
         // Second call over the same tree: pure memo hits, no growth.
         let before = idr.memo_len();
-        assert_eq!(idr.rewrite(&mut arena, id), out);
+        assert_eq!(idr.rewrite(&arena, id), out);
         assert_eq!(idr.memo_len(), before);
     }
 
@@ -682,10 +686,10 @@ mod tests {
             lam1("x", app1(lam1("q", var("q")), var("x"))),
             flip(0, flip(0, input("A"))),
         );
-        let mut arena = ExprArena::new();
+        let arena = SharedArena::new();
         let mut idr = IdRewriter::new(&normalize_id_rules());
         let id = arena.intern(&e);
-        let oid = idr.rewrite(&mut arena, id);
+        let oid = idr.rewrite(&arena, id);
         let out = arena.extract(oid);
         let reference = normalize_uncached(&e);
         assert!(

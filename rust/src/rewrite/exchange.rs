@@ -16,11 +16,12 @@
 //! so they take a typing [`Ctx`] rather than being plain [`super::Rule`]s.
 
 //! Each rule also has an id-native `*_id` twin operating directly on
-//! [`ExprArena`] nodes; the enumeration search uses those so candidate
-//! generation never rebuilds `Box<Expr>` trees.
+//! [`SharedArena`] nodes; the enumeration search uses those so candidate
+//! generation never rebuilds `Box<Expr>` trees, and all shards build into
+//! one concurrent arena.
 
 use super::Ctx;
-use crate::dsl::intern::{ExprArena, ExprId, Node};
+use crate::dsl::intern::{ExprId, Node, SharedArena};
 use crate::dsl::{fresh_var, Expr};
 
 /// eq 36-37. `map (\x -> map (\y -> body) U) V  =  map (\y -> map (\x ->
@@ -86,7 +87,7 @@ pub fn map_map(e: &Expr, _ctx: &Ctx) -> Option<Expr> {
 
 /// Id-native twin of [`map_map`]: same match conditions and guards, the
 /// result is built (and maximally shared) in the arena.
-pub fn map_map_id(arena: &mut ExprArena, id: ExprId, _ctx: &Ctx) -> Option<ExprId> {
+pub fn map_map_id(arena: &SharedArena, id: ExprId, _ctx: &Ctx) -> Option<ExprId> {
     let Node::Nzip { f, args } = arena.get(id).clone() else {
         return None;
     };
@@ -227,7 +228,7 @@ pub fn map_map_nested(e: &Expr, ctx: &Ctx) -> Option<Expr> {
 }
 
 /// Id-native twin of [`map_map_nested`].
-pub fn map_map_nested_id(arena: &mut ExprArena, id: ExprId, ctx: &Ctx) -> Option<ExprId> {
+pub fn map_map_nested_id(arena: &SharedArena, id: ExprId, ctx: &Ctx) -> Option<ExprId> {
     let Node::Nzip { f, args } = arena.get(id).clone() else {
         return None;
     };
@@ -394,7 +395,7 @@ pub fn map_rnz(e: &Expr, ctx: &Ctx) -> Option<Expr> {
 }
 
 /// Id-native twin of [`map_rnz`].
-pub fn map_rnz_id(arena: &mut ExprArena, id: ExprId, ctx: &Ctx) -> Option<ExprId> {
+pub fn map_rnz_id(arena: &SharedArena, id: ExprId, ctx: &Ctx) -> Option<ExprId> {
     let Node::Nzip { f, args } = arena.get(id).clone() else {
         return None;
     };
@@ -555,7 +556,7 @@ pub fn rnz_map(e: &Expr, ctx: &Ctx) -> Option<Expr> {
 }
 
 /// Id-native twin of [`rnz_map`].
-pub fn rnz_map_id(arena: &mut ExprArena, id: ExprId, ctx: &Ctx) -> Option<ExprId> {
+pub fn rnz_map_id(arena: &SharedArena, id: ExprId, ctx: &Ctx) -> Option<ExprId> {
     let Node::Rnz { r, m, args } = arena.get(id).clone() else {
         return None;
     };
@@ -734,7 +735,7 @@ pub fn rnz_rnz(e: &Expr, ctx: &Ctx) -> Option<Expr> {
 /// Id-native twin of [`rnz_rnz`]. Operator equality is an O(1) id
 /// comparison here — structurally equal reducers always intern to the
 /// same id.
-pub fn rnz_rnz_id(arena: &mut ExprArena, id: ExprId, ctx: &Ctx) -> Option<ExprId> {
+pub fn rnz_rnz_id(arena: &SharedArena, id: ExprId, ctx: &Ctx) -> Option<ExprId> {
     let Node::Rnz { r, m, args } = arena.get(id).clone() else {
         return None;
     };
@@ -965,7 +966,7 @@ mod tests {
 
     #[test]
     fn id_exchange_rules_match_box_rules() {
-        use crate::dsl::intern::{ExprArena, ExprId};
+        use crate::dsl::intern::{ExprId, SharedArena};
         let env = Env::new()
             .with("A", Layout::row_major(&[3, 4]))
             .with("B", Layout::row_major(&[4, 5]))
@@ -994,7 +995,7 @@ mod tests {
             input("A"), // nothing fires
         ];
         type BoxRule = fn(&Expr, &Ctx) -> Option<Expr>;
-        type IdRuleFn = fn(&mut ExprArena, ExprId, &Ctx) -> Option<ExprId>;
+        type IdRuleFn = fn(&SharedArena, ExprId, &Ctx) -> Option<ExprId>;
         let pairs: [(&str, BoxRule, IdRuleFn); 5] = [
             ("map_map", map_map, map_map_id),
             ("map_map_nested", map_map_nested, map_map_nested_id),
@@ -1004,10 +1005,10 @@ mod tests {
         ];
         for e in &cases {
             for (name, br, ir) in pairs {
-                let mut arena = ExprArena::new();
+                let arena = SharedArena::new();
                 let id = arena.intern(e);
                 let a = br(e, &ctx);
-                let b = ir(&mut arena, id, &ctx);
+                let b = ir(&arena, id, &ctx);
                 match (&a, &b) {
                     (Some(x), Some(y)) => assert!(
                         arena.extract(*y).alpha_eq(x),

@@ -12,7 +12,7 @@
 //! motivating "too many temporaries" problem of §2 (eq 1-2).
 
 use super::engine::{IdRule, Rule};
-use crate::dsl::intern::{ExprArena, ExprId, Node};
+use crate::dsl::intern::{ExprId, Node, SharedArena};
 use crate::dsl::{fresh_var, Expr};
 
 /// Build `ncomp i f g`: the function applying `g` to the `m` arguments at
@@ -56,7 +56,7 @@ fn arity_of(f: &Expr) -> Option<usize> {
 
 /// Id-native twin of [`ncomp`], built entirely in the arena.
 pub fn ncomp_id(
-    arena: &mut ExprArena,
+    arena: &SharedArena,
     i: usize,
     f: ExprId,
     n: usize,
@@ -85,7 +85,7 @@ pub fn ncomp_id(
 }
 
 /// Id-native twin of [`arity_of`].
-fn arity_of_id(arena: &ExprArena, f: ExprId) -> Option<usize> {
+fn arity_of_id(arena: &SharedArena, f: ExprId) -> Option<usize> {
     match arena.get(f) {
         Node::Lam { params, .. } => Some(params.len()),
         Node::Prim(p) => Some(p.arity()),
@@ -290,9 +290,9 @@ pub fn fuse_id_rules() -> [IdRule; 5] {
 }
 
 thread_local! {
-    static FUSE_ID: std::cell::RefCell<(ExprArena, super::engine::IdRewriter)> =
+    static FUSE_ID: std::cell::RefCell<(SharedArena, super::engine::IdRewriter)> =
         std::cell::RefCell::new((
-            ExprArena::new(),
+            SharedArena::new(),
             super::engine::IdRewriter::new(&fuse_id_rules()),
         ));
 }

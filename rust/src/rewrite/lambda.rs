@@ -39,7 +39,7 @@ pub fn beta() -> Rule {
 }
 
 /// Id-native twin of [`beta`]: β-reduction performed entirely in the
-/// arena via [`crate::dsl::intern::ExprArena::subst_id`]. Same
+/// arena via [`crate::dsl::intern::SharedArena::subst_id`]. Same
 /// simultaneous-substitution-through-fresh-renames strategy, so the two
 /// engines agree up to alpha.
 pub fn beta_id() -> IdRule {
@@ -167,7 +167,7 @@ mod tests {
 
     #[test]
     fn id_rules_match_box_rules() {
-        use crate::dsl::intern::ExprArena;
+        use crate::dsl::intern::SharedArena;
         let cases = [
             app2(
                 lam2("x", "y", app2(add(), var("x"), var("y"))),
@@ -183,11 +183,11 @@ mod tests {
             lam1("x", app1(app1(var("f"), var("x")), var("x"))),
         ];
         for e in &cases {
-            let mut arena = ExprArena::new();
+            let arena = SharedArena::new();
             let id = arena.intern(e);
             for (r, ir) in [(beta(), beta_id()), (eta(), eta_id())] {
                 let a = (r.apply)(e);
-                let b = (ir.apply)(&mut arena, id);
+                let b = (ir.apply)(&arena, id);
                 match (&a, &b) {
                     (Some(x), Some(y)) => assert!(
                         arena.extract(*y).alpha_eq(x),

@@ -24,10 +24,12 @@
 //! [`crate::dsl::intern::with_memo_disabled`] as the reference for
 //! differential tests. The [`IdRule`]s (and the context-sensitive
 //! `*_id` functions in [`exchange`]/[`subdivision`]) match and build
-//! directly against [`crate::dsl::intern::ExprArena`] nodes, so
+//! directly against [`crate::dsl::intern::SharedArena`] nodes, so
 //! [`IdRewriter`] and the enumeration search run natively on
 //! [`crate::dsl::intern::ExprId`]s: conversion to/from `Box<Expr>`
-//! happens once at the pipeline boundary, not per node per rule probe.
+//! happens once at the pipeline boundary, not per node per rule probe —
+//! and because the shared arena interns through `&self`, every search
+//! shard builds candidates into the *same* arena concurrently.
 //!
 //! # Memo and generation-stamp invalidation contract
 //!
@@ -97,7 +99,7 @@ impl Ctx {
     /// and subdivision rules so guards never extract a tree.
     pub fn layout_of_id(
         &self,
-        arena: &crate::dsl::intern::ExprArena,
+        arena: &crate::dsl::intern::SharedArena,
         id: crate::dsl::intern::ExprId,
     ) -> crate::Result<Layout> {
         crate::typecheck::infer_id_with(arena, id, &self.env, &self.vars)

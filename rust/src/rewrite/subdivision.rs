@@ -8,7 +8,7 @@
 //! rewrites move around to create cache-friendly traversals.
 
 use super::Ctx;
-use crate::dsl::intern::{ExprArena, ExprId, Node};
+use crate::dsl::intern::{ExprId, Node, SharedArena};
 use crate::dsl::{fresh_var, Expr};
 
 /// eq 44 (n-ary): `nzip f xs = nzip (\blk… -> nzip f blk…) (subdiv c b x)…`
@@ -97,7 +97,7 @@ pub fn subdivide_rnz(e: &Expr, b: usize, ctx: &Ctx) -> Option<Expr> {
 /// divisibility through [`Ctx::layout_of_id`], and builds the nested form
 /// in the arena.
 pub fn subdivide_nzip_id(
-    arena: &mut ExprArena,
+    arena: &SharedArena,
     id: ExprId,
     b: usize,
     ctx: &Ctx,
@@ -142,7 +142,7 @@ pub fn subdivide_nzip_id(
 
 /// Id-native twin of [`subdivide_rnz`].
 pub fn subdivide_rnz_id(
-    arena: &mut ExprArena,
+    arena: &SharedArena,
     id: ExprId,
     b: usize,
     ctx: &Ctx,
@@ -419,7 +419,7 @@ mod tests {
 
     #[test]
     fn id_subdivide_matches_box_subdivide() {
-        use crate::dsl::intern::ExprArena;
+        use crate::dsl::intern::SharedArena;
         let env = Env::new()
             .with("u", Layout::row_major(&[16]))
             .with("v", Layout::row_major(&[16]));
@@ -430,16 +430,16 @@ mod tests {
             (map(lam1("x", var("x")), input("u")), 3), // indivisible
         ];
         for (e, b) in &cases {
-            let mut arena = ExprArena::new();
+            let arena = SharedArena::new();
             let id = arena.intern(e);
             let (bx, ix) = match e {
                 Expr::Rnz { .. } => (
                     subdivide_rnz(e, *b, &ctx),
-                    subdivide_rnz_id(&mut arena, id, *b, &ctx),
+                    subdivide_rnz_id(&arena, id, *b, &ctx),
                 ),
                 _ => (
                     subdivide_nzip(e, *b, &ctx),
-                    subdivide_nzip_id(&mut arena, id, *b, &ctx),
+                    subdivide_nzip_id(&arena, id, *b, &ctx),
                 ),
             };
             match (&bx, &ix) {

@@ -15,7 +15,7 @@
 //! - and signal mistakes in rewrite implementations (types "signal
 //!   potential mistakes", §3).
 
-use crate::dsl::intern::{ExprArena, ExprId, Node};
+use crate::dsl::intern::{ExprId, Node, SharedArena};
 use crate::dsl::Expr;
 use crate::layout::Layout;
 use crate::{Error, Result};
@@ -56,7 +56,7 @@ pub fn infer_with(e: &Expr, env: &Env, vars: &HashMap<String, Layout>) -> Result
 /// `Box<Expr>` tree is ever rebuilt just to typecheck a candidate; the
 /// accept/reject decisions are identical to [`infer`] by construction
 /// (`go_id` mirrors `go` case for case).
-pub fn infer_id(arena: &ExprArena, id: ExprId, env: &Env) -> Result<Layout> {
+pub fn infer_id(arena: &SharedArena, id: ExprId, env: &Env) -> Result<Layout> {
     let mut vars: HashMap<String, Layout> = HashMap::new();
     go_id(arena, id, env, &mut vars)
 }
@@ -65,7 +65,7 @@ pub fn infer_id(arena: &ExprArena, id: ExprId, env: &Env) -> Result<Layout> {
 /// [`infer_with`]; used when typing subexpressions under binders the
 /// caller has descended through).
 pub fn infer_id_with(
-    arena: &ExprArena,
+    arena: &SharedArena,
     id: ExprId,
     env: &Env,
     vars: &HashMap<String, Layout>,
@@ -82,7 +82,7 @@ pub fn infer_id_with(
 /// [`crate::costmodel::spine_lower_bound_id`] on the prune hot path) can
 /// reuse a single map instead of cloning per query.
 pub fn infer_id_scratch(
-    arena: &ExprArena,
+    arena: &SharedArena,
     id: ExprId,
     env: &Env,
     vars: &mut HashMap<String, Layout>,
@@ -91,7 +91,7 @@ pub fn infer_id_scratch(
 }
 
 fn go_id(
-    arena: &ExprArena,
+    arena: &SharedArena,
     id: ExprId,
     env: &Env,
     vars: &mut HashMap<String, Layout>,
@@ -164,7 +164,7 @@ fn go_id(
 
 /// Id-native twin of [`apply`].
 fn apply_id(
-    arena: &ExprArena,
+    arena: &SharedArena,
     f: ExprId,
     arg_tys: &[Layout],
     env: &Env,
@@ -236,7 +236,7 @@ fn apply_id(
 }
 
 /// Id-native twin of [`check_reducer`].
-fn check_reducer_id(arena: &ExprArena, r: ExprId, acc_ty: &Layout) -> Result<()> {
+fn check_reducer_id(arena: &SharedArena, r: ExprId, acc_ty: &Layout) -> Result<()> {
     let mut depth = 0usize;
     let mut cur = r;
     while let Node::Lift { f } = arena.get(cur) {
@@ -590,7 +590,7 @@ mod tests {
             .with("A", Layout::row_major(&[4, 6]))
             .with("B", Layout::row_major(&[6, 8]))
             .with("v", Layout::row_major(&[6]));
-        let mut arena = ExprArena::new();
+        let arena = SharedArena::new();
         for e in [
             matmul_naive(input("A"), input("B")),
             matvec_naive(input("A"), input("v")),

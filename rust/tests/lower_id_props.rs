@@ -12,7 +12,7 @@
 //!   branch-and-bound cut rests on).
 
 use hofdla::costmodel::{estimate, estimate_id, spine_lower_bound_id};
-use hofdla::dsl::intern::ExprArena;
+use hofdla::dsl::intern::SharedArena;
 use hofdla::enumerate::{enumerate_all, starts, Variant};
 use hofdla::exec::{execute_named, lower, lower_id};
 use hofdla::layout::Layout;
@@ -54,7 +54,7 @@ fn differential_lower_id_matches_lower_over_variant_sets() {
     let ctx = ctx();
     for (name, start) in families() {
         let variants = enumerate_all(&start, &ctx, 4096).unwrap();
-        let mut arena = ExprArena::new();
+        let arena = SharedArena::new();
         for v in &variants {
             let id = arena.intern(&v.expr);
             match (lower(&v.expr, &ctx.env), lower_id(&arena, id, &ctx.env)) {
@@ -88,7 +88,7 @@ fn lower_id_programs_execute_identically() {
     let inputs: Vec<(&str, &[f64])> = vec![("A", &a), ("B", &b), ("v", &v)];
     for (name, start) in families() {
         let variants = enumerate_all(&start, &ctx, 4096).unwrap();
-        let mut arena = ExprArena::new();
+        let arena = SharedArena::new();
         for va in &variants {
             let id = arena.intern(&va.expr);
             let (Ok(pa), Ok(pb)) = (lower(&va.expr, &ctx.env), lower_id(&arena, id, &ctx.env))
@@ -111,7 +111,7 @@ fn estimate_id_matches_boxed_estimate_over_variant_sets() {
     let ctx = ctx();
     for (name, start) in families() {
         let variants = enumerate_all(&start, &ctx, 4096).unwrap();
-        let mut arena = ExprArena::new();
+        let arena = SharedArena::new();
         for v in &variants {
             let id = arena.intern(&v.expr);
             let by_id = estimate_id(&arena, id, &ctx.env);
@@ -138,7 +138,7 @@ fn prop_spine_lower_bound_never_exceeds_true_cost() {
     let ctx = ctx();
     for (name, start) in families() {
         let variants = enumerate_all(&start, &ctx, 4096).unwrap();
-        let mut arena = ExprArena::new();
+        let arena = SharedArena::new();
         for v in &variants {
             let id = arena.intern(&v.expr);
             let lb = spine_lower_bound_id(&arena, id, &ctx);

@@ -1,0 +1,180 @@
+//! Std-thread stress tests pinning the concurrent hash-sharded arena
+//! (`dsl::intern::SharedArena`, ISSUE 4) to its determinism contract:
+//!
+//! - many threads interning overlapping expression families must agree
+//!   on ids — once a tree is interned, every thread sees the same id for
+//!   it, whatever the interleaving was;
+//! - extraction reproduces the exact trees that went in;
+//! - `enumerate_search` against the shared arena reproduces the serial
+//!   variant order exactly under stressed shard counts, with zero
+//!   extractions at BFS level boundaries (output-boundary extractions
+//!   only, verified through the arena-backed `SearchStats` counters).
+
+use hofdla::dsl::intern::{ExprId, SharedArena};
+use hofdla::dsl::Expr;
+use hofdla::enumerate::{enumerate_search, starts, SearchOptions};
+use hofdla::layout::Layout;
+use hofdla::rewrite::Ctx;
+use hofdla::typecheck::Env;
+
+/// Shapes every start family typechecks under (same convention as
+/// `search_props`): A is n×j, B is j×k, v has length j, with the
+/// divisibility the subdivided families need.
+fn ctx() -> Ctx {
+    Ctx::new(
+        Env::new()
+            .with("A", Layout::row_major(&[4, 8]))
+            .with("B", Layout::row_major(&[8, 4]))
+            .with("v", Layout::row_major(&[8])),
+    )
+}
+
+/// Overlapping expression families: every start variant of the seed
+/// workloads. They share most of their subtrees (the naive matmul spine
+/// is embedded in every subdivided form), which is exactly the overlap
+/// the segments race on.
+fn family_exprs() -> Vec<Expr> {
+    vec![
+        starts::matmul_naive_variant().expr,
+        starts::matmul_rnz_subdivided_variant(2).expr,
+        starts::matmul_maps_subdivided_variant(2).expr,
+        starts::matmul_rnz_twice_subdivided_variant(2, 2).expr,
+        starts::matmul_all_subdivided_variant(2).expr,
+        starts::matvec_naive_variant().expr,
+        starts::matvec_vector_subdivided_variant(2).expr,
+    ]
+}
+
+/// Many threads interning the same overlapping families, each in a
+/// different rotation and repeatedly, must agree on every id — the
+/// id-stability contract the search's per-shard caches rest on.
+#[test]
+fn stress_threads_agree_on_ids_for_overlapping_families() {
+    const THREADS: usize = 8;
+    const ROUNDS: usize = 50;
+    let arena = SharedArena::new();
+    let exprs = family_exprs();
+    let per_thread: Vec<Vec<ExprId>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let arena = &arena;
+                let exprs = &exprs;
+                s.spawn(move || {
+                    let n = exprs.len();
+                    let mut ids: Vec<Option<ExprId>> = vec![None; n];
+                    for round in 0..ROUNDS {
+                        for j in 0..n {
+                            // Rotate the visit order per thread and per
+                            // round so insertions genuinely interleave.
+                            let i = (j + t + round) % n;
+                            let id = arena.intern(&exprs[i]);
+                            // Re-interning within one thread is stable.
+                            if let Some(prev) = ids[i] {
+                                assert_eq!(prev, id, "thread {t}: id changed on re-intern");
+                            }
+                            ids[i] = Some(id);
+                        }
+                    }
+                    ids.into_iter().map(Option::unwrap).collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    // Cross-thread agreement: every thread resolved every family member
+    // to the id the arena reports now.
+    let reference: Vec<ExprId> = exprs.iter().map(|e| arena.intern(e)).collect();
+    for (t, ids) in per_thread.iter().enumerate() {
+        assert_eq!(ids, &reference, "thread {t} disagreed on ids");
+    }
+    // And the ids still mean what they meant: exact round trips.
+    for (e, &id) in exprs.iter().zip(&reference) {
+        assert_eq!(&arena.extract(id), e, "round trip changed the tree");
+    }
+}
+
+/// Concurrent interning keeps hash-consing exact: structurally distinct
+/// trees never collapse onto one id, even under contention.
+#[test]
+fn stress_distinct_trees_stay_distinct_under_contention() {
+    let arena = SharedArena::new();
+    let ids: Vec<Vec<ExprId>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let arena = &arena;
+                s.spawn(move || {
+                    // All threads intern the same 64 distinct literals,
+                    // racing on every segment.
+                    (0..64)
+                        .map(|i| arena.intern(&Expr::Lit(i as f64)))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for thread_ids in &ids {
+        assert_eq!(thread_ids, &ids[0], "threads disagreed");
+        let distinct: std::collections::HashSet<_> = thread_ids.iter().collect();
+        assert_eq!(distinct.len(), 64, "distinct trees collapsed");
+    }
+}
+
+/// Shard counts to stress. The CI `search-shards` matrix sets
+/// `SEARCH_SHARDS` so each arm exercises exactly its width (keeping the
+/// arms distinct); a local run without the variable covers the full
+/// {1, 2, 8} set in one go.
+fn stress_shard_counts() -> Vec<usize> {
+    match std::env::var("SEARCH_SHARDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n >= 1)
+    {
+        Some(n) => vec![n],
+        None => vec![1, 2, 8],
+    }
+}
+
+/// The search against the shared arena is a pure parallelization: every
+/// stressed shard count reproduces the serial variant order and
+/// bit-identical scores, and the extraction counters show that nothing
+/// was extracted at BFS level boundaries — exactly one output-boundary
+/// extraction per kept candidate (the start is never extracted).
+#[test]
+fn stressed_shard_counts_reproduce_serial_order_with_boundary_only_extraction() {
+    let ctx = ctx();
+    let serial_opts = SearchOptions {
+        limit: 4096,
+        shards: 1,
+        prune_slack: None,
+        score: true,
+    };
+    for start in [
+        starts::matmul_rnz_subdivided_variant(2),
+        starts::matmul_all_subdivided_variant(2),
+    ] {
+        let reference = enumerate_search(&start, &ctx, &serial_opts).unwrap();
+        let ref_keys: Vec<String> = reference.variants.iter().map(|v| v.display_key()).collect();
+        for shards in stress_shard_counts() {
+            let opts = SearchOptions {
+                shards,
+                ..serial_opts
+            };
+            let got = enumerate_search(&start, &ctx, &opts).unwrap();
+            let got_keys: Vec<String> = got.variants.iter().map(|v| v.display_key()).collect();
+            assert_eq!(ref_keys, got_keys, "shards={shards}: order diverged");
+            assert_eq!(reference.scores, got.scores, "shards={shards}: scores");
+            assert_eq!(
+                got.stats.extracted(),
+                got.stats.kept as u64 - 1,
+                "shards={shards}: extraction must be once per kept variant, \
+                 at the output boundary only"
+            );
+            assert_eq!(
+                got.stats.extracted_per_shard.len(),
+                shards,
+                "shards={shards}: layout must be padded to the configured count"
+            );
+        }
+    }
+}
