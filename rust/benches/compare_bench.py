@@ -5,10 +5,14 @@ committed baseline (BENCH_coordinator.baseline.json).
 Used by the CI `bench-perf` lane. The lane is non-blocking
 (continue-on-error), and the threshold is deliberately generous: shared
 runners are noisy, so only gross regressions of the cold/warm/pruned
-medians should flag. Exit codes: 0 = within threshold (or nothing to
-compare), 1 = at least one row regressed beyond THRESHOLD, 2 = usage
-error. Stdlib only — the repo's default build is dependency-free and CI
-should be too.
+medians should flag. Beyond the absolute medians, the lane tracks the
+pruned/cold ratio (pruned-vs-exhaustive search time) and the `search`
+block's `pruned_candidates` — the branch-and-bound cut going inert
+(pruning nothing on the bench workload) flags even when wall-clock looks
+fine. Exit codes: 0 = within threshold (or nothing to compare), 1 = at
+least one row regressed beyond THRESHOLD (or the cut went inert), 2 =
+usage error. Stdlib only — the repo's default build is dependency-free
+and CI should be too.
 """
 
 import json
@@ -16,6 +20,11 @@ import sys
 
 # Generous: flag only when a median is more than 3x the baseline.
 THRESHOLD = 3.0
+
+# Pruned vs cold are measured within the *same* run (far less noisy than
+# cross-run baselines), and pruning should never make the search
+# meaningfully slower than exhaustive — flag past modest headroom.
+PRUNED_VS_COLD_THRESHOLD = 1.5
 
 # The rows tracked across PRs (see rust/benches/README.md).
 ROWS = ("cold", "warm", "pruned")
@@ -46,7 +55,8 @@ def main(argv):
         return 2
 
     cur, base = rows_by_name(current), rows_by_name(baseline)
-    regressed = []
+    regressed = []  # baseline-relative: refreshing the baseline clears these
+    broken = []  # current-run-only: only a code change clears these
     for name in ROWS:
         if name not in cur or name not in base:
             print(f"{name:8} missing from current or baseline; skipping")
@@ -61,12 +71,57 @@ def main(argv):
         print(f"{name:8} median {c:>13} ns  baseline {b:>13} ns  ({ratio:6.2f}x)  {mark}")
         if ratio > THRESHOLD:
             regressed.append(name)
+
+    # Branch-and-bound tracking: pruned-vs-exhaustive search time plus the
+    # cut's effectiveness counters. A pruned run meaningfully slower than
+    # cold (the two are timed within the same run, so the tight
+    # PRUNED_VS_COLD_THRESHOLD applies, not the cross-run 3x), or a cut
+    # that stopped firing (pruned_candidates == 0), is a cost-model
+    # regression even when absolute medians look fine. Advisory like the
+    # rest of the lane; tolerant of pre-schema baselines.
+    if "cold" in cur and "pruned" in cur and cur["cold"].get("median_ns"):
+        pvc = cur["pruned"]["median_ns"] / cur["cold"]["median_ns"]
+        bpvc = None
+        if "cold" in base and "pruned" in base and base["cold"].get("median_ns"):
+            bpvc = base["pruned"]["median_ns"] / base["cold"]["median_ns"]
+        baseline_note = f"  baseline {bpvc:5.2f}x" if bpvc is not None else ""
+        print(f"pruned/cold search-time ratio {pvc:5.2f}x{baseline_note}")
+        if pvc > PRUNED_VS_COLD_THRESHOLD:
+            print(
+                f"advisory: pruned mode is > {PRUNED_VS_COLD_THRESHOLD}x the "
+                "exhaustive search time — pruning has become a net loss"
+            )
+            broken.append("pruned/cold")
+    search = current.get("search", {})
+    if search:
+        print(
+            "search: pruned_candidates={} kept {} of {} variants".format(
+                search.get("pruned_candidates", "?"),
+                search.get("pruned_variants", "?"),
+                search.get("exhaustive_variants", "?"),
+            )
+        )
+        if search.get("pruned_candidates") == 0:
+            print(
+                "advisory: the branch-and-bound cut pruned nothing on the bench "
+                "workload — the lower bound has gone inert (see "
+                "costmodel::spine_lower_bound_id)"
+            )
+            broken.append("pruned_candidates")
+
     if regressed:
         print(
-            f"advisory: {', '.join(regressed)} exceeded {THRESHOLD}x the committed "
-            "baseline. If the slowdown is real and intended, refresh "
+            f"advisory: {', '.join(regressed)} regressed against the committed "
+            "baseline. If the change is real and intended, refresh "
             "rust/benches/BENCH_coordinator.baseline.json from this run's artifact."
         )
+    if broken:
+        print(
+            f"advisory: {', '.join(broken)} failed within this run alone — "
+            "refreshing the baseline cannot clear it; look at the cost model / "
+            "search pruning code."
+        )
+    if regressed or broken:
         return 1
     print("all tracked rows within threshold")
     return 0

@@ -31,7 +31,17 @@ fn subdivided_matmul_spec(prune: bool) -> OptimizeSpec {
     }
 }
 
-fn write_bench_json(rows: &[(&str, &Measurement)], jobs_per_s: f64) {
+/// Branch-and-bound effectiveness counters for the `search` block of the
+/// JSON: the advisory perf lane watches `pruned_candidates` alongside the
+/// pruned-vs-cold latency ratio, so the cut going inert (a cost-model
+/// regression, not a wall-clock one) still flags.
+struct SearchRow {
+    pruned_candidates: usize,
+    exhaustive_variants: usize,
+    pruned_variants: usize,
+}
+
+fn write_bench_json(rows: &[(&str, &Measurement)], jobs_per_s: f64, search: &SearchRow) {
     let mut s = String::from(
         "{\n  \"bench\": \"coordinator\",\n  \"workload\": \"matmul n=64 subdivide_rnz=4 (Table 2, 12 variants)\",\n  \"rows\": [\n",
     );
@@ -45,7 +55,8 @@ fn write_bench_json(rows: &[(&str, &Measurement)], jobs_per_s: f64) {
         ));
     }
     s.push_str(&format!(
-        "  ],\n  \"jobs_per_s\": {jobs_per_s:.1}\n}}\n"
+        "  ],\n  \"search\": {{\"pruned_candidates\": {}, \"exhaustive_variants\": {}, \"pruned_variants\": {}}},\n  \"jobs_per_s\": {jobs_per_s:.1}\n}}\n",
+        search.pruned_candidates, search.exhaustive_variants, search.pruned_variants
     ));
     match std::fs::write("BENCH_coordinator.json", &s) {
         Ok(()) => println!("wrote BENCH_coordinator.json"),
@@ -74,9 +85,27 @@ fn main() {
         std::hint::black_box(r.variants_explored);
     });
     println!(
-        "pipeline (pruned) median latency: {}",
-        fmt_duration(pruned.median)
+        "pipeline (pruned) median latency: {} ({:.2}x of cold)",
+        fmt_duration(pruned.median),
+        pruned.median.as_secs_f64() / cold.median.as_secs_f64().max(f64::EPSILON)
     );
+
+    // Branch-and-bound effectiveness on this workload: how many
+    // candidates the default-slack cut rejected before lowering/scoring,
+    // and how far the kept set shrank vs exhaustive mode.
+    let search = {
+        let ex = coordinator::optimize(&spec).expect("optimize");
+        let pr = coordinator::optimize(&pruned_spec).expect("optimize");
+        println!(
+            "search: exhaustive kept={} pruned-mode kept={} pruned_candidates={}",
+            ex.variants_explored, pr.variants_explored, pr.stats.pruned
+        );
+        SearchRow {
+            pruned_candidates: pr.stats.pruned,
+            exhaustive_variants: ex.variants_explored,
+            pruned_variants: pr.variants_explored,
+        }
+    };
 
     let c = Coordinator::start(Config::default()).expect("start");
 
@@ -116,6 +145,7 @@ fn main() {
     write_bench_json(
         &[("cold", &cold), ("warm", &warm), ("pruned", &pruned)],
         jobs_per_s,
+        &search,
     );
 
     if hofdla::runtime::artifact_path("matmul_xla_256").exists()

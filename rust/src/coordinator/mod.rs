@@ -25,8 +25,20 @@ use crate::{Error, Result};
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
+
+/// Best-effort description of a panic payload (the `Box<dyn Any>` a
+/// worker catches from a panicking pipeline run).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
+    }
+}
 
 /// Service configuration.
 #[derive(Clone, Debug)]
@@ -149,19 +161,41 @@ impl Coordinator {
                 std::thread::Builder::new()
                     .name(format!("hofdla-opt-{w}"))
                     .spawn(move || loop {
-                        let job = { rx.lock().unwrap().recv() };
+                        // Recover from poisoned locks: a panic in any
+                        // worker must not cascade into every other worker
+                        // dying on `unwrap()` — which used to strand
+                        // queued jobs forever (their reply senders sit in
+                        // the channel, so callers block, not error).
+                        let job = { rx.lock().unwrap_or_else(PoisonError::into_inner).recv() };
                         match job {
                             Ok(Work::Opt { spec, reply }) => {
                                 let stamp = generation.load(Ordering::Relaxed);
                                 let key = (stamp, spec);
-                                let cached = cache.lock().unwrap().get(&key);
+                                let cached = cache
+                                    .lock()
+                                    .unwrap_or_else(PoisonError::into_inner)
+                                    .get(&key);
                                 let r = match cached {
                                     Some(hit) => {
                                         m.opt_cache_hits.fetch_add(1, Ordering::Relaxed);
                                         Ok(Response::Optimized(hit))
                                     }
                                     None => {
-                                        let r = pipeline::optimize(&key.1);
+                                        // A panicking pipeline run fails
+                                        // its own job (counted in
+                                        // `failed`, reply delivered) and
+                                        // leaves the worker alive.
+                                        let r = std::panic::catch_unwind(
+                                            std::panic::AssertUnwindSafe(|| {
+                                                pipeline::optimize(&key.1)
+                                            }),
+                                        )
+                                        .unwrap_or_else(|payload| {
+                                            Err(Error::Coordinator(format!(
+                                                "optimize job panicked: {}",
+                                                panic_message(payload.as_ref())
+                                            )))
+                                        });
                                         if let Ok(res) = &r {
                                             // Fold the fresh run's search
                                             // counters into the service
@@ -169,7 +203,10 @@ impl Coordinator {
                                             // no new search work and are
                                             // not re-recorded).
                                             m.record_search(&res.stats);
-                                            cache.lock().unwrap().put(key, res.clone());
+                                            cache
+                                                .lock()
+                                                .unwrap_or_else(PoisonError::into_inner)
+                                                .put(key, res.clone());
                                         }
                                         r.map(Response::Optimized)
                                     }
@@ -468,6 +505,52 @@ mod tests {
         assert_eq!(c.metrics.opt_cache_hits.load(Ordering::Relaxed), 1);
         c.call(Request::Optimize(opt_spec(16))).unwrap();
         assert_eq!(c.metrics.opt_cache_hits.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn worker_pool_survives_panicking_jobs() {
+        // A panicking `pipeline::optimize` used to unwind the worker with
+        // the job's reply channel still queued behind poisoned locks:
+        // every other worker then died on `lock().unwrap()` and later
+        // callers blocked forever. The pool must instead fail the job and
+        // keep serving.
+        let c = Coordinator::start(Config {
+            workers: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        // Shapes whose stride/extent products overflow `usize` panic in
+        // debug builds (the profile `cargo test` runs); in release the
+        // wrapped layout fails shape checking instead. Either way the job
+        // must resolve — promptly and with an error — instead of hanging.
+        let poison = OptimizeSpec {
+            source:
+                "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))"
+                    .into(),
+            inputs: vec![
+                ("A".into(), vec![usize::MAX, usize::MAX]),
+                ("B".into(), vec![usize::MAX, usize::MAX]),
+            ],
+            rank_by: RankBy::CostModel,
+            subdivide_rnz: None,
+            top_k: 4,
+            prune: false,
+        };
+        for _ in 0..3 {
+            let r = c.call(Request::Optimize(poison.clone()));
+            if cfg!(debug_assertions) {
+                assert!(r.is_err(), "panicking job must surface as an error");
+            }
+        }
+        if cfg!(debug_assertions) {
+            assert_eq!(c.metrics.failed.load(Ordering::Relaxed), 3);
+        }
+        // The single worker survived all three panics and still serves.
+        let Response::Optimized(r) = c.call(Request::Optimize(opt_spec(8))).unwrap() else {
+            panic!("wrong response type")
+        };
+        assert_eq!(r.best, "map1 rnz map2");
+        assert_eq!(c.metrics.in_flight(), 0);
     }
 
     #[test]

@@ -45,13 +45,18 @@ use std::collections::HashMap;
 ///
 /// Branch-and-bound pruning in [`crate::enumerate`] compares
 /// [`spine_lower_bound_id`] against the best-known true score. The bound
-/// charges only the per-iteration destination write
-/// ([`UNIT_STRIDE_COST`]), so it stays a true lower bound for any
-/// constants under which every leaf iteration writes its destination at
-/// unit stride; keep that invariant (or re-derive the bound) when
-/// changing these constants, and bump this stamp whenever the scoring
-/// itself changes.
-pub const COST_MODEL_VERSION: u64 = 1;
+/// charges the per-iteration destination write plus per-track input
+/// traffic at the layout-implied strides ([`line_cost`]) — the same
+/// constants [`estimate`]'s walk charges — so it stays a true lower bound
+/// as long as the bound's charges mirror a subset of the walk's; keep
+/// that invariant (or re-derive the bound) when changing these constants,
+/// and bump this stamp whenever the scoring itself changes.
+///
+/// Version 2: the lower bound gained rearrangement-sensitive per-track
+/// input-traffic terms (it previously charged only the destination
+/// write), so rankings cached under version 1 could have been produced by
+/// a search whose cut decisions no longer reproduce.
+pub const COST_MODEL_VERSION: u64 = 2;
 
 /// Cache-line cost charged per access at unit stride: one f64 out of an
 /// 8-element (64-byte) line. Also the per-iteration destination-write
@@ -62,6 +67,22 @@ pub const UNIT_STRIDE_COST: f64 = 0.125;
 /// Per-access cost of a register-resident input track (stride 0, or a
 /// track advanced only by loops outside the innermost one).
 pub const REG_REUSE_COST: f64 = 0.01;
+
+/// Cache-line cost of one access to a track whose innermost advancing
+/// loop has the given stride — the stride rule shared by [`estimate`]'s
+/// walk and [`spine_lower_bound_id`] (which must charge *identical*
+/// per-access constants to stay a bound). [`REG_REUSE_COST`] is the
+/// floor: no stride costs less, which is what makes it the sound charge
+/// for a track whose innermost stride is unknown.
+#[inline]
+pub fn line_cost(stride: usize) -> f64 {
+    match stride {
+        0 => REG_REUSE_COST,
+        1 => UNIT_STRIDE_COST,
+        s if s < 8 => s as f64 * UNIT_STRIDE_COST,
+        _ => 1.0,
+    }
+}
 
 /// Static cost estimate for one lowered variant.
 #[derive(Clone, Debug, PartialEq)]
@@ -111,70 +132,212 @@ pub fn estimate_id(arena: &SharedArena, id: ExprId, env: &Env) -> Result<CostEst
 /// behind `id`, computed from the HoF spine alone — no lowering, no
 /// `Box<Expr>`, no per-leaf walk.
 ///
-/// The bound multiplies the consumed (outermost) extents down the spine —
-/// every spine level becomes a loop of exactly that extent, and whatever
-/// the body lowers to executes at least once per iteration — and charges
-/// only the destination write ([`UNIT_STRIDE_COST`]) for each of those
-/// iterations. The true score additionally pays per-track input traffic,
-/// inner-loop iterations and the accumulator penalty, so
+/// The descent multiplies the consumed (outermost) extents down the spine
+/// — every spine level becomes a loop of exactly that extent — and, when
+/// the spine bottoms out in a shape it can fully resolve, charges the
+/// leaf *exactly* as [`estimate`]'s walk would:
+///
+/// - the destination write ([`UNIT_STRIDE_COST`]) per innermost
+///   iteration, and
+/// - per input track, the [`line_cost`] of the stride of the loop that
+///   bound its scalar element — a quantity the descent reads off each
+///   argument's layout at its binding level, with no lowering. This is
+///   what makes the bound *rearrangement-sensitive*: permuting the spine
+///   moves which level consumes a track last, so dominated rearrangements
+///   (e.g. ones forced to stream a matrix at a large stride) now bound
+///   strictly above the family's best score and the search's
+///   branch-and-bound cut fires at [`crate::enumerate::DEFAULT_PRUNE_SLACK`].
+///
+/// Fully-resolved shapes are the search families' normal forms: every
+/// operator a lambda (or a bare primitive zipper), every argument a view,
+/// and the innermost body a scalar kernel or a view. For those the bound
+/// equals the true `traffic` term — charges are accumulated in the exact
+/// order the walk uses, so not even floating-point rounding can push the
+/// bound above the score — and the true score only adds the non-negative
+/// accumulator penalty. Anywhere the shape is *not* resolved (a redex
+/// mid-rewrite, an unresolvable layout, a `lift`ed operator, a non-scalar
+/// kernel), the descent stops and conservatively charges only the
+/// destination writes of the levels seen so far, which every lowering of
+/// the candidate must still pay. Either way
 /// `spine_lower_bound_id(..) ≤ estimate_id(..).score()` whenever the
-/// expression lowers at all (pinned by a property test in
+/// expression lowers at all (pinned by property tests in
 /// `tests/lower_id_props.rs`; unlowerable candidates score `+∞`, which
 /// bounds trivially).
 ///
-/// *Partial spine*: descent stops — returning the bound accumulated so
-/// far, still sound — as soon as a level's operator is not a lambda or an
-/// argument layout cannot be resolved, so the function can be called on
-/// candidates in any intermediate rewrite state.
+/// *Partial spine*: because unresolved structure degrades the bound
+/// instead of failing it, the function can be called on candidates in any
+/// intermediate rewrite state — even raw exchange output, before
+/// normalization, where `tests/lower_id_props.rs` pins the
+/// cross-expression fact `bound(raw) ≤ score(normalize(raw))`. (The
+/// search engine itself consults it on normalized candidates, where the
+/// read can be memoized.)
 pub fn spine_lower_bound_id(arena: &SharedArena, id: ExprId, ctx: &Ctx) -> f64 {
     // The descent follows a single spine path, so one mutable binding map
     // (shadowing as it goes, never needing restoration) replaces a full
     // `Ctx` clone per level — this runs once per generated candidate on
-    // the prune hot path.
-    fn spine_iters(
-        arena: &SharedArena,
-        id: ExprId,
-        env: &Env,
-        vars: &mut HashMap<String, Layout>,
-        acc: f64,
-    ) -> f64 {
-        let (fid, args) = match arena.get(id) {
+    // the prune hot path. `var_cost` shadows in step with `vars`: the
+    // per-access line cost of the loop that bound each variable (vars
+    // inherited from `ctx` have no known binding loop and are floored at
+    // REG_REUSE_COST, which every stride's line cost dominates).
+    let mut vars = ctx.vars.clone();
+    let mut var_cost: HashMap<String, f64> = ctx
+        .vars
+        .keys()
+        .map(|k| (k.clone(), REG_REUSE_COST))
+        .collect();
+    let mut iters = 1.0f64;
+    let mut cur = id;
+    loop {
+        // `get` hands out stable references into the arena's append-only
+        // storage, so the borrows live across the level's work without
+        // cloning the child-id list on this per-candidate hot path.
+        let (fid, args) = match arena.get(cur) {
             ENode::Nzip { f, args } => (*f, args),
             ENode::Rnz { m, args, .. } => (*m, args),
-            _ => return acc,
+            // Spine exhausted: charge the innermost body exactly where
+            // its shape is fully known, destination-only otherwise.
+            _ => return body_bound(arena, cur, &ctx.env, &mut vars, &var_cost, iters),
         };
         let mut extent = None;
-        let mut elem_tys = Vec::with_capacity(args.len());
+        let mut elems = Vec::with_capacity(args.len());
+        let mut strides = Vec::with_capacity(args.len());
         for &a in args {
-            let Ok(layout) = infer_id_scratch(arena, a, env, vars) else {
-                return acc;
+            let Ok(layout) = infer_id_scratch(arena, a, &ctx.env, &mut vars) else {
+                return iters * UNIT_STRIDE_COST;
             };
             let Some(outer) = layout.outer() else {
-                return acc;
+                return iters * UNIT_STRIDE_COST;
             };
             if extent.is_none() {
                 extent = Some(outer.extent as f64);
             }
             let Ok(elem) = layout.peel_outer() else {
-                return acc;
+                return iters * UNIT_STRIDE_COST;
             };
-            elem_tys.push(elem);
+            strides.push(outer.stride);
+            elems.push(elem);
         }
         let Some(extent) = extent else {
-            return acc;
+            return iters * UNIT_STRIDE_COST;
         };
-        if let ENode::Lam { params, body } = arena.get(fid) {
-            if params.len() == args.len() {
-                for (p, elem) in params.iter().zip(elem_tys) {
+        match arena.get(fid) {
+            ENode::Lam { params, body } if params.len() == args.len() => {
+                iters *= extent;
+                for ((p, elem), &s) in params.iter().zip(elems).zip(&strides) {
                     vars.insert(p.clone(), elem);
+                    var_cost.insert(p.clone(), line_cost(s));
                 }
-                return spine_iters(arena, *body, env, vars, acc * extent);
+                cur = *body;
+            }
+            ENode::Prim(_) => {
+                // `rnz r (*) u v`-style bare-primitive zipper: if this
+                // lowers at all it lowers to exactly this loop nest with
+                // one leaf reading each argument track at this level's
+                // stride — replicate the walk's accumulation verbatim.
+                iters *= extent;
+                let mut traffic = 0.0;
+                for &s in &strides {
+                    traffic += iters * line_cost(s);
+                }
+                traffic += iters * UNIT_STRIDE_COST;
+                return traffic;
+            }
+            // Unresolved operator (redex mid-rewrite, `lift`, arity
+            // mismatch): this level still becomes at least one loop of
+            // this extent around at least one destination write.
+            _ => {
+                iters *= extent;
+                return iters * UNIT_STRIDE_COST;
             }
         }
-        acc * extent
     }
-    let mut vars = ctx.vars.clone();
-    spine_iters(arena, id, &ctx.env, &mut vars, 1.0) * UNIT_STRIDE_COST
+}
+
+/// Charge the innermost body of a spine — the part below the last HoF
+/// level — exactly as lowering + [`estimate`]'s walk would, or fall back
+/// to the destination-only charge when its shape is not fully resolved.
+/// `iters` is the enclosing-loop iteration product; `var_cost` maps each
+/// bound variable to the [`line_cost`] of its binding loop.
+fn body_bound(
+    arena: &SharedArena,
+    id: ExprId,
+    env: &Env,
+    vars: &mut HashMap<String, Layout>,
+    var_cost: &HashMap<String, f64>,
+    iters: f64,
+) -> f64 {
+    match arena.get(id) {
+        // A view body lowers to a copy nest (or a bare scalar read): one
+        // loop per remaining dimension, one leaf reading the innermost
+        // track at the innermost dimension's stride.
+        ENode::Var(_)
+        | ENode::Input(_)
+        | ENode::Subdiv { .. }
+        | ENode::Flatten { .. }
+        | ENode::Flip { .. } => {
+            let Ok(layout) = infer_id_scratch(arena, id, env, vars) else {
+                return iters * UNIT_STRIDE_COST;
+            };
+            if layout.is_scalar() {
+                let per = match arena.get(id) {
+                    ENode::Var(x) => var_cost.get(x).copied().unwrap_or(REG_REUSE_COST),
+                    // A constant-offset scalar view lowers to a stride-0
+                    // advance: register reuse exactly.
+                    _ => REG_REUSE_COST,
+                };
+                return iters * per + iters * UNIT_STRIDE_COST;
+            }
+            let mut it = iters;
+            for d in layout.dims.iter().rev() {
+                it *= d.extent as f64;
+            }
+            it * line_cost(layout.dims[0].stride) + it * UNIT_STRIDE_COST
+        }
+        // Anything else is a scalar kernel if it lowers at all: replicate
+        // the kernel compiler's traversal, charging each variable read at
+        // its binding loop's stride, in occurrence order.
+        _ => {
+            let mut traffic = 0.0;
+            if kernel_charges(arena, id, vars, var_cost, iters, &mut traffic) {
+                traffic += iters * UNIT_STRIDE_COST;
+                traffic
+            } else {
+                iters * UNIT_STRIDE_COST
+            }
+        }
+    }
+}
+
+/// Accumulate the per-read input charges of a scalar kernel in the exact
+/// order `exec`'s kernel compiler emits its track reads. Returns `false`
+/// — caller falls back to the destination-only charge — on any shape the
+/// kernel compiler would reject (so the failure is either unreachable or
+/// scores `+∞`, and the fallback is sound either way).
+fn kernel_charges(
+    arena: &SharedArena,
+    id: ExprId,
+    vars: &HashMap<String, Layout>,
+    var_cost: &HashMap<String, f64>,
+    iters: f64,
+    traffic: &mut f64,
+) -> bool {
+    match arena.get(id) {
+        ENode::Lit(_) => true,
+        ENode::Var(x) => match vars.get(x) {
+            Some(l) if l.is_scalar() => {
+                *traffic += iters * var_cost.get(x).copied().unwrap_or(REG_REUSE_COST);
+                true
+            }
+            _ => false,
+        },
+        ENode::App { f, args } => match arena.get(*f) {
+            ENode::Prim(p) if args.len() == p.arity() => args
+                .iter()
+                .all(|&a| kernel_charges(arena, a, vars, var_cost, iters, traffic)),
+            _ => false,
+        },
+        _ => false,
+    }
 }
 
 /// `iters`: product of enclosing loop extents. `stack`: per-level advance
@@ -226,10 +389,8 @@ fn walk(
                     }
                 }
                 let per_access = match stride {
-                    None | Some(0) => REG_REUSE_COST,
-                    Some(1) => UNIT_STRIDE_COST,
-                    Some(s) if s < 8 => s as f64 * UNIT_STRIDE_COST,
-                    _ => 1.0,
+                    None => REG_REUSE_COST,
+                    Some(s) => line_cost(s),
                 };
                 est.traffic += iters * per_access;
             }
@@ -339,5 +500,78 @@ mod tests {
             );
             assert!(lb > 0.0, "{}: bound should be positive", v.display_key());
         }
+    }
+
+    #[test]
+    fn spine_lower_bound_is_exact_traffic_on_resolved_spines() {
+        // On the search families' normal forms (lambda/primitive
+        // operators, view args, scalar kernels) the bound replicates the
+        // walk's traffic accumulation verbatim — bit-for-bit, not just
+        // within epsilon. This is the tentpole of the branch-and-bound
+        // cut: the bound is as tight as the model allows, short only of
+        // the accumulator penalty.
+        use crate::dsl::intern::SharedArena;
+        let env = Env::new()
+            .with("A", Layout::row_major(&[64, 64]))
+            .with("B", Layout::row_major(&[64, 64]));
+        let ctx = Ctx::new(env.clone());
+        let arena = SharedArena::new();
+        for start in [
+            starts::matmul_naive_variant(),
+            starts::matmul_rnz_subdivided_variant(4),
+        ] {
+            let id = arena.intern(&start.expr);
+            let lb = spine_lower_bound_id(&arena, id, &ctx);
+            let est = estimate_id(&arena, id, &env).unwrap();
+            assert_eq!(
+                lb,
+                est.traffic,
+                "{}: bound must equal the true traffic term",
+                start.display_key()
+            );
+        }
+    }
+
+    #[test]
+    fn spine_lower_bound_is_rearrangement_sensitive() {
+        // The whole point of the per-track terms: permutations of one
+        // family no longer share a single bound value, so dominated
+        // rearrangements bound above the family's best score and the
+        // search can cut them at slack 1.0.
+        use crate::dsl::intern::SharedArena;
+        let env = Env::new()
+            .with("A", Layout::row_major(&[64, 64]))
+            .with("B", Layout::row_major(&[64, 64]));
+        let ctx = Ctx::new(env.clone());
+        let arena = SharedArena::new();
+        let variants =
+            enumerate_all(&starts::matmul_rnz_subdivided_variant(4), &ctx, 100).unwrap();
+        assert_eq!(variants.len(), 12);
+        let bounds: std::collections::BTreeSet<u64> = variants
+            .iter()
+            .map(|v| spine_lower_bound_id(&arena, arena.intern(&v.expr), &ctx).to_bits())
+            .collect();
+        assert!(
+            bounds.len() > 1,
+            "bound collapsed to one value across the family — the cut is inert again"
+        );
+        // And at least one variant bounds strictly above the family's
+        // best true score: a real cut exists at slack 1.0.
+        let best = variants
+            .iter()
+            .map(|v| {
+                estimate_id(&arena, arena.intern(&v.expr), &env)
+                    .unwrap()
+                    .score()
+            })
+            .fold(f64::INFINITY, f64::min);
+        let max_bound = bounds
+            .iter()
+            .map(|&b| f64::from_bits(b))
+            .fold(0.0f64, f64::max);
+        assert!(
+            max_bound > best,
+            "no variant bounds above the best score ({max_bound} vs {best})"
+        );
     }
 }

@@ -43,12 +43,21 @@
 //!   [`crate::costmodel::spine_lower_bound_id`] — a provable lower bound
 //!   on its true score, computed from the spine without lowering — is
 //!   compared against `slack × best-known-score` (an atomic shared across
-//!   shards). A candidate whose *bound* already exceeds the threshold is
-//!   cut before it is lowered, scored, or extracted. Because the bound
-//!   never exceeds the true score, the default slack
-//!   ([`DEFAULT_PRUNE_SLACK`] = 1.0) can never cut the eventual winner.
-//!   The bound only tightens at level boundaries, so pruning decisions
-//!   stay deterministic under any shard count.
+//!   shards). A candidate whose bound exceeds the threshold is cut
+//!   before it is kept: never lowered, never scored, never extracted,
+//!   excluded from the result set. Cut candidates *do* remain expansion
+//!   sources — the swap graph stays connected, so reachability (and with
+//!   it the winner) is preserved by construction, not by luck: since the
+//!   bound never exceeds the true score, the eventual winner always
+//!   satisfies `bound ≤ score ≤ best-known` and can never be cut at the
+//!   default slack ([`DEFAULT_PRUNE_SLACK`] = 1.0). The bound only
+//!   tightens at level boundaries, so pruning decisions stay
+//!   deterministic under any shard count. (Its partial descent also
+//!   makes it sound on raw, mid-rewrite exchange output —
+//!   `tests/lower_id_props.rs` pins `bound(raw) ≤ score(normalize(raw))`
+//!   — which is what would let a future engine gate generation itself;
+//!   this engine consults it post-normalization only, where the read is
+//!   memoized per candidate.)
 //! - **Dedup** — candidates are deduplicated on an integer label-token
 //!   key (the collapsed spine permutation), not on formatted
 //!   `display_key()` strings; display strings are produced only at the
@@ -282,38 +291,54 @@ pub fn try_swap_at_id(
 /// (PR 2) that compared full scores and needed a ~64× cushion derived
 /// from the cost-model constants and a ≤ ~20-track assumption.
 ///
-/// Be clear-eyed about the flip side: the current bound charges only the
-/// destination-write term, and spine extents are permutation-invariant
-/// within one search family, so at slack `1.0` the cut is provably
-/// *inert* — `pruned` is always 0 and pruned mode returns exactly the
-/// exhaustive result (the property tests assert both). What pruned mode
-/// buys today is the sound branch-and-bound substrate (bound maintenance,
-/// deterministic cuts, stats) at near-zero overhead; cuts start to fire
-/// when the bound gains rearrangement-sensitive terms (per-track input
-/// traffic — see ROADMAP) or when a caller passes a sub-`1.0` slack to
-/// accept heuristic cuts (as the cut-path tests do).
+/// Since the bound gained rearrangement-sensitive per-track input-traffic
+/// terms (`COST_MODEL_VERSION` 2), this default cut *actually fires*:
+/// within one family the bound varies with the permutation, and dominated
+/// rearrangements — e.g. ones forced to stream a matrix at a large stride
+/// — bound strictly above the family's best score. On the subdivided
+/// matmul families, roughly the worse half of the variant set is cut
+/// before being lowered, scored, or extracted (`pruned > 0` is pinned by
+/// `tests/search_props.rs`, as is winner identity with exhaustive mode).
+/// Cut candidates still expand, so pruned mode walks the same swap graph
+/// and the winner is preserved by construction; what it saves is the
+/// per-candidate lower + estimate + output-boundary extraction.
 pub const DEFAULT_PRUNE_SLACK: f64 = 1.0;
 
-/// Cap on automatic shard fan-out: several coordinator workers may each
-/// be searching at once, and one shard per core per job would
+/// Hard cap on shard fan-out, for the auto path *and* explicit
+/// [`SearchOptions::shards`] requests alike: several coordinator workers
+/// may each be searching at once, and an unbounded per-job fan-out would
 /// oversubscribe the machine workers-fold (same rationale as the ranking
-/// fan-out cap in the pipeline).
-pub const MAX_SEARCH_SHARDS: usize = 4;
+/// fan-out cap in the pipeline). The cap equals the widest arm of CI's
+/// `SEARCH_SHARDS` ∈ {1, 2, 8} differential matrix, so every CI width
+/// runs at its nominal fan-out; [`SearchStats::shards`] always reports
+/// the *effective* (post-clamp) count.
+pub const MAX_SEARCH_SHARDS: usize = 8;
 
 /// Knobs for [`enumerate_search`].
 #[derive(Clone, Copy, Debug)]
 pub struct SearchOptions {
-    /// Stop once this many variants have been kept.
+    /// Stop once this many candidates have been *discovered* (kept +
+    /// bound-cut). Exhaustive mode discovers exactly what it keeps, so
+    /// this is the classic kept-variant cap there; under pruning it also
+    /// caps the expansion work itself (cut candidates stay expansion
+    /// sources, so a kept-only cap would let a heavily-cut search walk
+    /// arbitrarily far past it). Pruned and exhaustive searches share one
+    /// discovery sequence, so a binding limit truncates both at the same
+    /// prefix and winner parity is preserved.
     pub limit: usize,
     /// Worker shards for frontier expansion: `1` = serial, `0` = auto
-    /// (one per available core, capped at [`MAX_SEARCH_SHARDS`]).
+    /// (one per available core). Both the auto path and explicit counts
+    /// are clamped to [`MAX_SEARCH_SHARDS`]; [`SearchStats::shards`]
+    /// reports the effective count.
     pub shards: usize,
     /// Branch-and-bound slack: a candidate whose partial-spine lower
     /// bound ([`crate::costmodel::spine_lower_bound_id`]) exceeds
     /// `slack × best-known-score` is cut *before* it is lowered, scored,
-    /// or extracted — neither kept nor expanded. Because the bound never
-    /// exceeds the true score, [`DEFAULT_PRUNE_SLACK`] (= 1.0) never cuts
-    /// the eventual winner. `None` keeps the search exhaustive.
+    /// or extracted, and excluded from the result set. Cut candidates are
+    /// still expanded (the swap graph stays connected), so — the bound
+    /// never exceeding the true score — [`DEFAULT_PRUNE_SLACK`] (= 1.0)
+    /// never loses the eventual winner. `None` keeps the search
+    /// exhaustive.
     pub prune_slack: Option<f64>,
     /// Score candidates with the analytic cost model during the BFS and
     /// return the scores (implied by `prune_slack`; the pipeline reuses
@@ -339,19 +364,24 @@ impl Default for SearchOptions {
 #[derive(Clone, Debug, Default)]
 pub struct SearchStats {
     /// Frontier parents expanded (BFS nodes whose swaps were tried).
+    /// Includes bound-cut nodes: they leave the result set but stay
+    /// expansion sources, so the swap graph — and with it the winner —
+    /// stays reachable under pruning.
     pub expanded: usize,
     /// Successful exchange applications (pre-dedup).
     pub generated: usize,
     /// Variants kept in the result set.
     pub kept: usize,
-    /// Candidates cut by the lower-bound branch-and-bound (before being
+    /// Candidates cut by the lower-bound branch-and-bound (counted
+    /// per generated instance, pre-dedup; each was rejected before being
     /// lowered, scored, or extracted).
     pub pruned: usize,
     /// Candidates dropped because they no longer typechecked.
     pub type_rejects: usize,
     /// Times the shared best-known score tightened during the merge step.
     pub bound_updates: usize,
-    /// Worker shards used.
+    /// Worker shards used (the effective count after clamping to
+    /// [`MAX_SEARCH_SHARDS`]).
     pub shards: usize,
     /// Output-boundary `Box<Expr>` extractions attributed to the shard
     /// that *generated* each kept candidate. The layout is stable and
@@ -454,15 +484,46 @@ fn score_expr_id(arena: &SharedArena, id: ExprId, env: &Env) -> f64 {
 /// One surviving child candidate, still unextracted: the id-native path
 /// carries only the interned id (in the search's shared arena) and the
 /// merge step rebuilds a `Box<Expr>` *only* for children that survive
-/// dedup — so duplicates reached along several swap paths never cost a
-/// tree. The seed `Box<Expr>` engine already owns the tree and passes it
-/// through.
+/// dedup *and* the bound cut — so duplicates reached along several swap
+/// paths, and cut candidates, never cost a tree. The seed `Box<Expr>`
+/// engine already owns the tree and passes it through.
 struct Child {
     labels: Vec<String>,
     /// `Some` on the seed engine path; `None` means "extract `nid` from
     /// the shared arena iff kept".
     expr: Option<Expr>,
     nid: ExprId,
+    /// Cut by the branch-and-bound: excluded from the result set (never
+    /// lowered, scored, or extracted) but still enqueued as an expansion
+    /// source.
+    cut: bool,
+}
+
+/// One BFS frontier entry. Distinct from the kept [`Variant`] set: cut
+/// candidates live only here (as plain ids — no tree is ever built for
+/// them), while kept candidates appear in both — by *index*, so neither
+/// their labels nor (on the seed path) their trees are ever cloned.
+struct FrontierNode {
+    /// Cut nodes own their labels; kept nodes leave this empty (no
+    /// allocation) and read them — like the seed path reads trees — from
+    /// the result set via [`ExprSrc::Kept`].
+    labels: Vec<String>,
+    id: ExprId,
+    src: ExprSrc,
+}
+
+/// Where a [`FrontierNode`]'s labels and (seed-path) tree live.
+enum ExprSrc {
+    /// Cut candidate on the id-native path: labels inline, no tree.
+    None,
+    /// Kept candidate (either engine): labels — and, for the seed
+    /// engine, the tree — live at this index of the result set, moved
+    /// there once and never cloned.
+    Kept(usize),
+    /// Cut candidate on the seed path: the tree is not in the result
+    /// set, so the frontier owns it (it was already materialized by the
+    /// swap — no clone).
+    Owned(Expr),
 }
 
 /// What one shard returns for one expanded parent: surviving children in
@@ -512,21 +573,38 @@ impl Shard {
         }
     }
 
-    /// Expand one parent variant: try every adjacent swap, normalize,
-    /// typecheck, score, prune. Children come back in swap-depth order so
+    /// Expand one frontier node: try every adjacent swap, normalize,
+    /// typecheck, bound, score. Children come back in swap-depth order so
     /// the merge step can reproduce the serial BFS order exactly.
     ///
-    /// On the id-native path the parent arrives as `pid` — the id it was
-    /// interned under when it was *kept* — so no per-level re-intern of
-    /// the parent tree happens anywhere (the cost ISSUE 4 removes). The
-    /// seed `Box<Expr>` path still swaps on the owned tree; it interns
-    /// each child once so the typecheck/score caches work identically.
+    /// On the id-native path the parent arrives as `node.id` — the id it
+    /// was interned under when first discovered — so no per-level
+    /// re-intern of the parent tree happens anywhere (the cost ISSUE 4
+    /// removes). The seed `Box<Expr>` path still swaps on the owned tree;
+    /// it interns each child once so the typecheck/score caches work
+    /// identically.
+    ///
+    /// With pruning on, each candidate's lower bound is consulted once,
+    /// on the normalized id, before any scoring work. A bound exceeding
+    /// `slack × best` cuts the candidate — it is returned with
+    /// [`Child::cut`] set and is never lowered, scored, or extracted.
+    /// (The bound's partial descent also makes it meaningful on the raw,
+    /// unnormalized exchange output — `tests/lower_id_props.rs` pins
+    /// `bound(raw) ≤ score(normalize(raw))` — but consulting it there
+    /// buys nothing on this path: the raw read never exceeds the refined
+    /// one, cannot be memoized across swap paths, and normalization runs
+    /// regardless because cut candidates re-enter the frontier as
+    /// normalized ids.) The shared bound only moves at level boundaries,
+    /// so the read is the same in every shard — pruning is deterministic
+    /// under any shard count — and since the bound never exceeds the
+    /// candidate's true score, the default slack (1.0) can never cut the
+    /// eventual winner.
     #[allow(clippy::too_many_arguments)]
     fn expand(
         &mut self,
         arena: &SharedArena,
-        parent: &Variant,
-        pid: ExprId,
+        node: &FrontierNode,
+        out: &[Variant],
         n: usize,
         ctx: &Ctx,
         id_native: bool,
@@ -535,6 +613,19 @@ impl Shard {
         bound: &AtomicScore,
     ) -> Expansion {
         let mut exp = Expansion::default();
+        let threshold = slack.map(|sl| sl * bound.get());
+        // Kept parents read their labels (and, on the seed engine, their
+        // tree) from the kept set by index; cut parents carry them
+        // inline. The id-native path swaps on `node.id` and never reads
+        // `pexpr`.
+        let (labels, pexpr): (&[String], Option<&Expr>) = match &node.src {
+            ExprSrc::None => (&node.labels, None),
+            ExprSrc::Kept(i) => {
+                let v = &out[*i];
+                (&v.labels, Some(&v.expr))
+            }
+            ExprSrc::Owned(e) => (&node.labels, Some(e)),
+        };
         for d in 0..n.saturating_sub(1) {
             // The id-native engine is the production path; the seed
             // `Box<Expr>` path stays reachable via `with_memo_disabled`
@@ -542,19 +633,22 @@ impl Shard {
             // search's calling thread (`memo_enabled` is thread-local and
             // would read `true` inside freshly spawned shard threads).
             let (nid, extracted) = if id_native {
-                let Some(swapped) = try_swap_at_id(arena, pid, d, ctx) else {
+                let Some(swapped) = try_swap_at_id(arena, node.id, d, ctx) else {
                     continue;
                 };
                 (self.norm.rewrite(arena, swapped), None)
             } else {
-                let Some(new_expr) = try_swap_at(&parent.expr, d, ctx) else {
+                let Some(new_expr) = pexpr.and_then(|pe| try_swap_at(pe, d, ctx)) else {
                     continue;
                 };
                 (arena.intern(&new_expr), Some(new_expr))
             };
             exp.generated += 1;
             // Defensive: drop rewrites that no longer typecheck — paying
-            // for inference once per distinct interned tree.
+            // for inference once per distinct interned tree. This gate
+            // also covers cut candidates: they re-enter the frontier, and
+            // an ill-typed expansion source could reach rearrangements
+            // the exhaustive search never would.
             let ok = match self.checked.get(&nid) {
                 Some(&ok) => ok,
                 None => {
@@ -567,31 +661,32 @@ impl Shard {
                 exp.type_rejects += 1;
                 continue;
             }
-            // Branch-and-bound: compare the candidate's partial-spine
-            // lower bound against the shared best-known score *before*
-            // lowering, scoring, or extracting it. The bound only moves
-            // at level boundaries, so this read is the same in every
-            // shard — pruning is deterministic under any shard count —
-            // and since the bound never exceeds the true score, the
-            // default slack (1.0) can never cut the eventual winner.
-            if let Some(sl) = slack {
-                let lb = match self.bounded.get(&nid) {
-                    Some(&lb) => lb,
-                    None => {
-                        let lb = spine_lower_bound_id(arena, nid, ctx);
-                        self.bounded.insert(nid, lb);
-                        lb
-                    }
-                };
-                if lb > sl * bound.get() {
-                    exp.pruned += 1;
-                    continue;
+            // The bound gate, before any scoring work (cached — a
+            // candidate reached along several swap paths pays the spine
+            // walk once).
+            let cut = match threshold {
+                Some(t) => {
+                    let lb = match self.bounded.get(&nid) {
+                        Some(&lb) => lb,
+                        None => {
+                            let lb = spine_lower_bound_id(arena, nid, ctx);
+                            self.bounded.insert(nid, lb);
+                            lb
+                        }
+                    };
+                    lb > t
                 }
+                None => false,
+            };
+            if cut {
+                exp.pruned += 1;
             }
             // Score in the arena — a variant reached along several swap
             // paths is lowered and estimated once, not once per path, and
-            // never as a `Box<Expr>` tree.
-            let score = if scoring {
+            // never as a `Box<Expr>` tree. Cut candidates are never
+            // scored: skipping this lower + estimate (and the output
+            // extraction) is what the cut buys.
+            let score = if scoring && !cut {
                 Some(match self.scored.get(&nid) {
                     Some(&s) => s,
                     None => {
@@ -604,14 +699,16 @@ impl Shard {
                 None
             };
             // No extraction here: the merge step rebuilds a tree only for
-            // children that survive dedup (the output boundary).
-            let mut labels = parent.labels.clone();
+            // children that survive dedup and the cut (the output
+            // boundary).
+            let mut labels = labels.to_vec();
             labels.swap(d, d + 1);
             exp.children.push((
                 Child {
                     labels,
                     expr: extracted,
                     nid,
+                    cut,
                 },
                 score,
             ));
@@ -630,8 +727,8 @@ impl Shard {
 fn parallel_expand(
     shards: &mut [Shard],
     arena: &SharedArena,
-    frontier: &[Variant],
-    frontier_ids: &[ExprId],
+    frontier: &[FrontierNode],
+    out: &[Variant],
     n: usize,
     ctx: &Ctx,
     scoring: bool,
@@ -644,12 +741,10 @@ fn parallel_expand(
     std::thread::scope(|s| {
         let mut handles = Vec::new();
         for (k, shard) in shards.iter_mut().enumerate() {
-            let parents: Vec<(usize, &Variant, ExprId)> = frontier
+            let parents: Vec<(usize, &FrontierNode)> = frontier
                 .iter()
-                .zip(frontier_ids)
                 .enumerate()
                 .filter(|(i, _)| i % nshards == k)
-                .map(|(i, (v, &pid))| (i, v, pid))
                 .collect();
             if parents.is_empty() {
                 continue;
@@ -657,9 +752,9 @@ fn parallel_expand(
             handles.push(s.spawn(move || {
                 parents
                     .into_iter()
-                    .map(|(i, v, pid)| {
+                    .map(|(i, nd)| {
                         let mut exp =
-                            shard.expand(arena, v, pid, n, ctx, true, scoring, slack, bound);
+                            shard.expand(arena, nd, out, n, ctx, true, scoring, slack, bound);
                         exp.shard = k;
                         exp.seq = i;
                         exp
@@ -708,16 +803,21 @@ pub fn enumerate_search(
     // cannot consult it themselves. The seed engine also stays serial —
     // it exists to reproduce seed behavior exactly.
     let id_native = memo_enabled();
+    // Both the auto path and explicit requests are clamped to
+    // MAX_SEARCH_SHARDS: an explicit `shards: t` used to spawn `t`
+    // threads unbounded, silently oversubscribing the machine when
+    // several coordinator workers searched at once. `SearchStats::shards`
+    // reports this effective count.
     let threads = if !id_native {
         1
     } else {
         match opts.shards {
             0 => std::thread::available_parallelism()
                 .map(|p| p.get())
-                .unwrap_or(1)
-                .min(MAX_SEARCH_SHARDS),
+                .unwrap_or(1),
             t => t,
         }
+        .min(MAX_SEARCH_SHARDS)
         .max(1)
     };
     let mut shards: Vec<Shard> = (0..threads).map(|_| Shard::new()).collect();
@@ -742,10 +842,18 @@ pub fn enumerate_search(
     let mut seen: HashSet<Vec<u8>> = HashSet::new();
     seen.insert(label_key(&start.labels, &mut tokens));
     let mut out: Vec<Variant> = vec![start.clone()];
-    // The interned id of each kept variant, parallel to `out`: the next
-    // level's parents are read from here, so a kept candidate is interned
-    // exactly once in its whole life.
-    let mut out_ids: Vec<ExprId> = vec![start_id];
+    // The BFS frontier, separate from the kept set since the cut started
+    // firing: every deduplicated, typechecked candidate — kept or cut —
+    // becomes an expansion source (cut nodes cross levels as plain ids
+    // and never grow a tree), so pruning can never disconnect the swap
+    // graph from the eventual winner. A discovered candidate is interned
+    // exactly once in its whole life; the next level reads it back from
+    // here.
+    let mut frontier: Vec<FrontierNode> = vec![FrontierNode {
+        labels: Vec::new(),
+        id: start_id,
+        src: ExprSrc::Kept(0),
+    }];
     let mut scores: Vec<f64> = Vec::new();
     if let Some(s) = start_score {
         scores.push(s);
@@ -759,22 +867,22 @@ pub fn enumerate_search(
     // coordinator's Metrics merge never depends on which shards happened
     // to generate kept candidates.
     let mut extracted_per_shard = vec![0u64; threads];
-    // The current BFS level is a range of `out` (each level's kept
-    // variants are exactly the next level's parents), so no tree is ever
-    // cloned into a separate frontier vector.
     let mut level = 0..1usize;
 
-    while !level.is_empty() && out.len() < opts.limit {
+    // The limit caps *discovered* candidates (`frontier` — in exhaustive
+    // mode identical to the kept set), so pruned searches cannot walk
+    // arbitrarily far past it through cut expansion sources.
+    while !level.is_empty() && frontier.len() < opts.limit {
         stats.expanded += level.len();
         let expansions: Vec<Expansion> = {
-            let frontier = &out[level.clone()];
-            let frontier_ids = &out_ids[level.clone()];
-            if threads > 1 && frontier.len() > 1 {
+            let nodes = &frontier[level.clone()];
+            let kept: &[Variant] = &out;
+            if threads > 1 && nodes.len() > 1 {
                 parallel_expand(
                     &mut shards,
                     &arena,
-                    frontier,
-                    frontier_ids,
+                    nodes,
+                    kept,
                     n,
                     ctx,
                     scoring,
@@ -782,14 +890,13 @@ pub fn enumerate_search(
                     &bound,
                 )?
             } else {
-                frontier
+                nodes
                     .iter()
-                    .zip(frontier_ids)
-                    .map(|(v, &pid)| {
+                    .map(|nd| {
                         shards[0].expand(
                             &arena,
-                            v,
-                            pid,
+                            nd,
+                            kept,
                             n,
                             ctx,
                             id_native,
@@ -804,7 +911,7 @@ pub fn enumerate_search(
         // Deterministic merge: parents in frontier (seq-tag) order,
         // children in swap-depth order — exactly the serial queue BFS
         // sequence.
-        let level_start = out.len();
+        let level_start = frontier.len();
         for exp in expansions {
             // Count the whole level's work even past the limit — the
             // shards already did it; only *keeping* stops (mirroring the
@@ -812,7 +919,7 @@ pub fn enumerate_search(
             stats.generated += exp.generated;
             stats.pruned += exp.pruned;
             stats.type_rejects += exp.type_rejects;
-            if out.len() >= opts.limit {
+            if frontier.len() >= opts.limit {
                 continue;
             }
             for (child, s) in exp.children {
@@ -823,10 +930,29 @@ pub fn enumerate_search(
                 }
                 let key = label_key(&child.labels, &mut tokens);
                 if seen.insert(key) {
+                    if child.cut {
+                        // Cut candidates stay expansion sources but leave
+                        // the result set — and never cost a tree: the
+                        // seed path keeps the tree the swap already
+                        // built, the id-native path carries just the id.
+                        let src = match child.expr {
+                            Some(e) => ExprSrc::Owned(e),
+                            None => ExprSrc::None,
+                        };
+                        frontier.push(FrontierNode {
+                            labels: child.labels,
+                            id: child.nid,
+                            src,
+                        });
+                        continue;
+                    }
                     // Output boundary: the one extract per *kept*
-                    // candidate — duplicates never rebuild a tree, and
-                    // level boundaries never extract (the id in
-                    // `out_ids` is all the next level needs).
+                    // candidate — duplicates and cut candidates never
+                    // rebuild a tree, and level boundaries never extract.
+                    // Kept labels and trees are moved into `out` and the
+                    // frontier refers back by index, so nothing is cloned
+                    // and the id-native path pays exactly the one
+                    // extraction.
                     let expr = match child.expr {
                         Some(e) => e,
                         None => {
@@ -834,18 +960,22 @@ pub fn enumerate_search(
                             arena.extract(child.nid)
                         }
                     };
+                    frontier.push(FrontierNode {
+                        labels: Vec::new(),
+                        id: child.nid,
+                        src: ExprSrc::Kept(out.len()),
+                    });
                     out.push(Variant {
                         expr,
                         labels: child.labels,
                     });
-                    out_ids.push(child.nid);
                     if let Some(s) = s {
                         scores.push(s);
                     }
                 }
             }
         }
-        level = level_start..out.len();
+        level = level_start..frontier.len();
     }
     stats.kept = out.len();
     debug_assert_eq!(

@@ -31,13 +31,25 @@ fn service_optimizes_and_executes_under_concurrency() {
             prune: rng.chance(0.5),
         };
         let expected = if spec.subdivide_rnz.is_some() { 12 } else { 6 };
-        opt_handles.push((n, expected, c.submit(Request::Optimize(spec)).unwrap()));
+        let pruned = spec.prune;
+        opt_handles.push((n, expected, pruned, c.submit(Request::Optimize(spec)).unwrap()));
     }
-    for (n, expected, h) in opt_handles {
+    for (n, expected, pruned, h) in opt_handles {
         let Response::Optimized(r) = h.wait().unwrap() else {
             panic!()
         };
-        assert_eq!(r.variants_explored, expected, "n={n}");
+        if pruned {
+            // Branch-and-bound cuts dominated rearrangements out of the
+            // report; the winner survives (pinned by search_props), so
+            // the report is a non-empty subset.
+            assert!(
+                r.variants_explored >= 1 && r.variants_explored <= expected,
+                "n={n}: pruned report out of range ({} of {expected})",
+                r.variants_explored
+            );
+        } else {
+            assert_eq!(r.variants_explored, expected, "n={n}");
+        }
         assert_eq!(r.input_elems, 2 * n * n);
     }
     assert_eq!(c.metrics.in_flight(), 0);

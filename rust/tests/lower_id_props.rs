@@ -130,9 +130,10 @@ fn estimate_id_matches_boxed_estimate_over_variant_sets() {
     }
 }
 
-/// Property (ISSUE 3 satellite): the partial-spine lower bound never
-/// exceeds the true cost — the soundness fact that makes the search's
-/// branch-and-bound cut at slack 1.0 unable to drop the winner.
+/// Property (ISSUE 3 satellite, tightened in ISSUE 5): the partial-spine
+/// lower bound never exceeds the true cost — the soundness fact that
+/// makes the search's branch-and-bound cut at slack 1.0 unable to drop
+/// the winner.
 #[test]
 fn prop_spine_lower_bound_never_exceeds_true_cost() {
     let ctx = ctx();
@@ -157,6 +158,115 @@ fn prop_spine_lower_bound_never_exceeds_true_cost() {
                 "{name}/{}: bound degenerated to zero",
                 v.display_key()
             );
+        }
+    }
+}
+
+/// Property (ISSUE 5): the bound is sound *during candidate generation*,
+/// on raw exchange output — the cross-expression invariant
+/// `bound(raw) ≤ score(normalize(raw))`, which any gate consulting the
+/// bound against thresholds derived from normalized candidates' true
+/// scores would rest on. It holds because normalization never removes
+/// (or shrinks the extent of) a spine level the raw descent charged —
+/// pin it directly over every raw swap output of every enumerated
+/// variant, so a future normalization rule that shrinks the spine fails
+/// here, loudly, instead of silently making a generation-time cut
+/// unsound.
+#[test]
+fn prop_raw_swap_output_bound_never_exceeds_normalized_score() {
+    use hofdla::enumerate::try_swap_at_id;
+    use hofdla::rewrite::{normalize_id_rules, IdRewriter};
+    let ctx = ctx();
+    for (name, start) in families() {
+        let variants = enumerate_all(&start, &ctx, 4096).unwrap();
+        let arena = SharedArena::new();
+        let mut norm = IdRewriter::new(&normalize_id_rules());
+        for v in &variants {
+            let id = arena.intern(&v.expr);
+            for d in 0..v.labels.len().saturating_sub(1) {
+                let Some(raw) = try_swap_at_id(&arena, id, d, &ctx) else {
+                    continue;
+                };
+                let raw_lb = spine_lower_bound_id(&arena, raw, &ctx);
+                let nid = norm.rewrite(&arena, raw);
+                let Ok(est) = estimate_id(&arena, nid, &ctx.env) else {
+                    // Unlowerable candidates score +∞; any bound is sound.
+                    continue;
+                };
+                assert!(
+                    raw_lb <= est.score(),
+                    "{name}/{} swap@{d}: raw-output bound {raw_lb} exceeds the \
+                     normalized candidate's score {}",
+                    v.display_key(),
+                    est.score()
+                );
+            }
+        }
+    }
+}
+
+/// Property (ISSUE 5): soundness holds over *randomized* subdivided /
+/// exchanged families, not just the docs' canonical shapes — every
+/// enumerated rearrangement of every (shape, block) draw keeps
+/// `spine_lower_bound_id ≤ estimate_id(..).score()`. Shapes and blocks
+/// are drawn from the deterministic repo RNG with the divisibility each
+/// family needs, spanning unit, small and ≥ 8 (line-sized) strides so all
+/// `line_cost` regimes appear.
+#[test]
+fn prop_spine_lower_bound_sound_on_randomized_families() {
+    let mut rng = hofdla::util::Rng::new(23);
+    let mut draw = |choices: &[usize]| -> usize { choices[rng.below(choices.len())] };
+    for round in 0..6 {
+        let b = draw(&[2, 4]);
+        let n = draw(&[4, 8, 12]);
+        let j = b * 2 * draw(&[2, 4, 6]); // b1*b2 | j for the twice-subdivided family
+        let k = draw(&[4, 8, 16]);
+        let ctx = Ctx::new(
+            Env::new()
+                .with("A", Layout::row_major(&[n, j]))
+                .with("B", Layout::row_major(&[j, k]))
+                .with("v", Layout::row_major(&[j])),
+        );
+        let fams: Vec<(&str, Variant)> = vec![
+            ("naive", starts::matmul_naive_variant()),
+            ("rnz-subdiv", starts::matmul_rnz_subdivided_variant(b)),
+            ("rnz-twice", starts::matmul_rnz_twice_subdivided_variant(b, 2)),
+            ("matvec-subdiv", starts::matvec_vector_subdivided_variant(b)),
+        ];
+        for (name, start) in fams {
+            let variants = enumerate_all(&start, &ctx, 4096).unwrap();
+            assert!(!variants.is_empty(), "{name}");
+            let arena = SharedArena::new();
+            let mut bounds = std::collections::BTreeSet::new();
+            for v in &variants {
+                let id = arena.intern(&v.expr);
+                let lb = spine_lower_bound_id(&arena, id, &ctx);
+                bounds.insert(lb.to_bits());
+                let Ok(est) = estimate_id(&arena, id, &ctx.env) else {
+                    continue;
+                };
+                assert!(
+                    lb <= est.score(),
+                    "round {round} {name}/{} (n={n} j={j} k={k} b={b}): \
+                     bound {lb} exceeds score {}",
+                    v.display_key(),
+                    est.score()
+                );
+                assert!(lb > 0.0, "round {round} {name}/{}", v.display_key());
+            }
+            // Rearrangement sensitivity: the matmul families must not
+            // collapse to a single bound value (that was the inert-cut
+            // bug this bound replaced). k ≥ 4 guarantees it structurally:
+            // a variant reading B innermost at its column stride bounds
+            // above one reading B at unit stride. (The 3-variant matvec
+            // family can legitimately tie, so it is exempt.)
+            if variants.len() >= 4 {
+                assert!(
+                    bounds.len() > 1,
+                    "round {round} {name} (n={n} j={j} k={k} b={b}): \
+                     bound is permutation-invariant again"
+                );
+            }
         }
     }
 }

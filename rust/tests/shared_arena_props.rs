@@ -123,14 +123,16 @@ fn stress_distinct_trees_stay_distinct_under_contention() {
 /// Shard counts to stress. The CI `search-shards` matrix sets
 /// `SEARCH_SHARDS` so each arm exercises exactly its width (keeping the
 /// arms distinct); a local run without the variable covers the full
-/// {1, 2, 8} set in one go.
+/// {1, 2, 8} set in one go. Clamped like the engine clamps explicit
+/// requests (`SearchStats` reports the effective count, which is what
+/// the padded-layout assertion below checks against).
 fn stress_shard_counts() -> Vec<usize> {
     match std::env::var("SEARCH_SHARDS")
         .ok()
         .and_then(|s| s.parse().ok())
         .filter(|&n| n >= 1)
     {
-        Some(n) => vec![n],
+        Some(n) => vec![n.min(hofdla::enumerate::MAX_SEARCH_SHARDS)],
         None => vec![1, 2, 8],
     }
 }
