@@ -42,6 +42,7 @@ fn main() -> hofdla::Result<()> {
         subdivide_rnz: Some(b),
         top_k: 12,
         prune: false,
+        verify: true,
     };
     let t = std::time::Instant::now();
     let report = optimize(&spec)?;

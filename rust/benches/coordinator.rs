@@ -28,6 +28,9 @@ fn subdivided_matmul_spec(prune: bool) -> OptimizeSpec {
         subdivide_rnz: Some(4),
         top_k: 12,
         prune,
+        // The cold row measures the production configuration, verifier
+        // included, so its overhead is tracked by the perf lane.
+        verify: true,
     }
 }
 

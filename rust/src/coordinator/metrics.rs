@@ -40,6 +40,14 @@ pub struct Metrics {
     /// `Box<Expr>` trees extracted from search arenas (output-boundary
     /// extraction of kept candidates; the score path contributes zero).
     pub search_extractions: AtomicU64,
+    /// Winner programs that passed static footprint verification
+    /// ([`crate::verify::verify`]) across fresh optimize runs with the
+    /// spec's `verify` knob on.
+    pub verify_passed: AtomicU64,
+    /// Optimize jobs failed because a program was *rejected* by the
+    /// verifier ([`crate::Error::Verify`]) — should stay 0; any tick is a
+    /// lowering or rewrite bug caught before execution.
+    pub verify_rejects: AtomicU64,
 }
 
 impl Metrics {
@@ -63,7 +71,7 @@ impl Metrics {
     /// Human-readable one-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "submitted={} completed={} failed={} exec_batches={} max_batch={} cache_hits={} opt_cache_hits={} opt_cache_flushes={} search_expanded={} search_generated={} search_pruned={} search_type_rejects={} search_bound_updates={} search_extractions={}",
+            "submitted={} completed={} failed={} exec_batches={} max_batch={} cache_hits={} opt_cache_hits={} opt_cache_flushes={} search_expanded={} search_generated={} search_pruned={} search_type_rejects={} search_bound_updates={} search_extractions={} verify_passed={} verify_rejects={}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -78,6 +86,8 @@ impl Metrics {
             self.search_type_rejects.load(Ordering::Relaxed),
             self.search_bound_updates.load(Ordering::Relaxed),
             self.search_extractions.load(Ordering::Relaxed),
+            self.verify_passed.load(Ordering::Relaxed),
+            self.verify_rejects.load(Ordering::Relaxed),
         )
     }
 
@@ -127,5 +137,14 @@ mod tests {
         assert_eq!(m.search_bound_updates.load(Ordering::Relaxed), 8);
         assert_eq!(m.search_extractions.load(Ordering::Relaxed), 10);
         assert!(m.summary().contains("search_pruned=4"));
+    }
+
+    #[test]
+    fn verify_counters_surface_in_summary() {
+        let m = Metrics::default();
+        m.verify_passed.store(7, Ordering::Relaxed);
+        m.verify_rejects.store(1, Ordering::Relaxed);
+        assert!(m.summary().contains("verify_passed=7"));
+        assert!(m.summary().contains("verify_rejects=1"));
     }
 }

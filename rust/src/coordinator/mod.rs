@@ -203,10 +203,20 @@ impl Coordinator {
                                             // no new search work and are
                                             // not re-recorded).
                                             m.record_search(&res.stats);
+                                            m.verify_passed.fetch_add(
+                                                res.programs_verified as u64,
+                                                Ordering::Relaxed,
+                                            );
                                             cache
                                                 .lock()
                                                 .unwrap_or_else(PoisonError::into_inner)
                                                 .put(key, res.clone());
+                                        } else if let Err(Error::Verify(_)) = &r {
+                                            // A verifier rejection is a
+                                            // soundness catch, not a user
+                                            // error — count it separately
+                                            // so operators see it.
+                                            m.verify_rejects.fetch_add(1, Ordering::Relaxed);
                                         }
                                         r.map(Response::Optimized)
                                     }
@@ -405,6 +415,7 @@ mod tests {
             subdivide_rnz: None,
             top_k: 6,
             prune: false,
+            verify: true,
         }
     }
 
@@ -421,6 +432,11 @@ mod tests {
         assert_eq!(r.variants_explored, 6);
         assert_eq!(r.ranking.first().unwrap().0, r.best);
         assert_eq!(r.best, "map1 rnz map2"); // Table 1 winner
+        // The spec's verify knob is on: the winner was certified, and the
+        // service counter saw it.
+        assert_eq!(r.programs_verified, 1);
+        assert_eq!(c.metrics.verify_passed.load(Ordering::Relaxed), 1);
+        assert_eq!(c.metrics.verify_rejects.load(Ordering::Relaxed), 0);
     }
 
     #[test]
@@ -535,6 +551,7 @@ mod tests {
             subdivide_rnz: None,
             top_k: 4,
             prune: false,
+            verify: false,
         };
         for _ in 0..3 {
             let r = c.call(Request::Optimize(poison.clone()));
@@ -563,6 +580,7 @@ mod tests {
             subdivide_rnz: None,
             top_k: 3,
             prune: false,
+            verify: false,
         };
         assert!(c.call(Request::Optimize(bad)).is_err());
         assert_eq!(c.metrics.failed.load(Ordering::Relaxed), 1);

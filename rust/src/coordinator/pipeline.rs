@@ -54,6 +54,14 @@ pub struct OptimizeSpec {
     /// and CacheSim jobs re-rank the kept variants with the simulator, so
     /// maintaining it there would be pure overhead.
     pub prune: bool,
+    /// Statically verify the winning candidate's lowered program
+    /// ([`crate::verify::verify`]) before reporting it: bounds,
+    /// initialization and map-write-disjointness, certified per job. A
+    /// rejection fails the job with [`Error::Verify`] (counted in
+    /// [`super::Metrics::verify_rejects`]) rather than handing an unsound
+    /// program to callers. Debug/test builds verify every lowered
+    /// candidate regardless; this knob is the production gate.
+    pub verify: bool,
 }
 
 /// The pipeline's report.
@@ -72,6 +80,10 @@ pub struct OptimizeResult {
     /// tightenings, per-shard extraction counts). The coordinator folds
     /// these into its service [`super::Metrics`] per fresh pipeline run.
     pub stats: SearchStats,
+    /// Programs that passed static footprint verification during this run
+    /// (1 when the spec's `verify` knob is on — the winner — else 0).
+    /// Folded into [`super::Metrics::verify_passed`].
+    pub programs_verified: usize,
 }
 
 /// Run the pipeline synchronously.
@@ -166,6 +178,17 @@ pub fn optimize(spec: &OptimizeSpec) -> Result<OptimizeResult> {
     ranking.truncate(spec.top_k.max(1));
     let (_, best_e) =
         best_expr.ok_or_else(|| Error::Rewrite("no variants produced".into()))?;
+    // Production verification gate: prove the winner's lowered program
+    // in-bounds, initialized and disjoint before reporting it. (Debug
+    // builds already verified every candidate inside `lower`; this makes
+    // the winner's certificate unconditional.)
+    let programs_verified = if spec.verify {
+        let prog = lower(best_e, &env)?;
+        crate::verify::verify(&prog)?;
+        1
+    } else {
+        0
+    };
     Ok(OptimizeResult {
         variants_explored,
         best: ranking[0].0.clone(),
@@ -173,6 +196,7 @@ pub fn optimize(spec: &OptimizeSpec) -> Result<OptimizeResult> {
         ranking,
         input_elems,
         stats,
+        programs_verified,
     })
 }
 
@@ -302,6 +326,9 @@ mod tests {
             subdivide_rnz: None,
             top_k: 10,
             prune: false,
+            // Exercise the production verification gate on every pipeline
+            // test: the winner must carry a footprint certificate.
+            verify: true,
         }
     }
 
@@ -387,10 +414,20 @@ mod tests {
             subdivide_rnz: None,
             top_k: 3,
             prune: false,
+            verify: false,
         };
         let r = optimize(&spec).unwrap();
         assert_eq!(r.variants_explored, 1); // single rnz after fusion
         assert!(r.best_expr.starts_with("(rnz"));
+        assert_eq!(r.programs_verified, 0, "verify knob off");
+    }
+
+    #[test]
+    fn verify_knob_certifies_the_winner() {
+        let mut spec = matmul_spec(16, RankBy::CostModel);
+        spec.subdivide_rnz = Some(4);
+        let r = optimize(&spec).unwrap();
+        assert_eq!(r.programs_verified, 1);
     }
 
     #[test]

@@ -574,4 +574,36 @@ mod tests {
             "no variant bounds above the best score ({max_bound} vs {best})"
         );
     }
+
+    #[test]
+    fn verifier_footprint_witnesses_flops_exactly() {
+        // The static verifier's abstract interpretation counts leaf
+        // evaluations along the same walk `estimate` takes, but from the
+        // lowered program's extents alone — an independent derivation.
+        // Agreement pins both: a cost-model walk that miscounts loop
+        // trip products and a verifier that mis-multiplies `mult`
+        // through the nest would each break this, for every
+        // rearrangement in the family.
+        let env = Env::new()
+            .with("A", Layout::row_major(&[16, 16]))
+            .with("B", Layout::row_major(&[16, 16]));
+        let ctx = Ctx::new(env.clone());
+        for start in [
+            starts::matmul_naive_variant(),
+            starts::matmul_rnz_subdivided_variant(4),
+        ] {
+            for v in enumerate_all(&start, &ctx, 100).unwrap() {
+                let prog = lower(&v.expr, &env).unwrap();
+                let fp = crate::verify::verify(&prog)
+                    .unwrap_or_else(|e| panic!("{}: {e}", v.display_key()));
+                let est = estimate(&prog);
+                assert_eq!(
+                    fp.leaf_evals,
+                    est.flops,
+                    "{}: verifier leaf count vs cost-model flops",
+                    v.display_key()
+                );
+            }
+        }
+    }
 }

@@ -21,6 +21,13 @@ use crate::{Error, Result};
 
 /// Execute a lowered program. `inputs` must follow `prog.input_names`
 /// order; `out` must have exactly `prog.out_size` elements.
+///
+/// Before touching any buffer the program is statically verified
+/// ([`crate::verify::verify`]) and the certified footprint is checked
+/// against the buffers actually provided — so release builds fail closed
+/// with [`Error::Verify`] instead of trusting lowering (the unchecked fast
+/// paths below rely on this gate; their `debug_assert!`s are belt and
+/// braces, not the defense).
 pub fn execute(prog: &Program, inputs: &[&[f64]], out: &mut [f64]) -> Result<()> {
     if inputs.len() != prog.input_names.len() {
         return Err(Error::Eval(format!(
@@ -47,6 +54,23 @@ pub fn execute(prog: &Program, inputs: &[&[f64]], out: &mut [f64]) -> Result<()>
         )));
     }
     check_reduction_ops(&prog.root)?;
+    // Static verification: prove every reachable offset in bounds (and the
+    // structural invariants the fast paths assume) before running, then
+    // re-check the *proven* requirement against each provided buffer. The
+    // declared-length check above already implies the buffer check (verify
+    // bounds reads by `input_lens`), but the precondition the unsafe code
+    // needs is footprint ⊆ buffer, so that is what we assert.
+    let fp = crate::verify::verify(prog)?;
+    for (i, buf) in inputs.iter().enumerate() {
+        let need = fp.input_required(i);
+        if buf.len() < need {
+            return Err(Error::Verify(format!(
+                "input '{}' shorter than its verified footprint: {} < {need}",
+                prog.input_names[i],
+                buf.len()
+            )));
+        }
+    }
     let mut ctx = Ctx {
         bufs: inputs,
         off: vec![0usize; prog.n_tracks()],
@@ -272,8 +296,7 @@ fn red_leaf_loop(extent: usize, advances: &[Adv], k: &Kernel, op: Prim, ctx: &mu
     // Four independent accumulators break the FP-add latency chain —
     // justified by the DSL contract that reduction operators are
     // associative (the same property the paper's regrouping rules rely
-    // on). Bounds were validated against `input_lens` in `execute`, so the
-    // unchecked reads are in range.
+    // on).
     if k.is_mul2() && op == Prim::Add {
         let (t0, t1) = (k.tracks[0], k.tracks[1]);
         let s0 = stride_of(advances, t0);
@@ -286,6 +309,11 @@ fn red_leaf_loop(extent: usize, advances: &[Adv], k: &Kernel, op: Prim, ctx: &mu
         debug_assert!(p1 + extent.saturating_sub(1) * s1 < b1.len());
         let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
         let mut i = 0usize;
+        // SAFETY: the cursors take exactly the offsets `entry + i*stride`,
+        // i < extent, for each track — the interval the static verifier
+        // bounds below the track's `input_lens` entry, and `execute`
+        // re-checked the verified footprint against each provided buffer
+        // before dispatching. So every `get_unchecked` offset is < len.
         unsafe {
             while i + 4 <= extent {
                 a0 += b0.get_unchecked(p0) * b1.get_unchecked(p1);
@@ -349,22 +377,33 @@ fn map_leaf_loop(
         let mut p1 = ctx.off[t1];
         debug_assert!(p0 + extent.saturating_sub(1) * s0 < b0.len());
         debug_assert!(p1 + extent.saturating_sub(1) * s1 < b1.len());
-        // SAFETY: cursor ranges validated against input_lens in `execute`.
         match mode {
-            WriteMode::Set => unsafe {
-                for d in &mut dst[dst_off..dst_off + extent] {
-                    *d = b0.get_unchecked(p0) * b1.get_unchecked(p1);
-                    p0 += s0;
-                    p1 += s1;
+            WriteMode::Set => {
+                // SAFETY: the cursors take exactly the offsets
+                // `entry + i*stride`, i < extent — the interval the static
+                // verifier bounds below `input_lens`, and `execute`
+                // re-checked the verified footprint against each provided
+                // buffer before dispatching.
+                unsafe {
+                    for d in &mut dst[dst_off..dst_off + extent] {
+                        *d = b0.get_unchecked(p0) * b1.get_unchecked(p1);
+                        p0 += s0;
+                        p1 += s1;
+                    }
                 }
-            },
-            WriteMode::Acc(Prim::Add) => unsafe {
-                for d in &mut dst[dst_off..dst_off + extent] {
-                    *d += b0.get_unchecked(p0) * b1.get_unchecked(p1);
-                    p0 += s0;
-                    p1 += s1;
+            }
+            WriteMode::Acc(Prim::Add) => {
+                // SAFETY: same verified-footprint argument as the Set arm
+                // above; the accumulating write goes through the checked
+                // `dst` slice either way.
+                unsafe {
+                    for d in &mut dst[dst_off..dst_off + extent] {
+                        *d += b0.get_unchecked(p0) * b1.get_unchecked(p1);
+                        p0 += s0;
+                        p1 += s1;
+                    }
                 }
-            },
+            }
             WriteMode::Acc(op) => {
                 for d in &mut dst[dst_off..dst_off + extent] {
                     *d = op.apply(&[*d, b0[p0] * b1[p1]]);

@@ -43,7 +43,14 @@ pub fn lower(e: &Expr, env: &Env) -> Result<Program> {
         st: LowerState::new(env),
     };
     let (root, out_size) = lw.lower_node(e, None)?;
-    Ok(lw.st.into_program(root, out_size))
+    let prog = lw.st.into_program(root, out_size);
+    // Debug/test builds verify every lowered program at the source — any
+    // lowering bug surfaces as a structured rejection here rather than as
+    // a bounds panic (or worse) downstream. Release keeps lowering cheap;
+    // `execute` still verifies unconditionally before running.
+    #[cfg(debug_assertions)]
+    crate::verify::verify(&prog)?;
+    Ok(prog)
 }
 
 /// Lower an interned expression to an executable [`Program`] directly from
@@ -61,7 +68,13 @@ pub fn lower_id(arena: &SharedArena, id: ExprId, env: &Env) -> Result<Program> {
         st: LowerState::new(env),
     };
     let (root, out_size) = lw.lower_node(id, None)?;
-    Ok(lw.st.into_program(root, out_size))
+    let prog = lw.st.into_program(root, out_size);
+    // Same debug/test-build verification gate as `lower` — in particular
+    // every search candidate lowered on the id-native score path gets
+    // verified under `cargo test`.
+    #[cfg(debug_assertions)]
+    crate::verify::verify(&prog)?;
+    Ok(prog)
 }
 
 /// A resolved array view: which buffer, derived from which track, with what

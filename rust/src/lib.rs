@@ -45,8 +45,16 @@
 //!   AOT-compiled JAX/Pallas artifacts (the paper's Eigen role).
 //! - [`coordinator`] — a threaded optimization-service front end: job queue,
 //!   pipeline, executable cache, batching, metrics.
+//! - [`verify`] — static access-footprint verifier over the loop IR:
+//!   proves bounds, initialization and map-write-disjointness per program
+//!   by abstract interpretation of the affine advance chains, gating the
+//!   executor's unsafe fast paths.
 //! - [`bench_support`] — micro-benchmark harness, PRNG, table formatting
 //!   (criterion/proptest are unavailable offline; these are self-contained).
+
+// Every unsafe block must carry a `// SAFETY:` comment stating its
+// precondition; `verify` exists to machine-check those preconditions.
+#![warn(clippy::undocumented_unsafe_blocks)]
 
 pub mod baselines;
 pub mod bench_support;
@@ -63,6 +71,7 @@ pub mod rewrite;
 pub mod runtime;
 pub mod typecheck;
 pub mod util;
+pub mod verify;
 
 pub use dsl::{Expr, Prim};
 pub use layout::{Dim, Layout};
@@ -80,6 +89,9 @@ pub enum Error {
     Rewrite(String),
     Runtime(String),
     Coordinator(String),
+    /// A lowered program failed static access-footprint verification
+    /// ([`verify::verify`]); the message lists every violation found.
+    Verify(String),
 }
 
 impl std::fmt::Display for Error {
@@ -93,6 +105,7 @@ impl std::fmt::Display for Error {
             Error::Rewrite(m) => write!(f, "rewrite error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Verify(m) => write!(f, "verification error: {m}"),
         }
     }
 }

@@ -33,7 +33,7 @@ fn main() {
 }
 
 fn usage() -> String {
-    "usage:\n  hofdla optimize <file.dsl> --input NAME=DIMxDIM [--rank cost|cachesim] [--subdivide-rnz B] [--top K] [--prune]\n  hofdla enumerate --family naive|rnz|maps|rnz2|all [--n N] [--b B]\n  hofdla bench table1|table2|fig3|fig4|fig5|fig6|gpu|baselines|all [--n N] [--b B] [--sim]\n  hofdla run-artifact <name> [--n N]\n  hofdla serve --demo".to_string()
+    "usage:\n  hofdla optimize <file.dsl> --input NAME=DIMxDIM [--rank cost|cachesim] [--subdivide-rnz B] [--top K] [--prune] [--verify]\n  hofdla enumerate --family naive|rnz|maps|rnz2|all [--n N] [--b B]\n  hofdla bench table1|table2|fig3|fig4|fig5|fig6|gpu|baselines|all [--n N] [--b B] [--sim]\n  hofdla run-artifact <name> [--n N]\n  hofdla serve --demo".to_string()
 }
 
 fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
@@ -85,9 +85,13 @@ fn run(args: &[String]) -> hofdla::Result<()> {
                     .and_then(|v| v.parse().ok()),
                 top_k: flag_usize(args, "--top", 12),
                 prune: args.iter().any(|a| a == "--prune"),
+                verify: args.iter().any(|a| a == "--verify"),
             };
             let r = hofdla::coordinator::optimize(&spec)?;
             println!("explored {} rearrangements", r.variants_explored);
+            if r.programs_verified > 0 {
+                println!("winner statically verified (bounds, init, disjointness)");
+            }
             println!("{:<28} {:>14}", "HoF order", "score");
             for (k, s) in &r.ranking {
                 println!("{k:<28} {s:>14.1}");
@@ -203,6 +207,7 @@ fn run(args: &[String]) -> hofdla::Result<()> {
                 subdivide_rnz: Some(16),
                 top_k: 12,
                 prune: false,
+                verify: true,
             };
             let Response::Optimized(r) = c.call(Request::Optimize(spec))? else {
                 return Err(err("optimize job returned a non-optimize response".into()));

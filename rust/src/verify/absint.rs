@@ -1,0 +1,595 @@
+//! The abstract interpreter behind [`super::verify`]: walks the loop nest
+//! once, propagating per-track offset intervals through the affine `Adv`
+//! chains, and collects [`Violation`]s instead of touching memory.
+//!
+//! The analysis is *exact*, not conservative: every `Adv` advances its
+//! track by a non-negative `base + i * stride`, each track is entered by
+//! exactly one loop on any root-to-leaf path, and loop bodies are single
+//! nodes — so the interval `[entry.lo + base, entry.hi + base +
+//! (extent-1)*stride]` is precisely the set extremes of offsets the
+//! interpreter's cursor takes at read time, and the extremes are reached.
+//! Offset arithmetic saturates; a saturated bound fails the corresponding
+//! bounds check, so overflow rejects instead of wrapping.
+
+use super::footprint::{Footprint, Interval, SpaceUse};
+use crate::dsl::Prim;
+use crate::exec::{AccessKind, Adv, Kernel, KernelOp, Node, Program, WriteMode};
+
+/// The interpreter evaluates leaf kernels on a fixed 16-slot operand
+/// stack; the verifier proves every kernel stays within it.
+pub const MAX_KERNEL_STACK: usize = 16;
+
+/// One reason a program failed verification. `Display` names the offending
+/// space (input name, output, or temp index) and track where applicable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Violation {
+    /// A kernel read through `track` can reach `max_offset`, but the
+    /// backing space only has `len` elements.
+    ReadBounds {
+        space: String,
+        track: usize,
+        max_offset: usize,
+        len: usize,
+    },
+    /// A write can reach `max_offset` outside the destination space.
+    WriteBounds {
+        space: String,
+        max_offset: usize,
+        len: usize,
+    },
+    /// A `MapLoop` body writes more elements than the loop advances the
+    /// destination cursor by — distinct iterations would overlap.
+    MapOverlap {
+        at: String,
+        body_span: usize,
+        body_size: usize,
+    },
+    /// A `MapLoop` body writes fewer elements than `body_size` — the loop
+    /// would leave gaps of uninitialized output.
+    MapGap {
+        at: String,
+        body_span: usize,
+        body_size: usize,
+    },
+    /// A `RedLoop`'s declared `body_size` disagrees with the region its
+    /// body actually writes (the identity fill and the accumulation would
+    /// cover different elements).
+    RedSizeMismatch {
+        at: String,
+        body_span: usize,
+        body_size: usize,
+    },
+    /// A reduction temp region's size disagrees with the body span the
+    /// fill/fold traverse.
+    TempSizeMismatch {
+        temp: usize,
+        need: usize,
+        have: usize,
+    },
+    /// A reduction without a private temp runs under a different (or
+    /// non-commutative) enclosing accumulator: its partial results would
+    /// be combined into elements initialized for the *outer* operator,
+    /// i.e. combined before being properly set.
+    AccWithoutTemp { at: String, op: Prim, outer: Prim },
+    /// Structural defect (bad track/slot/temp index, zero extent,
+    /// malformed kernel bytecode, size-table mismatch, …).
+    Malformed(String),
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Violation::ReadBounds {
+                space,
+                track,
+                max_offset,
+                len,
+            } => write!(
+                f,
+                "read out of bounds: track {track} into {space} reaches offset {max_offset} (len {len})"
+            ),
+            Violation::WriteBounds {
+                space,
+                max_offset,
+                len,
+            } => write!(
+                f,
+                "write out of bounds: {space} written at offset {max_offset} (len {len})"
+            ),
+            Violation::MapOverlap {
+                at,
+                body_span,
+                body_size,
+            } => write!(
+                f,
+                "map iterations overlap at {at}: body writes {body_span} elements but advances by {body_size}"
+            ),
+            Violation::MapGap {
+                at,
+                body_span,
+                body_size,
+            } => write!(
+                f,
+                "map leaves uninitialized gaps at {at}: body writes {body_span} elements but advances by {body_size}"
+            ),
+            Violation::RedSizeMismatch {
+                at,
+                body_span,
+                body_size,
+            } => write!(
+                f,
+                "reduction body size mismatch at {at}: declared {body_size}, body writes {body_span}"
+            ),
+            Violation::TempSizeMismatch { temp, need, have } => write!(
+                f,
+                "temp {temp} sized {have} but the reduction fill/fold traverse {need} elements"
+            ),
+            Violation::AccWithoutTemp { at, op, outer } => write!(
+                f,
+                "reduction '{}' at {at} accumulates under enclosing '{}' without a temp — elements would be combined before being set for '{}'",
+                op.name(),
+                outer.name(),
+                op.name()
+            ),
+            Violation::Malformed(m) => write!(f, "malformed program: {m}"),
+        }
+    }
+}
+
+/// Destination region handed down the walk: which space, and the interval
+/// of base offsets the enclosing loops can place the cursor at.
+#[derive(Clone, Copy)]
+struct Dest {
+    space: usize,
+    iv: Interval,
+}
+
+struct Checker<'p> {
+    prog: &'p Program,
+    n_inputs: usize,
+    /// Offset interval of each track *at loop entry* (before the owning
+    /// loop steps it) — what a same-loop sibling `Adv` would base on.
+    entry: Vec<Option<Interval>>,
+    /// Offset interval at read time (entry widened by the owning loop's
+    /// `(extent-1) * stride` stepping).
+    read: Vec<Option<Interval>>,
+    spaces: Vec<SpaceUse>,
+    leaf_evals: u64,
+    violations: Vec<Violation>,
+}
+
+/// Run the full analysis. `Err` carries every violation found in one pass.
+pub(super) fn check(prog: &Program) -> Result<Footprint, Vec<Violation>> {
+    let n_inputs = prog.input_names.len();
+    // Signature defects make the walk itself unsafe to run (the walk
+    // indexes these tables); report them alone and bail.
+    let mut pre = Vec::new();
+    if prog.input_lens.len() != n_inputs {
+        pre.push(Violation::Malformed(format!(
+            "{} input_lens for {} inputs",
+            prog.input_lens.len(),
+            n_inputs
+        )));
+    }
+    for (t, &slot) in prog.track_slot.iter().enumerate() {
+        if slot >= n_inputs {
+            pre.push(Violation::Malformed(format!(
+                "track {t} backed by slot {slot}, but only {n_inputs} inputs exist"
+            )));
+        }
+    }
+    if !pre.is_empty() {
+        return Err(pre);
+    }
+    let n_tracks = prog.n_tracks();
+    let mut c = Checker {
+        prog,
+        n_inputs,
+        entry: vec![None; n_tracks],
+        read: vec![None; n_tracks],
+        spaces: vec![SpaceUse::default(); n_inputs + 1 + prog.temp_sizes.len()],
+        leaf_evals: 0,
+        violations: Vec::new(),
+    };
+    let root = Dest {
+        space: n_inputs,
+        iv: Interval::point(0),
+    };
+    let span = c.walk(&prog.root, WriteMode::Set, root, 1, 0);
+    if span != prog.out_size {
+        c.violations.push(Violation::Malformed(format!(
+            "root writes {span} elements but out_size is {}",
+            prog.out_size
+        )));
+    }
+    if c.violations.is_empty() {
+        Ok(Footprint {
+            spaces: c.spaces,
+            n_inputs,
+            leaf_evals: c.leaf_evals,
+        })
+    } else {
+        Err(c.violations)
+    }
+}
+
+/// Output size a node *declares* (what the interpreter's identity fill and
+/// cursor stepping use) — as opposed to the span its body actually writes,
+/// which the walk computes and compares.
+fn declared_size(n: &Node) -> usize {
+    match n {
+        Node::MapLoop {
+            extent, body_size, ..
+        } => extent.saturating_mul(*body_size),
+        Node::RedLoop { body_size, .. } => *body_size,
+        Node::Leaf(_) => 1,
+    }
+}
+
+impl<'p> Checker<'p> {
+    /// Human name of an access space for diagnostics.
+    fn space_name(&self, space: usize) -> String {
+        if space < self.n_inputs {
+            format!("input '{}' (slot {space})", self.prog.input_names[space])
+        } else if space == self.n_inputs {
+            "output".into()
+        } else {
+            format!("temp {}", space - self.n_inputs - 1)
+        }
+    }
+
+    fn space_len(&self, space: usize) -> usize {
+        if space < self.n_inputs {
+            self.prog.input_lens[space]
+        } else if space == self.n_inputs {
+            self.prog.out_size
+        } else {
+            self.prog.temp_sizes[space - self.n_inputs - 1]
+        }
+    }
+
+    /// Describe a loop position for diagnostics ("depth 2 map(extent 4)").
+    fn at(&self, depth: usize, kind: &str, extent: usize) -> String {
+        format!("depth {depth} {kind}(extent {extent})")
+    }
+
+    /// Enter a loop's advances: compute each destination track's entry and
+    /// read-time intervals. Mirrors `Ctx::enter` + per-iteration `step` in
+    /// the interpreter: entry = src-at-entry + base, read time adds up to
+    /// `(extent-1) * stride`.
+    fn enter(&mut self, advances: &[Adv], extent: usize) {
+        let step = extent.saturating_sub(1);
+        for (i, a) in advances.iter().enumerate() {
+            if a.dst >= self.entry.len() {
+                self.violations.push(Violation::Malformed(format!(
+                    "advance targets track {} but only {} tracks exist",
+                    a.dst,
+                    self.entry.len()
+                )));
+                continue;
+            }
+            if advances[..i].iter().any(|b| b.dst == a.dst) {
+                self.violations.push(Violation::Malformed(format!(
+                    "track {} advanced twice by one loop",
+                    a.dst
+                )));
+                continue;
+            }
+            let parent = match a.src {
+                None => Interval::point(0),
+                Some(s) if s >= self.entry.len() => {
+                    self.violations.push(Violation::Malformed(format!(
+                        "advance for track {} bases on unknown track {s}",
+                        a.dst
+                    )));
+                    Interval::point(0)
+                }
+                Some(s) => {
+                    if advances[..i].iter().any(|b| b.dst == s) {
+                        // Sibling entered by this same loop: at runtime the
+                        // base is its entry value, before any stepping.
+                        self.entry[s].unwrap_or(Interval::point(0))
+                    } else {
+                        // Enclosing-loop track, read at its current
+                        // (stepped) value; never-entered tracks sit at 0.
+                        self.read[s].unwrap_or(Interval::point(0))
+                    }
+                }
+            };
+            let entry = Interval {
+                lo: parent.lo.saturating_add(a.base),
+                hi: parent.hi.saturating_add(a.base),
+            };
+            self.entry[a.dst] = Some(entry);
+            self.read[a.dst] = Some(entry.widen_hi(step.saturating_mul(a.stride)));
+        }
+    }
+
+    fn record(&mut self, space: usize, kind: AccessKind, iv: Interval, count: u64) {
+        self.spaces[space].record(kind, iv, count);
+    }
+
+    fn check_write(&mut self, dst: Dest, span: usize) {
+        let max = dst.iv.hi.saturating_add(span.saturating_sub(1));
+        let len = self.space_len(dst.space);
+        if max >= len {
+            self.violations.push(Violation::WriteBounds {
+                space: self.space_name(dst.space),
+                max_offset: max,
+                len,
+            });
+        }
+    }
+
+    /// Validate a leaf kernel's bytecode against the interpreter's
+    /// execution model: in-range operand/track indices, primitive arities
+    /// the evaluator implements, stack discipline within the fixed buffer.
+    fn check_kernel(&mut self, k: &Kernel) {
+        for (i, &t) in k.tracks.iter().enumerate() {
+            if t >= self.prog.n_tracks() {
+                self.violations.push(Violation::Malformed(format!(
+                    "kernel operand {i} reads unknown track {t}"
+                )));
+            }
+        }
+        let mut depth = 0usize;
+        let mut max = 0usize;
+        for op in &k.ops {
+            match op {
+                KernelOp::In(i) => {
+                    if (*i as usize) >= k.tracks.len() {
+                        self.violations.push(Violation::Malformed(format!(
+                            "kernel In({i}) beyond its {} tracks",
+                            k.tracks.len()
+                        )));
+                    }
+                    depth += 1;
+                }
+                KernelOp::Const(_) => depth += 1,
+                KernelOp::Prim(p) => {
+                    let a = p.arity();
+                    if !(1..=2).contains(&a) {
+                        self.violations.push(Violation::Malformed(format!(
+                            "kernel primitive '{}' has unsupported arity {a}",
+                            p.name()
+                        )));
+                        return;
+                    }
+                    if depth < a {
+                        self.violations.push(Violation::Malformed(format!(
+                            "kernel stack underflow at '{}'",
+                            p.name()
+                        )));
+                        return;
+                    }
+                    depth = depth + 1 - a;
+                }
+            }
+            max = max.max(depth);
+        }
+        if depth != 1 {
+            self.violations.push(Violation::Malformed(format!(
+                "kernel leaves {depth} values on the stack (want 1)"
+            )));
+        }
+        if max > MAX_KERNEL_STACK {
+            self.violations.push(Violation::Malformed(format!(
+                "kernel needs {max} stack slots, interpreter has {MAX_KERNEL_STACK}"
+            )));
+        }
+    }
+
+    /// Walk one node executing `mult` times with destination cursor
+    /// anywhere in `dst.iv`; returns the span of elements the node writes
+    /// per execution (its *actual* output size).
+    fn walk(&mut self, node: &Node, mode: WriteMode, dst: Dest, mult: u64, depth: usize) -> usize {
+        match node {
+            Node::MapLoop {
+                extent,
+                advances,
+                body_size,
+                body,
+            } => {
+                let at = self.at(depth, "map", *extent);
+                if *extent == 0 {
+                    self.violations.push(Violation::Malformed(format!("{at} has extent 0")));
+                    return 0;
+                }
+                self.enter(advances, *extent);
+                // Per iteration the destination cursor advances by the
+                // *declared* body_size (that is what the interpreter does),
+                // so the body sees this widened base interval.
+                let child = Dest {
+                    space: dst.space,
+                    iv: dst.iv.widen_hi((*extent - 1).saturating_mul(*body_size)),
+                };
+                let reps = mult.saturating_mul(*extent as u64);
+                let span = self.walk(body, mode, child, reps, depth + 1);
+                if span > *body_size {
+                    self.violations.push(Violation::MapOverlap {
+                        at,
+                        body_span: span,
+                        body_size: *body_size,
+                    });
+                } else if span < *body_size {
+                    self.violations.push(Violation::MapGap {
+                        at,
+                        body_span: span,
+                        body_size: *body_size,
+                    });
+                }
+                extent.saturating_mul(*body_size)
+            }
+            Node::RedLoop {
+                extent,
+                advances,
+                op,
+                body_size,
+                temp,
+                body,
+            } => {
+                let at = self.at(depth, "red", *extent);
+                if *extent == 0 {
+                    self.violations.push(Violation::Malformed(format!("{at} has extent 0")));
+                    return 0;
+                }
+                if !op.is_associative() {
+                    self.violations.push(Violation::Malformed(format!(
+                        "reduction operator '{}' at {at} is not associative",
+                        op.name()
+                    )));
+                }
+                match (temp, mode) {
+                    (Some(t), WriteMode::Acc(_)) => {
+                        // Private-region path: reduce into temp t with Set
+                        // semantics, then fold the temp into dst with the
+                        // enclosing operator, element by element.
+                        if *t >= self.prog.temp_sizes.len() {
+                            self.violations.push(Violation::Malformed(format!(
+                                "reduction at {at} uses unknown temp {t}"
+                            )));
+                            return *body_size;
+                        }
+                        let temp_space = self.n_inputs + 1 + *t;
+                        let temp_dst = Dest {
+                            space: temp_space,
+                            iv: Interval::point(0),
+                        };
+                        self.red_walk(
+                            *extent,
+                            advances,
+                            *op,
+                            body,
+                            *body_size,
+                            temp_dst,
+                            WriteMode::Set,
+                            mult,
+                            depth,
+                            &at,
+                        );
+                        let have = self.prog.temp_sizes[*t];
+                        if have != *body_size {
+                            self.violations.push(Violation::TempSizeMismatch {
+                                temp: *t,
+                                need: *body_size,
+                                have,
+                            });
+                        }
+                        if *body_size > 0 {
+                            let n = mult.saturating_mul(*body_size as u64);
+                            let temp_iv = Interval {
+                                lo: 0,
+                                hi: *body_size - 1,
+                            };
+                            let dst_iv = dst.iv.widen_hi(*body_size - 1);
+                            self.record(temp_space, AccessKind::Read, temp_iv, n);
+                            self.record(dst.space, AccessKind::Read, dst_iv, n);
+                            self.record(dst.space, AccessKind::Write, dst_iv, n);
+                            self.check_write(dst, *body_size);
+                        }
+                    }
+                    _ => {
+                        if let (None, WriteMode::Acc(outer)) = (temp, mode) {
+                            // Accumulating straight into the enclosing
+                            // region is only sound when both levels combine
+                            // with the same commutative operator — exactly
+                            // when lowering omits the temp.
+                            if outer != *op || !op.is_commutative() {
+                                self.violations.push(Violation::AccWithoutTemp {
+                                    at: at.clone(),
+                                    op: *op,
+                                    outer,
+                                });
+                            }
+                        }
+                        self.red_walk(
+                            *extent,
+                            advances,
+                            *op,
+                            body,
+                            *body_size,
+                            dst,
+                            mode,
+                            mult,
+                            depth,
+                            &at,
+                        );
+                    }
+                }
+                *body_size
+            }
+            Node::Leaf(k) => {
+                self.check_kernel(k);
+                for &t in &k.tracks {
+                    if t >= self.prog.n_tracks() {
+                        continue; // reported by check_kernel
+                    }
+                    let iv = self.read[t].unwrap_or(Interval::point(0));
+                    let slot = self.prog.track_slot[t];
+                    self.record(slot, AccessKind::Read, iv, mult);
+                    let len = self.prog.input_lens[slot];
+                    if iv.hi >= len {
+                        self.violations.push(Violation::ReadBounds {
+                            space: self.space_name(slot),
+                            track: t,
+                            max_offset: iv.hi,
+                            len,
+                        });
+                    }
+                }
+                if matches!(mode, WriteMode::Acc(_)) {
+                    self.record(dst.space, AccessKind::Read, dst.iv, mult);
+                }
+                self.record(dst.space, AccessKind::Write, dst.iv, mult);
+                self.check_write(dst, 1);
+                self.leaf_evals = self.leaf_evals.saturating_add(mult);
+                1
+            }
+        }
+    }
+
+    /// Shared reduction-loop model (mirrors the interpreter's `red_loop`
+    /// and the tracer's `red_trace`): under `Set` the destination region is
+    /// identity-filled over the body's *declared* size, then the body
+    /// accumulates `extent` times.
+    #[allow(clippy::too_many_arguments)]
+    fn red_walk(
+        &mut self,
+        extent: usize,
+        advances: &[Adv],
+        op: Prim,
+        body: &Node,
+        declared: usize,
+        dst: Dest,
+        mode: WriteMode,
+        mult: u64,
+        depth: usize,
+        at: &str,
+    ) {
+        self.enter(advances, extent);
+        let fill = declared_size(body);
+        if matches!(mode, WriteMode::Set) && fill > 0 {
+            self.record(
+                dst.space,
+                AccessKind::Write,
+                dst.iv.widen_hi(fill - 1),
+                mult.saturating_mul(fill as u64),
+            );
+            self.check_write(dst, fill);
+        }
+        let span = self.walk(
+            body,
+            WriteMode::Acc(op),
+            dst,
+            mult.saturating_mul(extent as u64),
+            depth + 1,
+        );
+        if span != declared {
+            self.violations.push(Violation::RedSizeMismatch {
+                at: at.to_string(),
+                body_span: span,
+                body_size: declared,
+            });
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! The certified result of a successful verification: per-space access
+//! intervals and exact access counts.
+
+use crate::exec::{Access, AccessKind};
+
+/// A closed interval `[lo, hi]` of element offsets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interval {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Interval {
+    pub fn point(x: usize) -> Self {
+        Interval { lo: x, hi: x }
+    }
+
+    pub fn contains(&self, x: usize) -> bool {
+        self.lo <= x && x <= self.hi
+    }
+
+    /// Smallest interval covering both.
+    pub fn hull(self, other: Interval) -> Interval {
+        Interval {
+            lo: self.lo.min(other.lo),
+            hi: self.hi.max(other.hi),
+        }
+    }
+
+    /// Widen the upper end by `extra` (saturating — the checker flags any
+    /// offset arithmetic that would overflow via its bounds checks).
+    pub(super) fn widen_hi(self, extra: usize) -> Interval {
+        Interval {
+            lo: self.lo,
+            hi: self.hi.saturating_add(extra),
+        }
+    }
+}
+
+/// Access summary for one address space (an input slot, the output, or a
+/// reduction temp).
+#[derive(Clone, Debug, Default)]
+pub struct SpaceUse {
+    /// Hull of all read offsets (`None` if the space is never read).
+    pub read: Option<Interval>,
+    /// Hull of all written offsets (`None` if the space is never written).
+    pub write: Option<Interval>,
+    /// Exact number of scalar reads, matching [`crate::exec::trace`]'s
+    /// emission (saturating on astronomically large programs).
+    pub reads: u64,
+    /// Exact number of scalar writes, matching the trace.
+    pub writes: u64,
+}
+
+impl SpaceUse {
+    pub(super) fn record(&mut self, kind: AccessKind, iv: Interval, count: u64) {
+        let (slot, n) = match kind {
+            AccessKind::Read => (&mut self.read, &mut self.reads),
+            AccessKind::Write => (&mut self.write, &mut self.writes),
+        };
+        *slot = Some(slot.map_or(iv, |old| old.hull(iv)));
+        *n = n.saturating_add(count);
+    }
+}
+
+/// The statically-computed access footprint of a verified
+/// [`crate::exec::Program`].
+///
+/// Space numbering matches [`crate::exec::Access::space`]: `0..n_inputs`
+/// are input slots, `n_inputs` is the output, `n_inputs + 1 + t` is
+/// reduction temp `t`. The intervals are exact hulls of the offsets the
+/// interpreter will touch (loop strides are non-negative, so the extremes
+/// are actually reached); the counts replicate the dynamic trace exactly,
+/// which the differential tests in `tests/verify_props.rs` pin.
+#[derive(Clone, Debug)]
+pub struct Footprint {
+    pub spaces: Vec<SpaceUse>,
+    pub n_inputs: usize,
+    /// Number of leaf-kernel evaluations — the program's scalar-op count,
+    /// cross-checked against [`crate::costmodel::CostEstimate::flops`].
+    pub leaf_evals: u64,
+}
+
+impl Footprint {
+    /// Does a traced access fall inside the certified footprint?
+    pub fn contains(&self, a: &Access) -> bool {
+        let Some(use_) = self.spaces.get(a.space) else {
+            return false;
+        };
+        let iv = match a.kind {
+            AccessKind::Read => use_.read,
+            AccessKind::Write => use_.write,
+        };
+        iv.is_some_and(|iv| iv.contains(a.offset))
+    }
+
+    /// Minimum buffer length input `slot` provably needs (0 if never read).
+    pub fn input_required(&self, slot: usize) -> usize {
+        self.spaces
+            .get(slot)
+            .filter(|_| slot < self.n_inputs)
+            .and_then(|u| u.read)
+            .map_or(0, |iv| iv.hi + 1)
+    }
+
+    /// Access summary of the output space.
+    pub fn output(&self) -> &SpaceUse {
+        &self.spaces[self.n_inputs]
+    }
+
+    /// Total scalar reads across all spaces.
+    pub fn reads(&self) -> u64 {
+        self.spaces.iter().fold(0u64, |s, u| s.saturating_add(u.reads))
+    }
+
+    /// Total scalar writes across all spaces.
+    pub fn writes(&self) -> u64 {
+        self.spaces.iter().fold(0u64, |s, u| s.saturating_add(u.writes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interval_algebra() {
+        let a = Interval::point(3);
+        assert!(a.contains(3) && !a.contains(2));
+        let h = a.hull(Interval { lo: 5, hi: 9 });
+        assert_eq!(h, Interval { lo: 3, hi: 9 });
+        assert_eq!(a.widen_hi(4), Interval { lo: 3, hi: 7 });
+    }
+
+    #[test]
+    fn footprint_contains_and_required() {
+        let mut out = SpaceUse::default();
+        out.record(AccessKind::Write, Interval { lo: 0, hi: 7 }, 8);
+        let mut a = SpaceUse::default();
+        a.record(AccessKind::Read, Interval { lo: 0, hi: 31 }, 32);
+        let fp = Footprint {
+            spaces: vec![a, out],
+            n_inputs: 1,
+            leaf_evals: 32,
+        };
+        assert!(fp.contains(&Access {
+            kind: AccessKind::Read,
+            space: 0,
+            offset: 31,
+        }));
+        assert!(!fp.contains(&Access {
+            kind: AccessKind::Read,
+            space: 0,
+            offset: 32,
+        }));
+        assert!(!fp.contains(&Access {
+            kind: AccessKind::Write,
+            space: 0,
+            offset: 0,
+        }));
+        assert_eq!(fp.input_required(0), 32);
+        assert_eq!(fp.input_required(1), 0, "output is not an input");
+        assert_eq!(fp.reads(), 32);
+        assert_eq!(fp.writes(), 8);
+    }
+}

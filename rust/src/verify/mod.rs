@@ -1,0 +1,258 @@
+//! Static access-footprint verification for lowered programs.
+//!
+//! The paper's premise is that HoF programs have *statically analyzable*
+//! access structure: every loop in the [`crate::exec::Program`] IR advances
+//! its tracks by affine `base + i·stride` steps ([`crate::exec::Adv`]), so
+//! the exact memory footprint of a program is computable without running
+//! it. This module computes it — by abstract interpretation of the `Adv`
+//! chains, propagating per-track offset intervals through the
+//! `MapLoop`/`RedLoop` nesting — and proves three properties:
+//!
+//! 1. **Bounds** — every read offset reachable through any track stays
+//!    below its slot's `input_lens` entry, and every write stays inside
+//!    `out_size` / `temp_sizes`. This turns the `SAFETY` preconditions of
+//!    the interpreter's `get_unchecked` fast paths into a machine-checked
+//!    theorem: [`crate::exec::execute`] refuses to run a program that does
+//!    not verify.
+//! 2. **Initialization** — under [`crate::exec::WriteMode::Acc`] no output
+//!    or temp element is combined before it is first set: reduction fills
+//!    cover exactly the accumulated region (`RedSizeMismatch` /
+//!    `TempSizeMismatch` otherwise), map iterations leave no gaps
+//!    (`MapGap`), and a templess reduction may only accumulate under the
+//!    same commutative operator (`AccWithoutTemp`).
+//! 3. **Write-disjointness** — distinct iterations of each `MapLoop` write
+//!    disjoint destination ranges (`MapOverlap` otherwise): the body's
+//!    actual span must equal the loop's declared `body_size`, the amount
+//!    the destination cursor advances per iteration. This is the invariant
+//!    that licenses parallel execution of map loops.
+//!
+//! The analysis is exact for this IR (see [`absint`]'s module docs): the
+//! reported [`Footprint`] intervals are attained, and its per-space access
+//! *counts* replicate [`crate::exec::trace`] exactly. Two differential
+//! suites pin that claim: `tests/verify_props.rs` checks every traced
+//! access of every search-family variant lies inside the static footprint
+//! (and that the counts match), and seeded mutation tests corrupt
+//! strides/extents/temp sizes and assert rejection.
+//!
+//! Where it runs: [`crate::exec::lower`] / [`lower_id`](crate::exec::lower_id)
+//! verify their output in debug/test builds; [`crate::exec::execute`]
+//! verifies unconditionally (release builds fail closed instead of trusting
+//! `debug_assert!`s); the coordinator's `verify` knob
+//! ([`crate::coordinator::OptimizeSpec::verify`]) re-verifies the winning
+//! candidate per job and surfaces counts through
+//! [`crate::coordinator::Metrics`].
+
+mod absint;
+mod footprint;
+
+pub use absint::{Violation, MAX_KERNEL_STACK};
+pub use footprint::{Footprint, Interval, SpaceUse};
+
+use crate::exec::Program;
+use crate::{Error, Result};
+
+/// Statically verify a lowered program, returning its certified
+/// [`Footprint`] on success and every [`Violation`] found (joined into one
+/// [`Error::Verify`] diagnostic) on failure.
+pub fn verify(prog: &Program) -> Result<Footprint> {
+    check(prog).map_err(|vs| {
+        let msg = vs
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join("; ");
+        Error::Verify(msg)
+    })
+}
+
+/// Structured-diagnostic variant of [`verify`]: the raw violation list.
+pub fn check(prog: &Program) -> std::result::Result<Footprint, Vec<Violation>> {
+    absint::check(prog)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::{self, *};
+    use crate::exec::{count_accesses, lower, Adv, Kernel, KernelOp, Node, Program};
+    use crate::layout::Layout;
+    use crate::typecheck::Env;
+
+    fn matmul_env(n: usize) -> Env {
+        Env::new()
+            .with("A", Layout::row_major(&[n, n]))
+            .with("B", Layout::row_major(&[n, n]))
+    }
+
+    fn matmul_prog(n: usize) -> Program {
+        lower(&matmul_naive(input("A"), input("B")), &matmul_env(n)).unwrap()
+    }
+
+    #[test]
+    fn matmul_footprint_is_exact() {
+        let n = 4;
+        let prog = matmul_prog(n);
+        let fp = verify(&prog).unwrap();
+        // Every input element is reachable, none beyond.
+        assert_eq!(fp.input_required(0), n * n);
+        assert_eq!(fp.input_required(1), n * n);
+        // Output is written across its full extent.
+        let out = fp.output();
+        let last = n * n - 1;
+        assert_eq!(out.write.unwrap(), Interval { lo: 0, hi: last });
+        // One kernel evaluation per scalar multiply.
+        assert_eq!(fp.leaf_evals, (n * n * n) as u64);
+        // The static counts replicate the dynamic trace exactly.
+        let (reads, writes) = count_accesses(&prog).unwrap();
+        assert_eq!(fp.reads(), reads as u64);
+        assert_eq!(fp.writes(), writes as u64);
+    }
+
+    #[test]
+    fn temp_reduction_verifies_with_temp_footprint() {
+        // max over rows of row-sums: inner add-reduction under max needs a
+        // private temp region; its fill/fold traffic must be in the
+        // footprint.
+        let env = Env::new().with("A", Layout::row_major(&[3, 4]));
+        let e = rnz(pmax(), lam1("r", reduce(add(), var("r"))), vec![input("A")]);
+        let prog = lower(&e, &env).unwrap();
+        assert_eq!(prog.temp_sizes, vec![1]);
+        let fp = verify(&prog).unwrap();
+        let temp = &fp.spaces[fp.n_inputs + 1];
+        assert!(temp.reads > 0 && temp.writes > 0, "temp traffic missing");
+        let (reads, writes) = count_accesses(&prog).unwrap();
+        assert_eq!(fp.reads(), reads as u64);
+        assert_eq!(fp.writes(), writes as u64);
+    }
+
+    #[test]
+    fn corrupt_stride_is_rejected_naming_input_and_track() {
+        let mut prog = matmul_prog(4);
+        fn first_strided_adv(node: &mut Node) -> Option<&mut Adv> {
+            match node {
+                Node::MapLoop { advances, body, .. }
+                | Node::RedLoop { advances, body, .. } => {
+                    if advances.iter().any(|a| a.stride > 0) {
+                        advances.iter_mut().find(|a| a.stride > 0)
+                    } else {
+                        first_strided_adv(body)
+                    }
+                }
+                Node::Leaf(_) => None,
+            }
+        }
+        let a = first_strided_adv(&mut prog.root).expect("matmul has strided advances");
+        a.stride *= 100;
+        let err = verify(&prog).unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("read out of bounds") && msg.contains("input '") && msg.contains("track"),
+            "diagnostic must name the space and track: {msg}"
+        );
+    }
+
+    #[test]
+    fn corrupt_extent_is_rejected_naming_output() {
+        let mut prog = matmul_prog(4);
+        let Node::MapLoop { extent, .. } = &mut prog.root else {
+            panic!("matmul roots in a map");
+        };
+        *extent += 1;
+        let err = verify(&prog).unwrap_err().to_string();
+        assert!(
+            err.contains("output"),
+            "diagnostic must name the output space: {err}"
+        );
+    }
+
+    #[test]
+    fn corrupt_temp_size_is_rejected_naming_temp() {
+        let env = Env::new().with("A", Layout::row_major(&[3, 4]));
+        let e = rnz(pmax(), lam1("r", reduce(add(), var("r"))), vec![input("A")]);
+        let mut prog = lower(&e, &env).unwrap();
+        prog.temp_sizes[0] += 1;
+        let err = verify(&prog).unwrap_err().to_string();
+        assert!(err.contains("temp 0"), "diagnostic must name the temp: {err}");
+    }
+
+    #[test]
+    fn shrunk_out_size_is_rejected() {
+        let mut prog = matmul_prog(4);
+        prog.out_size -= 1;
+        let err = verify(&prog).unwrap_err().to_string();
+        assert!(err.contains("output") || err.contains("out_size"), "{err}");
+    }
+
+    #[test]
+    fn templess_mixed_op_reduction_is_rejected() {
+        // red(+) over red(max) without a temp: the inner reduction would
+        // accumulate max-partials into add-initialized elements.
+        let copy = Kernel {
+            ops: vec![KernelOp::In(0)],
+            tracks: vec![1],
+        };
+        let prog = Program {
+            root: Node::RedLoop {
+                extent: 2,
+                advances: vec![Adv {
+                    dst: 0,
+                    src: None,
+                    base: 0,
+                    stride: 2,
+                }],
+                op: dsl::Prim::Add,
+                body_size: 1,
+                temp: None,
+                body: Box::new(Node::RedLoop {
+                    extent: 2,
+                    advances: vec![Adv {
+                        dst: 1,
+                        src: Some(0),
+                        base: 0,
+                        stride: 1,
+                    }],
+                    op: dsl::Prim::Max,
+                    body_size: 1,
+                    temp: None,
+                    body: Box::new(Node::Leaf(copy)),
+                }),
+            },
+            input_names: vec!["u".into()],
+            track_slot: vec![0, 0],
+            input_lens: vec![4],
+            out_size: 1,
+            temp_sizes: vec![],
+        };
+        let err = verify(&prog).unwrap_err().to_string();
+        assert!(err.contains("without a temp"), "{err}");
+    }
+
+    #[test]
+    fn kernel_exceeding_interpreter_stack_is_rejected() {
+        // 17 pushes before the first pop: one more slot than the
+        // interpreter's fixed evaluation stack.
+        let mut ops = vec![KernelOp::Const(1.0); 17];
+        ops.extend(vec![KernelOp::Prim(dsl::Prim::Add); 16]);
+        let prog = Program {
+            root: Node::Leaf(Kernel {
+                ops,
+                tracks: vec![],
+            }),
+            input_names: vec![],
+            track_slot: vec![],
+            input_lens: vec![],
+            out_size: 1,
+            temp_sizes: vec![],
+        };
+        let err = verify(&prog).unwrap_err().to_string();
+        assert!(err.contains("stack slots"), "{err}");
+    }
+
+    #[test]
+    fn structured_check_reports_every_violation() {
+        let mut prog = matmul_prog(4);
+        prog.out_size -= 1; // root-size mismatch AND write bounds
+        let vs = check(&prog).unwrap_err();
+        assert!(vs.len() >= 2, "one pass should surface all defects: {vs:?}");
+    }
+}

@@ -29,6 +29,7 @@ fn service_optimizes_and_executes_under_concurrency() {
             subdivide_rnz: if rng.chance(0.5) { Some(4) } else { None },
             top_k: 12,
             prune: rng.chance(0.5),
+            verify: rng.chance(0.5),
         };
         let expected = if spec.subdivide_rnz.is_some() { 12 } else { 6 };
         let pruned = spec.prune;

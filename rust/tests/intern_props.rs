@@ -208,6 +208,7 @@ fn differential_pipeline_same_ranking_with_and_without_rewrite_memo() {
         subdivide_rnz: Some(4),
         top_k: 12,
         prune: false,
+        verify: false,
     };
     let with_intern = optimize(&spec).unwrap();
     let without = with_memo_disabled(|| optimize(&spec)).unwrap();

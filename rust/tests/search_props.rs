@@ -337,6 +337,7 @@ fn pruned_service_pipeline_matches_exhaustive() {
         subdivide_rnz: Some(4),
         top_k: 12,
         prune,
+        verify: true,
     };
     let exhaustive = optimize(&mk(false)).unwrap();
     let pruned = optimize(&mk(true)).unwrap();

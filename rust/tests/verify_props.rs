@@ -1,0 +1,300 @@
+//! Differential and mutation tests for the static access-footprint
+//! verifier (ISSUE 6):
+//!
+//! - **trace ⊆ footprint**: for every variant of every search family, at
+//!   the canonical shapes and at seeded random shapes, every access the
+//!   dynamic tracer emits lies inside the statically certified
+//!   [`hofdla::verify::Footprint`] — and the static per-program access
+//!   *counts* equal the trace's exactly (the analysis is exact, not
+//!   conservative). Runs at the CI `SEARCH_SHARDS` width (1, 2, 8) so the
+//!   verified programs are the ones the sharded search actually produces.
+//! - **mutations reject**: corrupting any strided `Adv`, any loop extent,
+//!   or a temp size in a lowered program makes `verify` fail, with a
+//!   diagnostic naming the offending space and track where applicable.
+//!   A verifier that accepts everything would pass the differential suite;
+//!   these prove it can actually say no.
+
+use hofdla::enumerate::{enumerate_search, starts, SearchOptions, Variant, MAX_SEARCH_SHARDS};
+use hofdla::exec::{count_accesses, lower, trace, Node, Program};
+use hofdla::layout::Layout;
+use hofdla::rewrite::Ctx;
+use hofdla::typecheck::Env;
+use hofdla::util::Rng;
+use hofdla::verify::verify;
+
+/// Shard count under test — the CI matrix sets `SEARCH_SHARDS` (1, 2, 8),
+/// mirroring `tests/search_props.rs`.
+fn shard_count() -> usize {
+    std::env::var("SEARCH_SHARDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(4)
+        .min(MAX_SEARCH_SHARDS)
+}
+
+/// A is n×j, B is j×k, v has length j. `j` must be divisible by 4 (the
+/// twice-subdivided family blocks it by 2·2) and n, k by 2 (the map
+/// subdivisions).
+fn env(n: usize, j: usize, k: usize) -> Env {
+    Env::new()
+        .with("A", Layout::row_major(&[n, j]))
+        .with("B", Layout::row_major(&[j, k]))
+        .with("v", Layout::row_major(&[j]))
+}
+
+fn families() -> Vec<(&'static str, Variant)> {
+    vec![
+        ("matmul-naive", starts::matmul_naive_variant()),
+        ("matmul-rnz-subdiv", starts::matmul_rnz_subdivided_variant(2)),
+        ("matmul-maps-subdiv", starts::matmul_maps_subdivided_variant(2)),
+        ("matmul-rnz-twice", starts::matmul_rnz_twice_subdivided_variant(2, 2)),
+        ("matmul-all-subdiv", starts::matmul_all_subdivided_variant(2)),
+        ("matvec-naive", starts::matvec_naive_variant()),
+        ("matvec-vector-subdiv", starts::matvec_vector_subdivided_variant(2)),
+        ("matvec-map-subdiv", starts::matvec_map_subdivided_variant(2)),
+    ]
+}
+
+/// Every lowered variant of every family, at the given shape.
+fn family_programs(n: usize, j: usize, k: usize) -> Vec<(String, Program)> {
+    let env = env(n, j, k);
+    let ctx = Ctx::new(env.clone());
+    let opts = SearchOptions {
+        limit: 4096,
+        shards: shard_count(),
+        prune_slack: None,
+        score: false,
+    };
+    let mut out = Vec::new();
+    for (name, start) in families() {
+        let r = enumerate_search(&start, &ctx, &opts).unwrap();
+        for v in &r.variants {
+            let key = format!("{name}/{} @ {n}x{j}x{k}", v.display_key());
+            out.push((key, lower(&v.expr, &env).unwrap()));
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_traced_accesses_lie_inside_static_footprint() {
+    let mut rng = Rng::new(0x6fda);
+    // The canonical search-props shape plus seeded random shapes with the
+    // required divisibility.
+    let mut shapes = vec![(4usize, 8usize, 4usize)];
+    for _ in 0..2 {
+        shapes.push((2 * rng.range(1, 4), 8 * rng.range(1, 3), 2 * rng.range(1, 4)));
+    }
+    for (n, j, k) in shapes {
+        for (key, prog) in family_programs(n, j, k) {
+            let fp = verify(&prog).unwrap_or_else(|e| panic!("{key}: {e}"));
+            trace(&prog, &mut |a| {
+                assert!(
+                    fp.contains(&a),
+                    "{key}: traced access {a:?} escapes the static footprint"
+                );
+            })
+            .unwrap();
+            let (reads, writes) = count_accesses(&prog).unwrap();
+            assert_eq!(
+                (fp.reads(), fp.writes()),
+                (reads as u64, writes as u64),
+                "{key}: static counts must replicate the trace exactly"
+            );
+        }
+    }
+}
+
+/// Number of corruptible stride sites: strided advances owned by loops
+/// that actually iterate (`extent > 1`, so the corruption is observable).
+fn stride_sites(node: &Node) -> usize {
+    match node {
+        Node::MapLoop {
+            extent, advances, body, ..
+        }
+        | Node::RedLoop {
+            extent, advances, body, ..
+        } => {
+            let here = if *extent > 1 {
+                advances.iter().filter(|a| a.stride > 0).count()
+            } else {
+                0
+            };
+            here + stride_sites(body)
+        }
+        Node::Leaf(_) => 0,
+    }
+}
+
+/// Inflate the `i`-th stride site by a factor large enough to escape any
+/// of the small test shapes. Returns false if `i` is out of range.
+fn corrupt_nth_stride(node: &mut Node, mut i: usize) -> bool {
+    match node {
+        Node::MapLoop {
+            extent, advances, body, ..
+        }
+        | Node::RedLoop {
+            extent, advances, body, ..
+        } => {
+            if *extent > 1 {
+                for a in advances.iter_mut().filter(|a| a.stride > 0) {
+                    if i == 0 {
+                        a.stride = a.stride.saturating_mul(1000);
+                        return true;
+                    }
+                    i -= 1;
+                }
+            }
+            corrupt_nth_stride(body, i)
+        }
+        Node::Leaf(_) => false,
+    }
+}
+
+/// Number of corruptible extent sites: every map loop (its output span
+/// changes, tripping the structural checks), and every reduction that
+/// steps at least one track (the extra iteration reads past the end).
+fn extent_sites(node: &Node) -> usize {
+    match node {
+        Node::MapLoop { body, .. } => 1 + extent_sites(body),
+        Node::RedLoop { advances, body, .. } => {
+            usize::from(advances.iter().any(|a| a.stride > 0)) + extent_sites(body)
+        }
+        Node::Leaf(_) => 0,
+    }
+}
+
+fn corrupt_nth_extent(node: &mut Node, i: usize) -> bool {
+    match node {
+        Node::MapLoop { extent, body, .. } => {
+            if i == 0 {
+                *extent += 1;
+                true
+            } else {
+                corrupt_nth_extent(body, i - 1)
+            }
+        }
+        Node::RedLoop {
+            extent, advances, body, ..
+        } => {
+            if advances.iter().any(|a| a.stride > 0) {
+                if i == 0 {
+                    *extent += 1;
+                    true
+                } else {
+                    corrupt_nth_extent(body, i - 1)
+                }
+            } else {
+                corrupt_nth_extent(body, i)
+            }
+        }
+        Node::Leaf(_) => false,
+    }
+}
+
+/// Exhaustive single-fault injection over every family variant: each
+/// strided advance corrupted in isolation must be rejected, and the
+/// diagnostic must name the space and the track the bad stride reads
+/// through.
+#[test]
+fn mutation_every_corrupted_stride_is_rejected_naming_space_and_track() {
+    let mut corrupted = 0usize;
+    for (key, prog) in family_programs(4, 8, 4) {
+        for i in 0..stride_sites(&prog.root) {
+            let mut bad = prog.clone();
+            assert!(corrupt_nth_stride(&mut bad.root, i));
+            let err = verify(&bad)
+                .err()
+                .unwrap_or_else(|| panic!("{key}: stride site {i} corrupted, still verifies"));
+            let msg = err.to_string();
+            assert!(
+                msg.contains("out of bounds") && msg.contains("track"),
+                "{key}: site {i} diagnostic must name space and track: {msg}"
+            );
+            corrupted += 1;
+        }
+    }
+    assert!(corrupted > 50, "fault injection barely ran ({corrupted} sites)");
+}
+
+/// Exhaustive single-fault injection on loop extents: growing any
+/// observable extent by one must be rejected (overlapping map iterations,
+/// a root/out_size mismatch, or a read past the end of an input).
+#[test]
+fn mutation_every_corrupted_extent_is_rejected() {
+    let mut corrupted = 0usize;
+    for (key, prog) in family_programs(4, 8, 4) {
+        for i in 0..extent_sites(&prog.root) {
+            let mut bad = prog.clone();
+            assert!(corrupt_nth_extent(&mut bad.root, i));
+            assert!(
+                verify(&bad).is_err(),
+                "{key}: extent site {i} corrupted, still verifies"
+            );
+            corrupted += 1;
+        }
+    }
+    assert!(corrupted > 50, "fault injection barely ran ({corrupted} sites)");
+}
+
+/// Seeded shapes for the temp path: a reduction whose operator differs
+/// from its enclosing accumulator lowers with a private temp region; its
+/// declared size is part of the verified surface. Corrupting it must be
+/// rejected naming the temp — and the intact program's temp traffic must
+/// replicate the trace.
+#[test]
+fn mutation_corrupted_temp_size_is_rejected_naming_temp() {
+    use hofdla::dsl::{add, input, lam1, pmax, reduce, rnz, var};
+    let mut rng = Rng::new(0x7e3b);
+    for _ in 0..8 {
+        let (r, c) = (rng.range(2, 6), rng.range(2, 9));
+        let env = Env::new().with("A", Layout::row_major(&[r, c]));
+        let e = rnz(pmax(), lam1("row", reduce(add(), var("row"))), vec![input("A")]);
+        let prog = lower(&e, &env).unwrap();
+        assert!(!prog.temp_sizes.is_empty(), "mixed-op reduction must use a temp");
+
+        let fp = verify(&prog).unwrap();
+        let (reads, writes) = count_accesses(&prog).unwrap();
+        assert_eq!((fp.reads(), fp.writes()), (reads as u64, writes as u64));
+        trace(&prog, &mut |a| assert!(fp.contains(&a), "{r}x{c}: {a:?}")).unwrap();
+
+        let mut bad = prog.clone();
+        bad.temp_sizes[0] += 1;
+        let msg = verify(&bad).unwrap_err().to_string();
+        assert!(
+            msg.contains("temp 0"),
+            "{r}x{c}: diagnostic must name the temp: {msg}"
+        );
+    }
+}
+
+/// Seeded random single-fault sampling at random shapes — the same
+/// injections as the exhaustive tests above, but at shapes the exhaustive
+/// pass doesn't cover, so shape-dependent strides are also exercised.
+#[test]
+fn mutation_seeded_random_faults_at_random_shapes_are_rejected() {
+    let mut rng = Rng::new(0xfa57);
+    for _ in 0..3 {
+        let (n, j, k) = (2 * rng.range(1, 4), 8 * rng.range(1, 3), 2 * rng.range(1, 4));
+        let progs = family_programs(n, j, k);
+        for _ in 0..24 {
+            let (key, prog) = rng.pick(&progs);
+            let mut bad = prog.clone();
+            let ok = if rng.chance(0.5) {
+                let sites = stride_sites(&bad.root);
+                sites > 0 && corrupt_nth_stride(&mut bad.root, rng.below(sites))
+            } else {
+                let sites = extent_sites(&bad.root);
+                sites > 0 && corrupt_nth_extent(&mut bad.root, rng.below(sites))
+            };
+            if !ok {
+                continue;
+            }
+            assert!(
+                verify(&bad).is_err(),
+                "{key} @ {n}x{j}x{k}: corrupted program still verifies"
+            );
+        }
+    }
+}
