@@ -43,6 +43,8 @@ fn main() -> hofdla::Result<()> {
         top_k: 12,
         prune: false,
         verify: true,
+        budget: 0,
+        deadline_ms: 0,
     };
     let t = std::time::Instant::now();
     let report = optimize(&spec)?;

@@ -108,6 +108,51 @@ def main(argv):
                 "costmodel::spine_lower_bound_id)"
             )
             broken.append("pruned_candidates")
+        base_pruned = baseline.get("search", {}).get("pruned_candidates")
+        cur_pruned = search.get("pruned_candidates")
+        if (
+            isinstance(base_pruned, int)
+            and isinstance(cur_pruned, int)
+            and 0 < cur_pruned < base_pruned
+        ):
+            print(
+                f"advisory: the cut pruned {cur_pruned} candidates vs "
+                f"{base_pruned} at the baseline — the search explores more "
+                "than it used to on the same workload"
+            )
+            regressed.append("pruned_candidates")
+
+    # Anytime tracking: winner quality + certified gap at truncated node
+    # budgets (25% / 50% of the full run). A budget level that used to hold
+    # the exhaustive winner and no longer does is a priority-order
+    # regression in the best-first search that no wall-clock row catches;
+    # losing the winner within the current run alone is only reported, since
+    # quality at a fixed fraction is workload-dependent, not inherently
+    # wrong. Tolerant of pre-anytime baselines (no "anytime" block).
+    anytime = current.get("anytime", [])
+    base_anytime = {a.get("frac"): a for a in baseline.get("anytime", [])}
+    for row in anytime:
+        frac = row.get("frac")
+        gap = row.get("certified_gap")
+        found = row.get("winner_found")
+        b = base_anytime.get(frac)
+        base_note = ""
+        if b is not None:
+            base_note = "  baseline gap={:.3f} winner_found={}".format(
+                b.get("certified_gap", float("nan")), b.get("winner_found")
+            )
+        print(
+            "anytime {:>3.0f}%: budget={} gap={:.3f} winner_found={}{}".format(
+                (frac or 0) * 100, row.get("budget"), gap, found, base_note
+            )
+        )
+        if b is not None and b.get("winner_found") and not found:
+            print(
+                f"advisory: the {frac:.0%} budget used to find the exhaustive "
+                "winner and no longer does — the best-first expansion order "
+                "has regressed (see enumerate::spine_lower_bound priorities)"
+            )
+            regressed.append(f"anytime-{frac}")
 
     if regressed:
         print(

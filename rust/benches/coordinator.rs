@@ -31,6 +31,8 @@ fn subdivided_matmul_spec(prune: bool) -> OptimizeSpec {
         // The cold row measures the production configuration, verifier
         // included, so its overhead is tracked by the perf lane.
         verify: true,
+        budget: 0,
+        deadline_ms: 0,
     }
 }
 
@@ -44,7 +46,25 @@ struct SearchRow {
     pruned_variants: usize,
 }
 
-fn write_bench_json(rows: &[(&str, &Measurement)], jobs_per_s: f64, search: &SearchRow) {
+/// Anytime quality at a truncated node budget: does the best-first search
+/// already hold the exhaustive winner, and how tight is the certified gap?
+/// Tracked per-budget so `compare_bench.py` can flag a budget level that
+/// used to find the winner and no longer does (a priority-order
+/// regression wall-clock rows would never catch).
+struct AnytimeRow {
+    budget: u64,
+    frac: f64,
+    certified_gap: f64,
+    winner_found: bool,
+    variants: usize,
+}
+
+fn write_bench_json(
+    rows: &[(&str, &Measurement)],
+    jobs_per_s: f64,
+    search: &SearchRow,
+    anytime: &[AnytimeRow],
+) {
     let mut s = String::from(
         "{\n  \"bench\": \"coordinator\",\n  \"workload\": \"matmul n=64 subdivide_rnz=4 (Table 2, 12 variants)\",\n  \"rows\": [\n",
     );
@@ -58,9 +78,23 @@ fn write_bench_json(rows: &[(&str, &Measurement)], jobs_per_s: f64, search: &Sea
         ));
     }
     s.push_str(&format!(
-        "  ],\n  \"search\": {{\"pruned_candidates\": {}, \"exhaustive_variants\": {}, \"pruned_variants\": {}}},\n  \"jobs_per_s\": {jobs_per_s:.1}\n}}\n",
+        "  ],\n  \"search\": {{\"pruned_candidates\": {}, \"exhaustive_variants\": {}, \"pruned_variants\": {}}},\n  \"anytime\": [\n",
         search.pruned_candidates, search.exhaustive_variants, search.pruned_variants
     ));
+    for (i, a) in anytime.iter().enumerate() {
+        // Gaps are finite on this workload (scoring is on), so plain JSON
+        // numbers are safe.
+        s.push_str(&format!(
+            "    {{\"budget\": {}, \"frac\": {:.2}, \"certified_gap\": {:.6}, \"winner_found\": {}, \"variants\": {}}}{}\n",
+            a.budget,
+            a.frac,
+            a.certified_gap,
+            a.winner_found,
+            a.variants,
+            if i + 1 < anytime.len() { "," } else { "" }
+        ));
+    }
+    s.push_str(&format!("  ],\n  \"jobs_per_s\": {jobs_per_s:.1}\n}}\n"));
     match std::fs::write("BENCH_coordinator.json", &s) {
         Ok(()) => println!("wrote BENCH_coordinator.json"),
         Err(e) => eprintln!("could not write BENCH_coordinator.json: {e}"),
@@ -96,8 +130,8 @@ fn main() {
     // Branch-and-bound effectiveness on this workload: how many
     // candidates the default-slack cut rejected before lowering/scoring,
     // and how far the kept set shrank vs exhaustive mode.
+    let ex = coordinator::optimize(&spec).expect("optimize");
     let search = {
-        let ex = coordinator::optimize(&spec).expect("optimize");
         let pr = coordinator::optimize(&pruned_spec).expect("optimize");
         println!(
             "search: exhaustive kept={} pruned-mode kept={} pruned_candidates={}",
@@ -109,6 +143,37 @@ fn main() {
             pruned_variants: pr.variants_explored,
         }
     };
+
+    // Anytime quality: the same workload truncated to ~25% and ~50% of the
+    // full run's expansion count. Winner quality + certified gap per
+    // budget level.
+    let anytime: Vec<AnytimeRow> = [0.25f64, 0.5]
+        .iter()
+        .map(|&frac| {
+            let budget = ((ex.stats.expanded as f64 * frac).ceil() as u64).max(1);
+            let truncated = coordinator::optimize(&OptimizeSpec {
+                budget,
+                ..spec.clone()
+            })
+            .expect("optimize");
+            let row = AnytimeRow {
+                budget,
+                frac,
+                certified_gap: truncated.certified_gap,
+                winner_found: truncated.best == ex.best,
+                variants: truncated.variants_explored,
+            };
+            println!(
+                "anytime {:>3.0}%: budget={} gap={:.3} winner_found={} variants={}",
+                frac * 100.0,
+                row.budget,
+                row.certified_gap,
+                row.winner_found,
+                row.variants
+            );
+            row
+        })
+        .collect();
 
     let c = Coordinator::start(Config::default()).expect("start");
 
@@ -149,6 +214,7 @@ fn main() {
         &[("cold", &cold), ("warm", &warm), ("pruned", &pruned)],
         jobs_per_s,
         &search,
+        &anytime,
     );
 
     if hofdla::runtime::artifact_path("matmul_xla_256").exists()

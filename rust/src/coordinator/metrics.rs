@@ -40,6 +40,17 @@ pub struct Metrics {
     /// `Box<Expr>` trees extracted from search arenas (output-boundary
     /// extraction of kept candidates; the score path contributes zero).
     pub search_extractions: AtomicU64,
+    /// Fresh searches whose node budget stopped expansion before the
+    /// frontier drained (anytime truncation; each such run reported a
+    /// certified gap > 1.0).
+    pub search_budget_hits: AtomicU64,
+    /// Fresh searches stopped by their deadline (between waves or by
+    /// cancelling an in-flight wave).
+    pub search_deadline_hits: AtomicU64,
+    /// Gauge: the certified optimality gap of the most recent fresh
+    /// search, stored as `f64` bits (`0` = no search recorded yet). Read
+    /// through [`Metrics::last_certified_gap`].
+    pub last_gap_bits: AtomicU64,
     /// Winner programs that passed static footprint verification
     /// ([`crate::verify::verify`]) across fresh optimize runs with the
     /// spec's `verify` knob on.
@@ -66,12 +77,30 @@ impl Metrics {
             .fetch_add(s.bound_updates as u64, Ordering::Relaxed);
         self.search_extractions
             .fetch_add(s.extracted(), Ordering::Relaxed);
+        self.search_budget_hits
+            .fetch_add(u64::from(s.budget_hit), Ordering::Relaxed);
+        self.search_deadline_hits
+            .fetch_add(u64::from(s.deadline_hit), Ordering::Relaxed);
+        self.last_gap_bits
+            .store(s.certified_gap.to_bits(), Ordering::Relaxed);
+    }
+
+    /// The certified optimality gap of the most recent fresh search:
+    /// `1.0` = it ran to completion, `> 1.0` = truncated with that
+    /// certified bound, `NaN` = no search recorded yet.
+    pub fn last_certified_gap(&self) -> f64 {
+        let bits = self.last_gap_bits.load(Ordering::Relaxed);
+        if bits == 0 {
+            f64::NAN
+        } else {
+            f64::from_bits(bits)
+        }
     }
 
     /// Human-readable one-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "submitted={} completed={} failed={} exec_batches={} max_batch={} cache_hits={} opt_cache_hits={} opt_cache_flushes={} search_expanded={} search_generated={} search_pruned={} search_type_rejects={} search_bound_updates={} search_extractions={} verify_passed={} verify_rejects={}",
+            "submitted={} completed={} failed={} exec_batches={} max_batch={} cache_hits={} opt_cache_hits={} opt_cache_flushes={} search_expanded={} search_generated={} search_pruned={} search_type_rejects={} search_bound_updates={} search_extractions={} search_budget_hits={} search_deadline_hits={} last_gap={} verify_passed={} verify_rejects={}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -86,6 +115,13 @@ impl Metrics {
             self.search_type_rejects.load(Ordering::Relaxed),
             self.search_bound_updates.load(Ordering::Relaxed),
             self.search_extractions.load(Ordering::Relaxed),
+            self.search_budget_hits.load(Ordering::Relaxed),
+            self.search_deadline_hits.load(Ordering::Relaxed),
+            // A gauge, not a counter: "-" until a fresh search records.
+            match self.last_certified_gap() {
+                g if g.is_nan() => "-".to_string(),
+                g => format!("{g:.3}"),
+            },
             self.verify_passed.load(Ordering::Relaxed),
             self.verify_rejects.load(Ordering::Relaxed),
         )
@@ -127,6 +163,12 @@ mod tests {
             bound_updates: 4,
             shards: 2,
             extracted_per_shard: vec![3, 2],
+            certified_gap: 1.5,
+            min_open_bound: 10.0,
+            frontier_open: 2,
+            complete: false,
+            budget_hit: true,
+            deadline_hit: false,
         };
         m.record_search(&stats);
         m.record_search(&stats);
@@ -136,7 +178,27 @@ mod tests {
         assert_eq!(m.search_type_rejects.load(Ordering::Relaxed), 2);
         assert_eq!(m.search_bound_updates.load(Ordering::Relaxed), 8);
         assert_eq!(m.search_extractions.load(Ordering::Relaxed), 10);
+        assert_eq!(m.search_budget_hits.load(Ordering::Relaxed), 2);
+        assert_eq!(m.search_deadline_hits.load(Ordering::Relaxed), 0);
+        assert_eq!(m.last_certified_gap(), 1.5);
         assert!(m.summary().contains("search_pruned=4"));
+        assert!(m.summary().contains("search_budget_hits=2"));
+        assert!(m.summary().contains("last_gap=1.500"));
+    }
+
+    #[test]
+    fn gap_gauge_is_dash_until_a_search_records() {
+        let m = Metrics::default();
+        assert!(m.last_certified_gap().is_nan());
+        assert!(m.summary().contains("last_gap=-"));
+        let stats = SearchStats {
+            certified_gap: 1.0,
+            complete: true,
+            ..Default::default()
+        };
+        m.record_search(&stats);
+        assert_eq!(m.last_certified_gap(), 1.0);
+        assert!(m.summary().contains("last_gap=1.000"));
     }
 
     #[test]

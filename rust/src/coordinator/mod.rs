@@ -416,6 +416,8 @@ mod tests {
             top_k: 6,
             prune: false,
             verify: true,
+            budget: 0,
+            deadline_ms: 0,
         }
     }
 
@@ -552,6 +554,8 @@ mod tests {
             top_k: 4,
             prune: false,
             verify: false,
+            budget: 0,
+            deadline_ms: 0,
         };
         for _ in 0..3 {
             let r = c.call(Request::Optimize(poison.clone()));
@@ -581,6 +585,8 @@ mod tests {
             top_k: 3,
             prune: false,
             verify: false,
+            budget: 0,
+            deadline_ms: 0,
         };
         assert!(c.call(Request::Optimize(bad)).is_err());
         assert_eq!(c.metrics.failed.load(Ordering::Relaxed), 1);

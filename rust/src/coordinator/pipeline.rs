@@ -62,6 +62,42 @@ pub struct OptimizeSpec {
     /// program to callers. Debug/test builds verify every lowered
     /// candidate regardless; this knob is the production gate.
     pub verify: bool,
+    /// Anytime node budget forwarded to
+    /// [`SearchOptions::budget`](crate::enumerate::SearchOptions::budget):
+    /// stop after this many frontier expansions and report the
+    /// best-so-far winner with a certified gap. `0` = unlimited (the
+    /// exhaustive default).
+    pub budget: u64,
+    /// Per-job wall-clock deadline in milliseconds, measured from
+    /// pipeline entry and forwarded to
+    /// [`SearchOptions::deadline`](crate::enumerate::SearchOptions::deadline)
+    /// (a deadline *cancels* in-flight shard work cooperatively). `0` =
+    /// unlimited. Values above [`MAX_DEADLINE_MS`] are rejected by
+    /// [`OptimizeSpec::validate`] — a day-plus "deadline" is a typo'd
+    /// unit, not a latency contract.
+    pub deadline_ms: u64,
+}
+
+/// Upper bound accepted for [`OptimizeSpec::deadline_ms`] (24 hours).
+/// Anything longer is indistinguishable from "no deadline" for a service
+/// call and almost certainly a unit mistake; spell "no deadline" as `0`.
+pub const MAX_DEADLINE_MS: u64 = 24 * 60 * 60 * 1000;
+
+impl OptimizeSpec {
+    /// Validate the anytime knobs: `0` means unlimited for both
+    /// [`budget`](Self::budget) and [`deadline_ms`](Self::deadline_ms);
+    /// a nonsense deadline (above [`MAX_DEADLINE_MS`]) is rejected rather
+    /// than silently clamped. Called by [`optimize`] before any work, so
+    /// an invalid spec fails fast and is never cached.
+    pub fn validate(&self) -> Result<()> {
+        if self.deadline_ms > MAX_DEADLINE_MS {
+            return Err(Error::Coordinator(format!(
+                "deadline_ms {} exceeds the {MAX_DEADLINE_MS} ms (24 h) cap; use 0 for no deadline",
+                self.deadline_ms
+            )));
+        }
+        Ok(())
+    }
 }
 
 /// The pipeline's report.
@@ -84,10 +120,22 @@ pub struct OptimizeResult {
     /// (1 when the spec's `verify` knob is on — the winner — else 0).
     /// Folded into [`super::Metrics::verify_passed`].
     pub programs_verified: usize,
+    /// Certified optimality gap of the search
+    /// ([`SearchStats::certified_gap`]): `1.0` means the reported winner
+    /// is exhaustively optimal under the ranking metric; `g > 1.0` means
+    /// a budget/deadline/limit truncated the search and the true optimum
+    /// can be at most `g×` better than the reported winner. `+∞` when a
+    /// truncated run had nothing to certify (CacheSim jobs rank outside
+    /// the search, so only complete runs certify there).
+    pub certified_gap: f64,
 }
 
 /// Run the pipeline synchronously.
 pub fn optimize(spec: &OptimizeSpec) -> Result<OptimizeResult> {
+    // The deadline clock starts at pipeline entry — parse/fuse/subdivide
+    // time counts against it, as a service caller would expect.
+    let entered = std::time::Instant::now();
+    spec.validate()?;
     let expr = dsl::parse(&spec.source)?;
     let mut env = Env::new();
     let mut input_elems = 0usize;
@@ -140,6 +188,9 @@ pub fn optimize(spec: &OptimizeSpec) -> Result<OptimizeResult> {
             None
         },
         score: cost_ranked,
+        budget: usize::try_from(spec.budget).unwrap_or(usize::MAX),
+        deadline: (spec.deadline_ms > 0)
+            .then(|| entered + std::time::Duration::from_millis(spec.deadline_ms)),
     };
     let SearchResult {
         variants,
@@ -189,6 +240,7 @@ pub fn optimize(spec: &OptimizeSpec) -> Result<OptimizeResult> {
     } else {
         0
     };
+    let certified_gap = stats.certified_gap;
     Ok(OptimizeResult {
         variants_explored,
         best: ranking[0].0.clone(),
@@ -197,6 +249,7 @@ pub fn optimize(spec: &OptimizeSpec) -> Result<OptimizeResult> {
         input_elems,
         stats,
         programs_verified,
+        certified_gap,
     })
 }
 
@@ -329,6 +382,8 @@ mod tests {
             // Exercise the production verification gate on every pipeline
             // test: the winner must carry a footprint certificate.
             verify: true,
+            budget: 0,
+            deadline_ms: 0,
         }
     }
 
@@ -415,6 +470,8 @@ mod tests {
             top_k: 3,
             prune: false,
             verify: false,
+            budget: 0,
+            deadline_ms: 0,
         };
         let r = optimize(&spec).unwrap();
         assert_eq!(r.variants_explored, 1); // single rnz after fusion
@@ -435,5 +492,52 @@ mod tests {
         let mut spec = matmul_spec(8, RankBy::CostModel);
         spec.inputs.pop();
         assert!(optimize(&spec).is_err());
+    }
+
+    #[test]
+    fn unlimited_jobs_report_gap_exactly_one() {
+        let r = optimize(&matmul_spec(16, RankBy::CostModel)).unwrap();
+        assert_eq!(r.certified_gap, 1.0);
+        assert!(r.stats.complete);
+    }
+
+    #[test]
+    fn budget_truncated_job_returns_winner_with_sound_gap() {
+        // ISSUE 7 acceptance: a budget-truncated run returns a winner
+        // plus a certified gap ≥ 1.0 that soundly bounds the true
+        // optimum (known from the exhaustive run of the same spec).
+        let mut spec = matmul_spec(64, RankBy::CostModel);
+        spec.subdivide_rnz = Some(4);
+        spec.top_k = 12;
+        let full = optimize(&spec).unwrap();
+        assert_eq!(full.certified_gap, 1.0);
+        let true_opt = full.ranking[0].1;
+        spec.budget = 2;
+        let truncated = optimize(&spec).unwrap();
+        assert!(truncated.stats.budget_hit);
+        assert!(!truncated.stats.complete);
+        assert!(truncated.certified_gap > 1.0);
+        assert!(truncated.certified_gap.is_finite());
+        assert!(truncated.variants_explored < full.variants_explored);
+        // Soundness: the truncated winner is within the certified factor
+        // of the true optimum.
+        assert!(truncated.ranking[0].1 <= truncated.certified_gap * true_opt);
+    }
+
+    #[test]
+    fn generous_deadline_leaves_search_complete() {
+        let mut spec = matmul_spec(16, RankBy::CostModel);
+        spec.deadline_ms = MAX_DEADLINE_MS;
+        let r = optimize(&spec).unwrap();
+        assert!(r.stats.complete && !r.stats.deadline_hit);
+        assert_eq!(r.certified_gap, 1.0);
+    }
+
+    #[test]
+    fn nonsense_deadline_is_rejected_not_clamped() {
+        let mut spec = matmul_spec(8, RankBy::CostModel);
+        spec.deadline_ms = MAX_DEADLINE_MS + 1;
+        let err = optimize(&spec).unwrap_err().to_string();
+        assert!(err.contains("deadline_ms"), "{err}");
     }
 }

@@ -56,7 +56,13 @@ use std::collections::HashMap;
 /// input-traffic terms (it previously charged only the destination
 /// write), so rankings cached under version 1 could have been produced by
 /// a search whose cut decisions no longer reproduce.
-pub const COST_MODEL_VERSION: u64 = 2;
+///
+/// Version 3: the search went best-first/anytime on top of the bound
+/// ([`spine_reachable_floor_id`] is the new gap denominator) and gained a
+/// merge-time cut recheck, so the *kept set* and discovery order of a
+/// pruned search — and therefore `variants_explored`/tie-breaking in
+/// cached rankings — no longer reproduce what version 2 stored.
+pub const COST_MODEL_VERSION: u64 = 3;
 
 /// Cache-line cost charged per access at unit stride: one f64 out of an
 /// 8-element (64-byte) line. Also the per-iteration destination-write
@@ -172,6 +178,53 @@ pub fn estimate_id(arena: &SharedArena, id: ExprId, env: &Env) -> Result<CostEst
 /// search engine itself consults it on normalized candidates, where the
 /// read can be memoized.)
 pub fn spine_lower_bound_id(arena: &SharedArena, id: ExprId, ctx: &Ctx) -> f64 {
+    spine_bound(arena, id, ctx, false)
+}
+
+/// A lower bound on [`CostEstimate::score`] that is *invariant under
+/// rearrangement*: the same value (bit-identically — every charge is
+/// accumulated in the same spine-descent order over the same extents) for
+/// every member of the expression's exchange family, and `≤` every
+/// member's true score. This is the sound denominator for the anytime
+/// search's **certified optimality gap**.
+///
+/// [`spine_lower_bound_id`] cannot play that role: it is deliberately
+/// rearrangement-*sensitive* (that is what makes the branch-and-bound cut
+/// fire), so it bounds only the candidate it was computed on — and the
+/// swap graph is connected and undirected, meaning *any* family member is
+/// reachable from any open frontier node. A gap certified against the
+/// sensitive bound could be beaten by an unexplored descendant.
+///
+/// The floor runs the identical spine descent but charges each input
+/// track at [`REG_REUSE_COST`] — the global minimum of [`line_cost`]
+/// over every stride — instead of the layout-implied stride cost, while
+/// keeping the per-iteration destination-write charge
+/// ([`UNIT_STRIDE_COST`]). Soundness across the family follows from two
+/// facts:
+///
+/// - the exchange/subdivision rules permute spine levels without changing
+///   the multiset of extents, so the innermost iteration count (and every
+///   partial product the fallbacks charge) is family-invariant, and every
+///   lowering pays one destination write per innermost iteration;
+/// - every input-track read costs at least `REG_REUSE_COST` per access
+///   regardless of which loop ends up binding it.
+///
+/// Hence `floor(n) ≤ spine_lower_bound_id(n) ≤ score(n)` for the node
+/// itself, and `floor(n) = floor(m) ≤ score(m)` for every rearrangement
+/// `m` — both pinned by the unit tests below and property-tested over
+/// randomized families in `tests/anytime_props.rs`.
+pub fn spine_reachable_floor_id(arena: &SharedArena, id: ExprId, ctx: &Ctx) -> f64 {
+    spine_bound(arena, id, ctx, true)
+}
+
+/// Shared spine descent behind [`spine_lower_bound_id`] (`floor == false`:
+/// layout-implied [`line_cost`] per track, rearrangement-sensitive) and
+/// [`spine_reachable_floor_id`] (`floor == true`: [`REG_REUSE_COST`] per
+/// track, rearrangement-invariant).
+fn spine_bound(arena: &SharedArena, id: ExprId, ctx: &Ctx, floor: bool) -> f64 {
+    // In floor mode every track charge collapses to the global per-access
+    // minimum; otherwise charge the stride of the binding loop.
+    let track_cost = |s: usize| if floor { REG_REUSE_COST } else { line_cost(s) };
     // The descent follows a single spine path, so one mutable binding map
     // (shadowing as it goes, never needing restoration) replaces a full
     // `Ctx` clone per level — this runs once per generated candidate on
@@ -196,7 +249,7 @@ pub fn spine_lower_bound_id(arena: &SharedArena, id: ExprId, ctx: &Ctx) -> f64 {
             ENode::Rnz { m, args, .. } => (*m, args),
             // Spine exhausted: charge the innermost body exactly where
             // its shape is fully known, destination-only otherwise.
-            _ => return body_bound(arena, cur, &ctx.env, &mut vars, &var_cost, iters),
+            _ => return body_bound(arena, cur, &ctx.env, &mut vars, &var_cost, iters, floor),
         };
         let mut extent = None;
         let mut elems = Vec::with_capacity(args.len());
@@ -225,7 +278,7 @@ pub fn spine_lower_bound_id(arena: &SharedArena, id: ExprId, ctx: &Ctx) -> f64 {
                 iters *= extent;
                 for ((p, elem), &s) in params.iter().zip(elems).zip(&strides) {
                     vars.insert(p.clone(), elem);
-                    var_cost.insert(p.clone(), line_cost(s));
+                    var_cost.insert(p.clone(), track_cost(s));
                 }
                 cur = *body;
             }
@@ -237,7 +290,7 @@ pub fn spine_lower_bound_id(arena: &SharedArena, id: ExprId, ctx: &Ctx) -> f64 {
                 iters *= extent;
                 let mut traffic = 0.0;
                 for &s in &strides {
-                    traffic += iters * line_cost(s);
+                    traffic += iters * track_cost(s);
                 }
                 traffic += iters * UNIT_STRIDE_COST;
                 return traffic;
@@ -257,7 +310,8 @@ pub fn spine_lower_bound_id(arena: &SharedArena, id: ExprId, ctx: &Ctx) -> f64 {
 /// level — exactly as lowering + [`estimate`]'s walk would, or fall back
 /// to the destination-only charge when its shape is not fully resolved.
 /// `iters` is the enclosing-loop iteration product; `var_cost` maps each
-/// bound variable to the [`line_cost`] of its binding loop.
+/// bound variable to the [`line_cost`] of its binding loop ([`REG_REUSE_COST`]
+/// throughout in `floor` mode — see [`spine_reachable_floor_id`]).
 fn body_bound(
     arena: &SharedArena,
     id: ExprId,
@@ -265,6 +319,7 @@ fn body_bound(
     vars: &mut HashMap<String, Layout>,
     var_cost: &HashMap<String, f64>,
     iters: f64,
+    floor: bool,
 ) -> f64 {
     match arena.get(id) {
         // A view body lowers to a copy nest (or a bare scalar read): one
@@ -291,7 +346,12 @@ fn body_bound(
             for d in layout.dims.iter().rev() {
                 it *= d.extent as f64;
             }
-            it * line_cost(layout.dims[0].stride) + it * UNIT_STRIDE_COST
+            let per = if floor {
+                REG_REUSE_COST
+            } else {
+                line_cost(layout.dims[0].stride)
+            };
+            it * per + it * UNIT_STRIDE_COST
         }
         // Anything else is a scalar kernel if it lowers at all: replicate
         // the kernel compiler's traversal, charging each variable read at
@@ -573,6 +633,46 @@ mod tests {
             max_bound > best,
             "no variant bounds above the best score ({max_bound} vs {best})"
         );
+    }
+
+    #[test]
+    fn reachable_floor_is_family_invariant_and_bounds_every_member() {
+        // The gap denominator's two load-bearing properties, on the deep
+        // n=64/b=4 family the anytime search targets: (1) the floor is
+        // bit-identical across every rearrangement (so it soundly bounds
+        // *unexplored* family members reachable through the connected swap
+        // graph), (2) it never exceeds the sensitive bound or any member's
+        // true score.
+        use crate::dsl::intern::SharedArena;
+        let env = Env::new()
+            .with("A", Layout::row_major(&[64, 64]))
+            .with("B", Layout::row_major(&[64, 64]));
+        let ctx = Ctx::new(env.clone());
+        let arena = SharedArena::new();
+        let variants =
+            enumerate_all(&starts::matmul_rnz_subdivided_variant(4), &ctx, 100).unwrap();
+        assert_eq!(variants.len(), 12);
+        let floors: std::collections::BTreeSet<u64> = variants
+            .iter()
+            .map(|v| spine_reachable_floor_id(&arena, arena.intern(&v.expr), &ctx).to_bits())
+            .collect();
+        assert_eq!(
+            floors.len(),
+            1,
+            "floor must collapse to one value across the family"
+        );
+        let floor = f64::from_bits(*floors.iter().next().unwrap());
+        assert!(floor > 0.0);
+        for v in &variants {
+            let id = arena.intern(&v.expr);
+            let lb = spine_lower_bound_id(&arena, id, &ctx);
+            let score = estimate_id(&arena, id, &env).unwrap().score();
+            assert!(
+                floor <= lb && lb <= score,
+                "{}: floor {floor} / bound {lb} / score {score} out of order",
+                v.display_key()
+            );
+        }
     }
 
     #[test]

@@ -10,27 +10,54 @@
 //! `rnz`s of a subdivided reduction are "not differentiated", so 4 HoFs
 //! with two rnzs yield the paper's 12 cases, not 24).
 //!
-//! # The search engine (ISSUE 2–4)
+//! # The search engine (ISSUE 2–7)
 //!
-//! [`enumerate_search`] runs the BFS natively on
-//! [`ExprId`]s: candidate generation ([`try_swap_at_id`]), normalization
-//! (an [`IdRewriter`] over the id-native rule set) and typechecking
-//! ([`crate::typecheck::infer_id`]) all happen inside one concurrent
-//! [`SharedArena`] shared by every worker shard, so `Box<Expr>` trees are
-//! rebuilt only once per *kept* candidate at the output boundary — never
-//! per node per rule probe, and never at a BFS level boundary.
+//! [`enumerate_search`] explores the swap graph **best-first**, natively
+//! on [`ExprId`]s: candidate generation ([`try_swap_at_id`]),
+//! normalization (an [`IdRewriter`] over the id-native rule set) and
+//! typechecking ([`crate::typecheck::infer_id`]) all happen inside one
+//! concurrent [`SharedArena`] shared by every worker shard, so
+//! `Box<Expr>` trees are rebuilt only once per *kept* candidate at the
+//! output boundary — never per node per rule probe, and never at a wave
+//! boundary.
 //!
-//! - **Sharding** — each BFS level's frontier is split round-robin across
-//!   worker shards. All shards build candidates into the *same*
-//!   hash-sharded arena (ISSUE 4), so frontier variants cross shard and
-//!   level boundaries as plain ids: a parent expanded this level was
-//!   interned exactly once, when it was first kept, no matter which shard
-//!   keeps expanding its descendants. Each shard still owns its
-//!   *caches* — normalize memo, typecheck/score/bound maps — all keyed by
-//!   the shared arena's (thread-stable) ids. Every expansion is tagged
+//! - **Best-first waves (ISSUE 7)** — open nodes live in a priority
+//!   frontier ordered by `(bound_bits, seq)`: the total-order bits of the
+//!   memoized [`crate::costmodel::spine_lower_bound_id`] first, discovery
+//!   sequence as the deterministic tie-break. Each iteration pops the
+//!   [`EXPANSION_WAVE`] cheapest nodes (fewer if the heap or the node
+//!   budget runs short) and expands them as one wave. The wave size is a
+//!   constant — *not* the shard count — and the shared best-known score
+//!   moves only in the serial merge between waves, so wave composition,
+//!   expansion thresholds, dedup, and output order are all
+//!   shard-count-independent. Expanding cheapest-bound-first tightens the
+//!   branch-and-bound cut fastest and is what makes truncated runs
+//!   meaningful: the open frontier's bounds certify how far the
+//!   best-so-far can be from the true optimum.
+//! - **Anytime (ISSUE 7)** — [`SearchOptions::budget`] caps expanded
+//!   nodes (waves shrink to land on it exactly, so the expansion sets of
+//!   two budgets are nested prefixes) and [`SearchOptions::deadline`]
+//!   cancels in-flight shard work cooperatively through the same shared
+//!   atomic the branch-and-bound consults ([`SearchBound`]); a cancelled
+//!   wave is discarded whole and its nodes return to the frontier.
+//!   Truncated or not, the run reports a **certified optimality gap**
+//!   ([`SearchStats::certified_gap`]): `best_score` divided by the
+//!   minimum [`crate::costmodel::spine_reachable_floor_id`] over the open
+//!   frontier — the *rearrangement-invariant* floor, which bounds every
+//!   family member still reachable through the connected swap graph
+//!   (the sensitive expansion bound deliberately does not). Gap `1.0`
+//!   means the frontier drained: the winner is exhaustively optimal.
+//! - **Sharding** — each wave is split round-robin across worker shards.
+//!   All shards build candidates into the *same* hash-sharded arena
+//!   (ISSUE 4), so frontier variants cross shard and wave boundaries as
+//!   plain ids: a parent expanded this wave was interned exactly once,
+//!   when it was first discovered, no matter which shard keeps expanding
+//!   its descendants. Each shard still owns its *caches* — normalize
+//!   memo, typecheck/score/bound/floor maps — all keyed by the shared
+//!   arena's (thread-stable) ids. Every expansion is tagged
 //!   `(shard, seq)` and the deterministic merge orders candidates by
-//!   frontier tag, parents in frontier order and children in swap-depth
-//!   order, so the result order is identical to the serial queue BFS no
+//!   wave tag, parents in wave order and children in swap-depth order,
+//!   so the result order is identical to the serial best-first walk no
 //!   matter how many shards run or how they were scheduled.
 //! - **Scoring** — with [`SearchOptions::score`] set (implied by
 //!   pruning), candidates are lowered and cost-estimated *in the arena*
@@ -45,15 +72,20 @@
 //!   compared against `slack × best-known-score` (an atomic shared across
 //!   shards). A candidate whose bound exceeds the threshold is cut
 //!   before it is kept: never lowered, never scored, never extracted,
-//!   excluded from the result set. Cut candidates *do* remain expansion
-//!   sources — the swap graph stays connected, so reachability (and with
-//!   it the winner) is preserved by construction, not by luck: since the
-//!   bound never exceeds the true score, the eventual winner always
-//!   satisfies `bound ≤ score ≤ best-known` and can never be cut at the
-//!   default slack ([`DEFAULT_PRUNE_SLACK`] = 1.0). The bound only
-//!   tightens at level boundaries, so pruning decisions stay
-//!   deterministic under any shard count. (Its partial descent also
-//!   makes it sound on raw, mid-rewrite exchange output —
+//!   excluded from the result set. The merge step *rechecks* survivors
+//!   against the freshest bound (scores merged earlier in the same wave
+//!   may have tightened it), so best-first ordering strictly increases
+//!   cut counts over the old level-synchronous walk. Cut candidates *do*
+//!   remain expansion sources — the swap graph stays connected, so
+//!   reachability (and with it the winner) is preserved by construction,
+//!   not by luck: since the bound never exceeds the true score, the
+//!   eventual winner always satisfies `bound ≤ score ≤ best-known` and
+//!   can never be cut at the default slack ([`DEFAULT_PRUNE_SLACK`] =
+//!   1.0). The bound only tightens at wave boundaries (expansion) and
+//!   between merged children (recheck), both serial and
+//!   shard-count-independent, so pruning decisions stay deterministic
+//!   under any shard count. (The bound's partial descent also makes it
+//!   sound on raw, mid-rewrite exchange output —
 //!   `tests/lower_id_props.rs` pins `bound(raw) ≤ score(normalize(raw))`
 //!   — which is what would let a future engine gate generation itself;
 //!   this engine consults it post-normalization only, where the read is
@@ -66,6 +98,13 @@
 //!   different ids, which would break the paper's 6/12 counts — the
 //!   per-shard typecheck cache is what keys on `ExprId`.)
 //!
+//! Exhaustive, pruned, and budget-truncated runs all share **one**
+//! discovery sequence (priorities are structural bounds, computed whether
+//! or not the cut is armed), so a pruned result is a subsequence of the
+//! exhaustive one and a truncated result is a prefix-expansion of a
+//! larger budget's — the properties `tests/search_props.rs` and
+//! `tests/anytime_props.rs` pin.
+//!
 //! The seed `Box<Expr>` expansion path is kept alive behind
 //! [`crate::dsl::intern::with_memo_disabled`] and the differential tests
 //! hold both engines to identical variant sets and orders.
@@ -75,14 +114,16 @@ pub mod starts;
 
 pub use sjt::sjt_permutations;
 
-use crate::costmodel::{estimate_id, spine_lower_bound_id};
+use crate::costmodel::{estimate_id, spine_lower_bound_id, spine_reachable_floor_id};
 use crate::dsl::intern::{memo_enabled, ExprId, Node, SharedArena};
 use crate::dsl::Expr;
 use crate::rewrite::{exchange, normalize, normalize_id_rules, Ctx, IdRewriter};
 use crate::typecheck::Env;
 use crate::{Error, Result};
-use std::collections::{HashMap, HashSet};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Instant;
 
 /// One rearrangement of the computation: the expression plus the spine
 /// labels from outermost to innermost (`["mapA", "rnz", "mapB"]` reads as
@@ -314,7 +355,30 @@ pub const DEFAULT_PRUNE_SLACK: f64 = 1.0;
 /// the *effective* (post-clamp) count.
 pub const MAX_SEARCH_SHARDS: usize = 8;
 
+/// How many frontier nodes one best-first wave expands (fewer when the
+/// heap or the remaining [`SearchOptions::budget`] runs short). The value
+/// is [`MAX_SEARCH_SHARDS`] so every CI shard width runs at full fan-out —
+/// but it is deliberately a **constant, not the shard count**: wave
+/// composition (and with it every expansion threshold, dedup decision,
+/// and the output order) must be identical at `shards` 1, 2, and 8 for
+/// the deterministic-merge contract to survive best-first ordering.
+pub const EXPANSION_WAVE: usize = MAX_SEARCH_SHARDS;
+
 /// Knobs for [`enumerate_search`].
+///
+/// # The three caps, and how they compose
+///
+/// - [`limit`](Self::limit) caps **discovered** candidates (kept +
+///   bound-cut) — the result-set/memory cap.
+/// - [`budget`](Self::budget) caps **expanded** frontier nodes — the work
+///   cap of the anytime search (`0` = unlimited).
+/// - [`deadline`](Self::deadline) caps **wall-clock time**, cancelling
+///   in-flight shard work cooperatively.
+///
+/// Whichever binds first truncates the search; any truncation is reported
+/// uniformly through [`SearchStats::complete`] (false) and a certified
+/// gap > 1.0, so callers never need to know *which* cap fired to trust
+/// the result.
 #[derive(Clone, Copy, Debug)]
 pub struct SearchOptions {
     /// Stop once this many candidates have been *discovered* (kept +
@@ -324,7 +388,11 @@ pub struct SearchOptions {
     /// sources, so a kept-only cap would let a heavily-cut search walk
     /// arbitrarily far past it). Pruned and exhaustive searches share one
     /// discovery sequence, so a binding limit truncates both at the same
-    /// prefix and winner parity is preserved.
+    /// prefix and winner parity is preserved. Contrast with [`budget`]:
+    /// `limit` bounds how many candidates the search may *hold*, `budget`
+    /// bounds how many it may *expand*.
+    ///
+    /// [`budget`]: Self::budget
     pub limit: usize,
     /// Worker shards for frontier expansion: `1` = serial, `0` = auto
     /// (one per available core). Both the auto path and explicit counts
@@ -340,10 +408,26 @@ pub struct SearchOptions {
     /// never loses the eventual winner. `None` keeps the search
     /// exhaustive.
     pub prune_slack: Option<f64>,
-    /// Score candidates with the analytic cost model during the BFS and
-    /// return the scores (implied by `prune_slack`; the pipeline reuses
-    /// them as the ranking, skipping a second scoring pass).
+    /// Score candidates with the analytic cost model during the search
+    /// and return the scores (implied by `prune_slack`; the pipeline
+    /// reuses them as the ranking, skipping a second scoring pass).
     pub score: bool,
+    /// Anytime node budget: stop after this many frontier expansions
+    /// (`0` = unlimited). Enforced exactly — the final wave shrinks to
+    /// land on it — so the expansion sets of two budgets are nested
+    /// prefixes of one deterministic sequence, which is what makes the
+    /// certified gap monotone non-increasing in the budget
+    /// (`tests/anytime_props.rs`). With an unlimited budget (and no
+    /// deadline or binding [`limit`](Self::limit)) the frontier drains
+    /// and the result is bit-identical to the exhaustive search.
+    pub budget: usize,
+    /// Wall-clock deadline. Checked between waves and cooperatively
+    /// inside shard expansion (through the shared [`SearchBound`]
+    /// cancellation flag, so a deadline *cancels* in-flight shard work
+    /// rather than waiting it out). A cancelled wave is discarded whole
+    /// and its nodes return to the open frontier, keeping the certified
+    /// gap sound. `None` = no deadline.
+    pub deadline: Option<Instant>,
 }
 
 impl Default for SearchOptions {
@@ -353,6 +437,8 @@ impl Default for SearchOptions {
             shards: 0,
             prune_slack: None,
             score: false,
+            budget: 0,
+            deadline: None,
         }
     }
 }
@@ -393,9 +479,38 @@ pub struct SearchStats {
     /// start is never extracted, duplicates are deduped before
     /// extraction) and equals the shared arena's
     /// [`SharedArena::extractions`] counter — the per-candidate
-    /// score/lower path never extracts, and nothing is extracted at BFS
-    /// level boundaries.
+    /// score/lower path never extracts, and nothing is extracted at wave
+    /// boundaries.
     pub extracted_per_shard: Vec<u64>,
+    /// Certified optimality gap: `best_score / min_open_floor`, where the
+    /// denominator is the minimum rearrangement-invariant floor
+    /// ([`crate::costmodel::spine_reachable_floor_id`]) over everything
+    /// still unexplored. Always ≥ 1.0; exactly `1.0` iff the frontier
+    /// drained ([`complete`](Self::complete)) — the winner is then
+    /// exhaustively optimal. `+∞` when the run was truncated without
+    /// scoring enabled (no best-known score exists to certify). Under
+    /// pruning the certificate additionally assumes
+    /// [`SearchOptions::prune_slack`] ≥ 1.0 — a sub-1.0 slack
+    /// deliberately discards candidates that provably score *better* than
+    /// the best in hand, which no frontier bound can account for.
+    pub certified_gap: f64,
+    /// The gap denominator: minimum invariant floor over the open
+    /// frontier (falling back to the family floor when a binding
+    /// [`SearchOptions::limit`] dropped children the heap no longer
+    /// tracks). `+∞` when the search completed — nothing is open.
+    pub min_open_bound: f64,
+    /// Open (discovered but unexpanded) frontier nodes left behind by a
+    /// truncated run; `0` when the search completed.
+    pub frontier_open: usize,
+    /// The frontier drained with nothing dropped: the result set is
+    /// exhaustive (up to pruning, which preserves the winner) and the
+    /// certified gap is exactly `1.0`.
+    pub complete: bool,
+    /// The node budget stopped expansion before the frontier drained.
+    pub budget_hit: bool,
+    /// The deadline stopped expansion (between waves, or by cancelling an
+    /// in-flight wave) before the frontier drained.
+    pub deadline_hit: bool,
 }
 
 impl SearchStats {
@@ -415,25 +530,36 @@ pub struct SearchResult {
     pub stats: SearchStats,
 }
 
-/// The shared best-known score: an `f64` min over an atomic word, the
-/// bound every shard consults when pruning.
-struct AtomicScore(AtomicU64);
+/// The shared search state every shard consults: the best-known score (an
+/// `f64` min over an atomic word — the branch-and-bound threshold) plus
+/// the cooperative cancellation flag the anytime deadline rides on. One
+/// structure on purpose: a shard that is already polling the bound costs
+/// nothing extra to also notice a cancellation, which is how a deadline
+/// *cancels* in-flight expansion work instead of waiting for the wave to
+/// finish.
+pub struct SearchBound {
+    best: AtomicU64,
+    cancelled: AtomicBool,
+}
 
-impl AtomicScore {
+impl SearchBound {
     fn new(v: f64) -> Self {
-        AtomicScore(AtomicU64::new(v.to_bits()))
+        SearchBound {
+            best: AtomicU64::new(v.to_bits()),
+            cancelled: AtomicBool::new(false),
+        }
     }
 
     fn get(&self) -> f64 {
-        f64::from_bits(self.0.load(Ordering::Relaxed))
+        f64::from_bits(self.best.load(Ordering::Relaxed))
     }
 
     /// Lower the bound to `v` if `v` is smaller; returns whether the
     /// bound actually tightened.
     fn fetch_min(&self, v: f64) -> bool {
-        let mut cur = self.0.load(Ordering::Relaxed);
+        let mut cur = self.best.load(Ordering::Relaxed);
         while v < f64::from_bits(cur) {
-            match self.0.compare_exchange_weak(
+            match self.best.compare_exchange_weak(
                 cur,
                 v.to_bits(),
                 Ordering::Relaxed,
@@ -444,6 +570,30 @@ impl AtomicScore {
             }
         }
         false
+    }
+
+    /// Request cooperative cancellation of the current wave (deadline
+    /// expiry). Sticky for the rest of the search — the driver breaks out
+    /// of the wave loop as soon as the wave is discarded.
+    fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+}
+
+/// Map a non-NaN `f64` to a `u64` whose unsigned order matches the float
+/// order — the priority-heap key for a node's lower bound. Bounds are
+/// finite and non-negative in practice, but the transform is total-order
+/// correct for any sign so a surprising bound can never corrupt the heap.
+fn order_bits(x: f64) -> u64 {
+    let b = x.to_bits();
+    if b & (1 << 63) != 0 {
+        !b
+    } else {
+        b | (1 << 63)
     }
 }
 
@@ -497,6 +647,13 @@ struct Child {
     /// lowered, scored, or extracted) but still enqueued as an expansion
     /// source.
     cut: bool,
+    /// Rearrangement-sensitive lower bound — the child's expansion
+    /// priority, and what the merge step rechecks against the freshest
+    /// best-known score.
+    bound: f64,
+    /// Rearrangement-invariant floor — the child's contribution to the
+    /// certified-gap denominator while it stays unexpanded.
+    floor: f64,
 }
 
 /// One BFS frontier entry. Distinct from the kept [`Variant`] set: cut
@@ -510,6 +667,9 @@ struct FrontierNode {
     labels: Vec<String>,
     id: ExprId,
     src: ExprSrc,
+    /// Rearrangement-invariant floor, kept on the node so a truncated run
+    /// can take the minimum over whatever is still open in the heap.
+    floor: f64,
 }
 
 /// Where a [`FrontierNode`]'s labels and (seed-path) tree live.
@@ -561,6 +721,9 @@ struct Shard {
     /// a candidate reached along several swap paths pays the spine walk
     /// once.
     bounded: HashMap<ExprId, f64>,
+    /// Rearrangement-invariant floor per interned candidate (the
+    /// certified-gap denominator), memoized like `bounded`.
+    floored: HashMap<ExprId, f64>,
 }
 
 impl Shard {
@@ -570,6 +733,7 @@ impl Shard {
             checked: HashMap::new(),
             scored: HashMap::new(),
             bounded: HashMap::new(),
+            floored: HashMap::new(),
         }
     }
 
@@ -584,21 +748,30 @@ impl Shard {
     /// it interns each child once so the typecheck/score caches work
     /// identically.
     ///
-    /// With pruning on, each candidate's lower bound is consulted once,
-    /// on the normalized id, before any scoring work. A bound exceeding
-    /// `slack × best` cuts the candidate — it is returned with
-    /// [`Child::cut`] set and is never lowered, scored, or extracted.
-    /// (The bound's partial descent also makes it meaningful on the raw,
-    /// unnormalized exchange output — `tests/lower_id_props.rs` pins
-    /// `bound(raw) ≤ score(normalize(raw))` — but consulting it there
-    /// buys nothing on this path: the raw read never exceeds the refined
-    /// one, cannot be memoized across swap paths, and normalization runs
-    /// regardless because cut candidates re-enter the frontier as
-    /// normalized ids.) The shared bound only moves at level boundaries,
-    /// so the read is the same in every shard — pruning is deterministic
+    /// Every candidate's lower bound (and invariant floor) is computed
+    /// once, on the normalized id, before any scoring work — the bound is
+    /// the child's best-first priority, so it is needed whether or not
+    /// the cut is armed (which is also what keeps exhaustive, pruned, and
+    /// truncated runs on one discovery sequence). With pruning on, a
+    /// bound exceeding `slack × best` cuts the candidate — it is returned
+    /// with [`Child::cut`] set and is never lowered, scored, or
+    /// extracted. (The bound's partial descent also makes it meaningful
+    /// on the raw, unnormalized exchange output —
+    /// `tests/lower_id_props.rs` pins `bound(raw) ≤
+    /// score(normalize(raw))` — but consulting it there buys nothing on
+    /// this path: the raw read never exceeds the refined one, cannot be
+    /// memoized across swap paths, and normalization runs regardless
+    /// because cut candidates re-enter the frontier as normalized ids.)
+    /// The shared bound only moves in the serial merge between waves, so
+    /// the read is the same in every shard — pruning is deterministic
     /// under any shard count — and since the bound never exceeds the
     /// candidate's true score, the default slack (1.0) can never cut the
     /// eventual winner.
+    ///
+    /// A `deadline` in the past trips the shared cancellation flag; a
+    /// cancelled expansion bails out between swap depths. The driver
+    /// discards the whole wave in that case, so partial expansions never
+    /// leak into the result.
     #[allow(clippy::too_many_arguments)]
     fn expand(
         &mut self,
@@ -610,9 +783,15 @@ impl Shard {
         id_native: bool,
         scoring: bool,
         slack: Option<f64>,
-        bound: &AtomicScore,
+        deadline: Option<Instant>,
+        bound: &SearchBound,
     ) -> Expansion {
         let mut exp = Expansion::default();
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                bound.cancel();
+            }
+        }
         let threshold = slack.map(|sl| sl * bound.get());
         // Kept parents read their labels (and, on the seed engine, their
         // tree) from the kept set by index; cut parents carry them
@@ -627,6 +806,12 @@ impl Shard {
             ExprSrc::Owned(e) => (&node.labels, Some(e)),
         };
         for d in 0..n.saturating_sub(1) {
+            // Cooperative cancellation point: a deadline hit by any shard
+            // (or by the driver) stops the remaining swap depths — the
+            // wave is being discarded anyway.
+            if bound.is_cancelled() {
+                break;
+            }
             // The id-native engine is the production path; the seed
             // `Box<Expr>` path stays reachable via `with_memo_disabled`
             // for differential testing. The flag is sampled once on the
@@ -661,21 +846,30 @@ impl Shard {
                 exp.type_rejects += 1;
                 continue;
             }
-            // The bound gate, before any scoring work (cached — a
-            // candidate reached along several swap paths pays the spine
-            // walk once).
-            let cut = match threshold {
-                Some(t) => {
-                    let lb = match self.bounded.get(&nid) {
-                        Some(&lb) => lb,
-                        None => {
-                            let lb = spine_lower_bound_id(arena, nid, ctx);
-                            self.bounded.insert(nid, lb);
-                            lb
-                        }
-                    };
-                    lb > t
+            // The lower bound is the child's best-first priority, so it
+            // is computed unconditionally (cached — a candidate reached
+            // along several swap paths pays the spine walk once); with
+            // pruning armed it doubles as the cut gate, before any
+            // scoring work. The invariant floor rides the same cache
+            // discipline for the gap denominator.
+            let lb = match self.bounded.get(&nid) {
+                Some(&lb) => lb,
+                None => {
+                    let lb = spine_lower_bound_id(arena, nid, ctx);
+                    self.bounded.insert(nid, lb);
+                    lb
                 }
+            };
+            let floor = match self.floored.get(&nid) {
+                Some(&fl) => fl,
+                None => {
+                    let fl = spine_reachable_floor_id(arena, nid, ctx);
+                    self.floored.insert(nid, fl);
+                    fl
+                }
+            };
+            let cut = match threshold {
+                Some(t) => lb > t,
                 None => false,
             };
             if cut {
@@ -709,6 +903,8 @@ impl Shard {
                     expr: extracted,
                     nid,
                     cut,
+                    bound: lb,
+                    floor,
                 },
                 score,
             ));
@@ -717,32 +913,36 @@ impl Shard {
     }
 }
 
-/// Expand a whole frontier level across the shard pool, returning one
-/// [`Expansion`] per parent **in frontier order**: parents are dealt
+/// Expand one best-first wave across the shard pool, returning one
+/// [`Expansion`] per parent **in wave order**: parents are dealt
 /// round-robin, every expansion is tagged `(shard, seq)` by the worker
 /// that produced it, and the merge sorts on the `seq` tag — so the output
-/// order is independent of thread scheduling. All shards expand against
-/// the one shared arena; parents arrive as plain ids.
+/// order is independent of thread scheduling (and, the wave having been
+/// composed shard-count-independently, of the shard count too). All
+/// shards expand against the one shared arena; parents arrive as plain
+/// ids.
 #[allow(clippy::too_many_arguments)]
 fn parallel_expand(
     shards: &mut [Shard],
     arena: &SharedArena,
-    frontier: &[FrontierNode],
+    wave: &[&FrontierNode],
     out: &[Variant],
     n: usize,
     ctx: &Ctx,
     scoring: bool,
     slack: Option<f64>,
-    bound: &AtomicScore,
+    deadline: Option<Instant>,
+    bound: &SearchBound,
 ) -> Result<Vec<Expansion>> {
     let nshards = shards.len();
-    let mut all: Vec<Expansion> = Vec::with_capacity(frontier.len());
+    let mut all: Vec<Expansion> = Vec::with_capacity(wave.len());
     let mut panicked = false;
     std::thread::scope(|s| {
         let mut handles = Vec::new();
         for (k, shard) in shards.iter_mut().enumerate() {
-            let parents: Vec<(usize, &FrontierNode)> = frontier
+            let parents: Vec<(usize, &FrontierNode)> = wave
                 .iter()
+                .copied()
                 .enumerate()
                 .filter(|(i, _)| i % nshards == k)
                 .collect();
@@ -753,8 +953,8 @@ fn parallel_expand(
                 parents
                     .into_iter()
                     .map(|(i, nd)| {
-                        let mut exp =
-                            shard.expand(arena, nd, out, n, ctx, true, scoring, slack, bound);
+                        let mut exp = shard
+                            .expand(arena, nd, out, n, ctx, true, scoring, slack, deadline, bound);
                         exp.shard = k;
                         exp.seq = i;
                         exp
@@ -772,18 +972,24 @@ fn parallel_expand(
     if panicked {
         return Err(Error::Rewrite("search shard panicked".into()));
     }
-    // Deterministic merge: order by the frontier tag, exactly the serial
+    // Deterministic merge: order by the wave tag, exactly the serial
     // parent order.
     all.sort_by_key(|e| e.seq);
-    debug_assert_eq!(all.len(), frontier.len(), "every parent expanded once");
+    debug_assert_eq!(all.len(), wave.len(), "every parent expanded once");
     Ok(all)
 }
 
-/// Breadth-first enumeration of rearrangements reachable by adjacent
-/// exchanges, sharded across a worker pool and (optionally) pruned by a
-/// shared cost bound. Every returned variant typechecks under `ctx.env`;
-/// the result order is the serial BFS discovery order regardless of shard
-/// count or pruning settings.
+/// Best-first, anytime enumeration of rearrangements reachable by
+/// adjacent exchanges, sharded across a worker pool and (optionally)
+/// pruned by a shared cost bound. Expansion is ordered by the memoized
+/// rearrangement-sensitive lower bound (deterministic tie-break on
+/// discovery sequence) in constant-size waves, so the result order is the
+/// serial best-first discovery order regardless of shard count, pruning,
+/// budget, or deadline settings. Every returned variant typechecks under
+/// `ctx.env`. With no binding budget/deadline/limit the frontier drains
+/// and the result is exhaustive ([`SearchStats::complete`], certified gap
+/// exactly `1.0`); a truncated run returns the best-so-far prefix plus a
+/// sound gap certificate (see [`SearchStats::certified_gap`]).
 pub fn enumerate_search(
     start: &Variant,
     ctx: &Ctx,
@@ -842,23 +1048,39 @@ pub fn enumerate_search(
     let mut seen: HashSet<Vec<u8>> = HashSet::new();
     seen.insert(label_key(&start.labels, &mut tokens));
     let mut out: Vec<Variant> = vec![start.clone()];
-    // The BFS frontier, separate from the kept set since the cut started
-    // firing: every deduplicated, typechecked candidate — kept or cut —
-    // becomes an expansion source (cut nodes cross levels as plain ids
-    // and never grow a tree), so pruning can never disconnect the swap
-    // graph from the eventual winner. A discovered candidate is interned
-    // exactly once in its whole life; the next level reads it back from
-    // here.
-    let mut frontier: Vec<FrontierNode> = vec![FrontierNode {
+    // Every discovered candidate — kept or cut — becomes a frontier node
+    // and an expansion source (cut nodes cross waves as plain ids and
+    // never grow a tree), so pruning can never disconnect the swap graph
+    // from the eventual winner. A discovered candidate is interned
+    // exactly once in its whole life; later waves read it back from here.
+    let start_bound = spine_lower_bound_id(&arena, start_id, ctx);
+    shards[0].bounded.insert(start_id, start_bound);
+    let start_floor = spine_reachable_floor_id(&arena, start_id, ctx);
+    shards[0].floored.insert(start_id, start_floor);
+    let mut nodes: Vec<FrontierNode> = vec![FrontierNode {
         labels: Vec::new(),
         id: start_id,
         src: ExprSrc::Kept(0),
+        floor: start_floor,
     }];
+    // The best-first priority frontier: `(bound_bits, seq)` min-heap.
+    // Discovery sequence (== index into `nodes`) breaks bound ties, so
+    // pop order is a deterministic function of the discovery sequence —
+    // which is itself deterministic, waves being merged serially in wave
+    // order.
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    heap.push(Reverse((order_bits(start_bound), 0)));
+    // Running min over every invariant floor ever seen — the gap
+    // denominator of last resort when a binding `limit` dropped children
+    // the heap no longer tracks. (The floor is family-invariant, so any
+    // one member's floor bounds every reachable member.)
+    let mut global_floor = start_floor;
+    let mut dropped = false;
     let mut scores: Vec<f64> = Vec::new();
     if let Some(s) = start_score {
         scores.push(s);
     }
-    let bound = AtomicScore::new(start_score.unwrap_or(f64::INFINITY));
+    let shared = SearchBound::new(start_score.unwrap_or(f64::INFINITY));
     let mut stats = SearchStats {
         shards: threads,
         ..Default::default()
@@ -867,33 +1089,64 @@ pub fn enumerate_search(
     // coordinator's Metrics merge never depends on which shards happened
     // to generate kept candidates.
     let mut extracted_per_shard = vec![0u64; threads];
-    let mut level = 0..1usize;
+    let budget = if opts.budget == 0 {
+        usize::MAX
+    } else {
+        opts.budget
+    };
 
-    // The limit caps *discovered* candidates (`frontier` — in exhaustive
-    // mode identical to the kept set), so pruned searches cannot walk
-    // arbitrarily far past it through cut expansion sources.
-    while !level.is_empty() && frontier.len() < opts.limit {
-        stats.expanded += level.len();
+    loop {
+        if heap.is_empty() {
+            break;
+        }
+        // The limit caps *discovered* candidates (`nodes` — in exhaustive
+        // mode identical to the kept set), so pruned searches cannot walk
+        // arbitrarily far past it through cut expansion sources.
+        if nodes.len() >= opts.limit {
+            break;
+        }
+        if stats.expanded >= budget {
+            stats.budget_hit = true;
+            break;
+        }
+        if opts.deadline.is_some_and(|d| Instant::now() >= d) {
+            stats.deadline_hit = true;
+            break;
+        }
+        // Pop one wave of the cheapest open nodes. The wave shrinks to
+        // land on the budget exactly, so expansion sets at different
+        // budgets are nested prefixes of one deterministic sequence.
+        let take = EXPANSION_WAVE
+            .min(budget - stats.expanded)
+            .min(heap.len());
+        let mut wave: Vec<(u64, usize)> = Vec::with_capacity(take);
+        for _ in 0..take {
+            let Reverse(k) = heap.pop().expect("heap len checked");
+            wave.push(k);
+        }
         let expansions: Vec<Expansion> = {
-            let nodes = &frontier[level.clone()];
+            let wave_nodes: Vec<&FrontierNode> =
+                wave.iter().map(|&(_, i)| &nodes[i]).collect();
             let kept: &[Variant] = &out;
-            if threads > 1 && nodes.len() > 1 {
+            if threads > 1 && wave_nodes.len() > 1 {
                 parallel_expand(
                     &mut shards,
                     &arena,
-                    nodes,
+                    &wave_nodes,
                     kept,
                     n,
                     ctx,
                     scoring,
                     opts.prune_slack,
-                    &bound,
+                    opts.deadline,
+                    &shared,
                 )?
             } else {
-                nodes
+                wave_nodes
                     .iter()
-                    .map(|nd| {
-                        shards[0].expand(
+                    .enumerate()
+                    .map(|(i, nd)| {
+                        let mut exp = shards[0].expand(
                             &arena,
                             nd,
                             kept,
@@ -902,56 +1155,100 @@ pub fn enumerate_search(
                             id_native,
                             scoring,
                             opts.prune_slack,
-                            &bound,
-                        )
+                            opts.deadline,
+                            &shared,
+                        );
+                        exp.seq = i;
+                        exp
                     })
                     .collect()
             }
         };
-        // Deterministic merge: parents in frontier (seq-tag) order,
-        // children in swap-depth order — exactly the serial queue BFS
-        // sequence.
-        let level_start = frontier.len();
+        if shared.is_cancelled() {
+            // The deadline tripped mid-wave: discard the partial
+            // expansions entirely and return the wave to the open
+            // frontier, so the gap certificate still covers everything
+            // the truncated run did not explore.
+            for (bits, i) in wave {
+                heap.push(Reverse((bits, i)));
+            }
+            stats.deadline_hit = true;
+            break;
+        }
+        stats.expanded += wave.len();
+        // Deterministic merge: parents in wave (seq-tag) order, children
+        // in swap-depth order — exactly the serial best-first sequence.
         for exp in expansions {
-            // Count the whole level's work even past the limit — the
-            // shards already did it; only *keeping* stops (mirroring the
-            // serial per-pop limit check for the kept set).
+            // Count the whole wave's work even past the limit — the
+            // shards already did it; only *keeping* stops.
             stats.generated += exp.generated;
             stats.pruned += exp.pruned;
             stats.type_rejects += exp.type_rejects;
-            if frontier.len() >= opts.limit {
-                continue;
-            }
             for (child, s) in exp.children {
-                if let Some(s) = s {
-                    if bound.fetch_min(s) {
+                let key = label_key(&child.labels, &mut tokens);
+                if !seen.insert(key) {
+                    continue;
+                }
+                global_floor = global_floor.min(child.floor);
+                if nodes.len() >= opts.limit {
+                    // Discovered but dropped: the heap will not track it,
+                    // so the end-of-search gap must fall back to the
+                    // family floor.
+                    dropped = true;
+                    continue;
+                }
+                // Merge-time cut recheck: scores merged earlier in this
+                // very wave may have tightened the shared bound past what
+                // the expansion threshold saw. Serial and in merge order,
+                // so still deterministic and shard-count-independent —
+                // and still winner-safe at slack 1.0 (`bound ≤ score ≤
+                // best-known` keeps holding however fresh `best-known`
+                // is).
+                let mut cut = child.cut;
+                let mut s = s;
+                if !cut {
+                    if let Some(sl) = opts.prune_slack {
+                        if child.bound > sl * shared.get() {
+                            cut = true;
+                            s = None;
+                            stats.pruned += 1;
+                        }
+                    }
+                }
+                // The shared best only absorbs *kept* scores (after dedup
+                // and the recheck), so the gap numerator is always the
+                // score of a variant actually in the result set — a
+                // duplicate's score is a memoized repeat (no-op here), and
+                // a cut child's score provably exceeds the bound anyway at
+                // slack ≥ 1.0.
+                if let Some(sv) = s {
+                    if shared.fetch_min(sv) {
                         stats.bound_updates += 1;
                     }
                 }
-                let key = label_key(&child.labels, &mut tokens);
-                if seen.insert(key) {
-                    if child.cut {
-                        // Cut candidates stay expansion sources but leave
-                        // the result set — and never cost a tree: the
-                        // seed path keeps the tree the swap already
-                        // built, the id-native path carries just the id.
-                        let src = match child.expr {
-                            Some(e) => ExprSrc::Owned(e),
-                            None => ExprSrc::None,
-                        };
-                        frontier.push(FrontierNode {
-                            labels: child.labels,
-                            id: child.nid,
-                            src,
-                        });
-                        continue;
-                    }
+                let idx = nodes.len();
+                if cut {
+                    // Cut candidates stay expansion sources but leave
+                    // the result set — and never cost a tree: the seed
+                    // path keeps the tree the swap already built, the
+                    // id-native path carries just the id.
+                    let src = match child.expr {
+                        Some(e) => ExprSrc::Owned(e),
+                        None => ExprSrc::None,
+                    };
+                    nodes.push(FrontierNode {
+                        labels: child.labels,
+                        id: child.nid,
+                        src,
+                        floor: child.floor,
+                    });
+                } else {
                     // Output boundary: the one extract per *kept*
                     // candidate — duplicates and cut candidates never
-                    // rebuild a tree, and level boundaries never extract.
+                    // rebuild a tree, and wave boundaries never extract.
                     // Kept labels and trees are moved into `out` and the
-                    // frontier refers back by index, so nothing is cloned
-                    // and the id-native path pays exactly the one
+                    // frontier refers back by index, so nothing is
+                    // cloned and the id-native path pays exactly the one
                     // extraction.
                     let expr = match child.expr {
                         Some(e) => e,
@@ -960,10 +1257,11 @@ pub fn enumerate_search(
                             arena.extract(child.nid)
                         }
                     };
-                    frontier.push(FrontierNode {
+                    nodes.push(FrontierNode {
                         labels: Vec::new(),
                         id: child.nid,
                         src: ExprSrc::Kept(out.len()),
+                        floor: child.floor,
                     });
                     out.push(Variant {
                         expr,
@@ -973,11 +1271,43 @@ pub fn enumerate_search(
                         scores.push(s);
                     }
                 }
+                heap.push(Reverse((order_bits(child.bound), idx)));
             }
         }
-        level = level_start..frontier.len();
     }
     stats.kept = out.len();
+    stats.frontier_open = heap.len();
+    stats.complete =
+        heap.is_empty() && !dropped && !stats.budget_hit && !stats.deadline_hit;
+    // The certified gap: best-known score over the tightest invariant
+    // floor still open. Sound because the floor is rearrangement-
+    // invariant — it bounds not just each open node but every family
+    // member reachable through it (the swap graph is connected), i.e.
+    // everything a longer run could still discover.
+    let min_open = if heap.is_empty() {
+        // Nothing open in the heap; if the run is still incomplete a
+        // binding `limit` dropped children, covered by the family floor.
+        global_floor
+    } else {
+        heap.iter()
+            .map(|&Reverse((_, i))| nodes[i].floor)
+            .fold(f64::INFINITY, f64::min)
+    };
+    stats.min_open_bound = if stats.complete { f64::INFINITY } else { min_open };
+    let best = shared.get();
+    stats.certified_gap = if stats.complete {
+        1.0
+    } else if best.is_finite() && min_open.is_finite() && min_open > 0.0 {
+        // Clamped to strictly-above-1.0: even if the truncated winner
+        // already beats every open floor, only a drained frontier reports
+        // exactly 1.0 — "gap == 1.0 iff complete" is the caller-facing
+        // contract, and rounding up is always sound for an upper bound.
+        (best / min_open).max(1.0 + f64::EPSILON)
+    } else {
+        // No finite best (scoring off) or no usable floor: nothing to
+        // certify.
+        f64::INFINITY
+    };
     debug_assert_eq!(
         extracted_per_shard.iter().sum::<u64>(),
         if id_native { arena.extractions() } else { 0 },
@@ -991,17 +1321,19 @@ pub fn enumerate_search(
     })
 }
 
-/// Breadth-first enumeration of all rearrangements reachable by adjacent
-/// exchanges, deduplicated on the display form. Every returned variant
-/// typechecks under `ctx.env`. Serial and exhaustive — the compatibility
-/// entry point; the pipeline calls [`enumerate_search`] for the sharded,
-/// cost-bounded engine.
+/// Exhaustive enumeration of all rearrangements reachable by adjacent
+/// exchanges, deduplicated on the display form (best-first discovery
+/// order, like everything built on [`enumerate_search`]). Every returned
+/// variant typechecks under `ctx.env`. Serial and unbudgeted — the
+/// compatibility entry point; the pipeline calls [`enumerate_search`] for
+/// the sharded, cost-bounded, anytime engine.
 pub fn enumerate_all(start: &Variant, ctx: &Ctx, limit: usize) -> Result<Vec<Variant>> {
     let opts = SearchOptions {
         limit,
         shards: 1,
         prune_slack: None,
         score: false,
+        ..SearchOptions::default()
     };
     Ok(enumerate_search(start, ctx, &opts)?.variants)
 }

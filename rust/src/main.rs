@@ -33,7 +33,7 @@ fn main() {
 }
 
 fn usage() -> String {
-    "usage:\n  hofdla optimize <file.dsl> --input NAME=DIMxDIM [--rank cost|cachesim] [--subdivide-rnz B] [--top K] [--prune] [--verify]\n  hofdla enumerate --family naive|rnz|maps|rnz2|all [--n N] [--b B]\n  hofdla bench table1|table2|fig3|fig4|fig5|fig6|gpu|baselines|all [--n N] [--b B] [--sim]\n  hofdla run-artifact <name> [--n N]\n  hofdla serve --demo".to_string()
+    "usage:\n  hofdla optimize <file.dsl> --input NAME=DIMxDIM [--rank cost|cachesim] [--subdivide-rnz B] [--top K] [--prune] [--verify] [--budget N] [--deadline-ms MS]\n  hofdla enumerate --family naive|rnz|maps|rnz2|all [--n N] [--b B]\n  hofdla bench table1|table2|fig3|fig4|fig5|fig6|gpu|baselines|all [--n N] [--b B] [--sim]\n  hofdla run-artifact <name> [--n N]\n  hofdla serve --demo".to_string()
 }
 
 fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
@@ -44,6 +44,12 @@ fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
 }
 
 fn flag_usize(args: &[String], name: &str, default: usize) -> usize {
+    flag_value(args, name)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn flag_u64(args: &[String], name: &str, default: u64) -> u64 {
     flag_value(args, name)
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
@@ -86,6 +92,8 @@ fn run(args: &[String]) -> hofdla::Result<()> {
                 top_k: flag_usize(args, "--top", 12),
                 prune: args.iter().any(|a| a == "--prune"),
                 verify: args.iter().any(|a| a == "--verify"),
+                budget: flag_u64(args, "--budget", 0),
+                deadline_ms: flag_u64(args, "--deadline-ms", 0),
             };
             let r = hofdla::coordinator::optimize(&spec)?;
             println!("explored {} rearrangements", r.variants_explored);
@@ -106,6 +114,14 @@ fn run(args: &[String]) -> hofdla::Result<()> {
                 r.stats.bound_updates,
                 r.stats.shards,
                 r.stats.extracted(),
+            );
+            println!(
+                "anytime: gap={:.3} complete={} frontier_open={}{}{}",
+                r.certified_gap,
+                r.stats.complete,
+                r.stats.frontier_open,
+                if r.stats.budget_hit { " (budget hit)" } else { "" },
+                if r.stats.deadline_hit { " (deadline hit)" } else { "" },
             );
             Ok(())
         }
@@ -208,13 +224,28 @@ fn run(args: &[String]) -> hofdla::Result<()> {
                 top_k: 12,
                 prune: false,
                 verify: true,
+                budget: 0,
+                deadline_ms: 0,
+            };
+            let budgeted = OptimizeSpec {
+                budget: 4,
+                ..spec.clone()
             };
             let Response::Optimized(r) = c.call(Request::Optimize(spec))? else {
                 return Err(err("optimize job returned a non-optimize response".into()));
             };
             println!(
-                "explored {} rearrangements; best = {}",
-                r.variants_explored, r.best
+                "explored {} rearrangements; best = {} (gap {:.3})",
+                r.variants_explored, r.best, r.certified_gap
+            );
+            // Anytime flavor: the same job under a 4-expansion budget still
+            // returns a winner, now with a certified optimality gap.
+            let Response::Optimized(b) = c.call(Request::Optimize(budgeted))? else {
+                return Err(err("optimize job returned a non-optimize response".into()));
+            };
+            println!(
+                "budgeted (4 expansions): best = {} gap={:.3} complete={}",
+                b.best, b.certified_gap, b.stats.complete
             );
             println!("metrics: {}", c.metrics.summary());
             Ok(())

@@ -1,0 +1,308 @@
+//! Property tests for the best-first anytime search (ISSUE 7):
+//!
+//! - **infinite budget ≡ exhaustive**: with no budget/deadline the
+//!   best-first engine returns the exhaustive winner bit-identically at
+//!   the lowered `Program` level, at shard counts 1/2/8, pruned or not,
+//!   on the n=64 / b=4 acceptance workload;
+//! - **gap monotonicity**: over budgets 1..=full the certified gap is
+//!   monotone non-increasing, the kept sequences are nested prefixes of
+//!   one discovery order, and the final (complete) run reports exactly
+//!   `1.0`;
+//! - **gap semantics**: the gap is always ≥ 1.0 and equals `1.0` iff the
+//!   search completed; truncated runs leave an open frontier behind;
+//! - **gap soundness**: on randomized seeded shapes across the
+//!   subdivided/exchanged families, every truncated run's winner score is
+//!   within `certified_gap ×` the family's true optimum;
+//! - **deadline**: an already-expired deadline returns the start variant
+//!   immediately with `deadline_hit` set, never hanging.
+
+use hofdla::enumerate::{
+    enumerate_search, starts, SearchOptions, SearchResult, Variant, DEFAULT_PRUNE_SLACK,
+    MAX_SEARCH_SHARDS,
+};
+use hofdla::exec::lower;
+use hofdla::layout::Layout;
+use hofdla::rewrite::Ctx;
+use hofdla::typecheck::Env;
+use hofdla::util::Rng;
+
+/// Shard count under test — the CI matrix sets `SEARCH_SHARDS` (1, 2, 8),
+/// mirroring `tests/search_props.rs`.
+fn shard_count() -> usize {
+    std::env::var("SEARCH_SHARDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(4)
+        .min(MAX_SEARCH_SHARDS)
+}
+
+/// A is n×j, B is j×k, v has length j — the shape convention every start
+/// family typechecks under (divisibility per the subdivided families).
+fn env(n: usize, j: usize, k: usize) -> Env {
+    Env::new()
+        .with("A", Layout::row_major(&[n, j]))
+        .with("B", Layout::row_major(&[j, k]))
+        .with("v", Layout::row_major(&[j]))
+}
+
+/// The subdivided/exchanged families the anytime properties quantify
+/// over (the naive families complete in one wave — no truncation to
+/// exercise).
+fn families() -> Vec<(&'static str, Variant)> {
+    vec![
+        ("matmul-rnz-subdiv", starts::matmul_rnz_subdivided_variant(2)),
+        ("matmul-maps-subdiv", starts::matmul_maps_subdivided_variant(2)),
+        (
+            "matmul-rnz-twice",
+            starts::matmul_rnz_twice_subdivided_variant(2, 2),
+        ),
+        ("matmul-all-subdiv", starts::matmul_all_subdivided_variant(2)),
+        (
+            "matvec-vector-subdiv",
+            starts::matvec_vector_subdivided_variant(2),
+        ),
+    ]
+}
+
+fn scored_opts(shards: usize) -> SearchOptions {
+    SearchOptions {
+        limit: 4096,
+        shards,
+        prune_slack: None,
+        score: true,
+        ..SearchOptions::default()
+    }
+}
+
+/// Index of the winner: first variant attaining the minimum score (the
+/// pipeline's tie-breaking).
+fn best_of(r: &SearchResult) -> usize {
+    let (mut bi, mut bs) = (0usize, f64::INFINITY);
+    for (i, &s) in r.scores.iter().enumerate() {
+        if s < bs {
+            bi = i;
+            bs = s;
+        }
+    }
+    bi
+}
+
+/// ISSUE 7 acceptance (theorem flavor): with an unlimited budget the
+/// best-first engine *is* the exhaustive search — same winner, same
+/// lowered `Program` bit for bit — at shard counts 1, 2 and 8, with the
+/// branch-and-bound cut on or off, on the n=64 / b=4 workload. Every such
+/// run reports `complete` with a certified gap of exactly `1.0`.
+#[test]
+fn infinite_budget_reproduces_exhaustive_winner_across_shards_and_pruning() {
+    let env = Env::new()
+        .with("A", Layout::row_major(&[64, 64]))
+        .with("B", Layout::row_major(&[64, 64]));
+    let ctx = Ctx::new(env.clone());
+    let start = starts::matmul_rnz_subdivided_variant(4);
+    let reference = enumerate_search(&start, &ctx, &scored_opts(1)).unwrap();
+    assert_eq!(reference.variants.len(), 12, "Table 2");
+    let rb = best_of(&reference);
+    let ref_winner = &reference.variants[rb];
+    let ref_prog = format!("{:?}", lower(&ref_winner.expr, &env).unwrap());
+    for shards in [1usize, 2, 8] {
+        for prune in [None, Some(DEFAULT_PRUNE_SLACK)] {
+            let opts = SearchOptions {
+                prune_slack: prune,
+                ..scored_opts(shards)
+            };
+            let r = enumerate_search(&start, &ctx, &opts).unwrap();
+            assert!(
+                r.stats.complete,
+                "shards={shards} prune={prune:?}: unlimited run must drain the frontier"
+            );
+            assert_eq!(
+                r.stats.certified_gap, 1.0,
+                "shards={shards} prune={prune:?}: complete runs certify exactly 1.0"
+            );
+            assert_eq!(r.stats.frontier_open, 0, "shards={shards} prune={prune:?}");
+            let b = best_of(&r);
+            assert_eq!(
+                ref_winner.display_key(),
+                r.variants[b].display_key(),
+                "shards={shards} prune={prune:?}: winner key diverged"
+            );
+            assert_eq!(
+                reference.scores[rb], r.scores[b],
+                "shards={shards} prune={prune:?}: winner score diverged"
+            );
+            let prog = format!("{:?}", lower(&r.variants[b].expr, &env).unwrap());
+            assert_eq!(
+                ref_prog, prog,
+                "shards={shards} prune={prune:?}: winner program diverged"
+            );
+        }
+    }
+}
+
+/// Over budgets 1..=full on one family: the certified gap is monotone
+/// non-increasing (expansion sets at different budgets are nested
+/// prefixes of one deterministic sequence), kept-variant sequences are
+/// nested prefixes too, the gap is ≥ 1.0 throughout and `1.0` exactly
+/// when the run completes — which the final budget does.
+#[test]
+fn certified_gap_is_monotone_in_budget_and_one_exactly_at_completion() {
+    let ctx = Ctx::new(env(4, 8, 4));
+    let start = starts::matmul_rnz_subdivided_variant(2);
+    let full = enumerate_search(&start, &ctx, &scored_opts(shard_count())).unwrap();
+    assert!(full.stats.complete);
+    let total = full.stats.expanded;
+    assert!(total >= 4, "family too small to exercise truncation");
+    let full_keys: Vec<String> = full.variants.iter().map(|v| v.display_key()).collect();
+    let mut prev_gap = f64::INFINITY;
+    for budget in 1..=total {
+        let opts = SearchOptions {
+            budget,
+            ..scored_opts(shard_count())
+        };
+        let r = enumerate_search(&start, &ctx, &opts).unwrap();
+        let gap = r.stats.certified_gap;
+        assert!(gap >= 1.0, "budget={budget}: gap {gap} below 1.0");
+        assert!(
+            gap <= prev_gap,
+            "budget={budget}: gap {gap} rose above the previous budget's {prev_gap}"
+        );
+        prev_gap = gap;
+        assert_eq!(
+            gap == 1.0,
+            r.stats.complete,
+            "budget={budget}: gap must be 1.0 iff the frontier drained"
+        );
+        assert_eq!(
+            r.stats.complete,
+            !r.stats.budget_hit,
+            "budget={budget}: the only truncation cause here is the budget"
+        );
+        if !r.stats.complete {
+            assert!(
+                r.stats.frontier_open > 0,
+                "budget={budget}: a truncated run must leave open nodes"
+            );
+            assert!(r.stats.min_open_bound.is_finite(), "budget={budget}");
+        }
+        // Nested-prefix discovery: the truncated kept sequence is a
+        // prefix of the full run's.
+        let keys: Vec<String> = r.variants.iter().map(|v| v.display_key()).collect();
+        assert!(
+            keys.len() <= full_keys.len() && keys[..] == full_keys[..keys.len()],
+            "budget={budget}: kept sequence is not a prefix of the full run's"
+        );
+        assert_eq!(r.scores[..], full.scores[..keys.len()], "budget={budget}");
+    }
+    assert_eq!(prev_gap, 1.0, "the final budget covers the whole frontier");
+}
+
+/// Budget-truncated runs are deterministic across shard counts: same kept
+/// sequence, bit-identical scores, bit-identical certified gap at shards
+/// 1, 2 and 8 — the wave composition is shard-count-independent.
+#[test]
+fn truncated_runs_are_shard_count_independent() {
+    let ctx = Ctx::new(env(4, 8, 4));
+    let start = starts::matmul_all_subdivided_variant(2);
+    for budget in [1usize, 2, 3, 5] {
+        let mk = |shards: usize| SearchOptions {
+            budget,
+            ..scored_opts(shards)
+        };
+        let serial = enumerate_search(&start, &ctx, &mk(1)).unwrap();
+        let serial_keys: Vec<String> =
+            serial.variants.iter().map(|v| v.display_key()).collect();
+        for shards in [2usize, 8] {
+            let r = enumerate_search(&start, &ctx, &mk(shards)).unwrap();
+            let keys: Vec<String> = r.variants.iter().map(|v| v.display_key()).collect();
+            assert_eq!(serial_keys, keys, "budget={budget} shards={shards}");
+            assert_eq!(serial.scores, r.scores, "budget={budget} shards={shards}");
+            assert_eq!(
+                serial.stats.certified_gap.to_bits(),
+                r.stats.certified_gap.to_bits(),
+                "budget={budget} shards={shards}: gap diverged"
+            );
+            assert_eq!(
+                serial.stats.expanded, r.stats.expanded,
+                "budget={budget} shards={shards}"
+            );
+        }
+    }
+}
+
+/// Gap soundness on randomized seeded shapes across the subdivided
+/// families: a truncated run's winner score never exceeds
+/// `certified_gap ×` the family's true optimum (known from the unlimited
+/// run of the same family).
+#[test]
+fn prop_truncated_winner_is_within_certified_gap_of_true_optimum() {
+    let mut rng = Rng::new(0xa17e);
+    let mut shapes = vec![(4usize, 8usize, 4usize)];
+    for _ in 0..2 {
+        shapes.push((2 * rng.range(1, 4), 8 * rng.range(1, 3), 2 * rng.range(1, 4)));
+    }
+    for (n, j, k) in shapes {
+        let ctx = Ctx::new(env(n, j, k));
+        for (name, start) in families() {
+            let full = enumerate_search(&start, &ctx, &scored_opts(shard_count())).unwrap();
+            assert!(full.stats.complete, "{name} @ {n}x{j}x{k}");
+            let true_opt = full.scores[best_of(&full)];
+            let total = full.stats.expanded;
+            for budget in [1usize, (total / 2).max(1)] {
+                let opts = SearchOptions {
+                    budget,
+                    ..scored_opts(shard_count())
+                };
+                let r = enumerate_search(&start, &ctx, &opts).unwrap();
+                let winner = r.scores[best_of(&r)];
+                let gap = r.stats.certified_gap;
+                assert!(gap >= 1.0, "{name} @ {n}x{j}x{k} budget={budget}");
+                assert!(
+                    winner <= gap * true_opt,
+                    "{name} @ {n}x{j}x{k} budget={budget}: winner {winner} \
+                     escapes gap {gap} × optimum {true_opt}"
+                );
+            }
+        }
+    }
+}
+
+/// An already-expired deadline truncates before the first wave: the start
+/// variant comes back immediately with `deadline_hit` set. With scoring
+/// on the run still certifies a finite gap (the start is scored and the
+/// start's floor is open); with scoring off there is nothing to certify
+/// and the gap is `+∞`.
+#[test]
+fn expired_deadline_returns_start_with_deadline_hit() {
+    let ctx = Ctx::new(env(4, 8, 4));
+    let start = starts::matmul_rnz_subdivided_variant(2);
+    for score in [true, false] {
+        let opts = SearchOptions {
+            limit: 4096,
+            shards: shard_count(),
+            prune_slack: None,
+            score,
+            deadline: Some(std::time::Instant::now()),
+            ..SearchOptions::default()
+        };
+        let r = enumerate_search(&start, &ctx, &opts).unwrap();
+        assert!(r.stats.deadline_hit, "score={score}");
+        assert!(!r.stats.complete, "score={score}");
+        assert_eq!(r.variants.len(), 1, "score={score}: only the start");
+        assert_eq!(r.variants[0].display_key(), start.display_key());
+        assert_eq!(r.stats.expanded, 0, "score={score}");
+        assert!(r.stats.frontier_open > 0, "score={score}");
+        if score {
+            assert!(
+                r.stats.certified_gap.is_finite() && r.stats.certified_gap > 1.0,
+                "score={score}: gap {}",
+                r.stats.certified_gap
+            );
+        } else {
+            assert!(
+                r.stats.certified_gap.is_infinite(),
+                "score={score}: nothing to certify without scores"
+            );
+        }
+    }
+}

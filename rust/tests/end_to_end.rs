@@ -30,6 +30,8 @@ fn service_optimizes_and_executes_under_concurrency() {
             top_k: 12,
             prune: rng.chance(0.5),
             verify: rng.chance(0.5),
+            budget: 0,
+            deadline_ms: 0,
         };
         let expected = if spec.subdivide_rnz.is_some() { 12 } else { 6 };
         let pruned = spec.prune;

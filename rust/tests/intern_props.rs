@@ -209,6 +209,8 @@ fn differential_pipeline_same_ranking_with_and_without_rewrite_memo() {
         top_k: 12,
         prune: false,
         verify: false,
+        budget: 0,
+        deadline_ms: 0,
     };
     let with_intern = optimize(&spec).unwrap();
     let without = with_memo_disabled(|| optimize(&spec)).unwrap();

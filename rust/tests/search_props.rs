@@ -73,6 +73,7 @@ fn differential_id_native_search_matches_box_engine() {
         shards: 1,
         prune_slack: None,
         score: false,
+        ..SearchOptions::default()
     };
     for (name, start) in families() {
         let id_native = enumerate_search(&start, &ctx, &opts).unwrap();
@@ -106,6 +107,7 @@ fn sharded_search_matches_serial() {
         shards: 1,
         prune_slack: None,
         score: true,
+        ..SearchOptions::default()
     };
     let sharded_opts = SearchOptions {
         shards: shard_count(),
@@ -159,6 +161,7 @@ fn prop_default_pruning_preserves_winner_and_survivor_scores() {
         shards: 1,
         prune_slack: None,
         score: true,
+        ..SearchOptions::default()
     };
     let pruned_opts = SearchOptions {
         prune_slack: Some(DEFAULT_PRUNE_SLACK),
@@ -237,6 +240,7 @@ fn default_slack_cuts_deep_subdivided_family_and_keeps_winner() {
             shards: 1,
             prune_slack: None,
             score: true,
+            ..SearchOptions::default()
         },
     )
     .unwrap();
@@ -263,6 +267,7 @@ fn default_slack_cuts_deep_subdivided_family_and_keeps_winner() {
                 shards,
                 prune_slack: Some(DEFAULT_PRUNE_SLACK),
                 score: true,
+                ..SearchOptions::default()
             },
         )
         .unwrap();
@@ -308,6 +313,7 @@ fn tight_slack_actually_prunes() {
         shards: shard_count(),
         prune_slack: Some(1e-9),
         score: true,
+        ..SearchOptions::default()
     };
     let start = starts::matmul_rnz_subdivided_variant(2);
     let r = enumerate_search(&start, &ctx, &opts).unwrap();
@@ -338,6 +344,8 @@ fn pruned_service_pipeline_matches_exhaustive() {
         top_k: 12,
         prune,
         verify: true,
+        budget: 0,
+        deadline_ms: 0,
     };
     let exhaustive = optimize(&mk(false)).unwrap();
     let pruned = optimize(&mk(true)).unwrap();

@@ -150,6 +150,7 @@ fn stressed_shard_counts_reproduce_serial_order_with_boundary_only_extraction() 
         shards: 1,
         prune_slack: None,
         score: true,
+        ..SearchOptions::default()
     };
     for start in [
         starts::matmul_rnz_subdivided_variant(2),

@@ -65,6 +65,7 @@ fn family_programs(n: usize, j: usize, k: usize) -> Vec<(String, Program)> {
         shards: shard_count(),
         prune_slack: None,
         score: false,
+        ..SearchOptions::default()
     };
     let mut out = Vec::new();
     for (name, start) in families() {
