@@ -4,15 +4,17 @@ committed baseline (BENCH_coordinator.baseline.json).
 
 Used by the CI `bench-perf` lane. The lane is non-blocking
 (continue-on-error), and the threshold is deliberately generous: shared
-runners are noisy, so only gross regressions of the cold/warm/pruned
-medians should flag. Beyond the absolute medians, the lane tracks the
-pruned/cold ratio (pruned-vs-exhaustive search time) and the `search`
-block's `pruned_candidates` — the branch-and-bound cut going inert
-(pruning nothing on the bench workload) flags even when wall-clock looks
-fine. Exit codes: 0 = within threshold (or nothing to compare), 1 = at
-least one row regressed beyond THRESHOLD (or the cut went inert), 2 =
-usage error. Stdlib only — the repo's default build is dependency-free
-and CI should be too.
+runners are noisy, so only gross regressions of the tracked medians
+(cold/warm/warm_canonical/pruned/coalesced) should flag. Beyond the
+absolute medians, the lane tracks the pruned/cold ratio
+(pruned-vs-exhaustive search time), the `search` block's
+`pruned_candidates` — the branch-and-bound cut going inert (pruning
+nothing on the bench workload) flags even when wall-clock looks fine —
+and the `sharing` block's canonical hit rate and coalesced count, so the
+cross-request sharing machinery going inert flags too. Exit codes: 0 =
+within threshold (or nothing to compare), 1 = at least one row regressed
+beyond THRESHOLD (or a within-run signal broke), 2 = usage error. Stdlib
+only — the repo's default build is dependency-free and CI should be too.
 """
 
 import json
@@ -27,7 +29,7 @@ THRESHOLD = 3.0
 PRUNED_VS_COLD_THRESHOLD = 1.5
 
 # The rows tracked across PRs (see rust/benches/README.md).
-ROWS = ("cold", "warm", "pruned")
+ROWS = ("cold", "warm", "warm_canonical", "pruned", "coalesced")
 
 
 def rows_by_name(doc):
@@ -153,6 +155,59 @@ def main(argv):
                 "has regressed (see enumerate::spine_lower_bound priorities)"
             )
             regressed.append(f"anytime-{frac}")
+
+    # Cross-request sharing tracking (ISSUE 8): the canonical hit rate
+    # (α-renamed resubmissions answered from the cache, expected 1.0) and
+    # the single-flight coalesced count. A rate of zero, or coalescing
+    # that stopped happening, means the sharing machinery went inert —
+    # the service still answers correctly but re-searches identical
+    # requests, which no wall-clock row on fast hardware reliably
+    # catches. Within-run signals are `broken`; a rate merely below the
+    # committed baseline's is `regressed`. Tolerant of pre-sharing
+    # baselines (no "sharing" block).
+    sharing = current.get("sharing", {})
+    if sharing:
+        rate = sharing.get("canonical_hit_rate")
+        coalesced = sharing.get("coalesced")
+        base_sharing = baseline.get("sharing", {})
+        base_rate = base_sharing.get("canonical_hit_rate")
+        base_note = f"  baseline {base_rate:.2f}" if base_rate is not None else ""
+        print(
+            "sharing: canonical_hit_rate={} coalesced={} exact_hits={} "
+            "canonical_hits={} arena_pool_high_water={}{}".format(
+                rate,
+                coalesced,
+                sharing.get("exact_hits", "?"),
+                sharing.get("canonical_hits", "?"),
+                sharing.get("arena_pool_high_water", "?"),
+                base_note,
+            )
+        )
+        if rate is not None and rate <= 0:
+            print(
+                "advisory: no α-renamed resubmission hit the result cache — "
+                "canonical keying has gone inert (see "
+                "OptimizeSpec::canonical_key / dsl::intern::canonical_hash)"
+            )
+            broken.append("canonical_hit_rate")
+        elif (
+            rate is not None
+            and base_rate is not None
+            and rate < base_rate - 1e-9
+        ):
+            print(
+                f"advisory: canonical hit rate {rate:.2f} fell below the "
+                f"baseline's {base_rate:.2f} — α-equivalent traffic is being "
+                "re-searched"
+            )
+            regressed.append("canonical_hit_rate")
+        if coalesced == 0:
+            print(
+                "advisory: no identical concurrent submissions coalesced on "
+                "the burst workload — single-flight has gone inert (see "
+                "coordinator worker loop)"
+            )
+            broken.append("coalesced")
 
     if regressed:
         print(

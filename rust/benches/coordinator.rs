@@ -11,10 +11,17 @@
 //!   cost cut enabled,
 //! - the *warm* service latency — repeated traffic hits the coordinator's
 //!   result LRU and never re-runs the pipeline,
+//! - the *warm-canonical* service latency — α-renamed resubmissions of
+//!   cached traffic hit through the canonical key (ISSUE 8),
+//! - the *coalesced* burst latency — 8 identical concurrent submissions
+//!   against a flushed cache collapse onto one search (single-flight),
 //! - pipelined submission throughput over the worker pool.
 //!
-//! The cold/warm/pruned rows are also written to `BENCH_coordinator.json`
-//! (nanosecond medians) so the perf trajectory is tracked across PRs.
+//! The cold/warm/warm_canonical/pruned/coalesced rows are also written to
+//! `BENCH_coordinator.json` (nanosecond medians), together with a
+//! `sharing` block (hit split, coalesced count, canonical hit rate, arena
+//! pool high-water), so the perf trajectory — and the sharing machinery
+//! staying live — is tracked across PRs.
 
 use hofdla::bench_support::{bench, fmt_duration, BenchConfig, Measurement};
 use hofdla::coordinator::{self, Config, Coordinator, OptimizeSpec, RankBy, Request, Response};
@@ -33,6 +40,20 @@ fn subdivided_matmul_spec(prune: bool) -> OptimizeSpec {
         verify: true,
         budget: 0,
         deadline_ms: 0,
+    }
+}
+
+/// The same kernel with every binder α-renamed: keys identically to
+/// [`subdivided_matmul_spec`] under the canonical key, so warm service
+/// traffic using this spelling exercises the canonical (not exact) hit
+/// path.
+fn renamed_subdivided_matmul_spec() -> OptimizeSpec {
+    OptimizeSpec {
+        source:
+            "(map (lam (rowOfA) (map (lam (colOfB) (rnz + * rowOfA colOfB)) \
+             (flip 0 (in B)))) (in A))"
+                .into(),
+        ..subdivided_matmul_spec(false)
     }
 }
 
@@ -59,11 +80,26 @@ struct AnytimeRow {
     variants: usize,
 }
 
+/// Cross-request sharing effectiveness for the `sharing` block of the
+/// JSON: the advisory perf lane watches `canonical_hit_rate` (α-renamed
+/// resubmissions answered from the cache, expected 1.0) and `coalesced`
+/// (identical concurrent submissions that waited on one search) so the
+/// sharing machinery going inert flags even when wall-clock rows stay
+/// flat on fast hardware.
+struct SharingRow {
+    exact_hits: u64,
+    canonical_hits: u64,
+    coalesced: u64,
+    canonical_hit_rate: f64,
+    arena_pool_high_water: u64,
+}
+
 fn write_bench_json(
     rows: &[(&str, &Measurement)],
     jobs_per_s: f64,
     search: &SearchRow,
     anytime: &[AnytimeRow],
+    sharing: &SharingRow,
 ) {
     let mut s = String::from(
         "{\n  \"bench\": \"coordinator\",\n  \"workload\": \"matmul n=64 subdivide_rnz=4 (Table 2, 12 variants)\",\n  \"rows\": [\n",
@@ -94,7 +130,15 @@ fn write_bench_json(
             if i + 1 < anytime.len() { "," } else { "" }
         ));
     }
-    s.push_str(&format!("  ],\n  \"jobs_per_s\": {jobs_per_s:.1}\n}}\n"));
+    s.push_str(&format!(
+        "  ],\n  \"sharing\": {{\"exact_hits\": {}, \"canonical_hits\": {}, \"coalesced\": {}, \"canonical_hit_rate\": {:.2}, \"arena_pool_high_water\": {}}},\n",
+        sharing.exact_hits,
+        sharing.canonical_hits,
+        sharing.coalesced,
+        sharing.canonical_hit_rate,
+        sharing.arena_pool_high_water
+    ));
+    s.push_str(&format!("  \"jobs_per_s\": {jobs_per_s:.1}\n}}\n"));
     match std::fs::write("BENCH_coordinator.json", &s) {
         Ok(()) => println!("wrote BENCH_coordinator.json"),
         Err(e) => eprintln!("could not write BENCH_coordinator.json: {e}"),
@@ -191,6 +235,23 @@ fn main() {
         fmt_duration(warm.median)
     );
 
+    // Warm canonical path: α-renamed spellings of the cached kernel are
+    // answered through the canonical key — no parse-identical source, no
+    // fresh search (ISSUE 8 acceptance workload).
+    let renamed = renamed_subdivided_matmul_spec();
+    let warm_canonical = bench("coordinator optimize (warm canonical)", &cfg, || {
+        let Response::Optimized(r) =
+            c.call(Request::Optimize(renamed.clone())).expect("call")
+        else {
+            panic!("wrong response type")
+        };
+        std::hint::black_box(r.variants_explored);
+    });
+    println!(
+        "service (warm canonical) median latency: {}",
+        fmt_duration(warm_canonical.median)
+    );
+
     // Pipelined submission throughput (the batching path).
     let t = std::time::Instant::now();
     let jobs = 64;
@@ -210,11 +271,84 @@ fn main() {
         c.metrics.summary()
     );
 
+    // Coalesced burst: flush the cache, then fire 8 identical concurrent
+    // submissions — single-flight runs one search and fans it out, so the
+    // burst costs about one cold run, not eight.
+    let coalesced_burst = bench("coordinator optimize (coalesced x8 burst)", &cfg, || {
+        c.flush_opt_cache();
+        let handles: Vec<_> = (0..8)
+            .map(|_| c.submit(Request::Optimize(spec.clone())).unwrap())
+            .collect();
+        for h in handles {
+            h.wait().unwrap();
+        }
+    });
+    println!(
+        "service (coalesced x8 burst) median latency: {} ({:.2}x of cold)",
+        fmt_duration(coalesced_burst.median),
+        coalesced_burst.median.as_secs_f64() / cold.median.as_secs_f64().max(f64::EPSILON)
+    );
+
+    // Deterministic canonical-hit-rate phase for the sharing block: warm
+    // the (freshly flushed) cache once, then send a fixed batch of
+    // α-renamed resubmissions. Every one of them should be a canonical
+    // hit, so the rate is 1.0 when the machinery works and 0.0 when it
+    // silently stops matching.
+    c.flush_opt_cache();
+    c.call(Request::Optimize(spec.clone())).expect("warm call");
+    let canonical_batch = 32u64;
+    let canon_before = c
+        .metrics
+        .opt_cache_hits_canonical
+        .load(std::sync::atomic::Ordering::Relaxed);
+    for _ in 0..canonical_batch {
+        c.call(Request::Optimize(renamed.clone())).expect("canonical call");
+    }
+    let canon_delta = c
+        .metrics
+        .opt_cache_hits_canonical
+        .load(std::sync::atomic::Ordering::Relaxed)
+        - canon_before;
+    let sharing = SharingRow {
+        exact_hits: c
+            .metrics
+            .opt_cache_hits_exact
+            .load(std::sync::atomic::Ordering::Relaxed),
+        canonical_hits: c
+            .metrics
+            .opt_cache_hits_canonical
+            .load(std::sync::atomic::Ordering::Relaxed),
+        coalesced: c
+            .metrics
+            .opt_coalesced
+            .load(std::sync::atomic::Ordering::Relaxed),
+        canonical_hit_rate: canon_delta as f64 / canonical_batch as f64,
+        arena_pool_high_water: c
+            .metrics
+            .arena_pool_high_water
+            .load(std::sync::atomic::Ordering::Relaxed),
+    };
+    println!(
+        "sharing: exact_hits={} canonical_hits={} coalesced={} canonical_hit_rate={:.2} arena_pool_high_water={}",
+        sharing.exact_hits,
+        sharing.canonical_hits,
+        sharing.coalesced,
+        sharing.canonical_hit_rate,
+        sharing.arena_pool_high_water
+    );
+
     write_bench_json(
-        &[("cold", &cold), ("warm", &warm), ("pruned", &pruned)],
+        &[
+            ("cold", &cold),
+            ("warm", &warm),
+            ("warm_canonical", &warm_canonical),
+            ("pruned", &pruned),
+            ("coalesced", &coalesced_burst),
+        ],
         jobs_per_s,
         &search,
         &anytime,
+        &sharing,
     );
 
     if hofdla::runtime::artifact_path("matmul_xla_256").exists()

@@ -22,11 +22,26 @@ pub struct Metrics {
     pub max_batch_seen: AtomicU64,
     /// Executable-cache hits on the runtime thread.
     pub exec_cache_hits: AtomicU64,
-    /// Optimize jobs answered from the coordinator's result LRU.
-    pub opt_cache_hits: AtomicU64,
+    /// Optimize jobs answered from the result LRU by a spec whose source
+    /// text matched the cached entry byte-for-byte.
+    pub opt_cache_hits_exact: AtomicU64,
+    /// Optimize jobs answered from the result LRU by an α-equivalent or
+    /// reformatted source of the cached kernel (same
+    /// [`crate::coordinator::CanonicalKey`], different text) — the
+    /// cross-request sharing the canonical key exists to capture.
+    pub opt_cache_hits_canonical: AtomicU64,
+    /// Optimize jobs that found an identical request already in flight
+    /// and waited on its result instead of searching (single-flight).
+    pub opt_coalesced: AtomicU64,
     /// Generation advances of the optimize-result cache
     /// ([`crate::coordinator::Coordinator::flush_opt_cache`]).
     pub opt_cache_flushes: AtomicU64,
+    /// Gauge: peak concurrently checked-out [`SharedArena`]s from the
+    /// process-wide pool ([`crate::dsl::intern::arena_pool_stats`]),
+    /// refreshed after every fresh search — the pool's working set.
+    ///
+    /// [`SharedArena`]: crate::dsl::intern::SharedArena
+    pub arena_pool_high_water: AtomicU64,
     /// BFS frontier parents expanded across all fresh optimize runs.
     pub search_expanded: AtomicU64,
     /// Exchange applications generated across all fresh optimize runs.
@@ -85,6 +100,13 @@ impl Metrics {
             .store(s.certified_gap.to_bits(), Ordering::Relaxed);
     }
 
+    /// Total optimize jobs answered from the result LRU, exact and
+    /// canonical combined.
+    pub fn opt_cache_hits(&self) -> u64 {
+        self.opt_cache_hits_exact.load(Ordering::Relaxed)
+            + self.opt_cache_hits_canonical.load(Ordering::Relaxed)
+    }
+
     /// The certified optimality gap of the most recent fresh search:
     /// `1.0` = it ran to completion, `> 1.0` = truncated with that
     /// certified bound, `NaN` = no search recorded yet.
@@ -100,15 +122,18 @@ impl Metrics {
     /// Human-readable one-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "submitted={} completed={} failed={} exec_batches={} max_batch={} cache_hits={} opt_cache_hits={} opt_cache_flushes={} search_expanded={} search_generated={} search_pruned={} search_type_rejects={} search_bound_updates={} search_extractions={} search_budget_hits={} search_deadline_hits={} last_gap={} verify_passed={} verify_rejects={}",
+            "submitted={} completed={} failed={} exec_batches={} max_batch={} cache_hits={} opt_cache_hits_exact={} opt_cache_hits_canonical={} opt_coalesced={} opt_cache_flushes={} arena_pool_high_water={} search_expanded={} search_generated={} search_pruned={} search_type_rejects={} search_bound_updates={} search_extractions={} search_budget_hits={} search_deadline_hits={} last_gap={} verify_passed={} verify_rejects={}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
             self.exec_batches.load(Ordering::Relaxed),
             self.max_batch_seen.load(Ordering::Relaxed),
             self.exec_cache_hits.load(Ordering::Relaxed),
-            self.opt_cache_hits.load(Ordering::Relaxed),
+            self.opt_cache_hits_exact.load(Ordering::Relaxed),
+            self.opt_cache_hits_canonical.load(Ordering::Relaxed),
+            self.opt_coalesced.load(Ordering::Relaxed),
             self.opt_cache_flushes.load(Ordering::Relaxed),
+            self.arena_pool_high_water.load(Ordering::Relaxed),
             self.search_expanded.load(Ordering::Relaxed),
             self.search_generated.load(Ordering::Relaxed),
             self.search_pruned.load(Ordering::Relaxed),
@@ -199,6 +224,21 @@ mod tests {
         m.record_search(&stats);
         assert_eq!(m.last_certified_gap(), 1.0);
         assert!(m.summary().contains("last_gap=1.000"));
+    }
+
+    #[test]
+    fn sharing_counters_sum_and_surface_in_summary() {
+        let m = Metrics::default();
+        m.opt_cache_hits_exact.store(3, Ordering::Relaxed);
+        m.opt_cache_hits_canonical.store(2, Ordering::Relaxed);
+        m.opt_coalesced.store(5, Ordering::Relaxed);
+        m.arena_pool_high_water.store(4, Ordering::Relaxed);
+        assert_eq!(m.opt_cache_hits(), 5);
+        let s = m.summary();
+        assert!(s.contains("opt_cache_hits_exact=3"));
+        assert!(s.contains("opt_cache_hits_canonical=2"));
+        assert!(s.contains("opt_coalesced=5"));
+        assert!(s.contains("arena_pool_high_water=4"));
     }
 
     #[test]

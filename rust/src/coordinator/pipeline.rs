@@ -98,6 +98,63 @@ impl OptimizeSpec {
         }
         Ok(())
     }
+
+    /// The coordinator's canonical cache key for this spec (ISSUE 8):
+    /// the cache generation, an α-invariant hash of the *parsed* source
+    /// ([`crate::dsl::intern::canonical_hash`]), and every non-source
+    /// knob verbatim. Two specs get the same key iff their sources are
+    /// α-equivalent modulo formatting (whitespace, comments, binder
+    /// names) and every other field agrees — exactly the condition under
+    /// which [`optimize`] produces the same report, which is what makes
+    /// canonical cache hits and single-flight coalescing sound.
+    ///
+    /// Returns `None` when the source does not parse: such jobs cannot
+    /// be keyed (or coalesced) and the coordinator runs them directly
+    /// for their parse error.
+    pub fn canonical_key(&self, generation: u64) -> Option<CanonicalKey> {
+        let expr = dsl::parse(&self.source).ok()?;
+        let mut inputs = self.inputs.clone();
+        // Submission order of the shape bindings is irrelevant to the
+        // pipeline (they populate a name-keyed env); sort stably so it
+        // is irrelevant to the key too. Duplicate names keep their
+        // relative order — last-binding-wins stays part of the key.
+        inputs.sort_by(|a, b| a.0.cmp(&b.0));
+        Some(CanonicalKey {
+            generation,
+            source_hash: crate::dsl::intern::canonical_hash(&expr),
+            inputs,
+            rank_by: self.rank_by,
+            subdivide_rnz: self.subdivide_rnz,
+            top_k: self.top_k,
+            prune: self.prune,
+            verify: self.verify,
+            budget: self.budget,
+            deadline_ms: self.deadline_ms,
+        })
+    }
+}
+
+/// Canonical identity of an optimize request — what the coordinator's
+/// result LRU and single-flight table key on. See
+/// [`OptimizeSpec::canonical_key`] for the construction and the
+/// soundness argument; `generation` is the flush/cost-model stamp that
+/// makes invalidation free (old-generation keys simply stop matching).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct CanonicalKey {
+    /// Cache generation at keying time
+    /// ([`crate::coordinator::Coordinator::flush_opt_cache`]).
+    pub generation: u64,
+    /// α-invariant hash of the parsed source.
+    pub source_hash: u64,
+    /// Input shapes, sorted stably by name.
+    pub inputs: Vec<(String, Vec<usize>)>,
+    pub rank_by: RankBy,
+    pub subdivide_rnz: Option<usize>,
+    pub top_k: usize,
+    pub prune: bool,
+    pub verify: bool,
+    pub budget: u64,
+    pub deadline_ms: u64,
 }
 
 /// The pipeline's report.
@@ -539,5 +596,50 @@ mod tests {
         spec.deadline_ms = MAX_DEADLINE_MS + 1;
         let err = optimize(&spec).unwrap_err().to_string();
         assert!(err.contains("deadline_ms"), "{err}");
+    }
+
+    #[test]
+    fn canonical_key_is_alpha_and_format_invariant() {
+        let spec = matmul_spec(16, RankBy::CostModel);
+        let mut renamed = spec.clone();
+        renamed.source =
+            "(map (lam (rowOfA) (map (lam (colOfB) (rnz + * rowOfA colOfB)) \
+             (flip 0 (in B)))) (in A))"
+                .into();
+        let mut reformatted = spec.clone();
+        reformatted.source = format!(
+            "  ; matmul, reformatted\n{}\n",
+            spec.source.replace(") (", ")\n  (")
+        );
+        let k = spec.canonical_key(7).unwrap();
+        assert_eq!(k, renamed.canonical_key(7).unwrap());
+        assert_eq!(k, reformatted.canonical_key(7).unwrap());
+        // Input submission order is canonicalized away…
+        let mut flipped = spec.clone();
+        flipped.inputs.reverse();
+        assert_eq!(k, flipped.canonical_key(7).unwrap());
+        // …but generation, shapes and knobs are load-bearing.
+        assert_ne!(k, spec.canonical_key(8).unwrap());
+        assert_ne!(k, matmul_spec(32, RankBy::CostModel).canonical_key(7).unwrap());
+        assert_ne!(k, matmul_spec(16, RankBy::CacheSim).canonical_key(7).unwrap());
+        let mut subdivided = spec.clone();
+        subdivided.subdivide_rnz = Some(4);
+        assert_ne!(k, subdivided.canonical_key(7).unwrap());
+    }
+
+    #[test]
+    fn canonical_key_distinguishes_free_names_and_unparseable_is_none() {
+        let spec = matmul_spec(16, RankBy::CostModel);
+        // Renaming an *input* (free name) is a different kernel.
+        let mut other = spec.clone();
+        other.source = spec.source.replace("(in A)", "(in C)");
+        other.inputs[0].0 = "C".into();
+        assert_ne!(
+            spec.canonical_key(1).unwrap().source_hash,
+            other.canonical_key(1).unwrap().source_hash
+        );
+        let mut bad = spec;
+        bad.source = "(map (lam".into();
+        assert!(bad.canonical_key(1).is_none());
     }
 }

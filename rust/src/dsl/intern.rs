@@ -81,9 +81,11 @@
 
 use super::expr::{fresh_var, Expr, Prim};
 use std::cell::Cell;
+use std::collections::hash_map::DefaultHasher;
 use std::collections::{HashMap, HashSet};
+use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::RwLock;
+use std::sync::{Mutex, RwLock};
 
 /// Identity of an interned expression. Two `ExprId`s from the same arena
 /// are equal iff the expressions are structurally equal.
@@ -325,11 +327,149 @@ impl ExprArena {
             Node::Input(n) => Expr::Input(n),
         }
     }
+
+    /// Alpha-invariant structural hash of the expression behind `id`.
+    ///
+    /// Bound variables hash by their de Bruijn index (distance to the
+    /// innermost enclosing binder), so binder *names* do not contribute:
+    /// `λx.x` and `λy.y` hash identically while `λx.λy.x` and `λx.λy.y`
+    /// stay distinct. Free variables and [`Node::Input`]s hash by name
+    /// (they are the kernel's interface), literals by bit pattern. The
+    /// hasher is [`DefaultHasher`] with its fixed default keys — the same
+    /// per-process-deterministic choice the segment hash relies on.
+    ///
+    /// This is the source half of the coordinator's canonical cache key
+    /// (ISSUE 8): α-equivalent and reformatted sources of the same kernel
+    /// collapse to one entry. Note the contrast with [`intern`]
+    /// (structural, name-sensitive — what the rewriter needs): the
+    /// canonical hash is a *view* for keying, not a change to interning.
+    ///
+    /// [`intern`]: ExprArena::intern
+    pub fn canonical_hash_id(&self, id: ExprId) -> u64 {
+        let mut h = DefaultHasher::new();
+        self.canonical_hash_rec(id, &mut Vec::new(), &mut h);
+        h.finish()
+    }
+
+    fn canonical_hash_rec<'a>(
+        &'a self,
+        id: ExprId,
+        bound: &mut Vec<&'a str>,
+        h: &mut DefaultHasher,
+    ) {
+        match self.get(id) {
+            Node::Var(x) => {
+                // rposition: innermost binding wins under shadowing.
+                if let Some(pos) = bound.iter().rposition(|b| *b == x) {
+                    0u8.hash(h);
+                    ((bound.len() - 1 - pos) as u64).hash(h);
+                } else {
+                    1u8.hash(h);
+                    x.hash(h);
+                }
+            }
+            Node::Lit(bits) => {
+                2u8.hash(h);
+                bits.hash(h);
+            }
+            Node::Prim(p) => {
+                3u8.hash(h);
+                p.hash(h);
+            }
+            Node::Lam { params, body } => {
+                4u8.hash(h);
+                params.len().hash(h);
+                for p in params {
+                    bound.push(p);
+                }
+                self.canonical_hash_rec(*body, bound, h);
+                bound.truncate(bound.len() - params.len());
+            }
+            Node::App { f, args } => {
+                5u8.hash(h);
+                self.canonical_hash_rec(*f, bound, h);
+                args.len().hash(h);
+                for &a in args {
+                    self.canonical_hash_rec(a, bound, h);
+                }
+            }
+            Node::Nzip { f, args } => {
+                6u8.hash(h);
+                self.canonical_hash_rec(*f, bound, h);
+                args.len().hash(h);
+                for &a in args {
+                    self.canonical_hash_rec(a, bound, h);
+                }
+            }
+            Node::Rnz { r, m, args } => {
+                7u8.hash(h);
+                self.canonical_hash_rec(*r, bound, h);
+                self.canonical_hash_rec(*m, bound, h);
+                args.len().hash(h);
+                for &a in args {
+                    self.canonical_hash_rec(a, bound, h);
+                }
+            }
+            Node::Lift { f } => {
+                8u8.hash(h);
+                self.canonical_hash_rec(*f, bound, h);
+            }
+            Node::Subdiv { d, b, arg } => {
+                9u8.hash(h);
+                d.hash(h);
+                b.hash(h);
+                self.canonical_hash_rec(*arg, bound, h);
+            }
+            Node::Flatten { d, arg } => {
+                10u8.hash(h);
+                d.hash(h);
+                self.canonical_hash_rec(*arg, bound, h);
+            }
+            Node::Flip { d1, d2, arg } => {
+                11u8.hash(h);
+                d1.hash(h);
+                d2.hash(h);
+                self.canonical_hash_rec(*arg, bound, h);
+            }
+            Node::Input(n) => {
+                12u8.hash(h);
+                n.hash(h);
+            }
+        }
+    }
+}
+
+/// Alpha-invariant hash of a `Box<Expr>` tree — convenience wrapper that
+/// interns into a throwaway [`ExprArena`] and delegates to
+/// [`ExprArena::canonical_hash_id`]. Equal for α-equivalent trees,
+/// regardless of the source formatting they were parsed from.
+pub fn canonical_hash(e: &Expr) -> u64 {
+    let mut arena = ExprArena::new();
+    let id = arena.intern(e);
+    arena.canonical_hash_id(id)
 }
 
 /// log2 of [`SharedArena::SEGMENTS`]: the low `SEG_BITS` of an id select
 /// the segment, the high bits are the index within it.
 const SEG_BITS: u32 = 4;
+
+/// Debug builds stamp every [`SharedArena`] id with the arena's reset
+/// epoch in the top `EPOCH_BITS` of the word, so an id that outlives a
+/// [`SharedArena::reset`] (arena-pool reuse, ISSUE 8) fails closed with a
+/// clear panic instead of silently resolving to an unrelated node. The
+/// epoch wraps modulo `2^EPOCH_BITS`; the guard is a debug tripwire, not
+/// a cryptographic fence. Release ids carry no epoch — their values are
+/// identical to the pre-pooling scheme.
+#[cfg(debug_assertions)]
+const EPOCH_BITS: u32 = 6;
+#[cfg(debug_assertions)]
+const EPOCH_MASK: u32 = (1 << EPOCH_BITS) - 1;
+
+/// Bits available for the within-segment slot index.
+#[cfg(debug_assertions)]
+const LOCAL_BITS: u32 = 32 - SEG_BITS - EPOCH_BITS;
+#[cfg(not(debug_assertions))]
+const LOCAL_BITS: u32 = 32 - SEG_BITS;
 
 /// One lock stripe of a [`SharedArena`]: the dedup map plus the node
 /// storage for every node whose hash lands here.
@@ -362,6 +502,10 @@ pub struct SharedArena {
     len: AtomicUsize,
     /// Root [`extract`](SharedArena::extract) calls, as on [`ExprArena`].
     extractions: AtomicU64,
+    /// How many times this arena has been [`reset`](SharedArena::reset)
+    /// (arena-pool reuse). Debug builds stamp it into every issued id so
+    /// stale ids from a previous job fail closed.
+    epoch: u32,
 }
 
 impl Default for SharedArena {
@@ -381,7 +525,39 @@ impl SharedArena {
             segments: (0..Self::SEGMENTS).map(|_| RwLock::default()).collect(),
             len: AtomicUsize::new(0),
             extractions: AtomicU64::new(0),
+            epoch: 0,
         }
+    }
+
+    /// Reset epoch: 0 for a fresh arena, bumped by every
+    /// [`reset`](SharedArena::reset). Debug-build ids are stamped with it
+    /// (modulo `2^EPOCH_BITS`); release ids are epoch-free.
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    /// Clear every node while keeping segment and dedup-map capacity, and
+    /// advance the reset epoch — the arena-pool reuse primitive (ISSUE 8):
+    /// a pooled arena is reset on acquire so a warm job pays neither
+    /// segment construction nor map rehash growth from zero.
+    ///
+    /// Taking `&mut self` is what makes dropping nodes sound against
+    /// [`get`](SharedArena::get)'s long-lived `&Node` references: those
+    /// borrows are tied to `&self`, so the borrow checker only grants the
+    /// `&mut` once none are alive. Ids from before the reset are invalid;
+    /// debug builds trip a "stale ExprId" panic on use (epoch stamp),
+    /// release builds must rely on the pool discipline (one job per
+    /// checkout, ids never escape the job — the existing arena-scoped id
+    /// contract in the module docs).
+    pub fn reset(&mut self) {
+        self.epoch = self.epoch.wrapping_add(1);
+        for seg in &mut self.segments {
+            let st = seg.get_mut().unwrap_or_else(|e| e.into_inner());
+            st.nodes.clear();
+            st.dedup.clear();
+        }
+        *self.len.get_mut() = 0;
+        *self.extractions.get_mut() = 0;
     }
 
     /// Number of distinct nodes stored (across all segments).
@@ -397,18 +573,33 @@ impl SharedArena {
     /// hash — the same node hashes to the same stripe from every thread,
     /// which is what makes ids agree across threads.
     fn segment_of(node: &Node) -> usize {
-        use std::hash::{Hash, Hasher};
-        let mut h = std::collections::hash_map::DefaultHasher::new();
+        let mut h = DefaultHasher::new();
         node.hash(&mut h);
         (h.finish() as usize) & (Self::SEGMENTS - 1)
     }
 
-    fn pack(seg: usize, local: u32) -> ExprId {
-        ExprId((local << SEG_BITS) | seg as u32)
+    fn pack(&self, seg: usize, local: u32) -> ExprId {
+        let raw = (local << SEG_BITS) | seg as u32;
+        #[cfg(debug_assertions)]
+        let raw = raw | ((self.epoch & EPOCH_MASK) << (32 - EPOCH_BITS));
+        ExprId(raw)
     }
 
-    fn unpack(id: ExprId) -> (usize, usize) {
-        ((id.0 as usize) & (Self::SEGMENTS - 1), (id.0 >> SEG_BITS) as usize)
+    fn unpack(&self, id: ExprId) -> (usize, usize) {
+        let raw = id.0;
+        #[cfg(debug_assertions)]
+        let raw = {
+            let tag = raw >> (32 - EPOCH_BITS);
+            assert_eq!(
+                tag,
+                self.epoch & EPOCH_MASK,
+                "stale ExprId: id carries epoch {tag} but the arena is at epoch {} — \
+                 ids must not outlive a SharedArena::reset (arena-pool reuse)",
+                self.epoch & EPOCH_MASK,
+            );
+            raw & !(EPOCH_MASK << (32 - EPOCH_BITS))
+        };
+        ((raw as usize) & (Self::SEGMENTS - 1), (raw >> SEG_BITS) as usize)
     }
 
     /// A segment read guard; lock poisoning is recovered rather than
@@ -424,32 +615,36 @@ impl SharedArena {
     pub fn insert(&self, node: Node) -> ExprId {
         let seg = Self::segment_of(&node);
         if let Some(&local) = self.read(seg).dedup.get(&node) {
-            return Self::pack(seg, local);
+            return self.pack(seg, local);
         }
         let mut st = self.segments[seg].write().unwrap_or_else(|e| e.into_inner());
         if let Some(&local) = st.dedup.get(&node) {
-            return Self::pack(seg, local);
+            return self.pack(seg, local);
         }
         let local = st.nodes.len() as u32;
-        assert!(local < 1 << (32 - SEG_BITS), "SharedArena segment {seg} overflow");
+        assert!(local < 1 << LOCAL_BITS, "SharedArena segment {seg} overflow");
         st.nodes.push(Box::new(node.clone()));
         st.dedup.insert(node, local);
         self.len.fetch_add(1, Ordering::Relaxed);
-        Self::pack(seg, local)
+        self.pack(seg, local)
     }
 
     /// The node behind an id. The reference stays valid for the arena's
     /// whole lifetime even while other threads intern concurrently.
     pub fn get(&self, id: ExprId) -> &Node {
-        let (seg, local) = Self::unpack(id);
+        let (seg, local) = self.unpack(id);
         let st = self.read(seg);
         let ptr: *const Node = &*st.nodes[local];
         drop(st);
-        // SAFETY: nodes are individually boxed and the arena is
+        // SAFETY: nodes are individually boxed and, under `&self` access,
         // append-only — a node is never moved, mutated, or dropped after
         // insertion, so the heap allocation behind `ptr` lives as long as
-        // `self`. Concurrent pushes may reallocate the `Vec` of boxes,
-        // but that moves the boxes, not the nodes they point to.
+        // this shared borrow of `self`. Concurrent pushes may reallocate
+        // the `Vec` of boxes, but that moves the boxes, not the nodes
+        // they point to. The only operation that does drop nodes is
+        // `reset`, and it takes `&mut self`, which the borrow checker
+        // grants only once every `&Node` returned here (tied to `&self`)
+        // is dead.
         unsafe { &*ptr }
     }
 
@@ -682,7 +877,119 @@ impl std::fmt::Debug for SharedArena {
             .field("len", &self.len())
             .field("segments", &Self::SEGMENTS)
             .field("extractions", &self.extractions())
+            .field("epoch", &self.epoch())
             .finish()
+    }
+}
+
+/// Cap on *idle* arenas retained by the process-wide pool. Checked-out
+/// arenas are unbounded (one per concurrently-running search); beyond the
+/// cap, returned arenas are simply dropped. Sized to the widest worker
+/// fan-out the coordinator configures plus bench headroom.
+const ARENA_POOL_CAP: usize = 8;
+
+/// Idle arenas waiting for reuse. Plain `Mutex<Vec<_>>`: acquire/release
+/// happen once per optimize job, never on the per-candidate hot path.
+static ARENA_POOL: Mutex<Vec<SharedArena>> = Mutex::new(Vec::new());
+/// Arenas built fresh because the pool was empty.
+static POOL_CREATED: AtomicU64 = AtomicU64::new(0);
+/// Acquires served by resetting a previously-used arena.
+static POOL_REUSED: AtomicU64 = AtomicU64::new(0);
+/// Currently checked-out arenas.
+static POOL_IN_USE: AtomicU64 = AtomicU64::new(0);
+/// Peak of `POOL_IN_USE` — the pool high-water mark surfaced through
+/// coordinator metrics.
+static POOL_HIGH_WATER: AtomicU64 = AtomicU64::new(0);
+
+/// A [`SharedArena`] checked out of the process-wide pool. Dereferences
+/// to the arena; returning it to the pool is the `Drop` impl, so the
+/// arena goes back even when the job panics (the coordinator's
+/// `catch_unwind` unwinds through the owning search frame).
+pub struct PooledArena {
+    arena: Option<SharedArena>,
+}
+
+impl std::ops::Deref for PooledArena {
+    type Target = SharedArena;
+
+    fn deref(&self) -> &SharedArena {
+        self.arena.as_ref().expect("PooledArena already returned")
+    }
+}
+
+impl Drop for PooledArena {
+    fn drop(&mut self) {
+        let Some(arena) = self.arena.take() else {
+            return;
+        };
+        POOL_IN_USE.fetch_sub(1, Ordering::Relaxed);
+        let mut pool = ARENA_POOL.lock().unwrap_or_else(|e| e.into_inner());
+        if pool.len() < ARENA_POOL_CAP {
+            pool.push(arena);
+        }
+    }
+}
+
+impl std::fmt::Debug for PooledArena {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.arena {
+            Some(a) => f.debug_tuple("PooledArena").field(a).finish(),
+            None => f.write_str("PooledArena(returned)"),
+        }
+    }
+}
+
+/// Check an arena out of the process-wide pool (ISSUE 8 arena pooling).
+///
+/// Reused arenas are [`reset`](SharedArena::reset) *on acquire*, not on
+/// release: the reset is paid by the job that benefits from the retained
+/// capacity, and a panicking job's `Drop`-path return stays trivially
+/// cheap. Every acquire bumps either the created or the reused counter
+/// and updates the in-use high-water mark; see [`arena_pool_stats`].
+pub fn arena_acquire() -> PooledArena {
+    let recycled = ARENA_POOL.lock().unwrap_or_else(|e| e.into_inner()).pop();
+    let arena = match recycled {
+        Some(mut a) => {
+            a.reset();
+            POOL_REUSED.fetch_add(1, Ordering::Relaxed);
+            a
+        }
+        None => {
+            POOL_CREATED.fetch_add(1, Ordering::Relaxed);
+            SharedArena::new()
+        }
+    };
+    let in_use = POOL_IN_USE.fetch_add(1, Ordering::Relaxed) + 1;
+    POOL_HIGH_WATER.fetch_max(in_use, Ordering::Relaxed);
+    PooledArena { arena: Some(arena) }
+}
+
+/// Snapshot of the process-wide arena-pool counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArenaPoolStats {
+    /// Arenas constructed because no idle one was available.
+    pub created: u64,
+    /// Acquires served by resetting a pooled arena.
+    pub reused: u64,
+    /// Arenas currently checked out.
+    pub in_use: u64,
+    /// Peak concurrent checkouts over the process lifetime.
+    pub high_water: u64,
+    /// Idle arenas currently parked in the pool.
+    pub idle: usize,
+}
+
+/// Read the pool counters. Monotonic except `in_use`/`idle`; the
+/// coordinator folds `high_water` into its metrics after each fresh
+/// search so the pool's working set is observable in `serve` output and
+/// `BENCH_coordinator.json`.
+pub fn arena_pool_stats() -> ArenaPoolStats {
+    ArenaPoolStats {
+        created: POOL_CREATED.load(Ordering::Relaxed),
+        reused: POOL_REUSED.load(Ordering::Relaxed),
+        in_use: POOL_IN_USE.load(Ordering::Relaxed),
+        high_water: POOL_HIGH_WATER.load(Ordering::Relaxed),
+        idle: ARENA_POOL.lock().unwrap_or_else(|e| e.into_inner()).len(),
     }
 }
 
@@ -895,6 +1202,102 @@ mod tests {
         assert_eq!(arena.extractions(), 1, "one root call, not one per node");
         let _ = arena.extract(id);
         assert_eq!(arena.extractions(), 2);
+    }
+
+    #[test]
+    fn canonical_hash_is_alpha_invariant() {
+        // Binder names don't contribute…
+        assert_eq!(
+            canonical_hash(&lam1("x", var("x"))),
+            canonical_hash(&lam1("y", var("y")))
+        );
+        assert_eq!(
+            canonical_hash(&lam2("x", "y", app2(add(), var("x"), var("y")))),
+            canonical_hash(&lam2("a", "b", app2(add(), var("a"), var("b"))))
+        );
+        // …but binding *structure* does.
+        assert_ne!(
+            canonical_hash(&lam2("x", "y", var("x"))),
+            canonical_hash(&lam2("x", "y", var("y")))
+        );
+        // Free variables and inputs hash by name (kernel interface).
+        assert_ne!(canonical_hash(&var("x")), canonical_hash(&var("y")));
+        assert_ne!(canonical_hash(&input("A")), canonical_hash(&input("B")));
+        // Shadowing resolves to the innermost binder.
+        assert_eq!(
+            canonical_hash(&lam1("x", lam1("x", var("x")))),
+            canonical_hash(&lam1("x", lam1("y", var("y"))))
+        );
+        assert_ne!(
+            canonical_hash(&lam1("x", lam1("y", var("x")))),
+            canonical_hash(&lam1("x", lam1("y", var("y"))))
+        );
+    }
+
+    #[test]
+    fn canonical_hash_id_matches_free_fn_and_intern_stays_structural() {
+        let e = matmul_naive(input("A"), input("B"));
+        let mut arena = ExprArena::new();
+        let id = arena.intern(&e);
+        assert_eq!(arena.canonical_hash_id(id), canonical_hash(&e));
+        // The canonical hash is a view: α-variants still intern to
+        // *distinct* ids (the rewriter contract is untouched).
+        let a = arena.intern(&lam1("x", var("x")));
+        let b = arena.intern(&lam1("y", var("y")));
+        assert_ne!(a, b);
+        assert_eq!(arena.canonical_hash_id(a), arena.canonical_hash_id(b));
+    }
+
+    #[test]
+    fn reset_clears_nodes_counters_and_bumps_epoch() {
+        let mut arena = SharedArena::new();
+        let e = matmul_naive(input("A"), input("B"));
+        let id = arena.intern(&e);
+        let _ = arena.extract(id);
+        assert!(!arena.is_empty());
+        assert_eq!(arena.epoch(), 0);
+        arena.reset();
+        assert!(arena.is_empty());
+        assert_eq!(arena.extractions(), 0);
+        assert_eq!(arena.epoch(), 1);
+        // The reset arena interns and extracts like a fresh one.
+        let id2 = arena.intern(&e);
+        assert_eq!(arena.extract(id2), e);
+        assert_eq!(arena.len(), {
+            let fresh = SharedArena::new();
+            fresh.intern(&e);
+            fresh.len()
+        });
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "stale ExprId")]
+    fn stale_id_after_reset_fails_closed_in_debug() {
+        let mut arena = SharedArena::new();
+        let id = arena.intern(&matmul_naive(input("A"), input("B")));
+        arena.reset();
+        let _ = arena.get(id);
+    }
+
+    #[test]
+    fn arena_pool_resets_on_reuse_and_tracks_high_water() {
+        // The pool is process-global and other tests may touch it
+        // concurrently, so assert counter deltas and invariants, not
+        // which branch (create vs reuse) served each acquire.
+        let before = arena_pool_stats();
+        {
+            let a = arena_acquire();
+            let _ = a.intern(&input("A"));
+            let mid = arena_pool_stats();
+            assert!(mid.high_water >= 1);
+            assert!(mid.created + mid.reused > before.created + before.reused);
+        }
+        let b = arena_acquire();
+        assert!(b.is_empty(), "acquired arenas must come back reset");
+        let after = arena_pool_stats();
+        assert!(after.created + after.reused >= before.created + before.reused + 2);
+        assert!(after.high_water >= after.in_use);
     }
 
     #[test]

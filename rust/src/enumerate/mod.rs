@@ -1031,8 +1031,11 @@ pub fn enumerate_search(
     // every shard generates, normalizes, typechecks and scores against
     // it, and frontier variants cross shard and level boundaries as plain
     // ids — the per-level extract/re-intern of the per-shard-arena design
-    // is gone.
-    let arena = SharedArena::new();
+    // is gone. The arena is checked out of the process-wide pool
+    // (ISSUE 8) and returned — segments cleared, allocations retained —
+    // when the search drops it; ids never outlive the search, which the
+    // pool's debug-mode epoch stamps fail closed.
+    let arena = crate::dsl::intern::arena_acquire();
     let start_id = arena.intern(&start.expr);
     // The start variant is scored through the same arena-native path as
     // every candidate (and warms shard 0's score cache).

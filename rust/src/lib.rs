@@ -78,8 +78,9 @@ pub use layout::{Dim, Layout};
 
 /// Crate-wide error type. Implemented by hand (rather than via
 /// `thiserror`) so the default build has zero dependencies and works
-/// offline.
-#[derive(Debug)]
+/// offline. `Clone` because the coordinator's single-flight path fans a
+/// leader's failure out to every coalesced waiter.
+#[derive(Clone, Debug)]
 pub enum Error {
     Layout(String),
     Type(String),

@@ -231,12 +231,32 @@ fn run(args: &[String]) -> hofdla::Result<()> {
                 budget: 4,
                 ..spec.clone()
             };
-            let Response::Optimized(r) = c.call(Request::Optimize(spec))? else {
+            let Response::Optimized(r) = c.call(Request::Optimize(spec.clone()))? else {
                 return Err(err("optimize job returned a non-optimize response".into()));
             };
             println!(
                 "explored {} rearrangements; best = {} (gap {:.3})",
                 r.variants_explored, r.best, r.certified_gap
+            );
+            // Cross-request sharing flavor: the same kernel resubmitted
+            // with every binder α-renamed is answered from the result
+            // cache through the canonical key — no fresh search (watch
+            // opt_cache_hits_canonical tick in the metrics line, with
+            // search_expanded unchanged).
+            let renamed = OptimizeSpec {
+                source:
+                    "(map (lam (rowOfA) (map (lam (colOfB) (rnz + * rowOfA colOfB)) \
+                     (flip 0 (in B)))) (in A))"
+                        .into(),
+                ..spec
+            };
+            let Response::Optimized(rn) = c.call(Request::Optimize(renamed))? else {
+                return Err(err("optimize job returned a non-optimize response".into()));
+            };
+            println!(
+                "α-renamed resubmission: best = {} (canonical cache hit: {})",
+                rn.best,
+                rn.best == r.best
             );
             // Anytime flavor: the same job under a 4-expansion budget still
             // returns a winner, now with a certified optimality gap.

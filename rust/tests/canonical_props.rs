@@ -1,0 +1,318 @@
+//! Canonicalization properties (ISSUE 8): the coordinator's canonical
+//! cache key must identify exactly the requests the pipeline answers
+//! identically, across every search family the repo ships.
+//!
+//! - α-renamed and whitespace/comment-permuted sources of one kernel
+//!   produce the *same* [`CanonicalKey`] and (run fresh) the same
+//!   optimization report — same exploration count, same ranking, same
+//!   winner program;
+//! - the α-invariance holds inside the engine at every CI shard width
+//!   (`SEARCH_SHARDS` ∈ {1, 2, 8}): renamed binders never perturb
+//!   variant order or scores;
+//! - seeded *distinct* kernels never collide on the canonical hash;
+//! - at the service level, an α-renamed resubmission of a completed job
+//!   is a cache hit: the canonical counter increments and the search
+//!   counters do not move (the ISSUE 8 acceptance criterion).
+
+use hofdla::coordinator::{
+    optimize, CanonicalKey, Config, Coordinator, OptimizeResult, OptimizeSpec, RankBy, Request,
+    Response,
+};
+use hofdla::dsl;
+use hofdla::dsl::intern::canonical_hash;
+use hofdla::enumerate::{enumerate_search, SearchOptions, Variant, MAX_SEARCH_SHARDS};
+use hofdla::layout::Layout;
+use hofdla::rewrite::Ctx;
+use hofdla::typecheck::Env;
+use hofdla::util::Rng;
+use std::sync::atomic::Ordering;
+
+/// One search family: a kernel source, a hand-α-renamed twin (every
+/// binder renamed, nothing else), the inputs it typechecks under, and
+/// the subdivision knob that selects the family's search space.
+struct Family {
+    name: &'static str,
+    source: &'static str,
+    renamed: &'static str,
+    inputs: Vec<(String, Vec<usize>)>,
+    subdivide_rnz: Option<usize>,
+}
+
+/// Every search family the seed workloads exercise: plain and
+/// subdivided matmul (Table 1 / Table 2), matvec, and a fused
+/// single-`rnz` pipeline (the degenerate one-variant family).
+fn families() -> Vec<Family> {
+    vec![
+        Family {
+            name: "matmul",
+            source:
+                "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))",
+            renamed:
+                "(map (lam (rowOfA) (map (lam (colOfB) (rnz + * rowOfA colOfB)) \
+                 (flip 0 (in B)))) (in A))",
+            inputs: vec![("A".into(), vec![16, 16]), ("B".into(), vec![16, 16])],
+            subdivide_rnz: None,
+        },
+        Family {
+            name: "matmul-subdivided",
+            source:
+                "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))",
+            renamed:
+                "(map (lam (r) (map (lam (c) (rnz + * r c)) (flip 0 (in B)))) (in A))",
+            inputs: vec![("A".into(), vec![16, 16]), ("B".into(), vec![16, 16])],
+            subdivide_rnz: Some(4),
+        },
+        Family {
+            name: "matvec",
+            source: "(map (lam (rA) (rnz + * rA (in v))) (in A))",
+            renamed: "(map (lam (row) (rnz + * row (in v))) (in A))",
+            inputs: vec![("A".into(), vec![16, 16]), ("v".into(), vec![16])],
+            subdivide_rnz: None,
+        },
+        Family {
+            name: "fused-dot",
+            source: "(rnz + * (map (lam (x) (app * x 2.0)) (in u)) (in v))",
+            renamed: "(rnz + * (map (lam (scaled) (app * scaled 2.0)) (in u)) (in v))",
+            inputs: vec![("u".into(), vec![64]), ("v".into(), vec![64])],
+            subdivide_rnz: None,
+        },
+    ]
+}
+
+fn spec_for(f: &Family, source: &str) -> OptimizeSpec {
+    OptimizeSpec {
+        source: source.into(),
+        inputs: f.inputs.clone(),
+        rank_by: RankBy::CostModel,
+        subdivide_rnz: f.subdivide_rnz,
+        top_k: 12,
+        prune: false,
+        verify: false,
+        budget: 0,
+        deadline_ms: 0,
+    }
+}
+
+/// Formatting permutations of a source that must not change its key:
+/// line breaks, indentation, comments, stray leading/trailing blanks.
+fn whitespace_permutations(source: &str) -> Vec<String> {
+    vec![
+        format!("  {source}\n"),
+        source.replace(") (", ")\n  ("),
+        format!("; one kernel, many spellings\n{source}"),
+        format!("{}\n; trailing comment", source.replace(' ', "  ")),
+        source.replace(") (", ") ; inline comment\n ("),
+    ]
+}
+
+/// The comparable identity of a report. Binder names in the
+/// pretty-printed winner are gensym'd per run, so the winner is compared
+/// through its (name-free) lowered program instead of its source text.
+fn report_identity(r: &OptimizeResult, env: &Env) -> String {
+    let lowered = hofdla::exec::lower(&dsl::parse(&r.best_expr).unwrap(), env).unwrap();
+    format!(
+        "explored={} ranking={:?} best={} lowered={:?}",
+        r.variants_explored, r.ranking, r.best, lowered
+    )
+}
+
+fn env_for(f: &Family) -> Env {
+    let mut env = Env::new();
+    for (name, shape) in &f.inputs {
+        env.inputs.insert(name.clone(), Layout::row_major(shape));
+    }
+    env
+}
+
+/// α-renamed and reformatted sources of every family key identically —
+/// and a fresh pipeline run of each spelling produces the same report:
+/// same exploration count, bit-identical ranking, same winner program.
+/// This is what makes answering a canonical hit from the cache sound.
+#[test]
+fn alpha_and_format_variants_key_and_optimize_identically_for_every_family() {
+    for f in families() {
+        let base = spec_for(&f, f.source);
+        let key = base.canonical_key(1).unwrap();
+        let reference = optimize(&base).unwrap();
+        let env = env_for(&f);
+        let ref_identity = report_identity(&reference, &env);
+        let mut spellings: Vec<String> = vec![f.renamed.to_string()];
+        spellings.extend(whitespace_permutations(f.source));
+        spellings.extend(whitespace_permutations(f.renamed));
+        for (i, s) in spellings.iter().enumerate() {
+            let spec = spec_for(&f, s);
+            assert_eq!(
+                key,
+                spec.canonical_key(1).unwrap(),
+                "{}: spelling {i} changed the canonical key",
+                f.name
+            );
+            let got = optimize(&spec).unwrap();
+            assert_eq!(
+                ref_identity,
+                report_identity(&got, &env),
+                "{}: spelling {i} changed the report",
+                f.name
+            );
+        }
+    }
+}
+
+/// Shard widths to cover, mirroring `shared_arena_props`: the CI
+/// `search-shards` matrix pins one width per arm via `SEARCH_SHARDS`; a
+/// local run covers the full {1, 2, 8} set.
+fn shard_counts() -> Vec<usize> {
+    match std::env::var("SEARCH_SHARDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n >= 1)
+    {
+        Some(n) => vec![n.min(MAX_SEARCH_SHARDS)],
+        None => vec![1, 2, 8],
+    }
+}
+
+/// Engine-level α-invariance at every CI shard width: searching an
+/// α-renamed start expression yields the same variant order and
+/// bit-identical scores as the original, whatever the fan-out. (Binder
+/// names reach the search arena — interning is structural, λx.x ≠ λy.y —
+/// so this is a real property of the search, not of parsing.)
+#[test]
+fn search_is_alpha_invariant_at_every_ci_shard_width() {
+    let ctx = Ctx::new(
+        Env::new()
+            .with("A", Layout::row_major(&[4, 8]))
+            .with("B", Layout::row_major(&[8, 4])),
+    );
+    let labels = ["map1", "map2", "rnz1"];
+    let original = Variant::new(
+        dsl::parse(
+            "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))",
+        )
+        .unwrap(),
+        &labels,
+    );
+    let renamed = Variant::new(
+        dsl::parse(
+            "(map (lam (rowOfA) (map (lam (colOfB) (rnz + * rowOfA colOfB)) \
+             (flip 0 (in B)))) (in A))",
+        )
+        .unwrap(),
+        &labels,
+    );
+    for shards in shard_counts() {
+        let opts = SearchOptions {
+            limit: 4096,
+            shards,
+            prune_slack: None,
+            score: true,
+            ..SearchOptions::default()
+        };
+        let a = enumerate_search(&original, &ctx, &opts).unwrap();
+        let b = enumerate_search(&renamed, &ctx, &opts).unwrap();
+        let keys = |r: &hofdla::enumerate::SearchResult| {
+            r.variants.iter().map(|v| v.display_key()).collect::<Vec<_>>()
+        };
+        assert_eq!(keys(&a), keys(&b), "shards={shards}: variant order diverged");
+        assert_eq!(a.scores, b.scores, "shards={shards}: scores diverged");
+        assert_eq!(a.stats.kept, b.stats.kept, "shards={shards}: kept diverged");
+    }
+}
+
+/// Distinct kernels must never share a canonical key. Seeded generation:
+/// kernels differing only in a literal, in an input name, in spine
+/// shape, or in binder *structure* (not binder names) all hash apart;
+/// the only collisions are the intended α/formatting ones.
+#[test]
+fn seeded_distinct_kernels_never_collide_and_alpha_twins_always_do() {
+    let mut rng = Rng::new(0x15_5E8);
+    let mut sources: Vec<String> = Vec::new();
+    // Literal-perturbed dot kernels: same shape, different constant.
+    let mut lits = std::collections::HashSet::new();
+    while lits.len() < 64 {
+        lits.insert(rng.range(2, 100_000));
+    }
+    for c in &lits {
+        sources.push(format!("(rnz + * (map (lam (x) (app * x {c}.0)) (in u)) (in v))"));
+    }
+    // Input-renamed kernels: a free name is part of the kernel identity.
+    for name in ["u", "w", "p", "q"] {
+        sources.push(format!("(rnz + * (in {name}) (in v))"));
+    }
+    // Spine-shape variants.
+    sources.push("(map (lam (r) (rnz + * r (in v))) (in A))".into());
+    sources.push("(map (lam (r) (map (lam (c) (rnz + * r c)) (flip 0 (in B)))) (in A))".into());
+    sources.push("(map (lam (x) (app * x 2.0)) (in u))".into());
+    // Binder-structure variant: λx.λy vs λ(x y) are different trees even
+    // though an index-based hash numbers their variables alike.
+    sources.push("(map (lam (x) (map (lam (y) (app + x y)) (in v))) (in u))".into());
+    sources.push("(nzip (lam (x y) (app + x y)) (in u) (in v))".into());
+
+    let mut seen: std::collections::HashMap<u64, String> = std::collections::HashMap::new();
+    for s in &sources {
+        let h = canonical_hash(&dsl::parse(s).unwrap());
+        if let Some(prev) = seen.insert(h, s.clone()) {
+            panic!("distinct kernels collided on canonical hash:\n  {prev}\n  {s}");
+        }
+    }
+    // Positive control: α-twins and reformattings *must* collide.
+    let a = canonical_hash(&dsl::parse("(map (lam (x) (app * x 2.0)) (in u))").unwrap());
+    let b = canonical_hash(
+        &dsl::parse("(map (lam (elem)\n  (app * elem 2.0)) (in u)) ; same kernel").unwrap(),
+    );
+    assert_eq!(a, b, "α-twins must share the canonical hash");
+}
+
+/// ISSUE 8 acceptance, pinned at the service level: after a job
+/// completes, resubmitting an α-renamed spelling of it is answered from
+/// the cache — the canonical hit counter increments and `search_expanded`
+/// does not move.
+#[test]
+fn alpha_renamed_resubmission_is_a_canonical_hit_with_zero_search_delta() {
+    let f = &families()[0];
+    let c = Coordinator::start(Config {
+        workers: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    let Response::Optimized(first) = c.call(Request::Optimize(spec_for(f, f.source))).unwrap()
+    else {
+        panic!("wrong response type")
+    };
+    let expanded = c.metrics.search_expanded.load(Ordering::Relaxed);
+    let generated = c.metrics.search_generated.load(Ordering::Relaxed);
+    let Response::Optimized(second) = c.call(Request::Optimize(spec_for(f, f.renamed))).unwrap()
+    else {
+        panic!("wrong response type")
+    };
+    assert_eq!(c.metrics.opt_cache_hits_canonical.load(Ordering::Relaxed), 1);
+    assert_eq!(c.metrics.opt_cache_hits_exact.load(Ordering::Relaxed), 0);
+    assert_eq!(c.metrics.search_expanded.load(Ordering::Relaxed), expanded);
+    assert_eq!(c.metrics.search_generated.load(Ordering::Relaxed), generated);
+    // The cached report is handed back as-is.
+    assert_eq!(first.best, second.best);
+    assert_eq!(first.best_expr, second.best_expr);
+    assert_eq!(
+        format!("{:?}", first.ranking),
+        format!("{:?}", second.ranking)
+    );
+    // The sanity direction: a *different* kernel is not a hit.
+    let other = &families()[2];
+    c.call(Request::Optimize(spec_for(other, other.source))).unwrap();
+    assert_eq!(c.metrics.opt_cache_hits(), 1);
+}
+
+/// `CanonicalKey` is plain data: the same spec keys identically across
+/// independent constructions (no interior hashing state), so keys are
+/// safe to build on every submission.
+#[test]
+fn canonical_keys_are_reproducible_values() {
+    let f = &families()[1];
+    let spec = spec_for(f, f.source);
+    let a: CanonicalKey = spec.canonical_key(3).unwrap();
+    let b: CanonicalKey = spec.canonical_key(3).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(a.source_hash, canonical_hash(&dsl::parse(f.source).unwrap()));
+    assert_eq!(a.generation, 3);
+    assert_eq!(a.subdivide_rnz, Some(4));
+}

@@ -10,7 +10,7 @@
 //!   extractions at BFS level boundaries (output-boundary extractions
 //!   only, verified through the arena-backed `SearchStats` counters).
 
-use hofdla::dsl::intern::{ExprId, SharedArena};
+use hofdla::dsl::intern::{arena_pool_stats, ExprId, SharedArena};
 use hofdla::dsl::Expr;
 use hofdla::enumerate::{enumerate_search, starts, SearchOptions};
 use hofdla::layout::Layout;
@@ -180,4 +180,94 @@ fn stressed_shard_counts_reproduce_serial_order_with_boundary_only_extraction() 
             );
         }
     }
+}
+
+/// Arena pooling (ISSUE 8) is invisible to search results: every search
+/// checks its arena out of the process-wide pool, so by the second run
+/// of any spec the arena has been reset from *some* prior search. Kept
+/// sets, winners, scores and the `SearchStats` counters must be
+/// bit-identical between a first (possibly pool-cold) run and a reused
+/// (pool-warm) run, at every stressed shard width.
+#[test]
+fn pooled_arena_reproduces_fresh_search_bit_identically() {
+    let ctx = ctx();
+    for shards in stress_shard_counts() {
+        let opts = SearchOptions {
+            limit: 4096,
+            shards,
+            prune_slack: None,
+            score: true,
+            ..SearchOptions::default()
+        };
+        for start_fn in [
+            starts::matmul_rnz_subdivided_variant
+                as fn(usize) -> hofdla::enumerate::Variant,
+            starts::matmul_all_subdivided_variant,
+        ] {
+            let cold = enumerate_search(&start_fn(2), &ctx, &opts).unwrap();
+            let warm = enumerate_search(&start_fn(2), &ctx, &opts).unwrap();
+            let keys = |r: &hofdla::enumerate::SearchResult| {
+                r.variants.iter().map(|v| v.display_key()).collect::<Vec<_>>()
+            };
+            assert_eq!(keys(&cold), keys(&warm), "shards={shards}: kept set diverged");
+            assert_eq!(cold.scores, warm.scores, "shards={shards}: scores diverged");
+            assert_eq!(
+                format!("{:?}", cold.stats),
+                format!("{:?}", warm.stats),
+                "shards={shards}: SearchStats diverged between pool-cold and pool-warm runs"
+            );
+            for (c, w) in cold.variants.iter().zip(&warm.variants) {
+                assert_eq!(c.expr, w.expr, "shards={shards}: extracted tree diverged");
+            }
+        }
+    }
+    // The searches above returned their arenas; the pool is actually
+    // cycling (counters are process-global and shared with concurrent
+    // tests, so assert the invariant, not exact values).
+    let stats = arena_pool_stats();
+    assert!(
+        stats.created + stats.reused >= 2,
+        "searches must check arenas out of the pool: {stats:?}"
+    );
+    assert!(stats.high_water >= 1, "{stats:?}");
+}
+
+/// Reuse is a *reset*, not a leak: a pooled arena comes back empty, with
+/// its extraction counter cleared — the search's output-boundary
+/// accounting (`extracted() == kept - 1` above) would double-count
+/// otherwise.
+#[test]
+fn reused_arena_starts_empty_with_cleared_counters() {
+    // Drive the reset path directly (the pool applies it on every
+    // checkout): interleaving with the global pool here would race other
+    // tests for which arena comes back.
+    let mut arena = SharedArena::new();
+    let id = arena.intern(&family_exprs()[0]);
+    let _ = arena.extract(id);
+    assert!(!arena.is_empty());
+    assert_eq!(arena.extractions(), 1);
+    let before = arena.epoch();
+    arena.reset();
+    assert_eq!(arena.len(), 0);
+    assert_eq!(arena.extractions(), 0);
+    assert_eq!(arena.epoch(), before.wrapping_add(1));
+    // And the reset arena interns from scratch, reproducing round trips.
+    let id2 = arena.intern(&family_exprs()[0]);
+    assert_eq!(arena.extract(id2), family_exprs()[0]);
+}
+
+/// Debug builds fail closed on ids that outlive a reset (the arena-pool
+/// reuse hazard): every `ExprId` carries its arena epoch, and resolving
+/// one against a later epoch panics instead of silently reading another
+/// search's nodes.
+#[cfg(debug_assertions)]
+#[test]
+#[should_panic(expected = "stale ExprId")]
+fn stale_id_across_pool_style_reset_fails_closed_in_debug() {
+    let mut arena = SharedArena::new();
+    let stale = arena.intern(&family_exprs()[0]);
+    arena.reset();
+    // A fresh search would now repopulate the arena; the pre-reset id
+    // must not resolve against it.
+    let _ = arena.extract(stale);
 }
