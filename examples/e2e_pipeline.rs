@@ -35,17 +35,13 @@ fn main() -> hofdla::Result<()> {
     // ---- 1. Front end: parse + typecheck + fuse + subdivide + enumerate,
     //         through the same service pipeline the coordinator runs.
     let src = "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))";
-    let spec = OptimizeSpec {
-        source: src.into(),
-        inputs: vec![("A".into(), vec![n, n]), ("B".into(), vec![n, n])],
-        rank_by: RankBy::CostModel,
-        subdivide_rnz: Some(b),
-        top_k: 12,
-        prune: false,
-        verify: true,
-        budget: 0,
-        deadline_ms: 0,
-    };
+    let spec = OptimizeSpec::builder(src)
+        .input("A", &[n, n])
+        .input("B", &[n, n])
+        .rank_by(RankBy::CostModel)
+        .subdivide_rnz(b)
+        .verify(true)
+        .build()?;
     let t = std::time::Instant::now();
     let report = optimize(&spec)?;
     println!(

@@ -11,10 +11,15 @@ absolute medians, the lane tracks the pruned/cold ratio
 `pruned_candidates` — the branch-and-bound cut going inert (pruning
 nothing on the bench workload) flags even when wall-clock looks fine —
 and the `sharing` block's canonical hit rate and coalesced count, so the
-cross-request sharing machinery going inert flags too. Exit codes: 0 =
-within threshold (or nothing to compare), 1 = at least one row regressed
-beyond THRESHOLD (or a within-run signal broke), 2 = usage error. Stdlib
-only — the repo's default build is dependency-free and CI should be too.
+cross-request sharing machinery going inert flags too. The schema-v5
+`service` block (load-generator rows) is guarded the same way: the
+`load` row's p50/p99 tails compare against the baseline at the 3x
+threshold and must not shed, while the `overload` row must shed — a
+zero shed count under a 64-job burst at a 2-slot queue means admission
+control went inert. Exit codes: 0 = within threshold (or nothing to
+compare), 1 = at least one row regressed beyond THRESHOLD (or a
+within-run signal broke), 2 = usage error. Stdlib only — the repo's
+default build is dependency-free and CI should be too.
 """
 
 import json
@@ -208,6 +213,64 @@ def main(argv):
                 "coordinator worker loop)"
             )
             broken.append("coalesced")
+
+    # Service front-end tracking (ISSUE 9): the load-generator rows.
+    # Within-run invariants are `broken` signals — the warm `load` row
+    # must not shed (admission control firing under nominal load means
+    # the queue bound or the drain loop is wrong), and the starved
+    # `overload` row must shed (a 64-job burst at a 2-slot queue that
+    # sheds nothing means admission control went inert and tail latency
+    # is unbounded again). The load row's p50/p99 tails additionally
+    # compare against the committed baseline at the generous cross-run
+    # threshold. Tolerant of pre-service baselines (no "service" block).
+    service = {r.get("scenario"): r for r in current.get("service", [])}
+    base_service = {r.get("scenario"): r for r in baseline.get("service", [])}
+    for scenario, row in service.items():
+        print(
+            "service {}: clients={} offered={} completed={} shed={} "
+            "shed_rate={} p50_ns={} p99_ns={}".format(
+                scenario,
+                row.get("clients", "?"),
+                row.get("offered", "?"),
+                row.get("completed", "?"),
+                row.get("shed", "?"),
+                row.get("shed_rate", "?"),
+                row.get("p50_ns", "?"),
+                row.get("p99_ns", "?"),
+            )
+        )
+    if service:
+        load = service.get("load")
+        if load is not None and load.get("shed", 0) != 0:
+            print(
+                "advisory: the warm load scenario shed requests — admission "
+                "control is rejecting nominal traffic (see "
+                "Coordinator::submit_optimize / Config::queue_cap)"
+            )
+            broken.append("service-load-shed")
+        overload = service.get("overload")
+        if overload is not None and not overload.get("shed", 0):
+            print(
+                "advisory: the overload scenario shed nothing — a 64-job "
+                "burst at a 2-slot intake queue must trip admission "
+                "control; the typed Overloaded rejection has gone inert"
+            )
+            broken.append("service-overload-shed")
+        base_load = base_service.get("load")
+        if load is not None and base_load is not None:
+            for col in ("p50_ns", "p99_ns"):
+                c = load.get(col, 0)
+                b = base_load.get(col, 0)
+                if not b or b <= 0:
+                    continue
+                ratio = c / b
+                mark = "OK" if ratio <= THRESHOLD else f"REGRESSION (> {THRESHOLD}x)"
+                print(
+                    f"service load {col:6} {c:>13} ns  baseline {b:>13} ns  "
+                    f"({ratio:6.2f}x)  {mark}"
+                )
+                if ratio > THRESHOLD:
+                    regressed.append(f"service-load-{col}")
 
     if regressed:
         print(

@@ -15,32 +15,40 @@
 //!   cached traffic hit through the canonical key (ISSUE 8),
 //! - the *coalesced* burst latency — 8 identical concurrent submissions
 //!   against a flushed cache collapse onto one search (single-flight),
+//! - a *service* load-generator phase (ISSUE 9): per-request p50/p99
+//!   latency and the shed rate at 8 concurrent clients through the typed
+//!   front door, once against the warm default service (`load` — the
+//!   queue never saturates, shed must be 0) and once bursting 64
+//!   distinct short-deadline jobs at a starved 1-worker / 2-slot service
+//!   (`overload` — admission control must shed most of the burst),
 //! - pipelined submission throughput over the worker pool.
 //!
 //! The cold/warm/warm_canonical/pruned/coalesced rows are also written to
-//! `BENCH_coordinator.json` (nanosecond medians), together with a
-//! `sharing` block (hit split, coalesced count, canonical hit rate, arena
-//! pool high-water), so the perf trajectory — and the sharing machinery
-//! staying live — is tracked across PRs.
+//! `BENCH_coordinator.json` (schema v5, nanosecond medians), together
+//! with a `sharing` block (hit split, coalesced count, canonical hit
+//! rate, arena pool high-water) and the `service` rows above, so the perf
+//! trajectory — and the sharing + admission machinery staying live — is
+//! tracked across PRs.
 
 use hofdla::bench_support::{bench, fmt_duration, BenchConfig, Measurement};
 use hofdla::coordinator::{self, Config, Coordinator, OptimizeSpec, RankBy, Request, Response};
+use hofdla::Error;
 
 fn subdivided_matmul_spec(prune: bool) -> OptimizeSpec {
-    OptimizeSpec {
-        source: "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))"
-            .into(),
-        inputs: vec![("A".into(), vec![64, 64]), ("B".into(), vec![64, 64])],
-        rank_by: RankBy::CostModel,
-        subdivide_rnz: Some(4),
-        top_k: 12,
-        prune,
-        // The cold row measures the production configuration, verifier
-        // included, so its overhead is tracked by the perf lane.
-        verify: true,
-        budget: 0,
-        deadline_ms: 0,
-    }
+    OptimizeSpec::builder(
+        "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))",
+    )
+    .input("A", &[64, 64])
+    .input("B", &[64, 64])
+    .rank_by(RankBy::CostModel)
+    .subdivide_rnz(4)
+    .top_k(12)
+    .prune(prune)
+    // The cold row measures the production configuration, verifier
+    // included, so its overhead is tracked by the perf lane.
+    .verify(true)
+    .build()
+    .expect("headline spec is valid")
 }
 
 /// The same kernel with every binder α-renamed: keys identically to
@@ -48,13 +56,11 @@ fn subdivided_matmul_spec(prune: bool) -> OptimizeSpec {
 /// traffic using this spelling exercises the canonical (not exact) hit
 /// path.
 fn renamed_subdivided_matmul_spec() -> OptimizeSpec {
-    OptimizeSpec {
-        source:
-            "(map (lam (rowOfA) (map (lam (colOfB) (rnz + * rowOfA colOfB)) \
-             (flip 0 (in B)))) (in A))"
-                .into(),
-        ..subdivided_matmul_spec(false)
-    }
+    let mut spec = subdivided_matmul_spec(false);
+    spec.source = "(map (lam (rowOfA) (map (lam (colOfB) (rnz + * rowOfA colOfB)) \
+         (flip 0 (in B)))) (in A))"
+        .into();
+    spec
 }
 
 /// Branch-and-bound effectiveness counters for the `search` block of the
@@ -94,15 +100,108 @@ struct SharingRow {
     arena_pool_high_water: u64,
 }
 
+/// One load-generator scenario for the `service` block of the JSON
+/// (schema v5): the per-request latency distribution and shed behaviour
+/// of the typed front door under N concurrent clients. The advisory perf
+/// lane watches the `load` row's tail (p50/p99, 3× threshold like the
+/// medians) and flags `shed != 0` there, and flags `shed == 0` on the
+/// `overload` row — admission control going inert is a service
+/// regression no wall-clock row catches.
+struct ServiceRow {
+    scenario: &'static str,
+    clients: usize,
+    offered: u64,
+    completed: u64,
+    shed: u64,
+    shed_rate: f64,
+    p50_ns: u128,
+    p99_ns: u128,
+}
+
+/// Nearest-rank percentile over a sorted nanosecond sample (0 when no
+/// accepted job produced a sample).
+fn percentile(sorted_ns: &[u128], p: f64) -> u128 {
+    match sorted_ns.len() {
+        0 => 0,
+        n => sorted_ns[(((n - 1) as f64) * p).round() as usize],
+    }
+}
+
+/// Drive `clients` concurrent client threads against the service, each
+/// submitting `per_client` jobs through the typed front door
+/// ([`Coordinator::submit_optimize`]). Closed-loop clients wait for each
+/// job before submitting the next (steady offered load); open-loop
+/// clients burst every submission up front (overload). Latency is
+/// measured submit→resolve, so queue wait is inside the number; typed
+/// [`Error::Overloaded`] rejections count as shed and contribute no
+/// latency sample.
+fn drive_clients(
+    c: &Coordinator,
+    scenario: &'static str,
+    clients: usize,
+    per_client: usize,
+    open_loop: bool,
+    mk: &(dyn Fn(usize, usize) -> OptimizeSpec + Sync),
+) -> ServiceRow {
+    let per_thread: Vec<(Vec<u128>, u64)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|ci| {
+                s.spawn(move || {
+                    let mut lat = Vec::with_capacity(per_client);
+                    let mut shed = 0u64;
+                    let mut pending = Vec::new();
+                    for j in 0..per_client {
+                        let t = std::time::Instant::now();
+                        match c.submit_optimize(mk(ci, j)) {
+                            Ok(h) if open_loop => pending.push((t, h)),
+                            Ok(h) => {
+                                h.wait().expect("accepted job must resolve");
+                                lat.push(t.elapsed().as_nanos());
+                            }
+                            Err(Error::Overloaded { .. }) => shed += 1,
+                            Err(e) => panic!("submit failed: {e}"),
+                        }
+                    }
+                    for (t, h) in pending {
+                        h.wait().expect("accepted job must resolve");
+                        lat.push(t.elapsed().as_nanos());
+                    }
+                    (lat, shed)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut lat: Vec<u128> = Vec::new();
+    let mut shed = 0u64;
+    for (l, s) in per_thread {
+        lat.extend(l);
+        shed += s;
+    }
+    lat.sort_unstable();
+    let offered = (clients * per_client) as u64;
+    ServiceRow {
+        scenario,
+        clients,
+        offered,
+        completed: offered - shed,
+        shed,
+        shed_rate: shed as f64 / offered.max(1) as f64,
+        p50_ns: percentile(&lat, 0.50),
+        p99_ns: percentile(&lat, 0.99),
+    }
+}
+
 fn write_bench_json(
     rows: &[(&str, &Measurement)],
     jobs_per_s: f64,
     search: &SearchRow,
     anytime: &[AnytimeRow],
     sharing: &SharingRow,
+    service: &[ServiceRow],
 ) {
     let mut s = String::from(
-        "{\n  \"bench\": \"coordinator\",\n  \"workload\": \"matmul n=64 subdivide_rnz=4 (Table 2, 12 variants)\",\n  \"rows\": [\n",
+        "{\n  \"bench\": \"coordinator\",\n  \"schema\": 5,\n  \"workload\": \"matmul n=64 subdivide_rnz=4 (Table 2, 12 variants)\",\n  \"rows\": [\n",
     );
     for (i, (name, m)) in rows.iter().enumerate() {
         s.push_str(&format!(
@@ -131,14 +230,28 @@ fn write_bench_json(
         ));
     }
     s.push_str(&format!(
-        "  ],\n  \"sharing\": {{\"exact_hits\": {}, \"canonical_hits\": {}, \"coalesced\": {}, \"canonical_hit_rate\": {:.2}, \"arena_pool_high_water\": {}}},\n",
+        "  ],\n  \"sharing\": {{\"exact_hits\": {}, \"canonical_hits\": {}, \"coalesced\": {}, \"canonical_hit_rate\": {:.2}, \"arena_pool_high_water\": {}}},\n  \"service\": [\n",
         sharing.exact_hits,
         sharing.canonical_hits,
         sharing.coalesced,
         sharing.canonical_hit_rate,
         sharing.arena_pool_high_water
     ));
-    s.push_str(&format!("  \"jobs_per_s\": {jobs_per_s:.1}\n}}\n"));
+    for (i, r) in service.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"scenario\": \"{}\", \"clients\": {}, \"offered\": {}, \"completed\": {}, \"shed\": {}, \"shed_rate\": {:.2}, \"p50_ns\": {}, \"p99_ns\": {}}}{}\n",
+            r.scenario,
+            r.clients,
+            r.offered,
+            r.completed,
+            r.shed,
+            r.shed_rate,
+            r.p50_ns,
+            r.p99_ns,
+            if i + 1 < service.len() { "," } else { "" }
+        ));
+    }
+    s.push_str(&format!("  ],\n  \"jobs_per_s\": {jobs_per_s:.1}\n}}\n"));
     match std::fs::write("BENCH_coordinator.json", &s) {
         Ok(()) => println!("wrote BENCH_coordinator.json"),
         Err(e) => eprintln!("could not write BENCH_coordinator.json: {e}"),
@@ -195,11 +308,11 @@ fn main() {
         .iter()
         .map(|&frac| {
             let budget = ((ex.stats.expanded as f64 * frac).ceil() as u64).max(1);
-            let truncated = coordinator::optimize(&OptimizeSpec {
-                budget,
-                ..spec.clone()
-            })
-            .expect("optimize");
+            let truncated = {
+                let mut t = spec.clone();
+                t.budget = budget;
+                coordinator::optimize(&t).expect("optimize")
+            };
             let row = AnytimeRow {
                 budget,
                 frac,
@@ -222,12 +335,14 @@ fn main() {
     let c = Coordinator::start(Config::default()).expect("start");
 
     // Warm path: repeated identical service traffic short-circuits in the
-    // result LRU.
+    // result LRU. Submitted through the typed front door
+    // (`submit_optimize` → `OptimizeHandle`), the production client path.
     let warm = bench("coordinator optimize (warm LRU)", &cfg, || {
-        let Response::Optimized(r) = c.call(Request::Optimize(spec.clone())).expect("call")
-        else {
-            panic!("wrong response type")
-        };
+        let r = c
+            .submit_optimize(spec.clone())
+            .expect("submit")
+            .wait()
+            .expect("wait");
         std::hint::black_box(r.variants_explored);
     });
     println!(
@@ -240,11 +355,11 @@ fn main() {
     // fresh search (ISSUE 8 acceptance workload).
     let renamed = renamed_subdivided_matmul_spec();
     let warm_canonical = bench("coordinator optimize (warm canonical)", &cfg, || {
-        let Response::Optimized(r) =
-            c.call(Request::Optimize(renamed.clone())).expect("call")
-        else {
-            panic!("wrong response type")
-        };
+        let r = c
+            .submit_optimize(renamed.clone())
+            .expect("submit")
+            .wait()
+            .expect("wait");
         std::hint::black_box(r.variants_explored);
     });
     println!(
@@ -252,11 +367,11 @@ fn main() {
         fmt_duration(warm_canonical.median)
     );
 
-    // Pipelined submission throughput (the batching path).
+    // Pipelined submission throughput (the batching path), typed handles.
     let t = std::time::Instant::now();
     let jobs = 64;
     let handles: Vec<_> = (0..jobs)
-        .map(|_| c.submit(Request::Optimize(spec.clone())).unwrap())
+        .map(|_| c.submit_optimize(spec.clone()).unwrap())
         .collect();
     for h in handles {
         h.wait().unwrap();
@@ -277,7 +392,7 @@ fn main() {
     let coalesced_burst = bench("coordinator optimize (coalesced x8 burst)", &cfg, || {
         c.flush_opt_cache();
         let handles: Vec<_> = (0..8)
-            .map(|_| c.submit(Request::Optimize(spec.clone())).unwrap())
+            .map(|_| c.submit_optimize(spec.clone()).unwrap())
             .collect();
         for h in handles {
             h.wait().unwrap();
@@ -295,14 +410,20 @@ fn main() {
     // hit, so the rate is 1.0 when the machinery works and 0.0 when it
     // silently stops matching.
     c.flush_opt_cache();
-    c.call(Request::Optimize(spec.clone())).expect("warm call");
+    c.submit_optimize(spec.clone())
+        .expect("submit")
+        .wait()
+        .expect("warm call");
     let canonical_batch = 32u64;
     let canon_before = c
         .metrics
         .opt_cache_hits_canonical
         .load(std::sync::atomic::Ordering::Relaxed);
     for _ in 0..canonical_batch {
-        c.call(Request::Optimize(renamed.clone())).expect("canonical call");
+        c.submit_optimize(renamed.clone())
+            .expect("submit")
+            .wait()
+            .expect("canonical call");
     }
     let canon_delta = c
         .metrics
@@ -337,6 +458,57 @@ fn main() {
         sharing.arena_pool_high_water
     );
 
+    // Service load generator (ISSUE 9, schema v5): the typed front door
+    // under N concurrent clients.
+    //
+    // - `load`: 8 closed-loop clients × 32 requests against the warmed
+    //   default-config service — every request is a cache hit and at most
+    //   8 jobs are ever queued, so nothing sheds; the row tracks the
+    //   tail (p50/p99) of the service overhead under concurrency.
+    // - `overload`: 8 open-loop clients burst 64 *distinct*
+    //   short-deadline jobs (the headline kernel at 64 different `top_k`
+    //   cut-offs — same family, so intake batching engages, but nothing
+    //   coalesces or hits the cache) at a deliberately starved service
+    //   (1 worker, intake queue capacity 2). Admission control must shed
+    //   most of the burst with typed `Overloaded` rejections while every
+    //   accepted job still resolves — its 20 ms deadline is measured
+    //   from intake, so queued jobs return truncated instead of piling
+    //   onto the tail.
+    let clients = 8;
+    let load = drive_clients(&c, "load", clients, 32, false, &|_, _| spec.clone());
+    println!(
+        "service load ({clients} clients x32 closed-loop, warm): p50 {} p99 {} shed {} ({:.0}%)",
+        fmt_duration(std::time::Duration::from_nanos(load.p50_ns as u64)),
+        fmt_duration(std::time::Duration::from_nanos(load.p99_ns as u64)),
+        load.shed,
+        load.shed_rate * 100.0
+    );
+    let overload_c = Coordinator::start(Config {
+        workers: 1,
+        queue_cap: 2,
+        opt_batch: 4,
+        ..Config::default()
+    })
+    .expect("start overload service");
+    let overload = drive_clients(&overload_c, "overload", clients, 8, true, &|ci, j| {
+        let mut s = spec.clone();
+        s.top_k = ci * 8 + j + 1;
+        s.deadline_ms = 20;
+        s
+    });
+    println!(
+        "service overload ({clients} clients x8 burst, 1 worker, queue_cap=2): p50 {} p99 {} \
+         shed {}/{} ({:.0}%); metrics: {}",
+        fmt_duration(std::time::Duration::from_nanos(overload.p50_ns as u64)),
+        fmt_duration(std::time::Duration::from_nanos(overload.p99_ns as u64)),
+        overload.shed,
+        overload.offered,
+        overload.shed_rate * 100.0,
+        overload_c.metrics.summary()
+    );
+    drop(overload_c);
+    let service = [load, overload];
+
     write_bench_json(
         &[
             ("cold", &cold),
@@ -349,6 +521,7 @@ fn main() {
         &search,
         &anytime,
         &sharing,
+        &service,
     );
 
     if hofdla::runtime::artifact_path("matmul_xla_256").exists()

@@ -62,6 +62,39 @@ pub struct Metrics {
     /// Fresh searches stopped by their deadline (between waves or by
     /// cancelling an in-flight wave).
     pub search_deadline_hits: AtomicU64,
+    /// Fresh searches stopped by an external [`CancelToken`]
+    /// ([`crate::coordinator::OptimizeHandle::cancel`]) — the search was
+    /// running when the client gave up on it.
+    ///
+    /// [`CancelToken`]: crate::enumerate::CancelToken
+    pub search_cancelled: AtomicU64,
+    /// Optimize jobs whose handle was cancelled while they were still
+    /// queued: the worker dropped them at checkout without starting a
+    /// search (counted in `failed`, never cached).
+    pub cancelled_before_start: AtomicU64,
+    /// Optimize jobs rejected at intake by admission control
+    /// ([`crate::Error::Overloaded`]): the bounded queue was full. Shed
+    /// jobs never count as `submitted` and never reach a worker.
+    pub shed: AtomicU64,
+    /// Gauge: optimize jobs currently waiting in the intake queue
+    /// (excludes the job each worker is running).
+    pub queue_depth: AtomicU64,
+    /// Gauge: deepest the intake queue has ever been.
+    pub queue_high_water: AtomicU64,
+    /// Total nanoseconds optimize jobs spent queued before a worker
+    /// picked them up (the wait that deadline propagation charges
+    /// against each job's budget).
+    pub queue_wait_ns_total: AtomicU64,
+    /// Gauge: longest single queue wait observed, in nanoseconds.
+    pub queue_wait_max_ns: AtomicU64,
+    /// Intake batches checked out by workers (a batch is one leader plus
+    /// the same-family followers drained with it; singletons count too).
+    pub opt_batches: AtomicU64,
+    /// Optimize jobs that rode in a batch of ≥ 2 — distinct same-family
+    /// jobs sharing one pooled arena checkout sequentially.
+    pub opt_batched_jobs: AtomicU64,
+    /// Gauge: largest intake batch a worker has checked out.
+    pub max_opt_batch: AtomicU64,
     /// Gauge: the certified optimality gap of the most recent fresh
     /// search, stored as `f64` bits (`0` = no search recorded yet). Read
     /// through [`Metrics::last_certified_gap`].
@@ -96,8 +129,27 @@ impl Metrics {
             .fetch_add(u64::from(s.budget_hit), Ordering::Relaxed);
         self.search_deadline_hits
             .fetch_add(u64::from(s.deadline_hit), Ordering::Relaxed);
+        self.search_cancelled
+            .fetch_add(u64::from(s.cancelled), Ordering::Relaxed);
         self.last_gap_bits
             .store(s.certified_gap.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Record one job's measured queue wait (intake → worker checkout).
+    pub fn record_queue_wait(&self, wait: std::time::Duration) {
+        let ns = u64::try_from(wait.as_nanos()).unwrap_or(u64::MAX);
+        self.queue_wait_ns_total.fetch_add(ns, Ordering::Relaxed);
+        self.queue_wait_max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Record one intake batch of `jobs` same-family optimize jobs
+    /// checked out together by a worker.
+    pub fn record_batch(&self, jobs: u64) {
+        self.opt_batches.fetch_add(1, Ordering::Relaxed);
+        if jobs >= 2 {
+            self.opt_batched_jobs.fetch_add(jobs, Ordering::Relaxed);
+        }
+        self.max_opt_batch.fetch_max(jobs, Ordering::Relaxed);
     }
 
     /// Total optimize jobs answered from the result LRU, exact and
@@ -122,10 +174,17 @@ impl Metrics {
     /// Human-readable one-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "submitted={} completed={} failed={} exec_batches={} max_batch={} cache_hits={} opt_cache_hits_exact={} opt_cache_hits_canonical={} opt_coalesced={} opt_cache_flushes={} arena_pool_high_water={} search_expanded={} search_generated={} search_pruned={} search_type_rejects={} search_bound_updates={} search_extractions={} search_budget_hits={} search_deadline_hits={} last_gap={} verify_passed={} verify_rejects={}",
+            "submitted={} completed={} failed={} shed={} queue_depth={} queue_high_water={} queue_wait_max_ns={} opt_batches={} opt_batched_jobs={} max_opt_batch={} exec_batches={} max_batch={} cache_hits={} opt_cache_hits_exact={} opt_cache_hits_canonical={} opt_coalesced={} opt_cache_flushes={} arena_pool_high_water={} search_expanded={} search_generated={} search_pruned={} search_type_rejects={} search_bound_updates={} search_extractions={} search_budget_hits={} search_deadline_hits={} search_cancelled={} cancelled_before_start={} last_gap={} verify_passed={} verify_rejects={}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
+            self.queue_depth.load(Ordering::Relaxed),
+            self.queue_high_water.load(Ordering::Relaxed),
+            self.queue_wait_max_ns.load(Ordering::Relaxed),
+            self.opt_batches.load(Ordering::Relaxed),
+            self.opt_batched_jobs.load(Ordering::Relaxed),
+            self.max_opt_batch.load(Ordering::Relaxed),
             self.exec_batches.load(Ordering::Relaxed),
             self.max_batch_seen.load(Ordering::Relaxed),
             self.exec_cache_hits.load(Ordering::Relaxed),
@@ -142,6 +201,8 @@ impl Metrics {
             self.search_extractions.load(Ordering::Relaxed),
             self.search_budget_hits.load(Ordering::Relaxed),
             self.search_deadline_hits.load(Ordering::Relaxed),
+            self.search_cancelled.load(Ordering::Relaxed),
+            self.cancelled_before_start.load(Ordering::Relaxed),
             // A gauge, not a counter: "-" until a fresh search records.
             match self.last_certified_gap() {
                 g if g.is_nan() => "-".to_string(),
@@ -194,6 +255,7 @@ mod tests {
             complete: false,
             budget_hit: true,
             deadline_hit: false,
+            cancelled: false,
         };
         m.record_search(&stats);
         m.record_search(&stats);
@@ -239,6 +301,40 @@ mod tests {
         assert!(s.contains("opt_cache_hits_canonical=2"));
         assert!(s.contains("opt_coalesced=5"));
         assert!(s.contains("arena_pool_high_water=4"));
+    }
+
+    #[test]
+    fn service_front_end_counters_surface_in_summary() {
+        let m = Metrics::default();
+        m.shed.store(3, Ordering::Relaxed);
+        m.queue_depth.store(2, Ordering::Relaxed);
+        m.queue_high_water.store(7, Ordering::Relaxed);
+        m.cancelled_before_start.store(1, Ordering::Relaxed);
+        m.record_queue_wait(std::time::Duration::from_micros(5));
+        m.record_queue_wait(std::time::Duration::from_micros(2));
+        assert_eq!(m.queue_wait_ns_total.load(Ordering::Relaxed), 7_000);
+        assert_eq!(m.queue_wait_max_ns.load(Ordering::Relaxed), 5_000);
+        // Singleton batches count as batches but not as batched jobs.
+        m.record_batch(1);
+        m.record_batch(3);
+        assert_eq!(m.opt_batches.load(Ordering::Relaxed), 2);
+        assert_eq!(m.opt_batched_jobs.load(Ordering::Relaxed), 3);
+        assert_eq!(m.max_opt_batch.load(Ordering::Relaxed), 3);
+        let stats = SearchStats {
+            cancelled: true,
+            ..Default::default()
+        };
+        m.record_search(&stats);
+        let s = m.summary();
+        assert!(s.contains("shed=3"));
+        assert!(s.contains("queue_depth=2"));
+        assert!(s.contains("queue_high_water=7"));
+        assert!(s.contains("queue_wait_max_ns=5000"));
+        assert!(s.contains("opt_batches=2"));
+        assert!(s.contains("opt_batched_jobs=3"));
+        assert!(s.contains("max_opt_batch=3"));
+        assert!(s.contains("search_cancelled=1"));
+        assert!(s.contains("cancelled_before_start=1"));
     }
 
     #[test]

@@ -6,28 +6,52 @@
 //! rearrangement) and *execute* jobs (run an AOT artifact through the PJRT
 //! runtime), with
 //!
+//! - a bounded intake queue with **admission control**: when the queue is
+//!   at capacity new optimize jobs are shed with a typed
+//!   [`Error::Overloaded`] carrying the observed depth, instead of
+//!   queueing unboundedly and blowing the tail latency of everything
+//!   behind them,
+//! - **deadline propagation**: a job's [`OptimizeSpec::deadline_ms`] is
+//!   measured from *intake*, so time spent queued is charged against the
+//!   anytime search budget ([`JobCtl::deadline_origin`]),
+//! - **cooperative cancellation**: [`OptimizeHandle::cancel`] flips the
+//!   job's [`CancelToken`](crate::enumerate::CancelToken); a queued job is
+//!   dropped at worker checkout, a *running* search stops mid-wave,
+//! - **compatible-job batching**: workers check out one leader plus any
+//!   queued *distinct* jobs of the same kernel family (same generation and
+//!   α-invariant source hash) and run them back-to-back, soonest deadline
+//!   first, so the family reuses one pooled arena checkout sequentially
+//!   (identical jobs never batch — they coalesce onto the in-flight
+//!   leader via single-flight instead),
 //! - a worker pool for CPU-bound optimization pipelines,
 //! - a dedicated runtime thread owning the (non-`Send`) PJRT client, with
 //!   an executable cache and request batching,
 //! - response routing back to each submitter via per-job channels,
 //! - service metrics.
 //!
-//! Python never appears anywhere here — artifacts were compiled ahead of
-//! time by `make artifacts`.
+//! The typed front door is [`Coordinator::submit_optimize`], which
+//! resolves to [`OptimizeResult`] directly; the enum-shaped
+//! [`Coordinator::submit`] delegates to it. Python never appears anywhere
+//! here — artifacts were compiled ahead of time by `make artifacts`.
 
 mod metrics;
 mod pipeline;
 
 pub use metrics::Metrics;
-pub use pipeline::{optimize, CanonicalKey, OptimizeResult, OptimizeSpec, RankBy};
+pub use pipeline::{
+    optimize, optimize_ctl, CanonicalKey, JobCtl, OptimizeResult, OptimizeSpec,
+    OptimizeSpecBuilder, RankBy, MAX_DEADLINE_MS,
+};
 
+use crate::enumerate::CancelToken;
 use crate::{Error, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
-use std::sync::{Arc, Mutex, PoisonError};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// Best-effort description of a panic payload (the `Box<dyn Any>` a
 /// worker catches from a panicking pipeline run).
@@ -61,7 +85,7 @@ struct OptShared {
     /// for that key. An entry exists iff a leader is running; it is
     /// created empty at election and drained (under the same lock) when
     /// the leader publishes its result.
-    inflight: HashMap<CanonicalKey, Vec<Sender<Result<Response>>>>,
+    inflight: HashMap<CanonicalKey, Vec<Sender<Result<OptimizeResult>>>>,
 }
 
 /// What a worker decided, under the [`OptShared`] lock, to do with an
@@ -70,26 +94,114 @@ struct OptShared {
 /// sender moved into the in-flight table instead).
 enum Decision {
     /// Cache hit: answer immediately with the cached report.
-    Hit(Sender<Result<Response>>, OptimizeResult),
+    Hit(Sender<Result<OptimizeResult>>, OptimizeResult),
     /// Coalesced onto a running leader; the leader will reply.
     Waiting,
     /// Elected leader: run the pipeline and fan the result out.
-    Lead(Sender<Result<Response>>),
+    Lead(Sender<Result<OptimizeResult>>),
+}
+
+/// One admitted optimize job waiting in the intake queue.
+struct IntakeJob {
+    spec: OptimizeSpec,
+    reply: Sender<Result<OptimizeResult>>,
+    /// The handle's cancellation token: checked at worker checkout
+    /// (queued cancels never start a search) and threaded into the
+    /// search so a running job stops mid-wave.
+    cancel: CancelToken,
+    /// Intake timestamp: the job's deadline origin (queue wait is
+    /// charged against `deadline_ms`) and the queue-wait metric source.
+    enqueued: Instant,
+    /// Canonical key stashed at admission (`None` for unparseable
+    /// sources). Valid while the cache generation is unchanged; a worker
+    /// re-keys the job if a flush raced it into the queue.
+    key: Option<CanonicalKey>,
+}
+
+/// The bounded intake queue: admission control happens under this lock
+/// ([`Coordinator::submit_optimize`]), workers block on the condvar and
+/// check out deadline-sorted same-family batches ([`next_batch`]).
+struct Intake {
+    state: Mutex<IntakeState>,
+    ready: Condvar,
+}
+
+struct IntakeState {
+    jobs: VecDeque<IntakeJob>,
+    /// Set by `Drop`: reject new submissions, drain what's queued, let
+    /// the workers exit.
+    stopped: bool,
+}
+
+/// Block until intake work is available and check out the next batch:
+/// the FIFO leader plus up to `opt_batch - 1` queued *distinct* jobs of
+/// the leader's kernel family (same generation + α-invariant source
+/// hash, different full key), sorted soonest-effective-deadline first
+/// behind the leader. Running a family back-to-back on one worker means
+/// its searches reuse one pooled arena checkout sequentially instead of
+/// faulting several arenas out of the pool at once. Identical-key jobs
+/// are deliberately left queued: they coalesce onto the leader's flight
+/// via single-flight from whichever worker picks them up, which is
+/// strictly cheaper than a batch slot. Returns `None` when the service
+/// stopped and the queue is drained.
+fn next_batch(intake: &Intake, opt_batch: usize, m: &Metrics) -> Option<Vec<IntakeJob>> {
+    let mut st = intake.state.lock().unwrap_or_else(PoisonError::into_inner);
+    loop {
+        if let Some(leader) = st.jobs.pop_front() {
+            let mut batch = vec![leader];
+            if let Some(lead_key) = batch[0].key.clone() {
+                let family = (lead_key.generation, lead_key.source_hash);
+                let mut i = 0;
+                while i < st.jobs.len() && batch.len() < opt_batch.max(1) {
+                    let compatible = st.jobs[i].key.as_ref().is_some_and(|k| {
+                        (k.generation, k.source_hash) == family && *k != lead_key
+                    });
+                    if compatible {
+                        // VecDeque::remove preserves the order of the
+                        // remaining queue (FIFO fairness for strangers).
+                        batch.extend(st.jobs.remove(i));
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            m.queue_depth.store(st.jobs.len() as u64, Ordering::Relaxed);
+            drop(st);
+            // Deadline-aware order: the leader keeps its FIFO slot (it
+            // is the oldest job); followers run soonest absolute
+            // deadline first, no-deadline jobs last in intake order
+            // (the sort is stable).
+            batch[1..].sort_by_key(|j| {
+                (
+                    j.spec.deadline_ms == 0,
+                    j.enqueued + Duration::from_millis(j.spec.deadline_ms),
+                )
+            });
+            return Some(batch);
+        }
+        if st.stopped {
+            return None;
+        }
+        st = intake.ready.wait(st).unwrap_or_else(PoisonError::into_inner);
+    }
 }
 
 /// Run one fresh pipeline job with the coordinator's hardening and
 /// metric folding: panics are caught and surfaced as
 /// [`Error::Coordinator`] (the worker and pool stay alive), search
 /// counters and verification tallies fold into `m` exactly once per
-/// fresh run, and the arena-pool high-water gauge is refreshed.
-fn run_fresh(spec: &OptimizeSpec, m: &Metrics) -> Result<OptimizeResult> {
-    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pipeline::optimize(spec)))
-        .unwrap_or_else(|payload| {
-            Err(Error::Coordinator(format!(
-                "optimize job panicked: {}",
-                panic_message(payload.as_ref())
-            )))
-        });
+/// fresh run, and the arena-pool high-water gauge is refreshed. `ctl`
+/// carries the job's cancellation token and deadline origin.
+fn run_fresh(spec: &OptimizeSpec, ctl: &JobCtl, m: &Metrics) -> Result<OptimizeResult> {
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pipeline::optimize_ctl(spec, ctl)
+    }))
+    .unwrap_or_else(|payload| {
+        Err(Error::Coordinator(format!(
+            "optimize job panicked: {}",
+            panic_message(payload.as_ref())
+        )))
+    });
     match &r {
         Ok(res) => {
             // Fold the fresh run's search counters into the service
@@ -129,6 +241,17 @@ pub struct Config {
     /// short-circuits the pipeline entirely. `0` keeps the floor of one
     /// entry.
     pub opt_cache_cap: usize,
+    /// Admission-control bound on the optimize intake queue: submissions
+    /// arriving while this many jobs are already queued are shed with
+    /// [`Error::Overloaded`] instead of being accepted (counted in
+    /// [`Metrics::shed`], never in `submitted`). `0` keeps a floor of
+    /// one slot. Jobs a worker has already checked out don't count
+    /// against the bound.
+    pub queue_cap: usize,
+    /// Maximum optimize jobs a worker checks out per intake batch (the
+    /// leader plus same-family followers; see [`Coordinator`] docs).
+    /// `0` keeps the floor of one — batching off.
+    pub opt_batch: usize,
 }
 
 impl Default for Config {
@@ -138,6 +261,8 @@ impl Default for Config {
             max_batch: 8,
             artifact_dir: crate::runtime::artifact_dir(),
             opt_cache_cap: 128,
+            queue_cap: 256,
+            opt_batch: 8,
         }
     }
 }
@@ -161,27 +286,114 @@ pub enum Response {
     Executed { output: Vec<f32> },
 }
 
-/// Handle to a submitted job; resolves exactly once.
+/// Typed handle to a submitted optimize job
+/// ([`Coordinator::submit_optimize`]).
+///
+/// **Exactly-once resolution.** The job's outcome is delivered to the
+/// handle exactly once, through whichever of [`wait`](Self::wait) /
+/// [`wait_timeout`](Self::wait_timeout) first returns it; after that the
+/// handle is *resolved* and both report an `already resolved` error
+/// (`wait_timeout`'s `Ok(None)` timeout leaves the handle unresolved —
+/// keep polling). Dropping an unresolved handle is safe: the worker's
+/// reply simply has nowhere to go and is discarded; the job itself still
+/// runs to completion (or cancellation) and is cached/counted as usual.
+pub struct OptimizeHandle {
+    id: u64,
+    rx: Receiver<Result<OptimizeResult>>,
+    cancel: CancelToken,
+    resolved: bool,
+}
+
+impl OptimizeHandle {
+    /// Service-assigned job id (diagnostics; matches [`JobHandle::id`]).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Request cooperative cancellation: a still-queued job is dropped at
+    /// worker checkout (it resolves with an error, counted in
+    /// [`Metrics::cancelled_before_start`]); a *running* search observes
+    /// the token at its next checkpoint — between expansion waves, or
+    /// mid-wave at a shard's next depth boundary — and returns its
+    /// best-so-far report with `stats.cancelled` set (counted in
+    /// [`Metrics::search_cancelled`], never cached). Idempotent, and a
+    /// no-op after the job resolved. One deliberate asymmetry: a job
+    /// that *coalesced* onto another request's identical in-flight
+    /// search shares that search, so cancelling it abandons this
+    /// handle's interest but does not stop the shared flight.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    /// Block until the job resolves.
+    pub fn wait(self) -> Result<OptimizeResult> {
+        if self.resolved {
+            return Err(Error::Coordinator(
+                "job already resolved; an OptimizeHandle resolves exactly once".into(),
+            ));
+        }
+        self.rx
+            .recv()
+            .map_err(|_| Error::Coordinator("worker dropped without responding".into()))?
+    }
+
+    /// Wait up to `timeout` for the job to resolve. `Ok(None)` means it
+    /// is still pending (the handle stays live — poll again or
+    /// [`cancel`](Self::cancel)); `Ok(Some(_))`/`Err(_)` resolve the
+    /// handle, and every later call reports `already resolved`.
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Result<Option<OptimizeResult>> {
+        if self.resolved {
+            return Err(Error::Coordinator(
+                "job already resolved; an OptimizeHandle resolves exactly once".into(),
+            ));
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => {
+                self.resolved = true;
+                r.map(Some)
+            }
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => {
+                self.resolved = true;
+                Err(Error::Coordinator("worker dropped without responding".into()))
+            }
+        }
+    }
+}
+
+/// Handle to a submitted job ([`Coordinator::submit`]); resolves exactly
+/// once. The enum-shaped counterpart of [`OptimizeHandle`] — optimize
+/// jobs wrap one and inherit its lifecycle (including
+/// [`cancel`](Self::cancel)).
 pub struct JobHandle {
     pub id: u64,
-    rx: Receiver<Result<Response>>,
+    inner: JobHandleInner,
+}
+
+enum JobHandleInner {
+    Opt(OptimizeHandle),
+    Exec(Receiver<Result<Response>>),
 }
 
 impl JobHandle {
     /// Block until the job completes.
     pub fn wait(self) -> Result<Response> {
-        self.rx
-            .recv()
-            .map_err(|_| Error::Coordinator("worker dropped without responding".into()))?
+        match self.inner {
+            JobHandleInner::Opt(h) => h.wait().map(Response::Optimized),
+            JobHandleInner::Exec(rx) => rx
+                .recv()
+                .map_err(|_| Error::Coordinator("worker dropped without responding".into()))?,
+        }
     }
-}
 
-enum Work {
-    Opt {
-        spec: OptimizeSpec,
-        reply: Sender<Result<Response>>,
-    },
-    Stop,
+    /// Request cooperative cancellation ([`OptimizeHandle::cancel`]).
+    /// Artifact-execution jobs have no cancellation point; for them this
+    /// is a no-op.
+    pub fn cancel(&self) {
+        if let JobHandleInner::Opt(h) = &self.inner {
+            h.cancel();
+        }
+    }
 }
 
 enum RtWork {
@@ -196,12 +408,13 @@ enum RtWork {
 /// The running service.
 pub struct Coordinator {
     next_id: std::sync::atomic::AtomicU64,
-    opt_tx: SyncSender<Work>,
+    intake: Arc<Intake>,
     rt_tx: SyncSender<RtWork>,
     pub metrics: Arc<Metrics>,
     workers: Vec<JoinHandle<()>>,
     rt_thread: Option<JoinHandle<()>>,
-    n_workers: usize,
+    /// Admission bound on the intake queue ([`Config::queue_cap`]).
+    queue_cap: usize,
     /// Generation stamp mixed into every optimize-cache key. Seeded from
     /// [`crate::costmodel::COST_MODEL_VERSION`] (so a cost-model bump
     /// invalidates results cached under the old model) and advanced by
@@ -210,12 +423,147 @@ pub struct Coordinator {
     opt_generation: Arc<std::sync::atomic::AtomicU64>,
 }
 
+/// Process one checked-out optimize job end to end: queue-wait
+/// accounting, the pre-start cancellation gate, the hit / coalesce /
+/// lead decision under the [`OptShared`] lock, and — as leader — the
+/// fresh pipeline run, publish, and fan-out to coalesced waiters.
+fn process_opt_job(
+    job: IntakeJob,
+    m: &Metrics,
+    shared: &Mutex<OptShared>,
+    generation: &std::sync::atomic::AtomicU64,
+) {
+    let IntakeJob {
+        spec,
+        reply,
+        cancel,
+        enqueued,
+        key,
+    } = job;
+    m.record_queue_wait(enqueued.elapsed());
+    // Cancelled while still queued: resolve without starting (or
+    // joining) a search. Counted as failed — the caller asked for a
+    // report and is not getting one.
+    if cancel.is_cancelled() {
+        m.cancelled_before_start.fetch_add(1, Ordering::Relaxed);
+        m.failed.fetch_add(1, Ordering::Relaxed);
+        let _ = reply.send(Err(Error::Coordinator(
+            "job cancelled before the search started".into(),
+        )));
+        return;
+    }
+    // Deadline propagation: the search deadline is measured from intake,
+    // so the wait recorded above is charged against the job's budget.
+    let ctl = JobCtl {
+        cancel: Some(cancel),
+        deadline_origin: Some(enqueued),
+    };
+    let stamp = generation.load(Ordering::Relaxed);
+    // The key stashed at admission is valid unless a flush raced the job
+    // into the queue; re-key under the current generation then.
+    let key = match key {
+        Some(k) if k.generation == stamp => Some(k),
+        _ => spec.canonical_key(stamp),
+    };
+    // An unparseable source has no canonical key: run it directly
+    // (uncached, uncoalesced) for its parse error.
+    let Some(key) = key else {
+        let r = run_fresh(&spec, &ctl, m);
+        if r.is_ok() {
+            m.completed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            m.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        let _ = reply.send(r);
+        return;
+    };
+    let decision = {
+        let mut st = shared.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(entry) = st.cache.get(&key) {
+            if entry.source == spec.source {
+                m.opt_cache_hits_exact.fetch_add(1, Ordering::Relaxed);
+            } else {
+                m.opt_cache_hits_canonical.fetch_add(1, Ordering::Relaxed);
+            }
+            Decision::Hit(reply, entry.result)
+        } else if let Some(waiters) = st.inflight.get_mut(&key) {
+            waiters.push(reply);
+            m.opt_coalesced.fetch_add(1, Ordering::Relaxed);
+            Decision::Waiting
+        } else {
+            st.inflight.insert(key.clone(), Vec::new());
+            Decision::Lead(reply)
+        }
+    };
+    match decision {
+        Decision::Hit(reply, res) => {
+            m.completed.fetch_add(1, Ordering::Relaxed);
+            let _ = reply.send(Ok(res));
+        }
+        Decision::Waiting => {}
+        Decision::Lead(reply) => {
+            // A panicking pipeline run fails this job *and every
+            // coalesced waiter* (all reply senders are drained below)
+            // and leaves the worker pool alive.
+            let r = run_fresh(&spec, &ctl, m);
+            // Publish and drain under the same lock that admits
+            // waiters, so no job can register against a flight that has
+            // already resolved.
+            let waiters = {
+                let mut st = shared.lock().unwrap_or_else(PoisonError::into_inner);
+                if let Ok(res) = &r {
+                    // A cancelled run is truncated at *this* caller's
+                    // request: deliver it (to the leader and to anyone
+                    // who coalesced onto the shared flight) but never
+                    // cache it — the next request for this key deserves
+                    // the full search.
+                    if !res.stats.cancelled {
+                        st.cache.put(
+                            key.clone(),
+                            CacheEntry {
+                                source: spec.source.clone(),
+                                result: res.clone(),
+                            },
+                        );
+                    }
+                }
+                st.inflight.remove(&key).unwrap_or_default()
+            };
+            let resolved = 1 + waiters.len() as u64;
+            if r.is_ok() {
+                m.completed.fetch_add(resolved, Ordering::Relaxed);
+            } else {
+                m.failed.fetch_add(resolved, Ordering::Relaxed);
+            }
+            match r {
+                Ok(res) => {
+                    for wtr in waiters {
+                        let _ = wtr.send(Ok(res.clone()));
+                    }
+                    let _ = reply.send(Ok(res));
+                }
+                Err(e) => {
+                    for wtr in waiters {
+                        let _ = wtr.send(Err(e.clone()));
+                    }
+                    let _ = reply.send(Err(e));
+                }
+            }
+        }
+    }
+}
+
 impl Coordinator {
     /// Start the service threads.
     pub fn start(cfg: Config) -> Result<Self> {
         let metrics = Arc::new(Metrics::default());
-        let (opt_tx, opt_rx) = sync_channel::<Work>(1024);
-        let opt_rx = Arc::new(Mutex::new(opt_rx));
+        let intake = Arc::new(Intake {
+            state: Mutex::new(IntakeState {
+                jobs: VecDeque::new(),
+                stopped: false,
+            }),
+            ready: Condvar::new(),
+        });
         // Result LRU + single-flight table shared by all workers, keyed
         // canonically ([`OptimizeSpec::canonical_key`]): repeated
         // optimize traffic — including α-renamed or reformatted sources
@@ -232,110 +580,29 @@ impl Coordinator {
         ));
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers.max(1) {
-            let rx = opt_rx.clone();
+            let intake = intake.clone();
             let m = metrics.clone();
             let shared = opt_shared.clone();
             let generation = opt_generation.clone();
+            let opt_batch = cfg.opt_batch;
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("hofdla-opt-{w}"))
-                    .spawn(move || loop {
-                        // Recover from poisoned locks: a panic in any
-                        // worker must not cascade into every other worker
-                        // dying on `unwrap()` — which used to strand
-                        // queued jobs forever (their reply senders sit in
-                        // the channel, so callers block, not error).
-                        let job = { rx.lock().unwrap_or_else(PoisonError::into_inner).recv() };
-                        let (spec, reply) = match job {
-                            Ok(Work::Opt { spec, reply }) => (spec, reply),
-                            Ok(Work::Stop) | Err(_) => break,
-                        };
-                        let stamp = generation.load(Ordering::Relaxed);
-                        // An unparseable source has no canonical key:
-                        // run it directly (uncached, uncoalesced) for
-                        // its parse error.
-                        let Some(key) = spec.canonical_key(stamp) else {
-                            let r = run_fresh(&spec, &m).map(Response::Optimized);
-                            if r.is_ok() {
-                                m.completed.fetch_add(1, Ordering::Relaxed);
-                            } else {
-                                m.failed.fetch_add(1, Ordering::Relaxed);
-                            }
-                            let _ = reply.send(r);
-                            continue;
-                        };
-                        let decision = {
-                            let mut st =
-                                shared.lock().unwrap_or_else(PoisonError::into_inner);
-                            if let Some(entry) = st.cache.get(&key) {
-                                if entry.source == spec.source {
-                                    m.opt_cache_hits_exact.fetch_add(1, Ordering::Relaxed);
-                                } else {
-                                    m.opt_cache_hits_canonical
-                                        .fetch_add(1, Ordering::Relaxed);
-                                }
-                                Decision::Hit(reply, entry.result)
-                            } else if let Some(waiters) = st.inflight.get_mut(&key) {
-                                waiters.push(reply);
-                                m.opt_coalesced.fetch_add(1, Ordering::Relaxed);
-                                Decision::Waiting
-                            } else {
-                                st.inflight.insert(key.clone(), Vec::new());
-                                Decision::Lead(reply)
-                            }
-                        };
-                        match decision {
-                            Decision::Hit(reply, res) => {
-                                m.completed.fetch_add(1, Ordering::Relaxed);
-                                let _ = reply.send(Ok(Response::Optimized(res)));
-                            }
-                            Decision::Waiting => {}
-                            Decision::Lead(reply) => {
-                                // A panicking pipeline run fails this job
-                                // *and every coalesced waiter* (all reply
-                                // senders are drained below) and leaves
-                                // the worker pool alive.
-                                let r = run_fresh(&spec, &m);
-                                // Publish and drain under the same lock
-                                // that admits waiters, so no job can
-                                // register against a flight that has
-                                // already resolved.
-                                let waiters = {
-                                    let mut st = shared
-                                        .lock()
-                                        .unwrap_or_else(PoisonError::into_inner);
-                                    if let Ok(res) = &r {
-                                        st.cache.put(
-                                            key.clone(),
-                                            CacheEntry {
-                                                source: spec.source.clone(),
-                                                result: res.clone(),
-                                            },
-                                        );
-                                    }
-                                    st.inflight.remove(&key).unwrap_or_default()
-                                };
-                                let resolved = 1 + waiters.len() as u64;
-                                if r.is_ok() {
-                                    m.completed.fetch_add(resolved, Ordering::Relaxed);
-                                } else {
-                                    m.failed.fetch_add(resolved, Ordering::Relaxed);
-                                }
-                                match r {
-                                    Ok(res) => {
-                                        for wtr in waiters {
-                                            let _ = wtr
-                                                .send(Ok(Response::Optimized(res.clone())));
-                                        }
-                                        let _ = reply.send(Ok(Response::Optimized(res)));
-                                    }
-                                    Err(e) => {
-                                        for wtr in waiters {
-                                            let _ = wtr.send(Err(e.clone()));
-                                        }
-                                        let _ = reply.send(Err(e));
-                                    }
-                                }
+                    .spawn(move || {
+                        // Locks recover from poisoning throughout: a
+                        // panic in any worker must not cascade into
+                        // every other worker dying on `unwrap()` — which
+                        // would strand queued jobs forever (their reply
+                        // senders sit in the queue, so callers block,
+                        // not error).
+                        while let Some(batch) = next_batch(&intake, opt_batch, &m) {
+                            m.record_batch(batch.len() as u64);
+                            // Same-family jobs run back-to-back on this
+                            // worker: each search returns its pooled
+                            // arena on completion and the next checks
+                            // the same one straight back out.
+                            for job in batch {
+                                process_opt_job(job, &m, &shared, &generation);
                             }
                         }
                     })
@@ -401,10 +668,10 @@ impl Coordinator {
 
         Ok(Coordinator {
             next_id: std::sync::atomic::AtomicU64::new(1),
-            opt_tx,
+            intake,
             rt_tx,
             metrics,
-            n_workers: cfg.workers.max(1),
+            queue_cap: cfg.queue_cap.max(1),
             workers,
             rt_thread: Some(rt_thread),
             opt_generation,
@@ -477,26 +744,97 @@ impl Coordinator {
         }
     }
 
-    /// Submit a job; returns a handle that resolves exactly once.
-    pub fn submit(&self, req: Request) -> Result<JobHandle> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+    /// Submit an optimize job through the typed front door: validate the
+    /// spec, apply admission control, and return an [`OptimizeHandle`]
+    /// that resolves to the [`OptimizeResult`] directly.
+    ///
+    /// Errors at submission (nothing was queued, nothing counts as
+    /// `submitted`):
+    /// - a knob out of bounds ([`OptimizeSpec::validate`]),
+    /// - [`Error::Overloaded`] when the intake queue is at
+    ///   [`Config::queue_cap`] — counted in [`Metrics::shed`]; back off
+    ///   and retry,
+    /// - `service stopped` when the coordinator is shutting down.
+    pub fn submit_optimize(&self, spec: OptimizeSpec) -> Result<OptimizeHandle> {
+        // Fail fast on invalid knobs: a spec that cannot run must not
+        // occupy a queue slot other jobs could be admitted to.
+        spec.validate()?;
+        let cancel = CancelToken::new();
         let (tx, rx) = std::sync::mpsc::channel();
-        match req {
-            Request::Optimize(spec) => self
-                .opt_tx
-                .send(Work::Opt { spec, reply: tx })
-                .map_err(|_| Error::Coordinator("service stopped".into()))?,
-            Request::ExecArtifact { name, inputs } => self
-                .rt_tx
-                .send(RtWork::Exec {
-                    name,
-                    inputs,
-                    reply: tx,
-                })
-                .map_err(|_| Error::Coordinator("service stopped".into()))?,
+        // Key outside the intake lock (keying parses the source); the
+        // worker re-keys iff a flush races the job into the queue.
+        let stamp = self.opt_generation.load(Ordering::Relaxed);
+        let job = IntakeJob {
+            key: spec.canonical_key(stamp),
+            spec,
+            reply: tx,
+            cancel: cancel.clone(),
+            enqueued: Instant::now(),
+        };
+        {
+            let mut st = self
+                .intake
+                .state
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner);
+            if st.stopped {
+                return Err(Error::Coordinator("service stopped".into()));
+            }
+            // Admission control: shed at capacity, under the same lock
+            // that admits — the depth a rejection reports is the depth
+            // that caused it.
+            let depth = st.jobs.len();
+            if depth >= self.queue_cap {
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::Overloaded { queue_depth: depth });
+            }
+            st.jobs.push_back(job);
+            let depth = st.jobs.len() as u64;
+            self.metrics.queue_depth.store(depth, Ordering::Relaxed);
+            self.metrics
+                .queue_high_water
+                .fetch_max(depth, Ordering::Relaxed);
         }
-        Ok(JobHandle { id, rx })
+        self.intake.ready.notify_one();
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        Ok(OptimizeHandle {
+            id,
+            rx,
+            cancel,
+            resolved: false,
+        })
+    }
+
+    /// Submit a job; returns a handle that resolves exactly once.
+    /// Optimize requests delegate to [`Coordinator::submit_optimize`]
+    /// (same validation, admission control, and cancellation support).
+    pub fn submit(&self, req: Request) -> Result<JobHandle> {
+        match req {
+            Request::Optimize(spec) => {
+                let h = self.submit_optimize(spec)?;
+                Ok(JobHandle {
+                    id: h.id,
+                    inner: JobHandleInner::Opt(h),
+                })
+            }
+            Request::ExecArtifact { name, inputs } => {
+                let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                let (tx, rx) = std::sync::mpsc::channel();
+                self.rt_tx
+                    .send(RtWork::Exec {
+                        name,
+                        inputs,
+                        reply: tx,
+                    })
+                    .map_err(|_| Error::Coordinator("service stopped".into()))?;
+                Ok(JobHandle {
+                    id,
+                    inner: JobHandleInner::Exec(rx),
+                })
+            }
+        }
     }
 
     /// Convenience: submit and wait.
@@ -507,9 +845,17 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        for _ in 0..self.n_workers {
-            let _ = self.opt_tx.send(Work::Stop);
+        {
+            let mut st = self
+                .intake
+                .state
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner);
+            st.stopped = true;
         }
+        // Workers drain whatever was admitted before the stop flag, then
+        // exit — no accepted job is stranded.
+        self.intake.ready.notify_all();
         let _ = self.rt_tx.send(RtWork::Stop);
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -525,19 +871,29 @@ mod tests {
     use super::*;
 
     fn opt_spec(n: usize) -> OptimizeSpec {
-        OptimizeSpec {
-            source:
-                "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))"
-                    .into(),
-            inputs: vec![("A".into(), vec![n, n]), ("B".into(), vec![n, n])],
-            rank_by: RankBy::CostModel,
-            subdivide_rnz: None,
-            top_k: 6,
-            prune: false,
-            verify: true,
-            budget: 0,
-            deadline_ms: 0,
-        }
+        OptimizeSpec::builder(
+            "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))",
+        )
+        .input("A", &[n, n])
+        .input("B", &[n, n])
+        .top_k(6)
+        .verify(true)
+        .build()
+        .unwrap()
+    }
+
+    /// Shapes whose stride/extent products overflow `usize`: panics in
+    /// debug builds (the profile `cargo test` runs); in release the
+    /// wrapped layout fails shape checking instead.
+    fn poison_spec() -> OptimizeSpec {
+        OptimizeSpec::builder(
+            "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))",
+        )
+        .input("A", &[usize::MAX, usize::MAX])
+        .input("B", &[usize::MAX, usize::MAX])
+        .top_k(4)
+        .build()
+        .unwrap()
     }
 
     #[test]
@@ -794,22 +1150,7 @@ mod tests {
             ..Default::default()
         })
         .unwrap();
-        let poison = OptimizeSpec {
-            source:
-                "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))"
-                    .into(),
-            inputs: vec![
-                ("A".into(), vec![usize::MAX, usize::MAX]),
-                ("B".into(), vec![usize::MAX, usize::MAX]),
-            ],
-            rank_by: RankBy::CostModel,
-            subdivide_rnz: None,
-            top_k: 4,
-            prune: false,
-            verify: false,
-            budget: 0,
-            deadline_ms: 0,
-        };
+        let poison = poison_spec();
         let n = 8u64;
         let handles: Vec<JobHandle> = (0..n)
             .map(|_| c.submit(Request::Optimize(poison.clone())).unwrap())
@@ -849,26 +1190,9 @@ mod tests {
             ..Default::default()
         })
         .unwrap();
-        // Shapes whose stride/extent products overflow `usize` panic in
-        // debug builds (the profile `cargo test` runs); in release the
-        // wrapped layout fails shape checking instead. Either way the job
-        // must resolve — promptly and with an error — instead of hanging.
-        let poison = OptimizeSpec {
-            source:
-                "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))"
-                    .into(),
-            inputs: vec![
-                ("A".into(), vec![usize::MAX, usize::MAX]),
-                ("B".into(), vec![usize::MAX, usize::MAX]),
-            ],
-            rank_by: RankBy::CostModel,
-            subdivide_rnz: None,
-            top_k: 4,
-            prune: false,
-            verify: false,
-            budget: 0,
-            deadline_ms: 0,
-        };
+        // The poison job must resolve — promptly and with an error —
+        // instead of hanging.
+        let poison = poison_spec();
         for _ in 0..3 {
             let r = c.call(Request::Optimize(poison.clone()));
             if cfg!(debug_assertions) {
@@ -889,17 +1213,7 @@ mod tests {
     #[test]
     fn parse_errors_fail_cleanly() {
         let c = Coordinator::start(Config::default()).unwrap();
-        let bad = OptimizeSpec {
-            source: "(map (lam".into(),
-            inputs: vec![],
-            rank_by: RankBy::CostModel,
-            subdivide_rnz: None,
-            top_k: 3,
-            prune: false,
-            verify: false,
-            budget: 0,
-            deadline_ms: 0,
-        };
+        let bad = OptimizeSpec::builder("(map (lam").top_k(3).build().unwrap();
         assert!(c.call(Request::Optimize(bad)).is_err());
         assert_eq!(c.metrics.failed.load(Ordering::Relaxed), 1);
     }

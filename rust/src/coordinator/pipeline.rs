@@ -8,7 +8,8 @@ use crate::cachesim::{simulate, HierarchyConfig};
 use crate::costmodel::estimate;
 use crate::dsl;
 use crate::enumerate::{
-    enumerate_search, SearchOptions, SearchResult, SearchStats, Variant, DEFAULT_PRUNE_SLACK,
+    enumerate_search, CancelToken, SearchOptions, SearchResult, SearchStats, Variant,
+    DEFAULT_PRUNE_SLACK, MAX_SEARCH_SHARDS,
 };
 use crate::exec::lower;
 use crate::layout::Layout;
@@ -28,7 +29,13 @@ pub enum RankBy {
 
 /// An optimization request. `Eq + Hash` so the coordinator can key its
 /// result cache directly by the spec.
+///
+/// `#[non_exhaustive]`: construct through [`OptimizeSpec::builder`]
+/// (which validates budget/deadline/shard bounds at build time) and
+/// adjust fields afterwards if needed — future knobs (queue class,
+/// priority) must not be breaking changes for downstream crates.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
+#[non_exhaustive]
 pub struct OptimizeSpec {
     /// DSL source (s-expression; see [`crate::dsl::parse`]).
     pub source: String,
@@ -76,6 +83,15 @@ pub struct OptimizeSpec {
     /// [`OptimizeSpec::validate`] — a day-plus "deadline" is a typo'd
     /// unit, not a latency contract.
     pub deadline_ms: u64,
+    /// Explicit shard fan-out for this job's search, forwarded to
+    /// [`SearchOptions::shards`](crate::enumerate::SearchOptions::shards).
+    /// `0` = auto (one shard per available core). Values above
+    /// [`crate::enumerate::MAX_SEARCH_SHARDS`] are rejected by
+    /// [`OptimizeSpec::validate`] rather than silently clamped. The
+    /// search result is bit-identical at every shard width (the
+    /// deterministic-merge contract, pinned by the CI `SEARCH_SHARDS`
+    /// matrix) — this knob trades latency against machine load only.
+    pub shards: usize,
 }
 
 /// Upper bound accepted for [`OptimizeSpec::deadline_ms`] (24 hours).
@@ -84,17 +100,63 @@ pub struct OptimizeSpec {
 pub const MAX_DEADLINE_MS: u64 = 24 * 60 * 60 * 1000;
 
 impl OptimizeSpec {
-    /// Validate the anytime knobs: `0` means unlimited for both
-    /// [`budget`](Self::budget) and [`deadline_ms`](Self::deadline_ms);
-    /// a nonsense deadline (above [`MAX_DEADLINE_MS`]) is rejected rather
-    /// than silently clamped. Called by [`optimize`] before any work, so
-    /// an invalid spec fails fast and is never cached.
+    /// Start building a spec for `source` with validated knobs:
+    /// [`OptimizeSpecBuilder::build`] checks budget/deadline/shard
+    /// bounds and returns `Result`, so an invalid spec is caught at
+    /// construction — before it is submitted, queued, or keyed — instead
+    /// of deep inside a worker. Defaults match the CLI: cost-model
+    /// ranking, `top_k` 12, no subdivision, no pruning, no verification,
+    /// unlimited budget/deadline, auto shards.
+    pub fn builder(source: impl Into<String>) -> OptimizeSpecBuilder {
+        OptimizeSpecBuilder {
+            spec: OptimizeSpec {
+                source: source.into(),
+                inputs: Vec::new(),
+                rank_by: RankBy::CostModel,
+                subdivide_rnz: None,
+                top_k: 12,
+                prune: false,
+                verify: false,
+                budget: 0,
+                deadline_ms: 0,
+                shards: 0,
+            },
+        }
+    }
+
+    /// Validate the knob bounds: `0` means unlimited/auto for
+    /// [`budget`](Self::budget), [`deadline_ms`](Self::deadline_ms) and
+    /// [`shards`](Self::shards); a nonsense deadline (above
+    /// [`MAX_DEADLINE_MS`]), a budget that cannot fit the platform's
+    /// `usize`, a shard request above
+    /// [`MAX_SEARCH_SHARDS`](crate::enumerate::MAX_SEARCH_SHARDS), or a
+    /// `top_k` of zero (an empty report) are rejected rather than
+    /// silently clamped. [`OptimizeSpecBuilder::build`] runs this at
+    /// construction time; [`optimize`] re-runs it before any work, so a
+    /// hand-mutated spec still fails fast and is never cached.
     pub fn validate(&self) -> Result<()> {
         if self.deadline_ms > MAX_DEADLINE_MS {
             return Err(Error::Coordinator(format!(
                 "deadline_ms {} exceeds the {MAX_DEADLINE_MS} ms (24 h) cap; use 0 for no deadline",
                 self.deadline_ms
             )));
+        }
+        if usize::try_from(self.budget).is_err() {
+            return Err(Error::Coordinator(format!(
+                "budget {} does not fit this platform's usize; use 0 for unlimited",
+                self.budget
+            )));
+        }
+        if self.shards > MAX_SEARCH_SHARDS {
+            return Err(Error::Coordinator(format!(
+                "shards {} exceeds MAX_SEARCH_SHARDS ({MAX_SEARCH_SHARDS}); use 0 for auto",
+                self.shards
+            )));
+        }
+        if self.top_k == 0 {
+            return Err(Error::Coordinator(
+                "top_k 0 requests an empty report; keep at least one row".into(),
+            ));
         }
         Ok(())
     }
@@ -130,7 +192,101 @@ impl OptimizeSpec {
             verify: self.verify,
             budget: self.budget,
             deadline_ms: self.deadline_ms,
+            shards: self.shards,
         })
+    }
+}
+
+/// Builder for [`OptimizeSpec`] — the typed construction path (ISSUE 9).
+/// Setters are chainable; [`build`](Self::build) validates the knob
+/// bounds ([`OptimizeSpec::validate`]) and returns the spec or a typed
+/// [`Error::Coordinator`] naming the offending field.
+///
+/// ```
+/// use hofdla::coordinator::{OptimizeSpec, RankBy};
+/// let spec = OptimizeSpec::builder("(rnz + * (in u) (in v))")
+///     .input("u", &[64])
+///     .input("v", &[64])
+///     .rank_by(RankBy::CostModel)
+///     .deadline_ms(250)
+///     .build()
+///     .unwrap();
+/// assert_eq!(spec.top_k, 12);
+/// ```
+#[derive(Clone, Debug)]
+pub struct OptimizeSpecBuilder {
+    spec: OptimizeSpec,
+}
+
+impl OptimizeSpecBuilder {
+    /// Append one named input with its row-major shape.
+    pub fn input(mut self, name: impl Into<String>, shape: &[usize]) -> Self {
+        self.spec.inputs.push((name.into(), shape.to_vec()));
+        self
+    }
+
+    /// Replace the whole input list (submission order is irrelevant —
+    /// the canonical key sorts by name).
+    pub fn inputs(mut self, inputs: Vec<(String, Vec<usize>)>) -> Self {
+        self.spec.inputs = inputs;
+        self
+    }
+
+    /// Ranking metric ([`OptimizeSpec::rank_by`]).
+    pub fn rank_by(mut self, rank_by: RankBy) -> Self {
+        self.spec.rank_by = rank_by;
+        self
+    }
+
+    /// Subdivide every reduction with this block size
+    /// ([`OptimizeSpec::subdivide_rnz`]); pass `None` to disable.
+    pub fn subdivide_rnz(mut self, b: impl Into<Option<usize>>) -> Self {
+        self.spec.subdivide_rnz = b.into();
+        self
+    }
+
+    /// Report rows to keep ([`OptimizeSpec::top_k`]; must be ≥ 1).
+    pub fn top_k(mut self, top_k: usize) -> Self {
+        self.spec.top_k = top_k;
+        self
+    }
+
+    /// Branch-and-bound pruning ([`OptimizeSpec::prune`]).
+    pub fn prune(mut self, prune: bool) -> Self {
+        self.spec.prune = prune;
+        self
+    }
+
+    /// Verify the winner's lowered program ([`OptimizeSpec::verify`]).
+    pub fn verify(mut self, verify: bool) -> Self {
+        self.spec.verify = verify;
+        self
+    }
+
+    /// Anytime node budget ([`OptimizeSpec::budget`]; `0` = unlimited).
+    pub fn budget(mut self, budget: u64) -> Self {
+        self.spec.budget = budget;
+        self
+    }
+
+    /// Wall-clock deadline in ms ([`OptimizeSpec::deadline_ms`];
+    /// `0` = unlimited, capped at [`MAX_DEADLINE_MS`]).
+    pub fn deadline_ms(mut self, deadline_ms: u64) -> Self {
+        self.spec.deadline_ms = deadline_ms;
+        self
+    }
+
+    /// Search shard fan-out ([`OptimizeSpec::shards`]; `0` = auto,
+    /// capped at [`MAX_SEARCH_SHARDS`](crate::enumerate::MAX_SEARCH_SHARDS)).
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.spec.shards = shards;
+        self
+    }
+
+    /// Validate the knob bounds and return the finished spec.
+    pub fn build(self) -> Result<OptimizeSpec> {
+        self.spec.validate()?;
+        Ok(self.spec)
     }
 }
 
@@ -155,6 +311,13 @@ pub struct CanonicalKey {
     pub verify: bool,
     pub budget: u64,
     pub deadline_ms: u64,
+    /// Part of the key although the search *result* is shard-width
+    /// invariant (the deterministic-merge contract): the cached
+    /// [`OptimizeResult::stats`] describe the run that produced them
+    /// (effective shard count, per-shard extraction layout), and the
+    /// "every non-source knob" key contract (ISSUE 8) stays trivially
+    /// true.
+    pub shards: usize,
 }
 
 /// The pipeline's report.
@@ -187,11 +350,48 @@ pub struct OptimizeResult {
     pub certified_gap: f64,
 }
 
+/// Per-job runtime control the service front end threads into a pipeline
+/// run (ISSUE 9): an external cancellation token (flipped by
+/// [`OptimizeHandle::cancel`](crate::coordinator::OptimizeHandle::cancel)
+/// while the search runs) and the job's deadline origin — the instant the
+/// request *entered the service*, so measured queue wait is charged
+/// against the deadline budget rather than restarting the clock when a
+/// worker finally picks the job up.
+///
+/// [`Default`] (no token, origin = pipeline entry) reproduces the plain
+/// [`optimize`] behavior exactly.
+#[derive(Clone, Debug, Default)]
+pub struct JobCtl {
+    /// External cancellation, forwarded to
+    /// [`SearchOptions::cancel`](crate::enumerate::SearchOptions::cancel).
+    pub cancel: Option<CancelToken>,
+    /// When the job's [`OptimizeSpec::deadline_ms`] started counting.
+    /// `None` = pipeline entry (the library-call convention).
+    pub deadline_origin: Option<std::time::Instant>,
+}
+
 /// Run the pipeline synchronously.
+///
+/// Equivalent to [`optimize_ctl`] with a default [`JobCtl`]: no external
+/// cancellation, deadline measured from pipeline entry.
 pub fn optimize(spec: &OptimizeSpec) -> Result<OptimizeResult> {
-    // The deadline clock starts at pipeline entry — parse/fuse/subdivide
-    // time counts against it, as a service caller would expect.
+    optimize_ctl(spec, &JobCtl::default())
+}
+
+/// Run the pipeline synchronously under per-job runtime control: the
+/// coordinator's workers call this with the job's [`CancelToken`] and its
+/// service-intake timestamp ([`JobCtl`]), so a running search can be
+/// cancelled mid-wave from the handle and queue wait counts against the
+/// deadline.
+pub fn optimize_ctl(spec: &OptimizeSpec, ctl: &JobCtl) -> Result<OptimizeResult> {
+    // The deadline clock starts at the job's service-intake instant when
+    // the caller provides one, else at pipeline entry — parse/fuse/
+    // subdivide time counts against it either way, as a service caller
+    // would expect. A job whose queue wait already consumed its whole
+    // deadline truncates at the search's first checkpoint and returns
+    // the start variant with `deadline_hit` set.
     let entered = std::time::Instant::now();
+    let origin = ctl.deadline_origin.unwrap_or(entered);
     spec.validate()?;
     let expr = dsl::parse(&spec.source)?;
     let mut env = Env::new();
@@ -238,7 +438,8 @@ pub fn optimize(spec: &OptimizeSpec) -> Result<OptimizeResult> {
     let cost_ranked = matches!(spec.rank_by, RankBy::CostModel);
     let opts = SearchOptions {
         limit: 4096,
-        shards: 0, // auto: fan one job out across the worker pool
+        // 0 = auto: fan one job out across the available cores.
+        shards: spec.shards,
         prune_slack: if spec.prune && cost_ranked {
             Some(DEFAULT_PRUNE_SLACK)
         } else {
@@ -247,7 +448,8 @@ pub fn optimize(spec: &OptimizeSpec) -> Result<OptimizeResult> {
         score: cost_ranked,
         budget: usize::try_from(spec.budget).unwrap_or(usize::MAX),
         deadline: (spec.deadline_ms > 0)
-            .then(|| entered + std::time::Duration::from_millis(spec.deadline_ms)),
+            .then(|| origin + std::time::Duration::from_millis(spec.deadline_ms)),
+        cancel: ctl.cancel.clone(),
     };
     let SearchResult {
         variants,
@@ -283,7 +485,8 @@ pub fn optimize(spec: &OptimizeSpec) -> Result<OptimizeResult> {
         ));
     }
     let variants_explored = ranking.len();
-    ranking.truncate(spec.top_k.max(1));
+    // validate() rejected top_k == 0, so the winner row always survives.
+    ranking.truncate(spec.top_k);
     let (_, best_e) =
         best_expr.ok_or_else(|| Error::Rewrite("no variants produced".into()))?;
     // Production verification gate: prove the winner's lowered program
@@ -427,21 +630,18 @@ mod tests {
     use super::*;
 
     fn matmul_spec(n: usize, rank_by: RankBy) -> OptimizeSpec {
-        OptimizeSpec {
-            source:
-                "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))"
-                    .into(),
-            inputs: vec![("A".into(), vec![n, n]), ("B".into(), vec![n, n])],
-            rank_by,
-            subdivide_rnz: None,
-            top_k: 10,
-            prune: false,
-            // Exercise the production verification gate on every pipeline
-            // test: the winner must carry a footprint certificate.
-            verify: true,
-            budget: 0,
-            deadline_ms: 0,
-        }
+        OptimizeSpec::builder(
+            "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))",
+        )
+        .input("A", &[n, n])
+        .input("B", &[n, n])
+        .rank_by(rank_by)
+        .top_k(10)
+        // Exercise the production verification gate on every pipeline
+        // test: the winner must carry a footprint certificate.
+        .verify(true)
+        .build()
+        .unwrap()
     }
 
     #[test]
@@ -519,17 +719,12 @@ mod tests {
     #[test]
     fn pipeline_fuses_before_enumerating() {
         // an unfused pipeline over vectors: map f (map g v) reduced
-        let spec = OptimizeSpec {
-            source: "(rnz + * (map (lam (x) (app * x 2.0)) (in u)) (in v))".into(),
-            inputs: vec![("u".into(), vec![64]), ("v".into(), vec![64])],
-            rank_by: RankBy::CostModel,
-            subdivide_rnz: None,
-            top_k: 3,
-            prune: false,
-            verify: false,
-            budget: 0,
-            deadline_ms: 0,
-        };
+        let spec = OptimizeSpec::builder("(rnz + * (map (lam (x) (app * x 2.0)) (in u)) (in v))")
+            .input("u", &[64])
+            .input("v", &[64])
+            .top_k(3)
+            .build()
+            .unwrap();
         let r = optimize(&spec).unwrap();
         assert_eq!(r.variants_explored, 1); // single rnz after fusion
         assert!(r.best_expr.starts_with("(rnz"));
@@ -596,6 +791,113 @@ mod tests {
         spec.deadline_ms = MAX_DEADLINE_MS + 1;
         let err = optimize(&spec).unwrap_err().to_string();
         assert!(err.contains("deadline_ms"), "{err}");
+    }
+
+    #[test]
+    fn builder_validates_at_build_time() {
+        // Each out-of-bounds knob is caught by `.build()` — before the
+        // spec can be submitted, queued, or keyed — with a typed error
+        // naming the offending field.
+        let base = || {
+            OptimizeSpec::builder("(rnz + * (in u) (in v))")
+                .input("u", &[8])
+                .input("v", &[8])
+        };
+        let err = base().deadline_ms(MAX_DEADLINE_MS + 1).build().unwrap_err();
+        assert!(err.to_string().contains("deadline_ms"), "{err}");
+        let err = base().shards(MAX_SEARCH_SHARDS + 1).build().unwrap_err();
+        assert!(err.to_string().contains("shards"), "{err}");
+        let err = base().top_k(0).build().unwrap_err();
+        assert!(err.to_string().contains("top_k"), "{err}");
+        #[cfg(target_pointer_width = "32")]
+        {
+            let err = base().budget(u64::MAX).build().unwrap_err();
+            assert!(err.to_string().contains("budget"), "{err}");
+        }
+        // In-bounds knobs build, and the builder's field routing is 1:1.
+        let spec = base()
+            .rank_by(RankBy::CacheSim)
+            .subdivide_rnz(4)
+            .top_k(5)
+            .prune(true)
+            .verify(true)
+            .budget(100)
+            .deadline_ms(250)
+            .shards(2)
+            .build()
+            .unwrap();
+        assert_eq!(spec.rank_by, RankBy::CacheSim);
+        assert_eq!(spec.subdivide_rnz, Some(4));
+        assert_eq!(spec.top_k, 5);
+        assert!(spec.prune && spec.verify);
+        assert_eq!((spec.budget, spec.deadline_ms, spec.shards), (100, 250, 2));
+        // `inputs` replaces wholesale; `input` appends.
+        let spec = base()
+            .inputs(vec![("w".into(), vec![4])])
+            .input("x", &[2])
+            .build()
+            .unwrap();
+        assert_eq!(spec.inputs, vec![("w".into(), vec![4]), ("x".into(), vec![2])]);
+    }
+
+    #[test]
+    fn explicit_shards_reproduce_auto_result_bit_identically() {
+        // The acceptance criterion's uncancelled half, at the pipeline
+        // level: the winner path is bit-identical across explicit shard
+        // widths 1/2/8 (the service-level parity test in `service_props`
+        // rides on this).
+        let mut spec = matmul_spec(32, RankBy::CostModel);
+        spec.subdivide_rnz = Some(4);
+        let auto = optimize(&spec).unwrap();
+        for shards in [1usize, 2, 8] {
+            let mut s = spec.clone();
+            s.shards = shards;
+            let r = optimize(&s).unwrap();
+            assert_eq!(r.best, auto.best, "shards={shards}: winner key diverged");
+            assert_eq!(r.ranking, auto.ranking, "shards={shards}: ranking diverged");
+            assert_eq!(
+                r.stats.extracted_per_shard.len(),
+                shards,
+                "shards={shards}: explicit width must be honored"
+            );
+        }
+    }
+
+    #[test]
+    fn pre_cancelled_job_stops_at_first_checkpoint() {
+        // A token cancelled before the search starts stops expansion at
+        // the first between-wave checkpoint: stats report an external
+        // cancel (not a completed frontier), and the job still returns
+        // its best-so-far (the start variant) rather than erroring.
+        let token = CancelToken::new();
+        token.cancel();
+        let mut spec = matmul_spec(16, RankBy::CostModel);
+        spec.subdivide_rnz = Some(4);
+        let ctl = JobCtl {
+            cancel: Some(token),
+            deadline_origin: None,
+        };
+        let r = optimize_ctl(&spec, &ctl).unwrap();
+        assert!(r.stats.cancelled, "external token must be attributed");
+        assert!(!r.stats.complete);
+        assert!(r.variants_explored < 12, "search must stop early");
+    }
+
+    #[test]
+    fn deadline_origin_in_the_past_charges_queue_wait() {
+        // Deadline-minus-queue-wait accounting: an origin far enough in
+        // the past that the 1 ms deadline is already spent truncates the
+        // search at its first checkpoint with `deadline_hit` set.
+        let mut spec = matmul_spec(16, RankBy::CostModel);
+        spec.subdivide_rnz = Some(4);
+        spec.deadline_ms = 1;
+        let ctl = JobCtl {
+            cancel: None,
+            deadline_origin: Some(std::time::Instant::now() - std::time::Duration::from_secs(2)),
+        };
+        let r = optimize_ctl(&spec, &ctl).unwrap();
+        assert!(r.stats.deadline_hit, "queue wait must count against the deadline");
+        assert!(!r.stats.complete);
     }
 
     #[test]

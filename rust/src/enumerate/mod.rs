@@ -39,7 +39,11 @@
 //!   two budgets are nested prefixes) and [`SearchOptions::deadline`]
 //!   cancels in-flight shard work cooperatively through the same shared
 //!   atomic the branch-and-bound consults ([`SearchBound`]); a cancelled
-//!   wave is discarded whole and its nodes return to the frontier.
+//!   wave is discarded whole and its nodes return to the frontier. An
+//!   external [`SearchOptions::cancel`] token (ISSUE 9) rides the same
+//!   mechanism, so a service caller's `cancel()` stops a running search
+//!   mid-wave exactly like a deadline — attributed to
+//!   [`SearchStats::cancelled`] rather than `deadline_hit`.
 //!   Truncated or not, the run reports a **certified optimality gap**
 //!   ([`SearchStats::certified_gap`]): `best_score` divided by the
 //!   minimum [`crate::costmodel::spine_reachable_floor_id`] over the open
@@ -123,6 +127,7 @@ use crate::{Error, Result};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// One rearrangement of the computation: the expression plus the spine
@@ -364,9 +369,44 @@ pub const MAX_SEARCH_SHARDS: usize = 8;
 /// the deterministic-merge contract to survive best-first ordering.
 pub const EXPANSION_WAVE: usize = MAX_SEARCH_SHARDS;
 
+/// External cooperative-cancellation handle for an in-flight search
+/// (ISSUE 9): a shared sticky flag the caller flips from *outside* the
+/// search — typically another thread holding the service handle
+/// ([`crate::coordinator::OptimizeHandle::cancel`]) while a worker is
+/// mid-search. The search consults it through the same [`SearchBound`]
+/// polling the branch-and-bound already does, so a cancellation stops
+/// in-flight shard work mid-wave exactly like a deadline expiry: the
+/// partial wave is discarded whole, its nodes return to the open
+/// frontier, and the run reports best-so-far with a sound certified gap
+/// and [`SearchStats::cancelled`] set.
+///
+/// Clones share the flag. Cancellation is idempotent and sticky —
+/// flipping it after the search finished is a harmless no-op, and a token
+/// cancelled *before* the search starts truncates it at wave zero (only
+/// the start variant is returned).
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    /// A fresh, uncancelled token.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cooperative cancellation. Sticky and idempotent.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether cancellation has been requested.
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
 /// Knobs for [`enumerate_search`].
 ///
-/// # The three caps, and how they compose
+/// # The four caps, and how they compose
 ///
 /// - [`limit`](Self::limit) caps **discovered** candidates (kept +
 ///   bound-cut) — the result-set/memory cap.
@@ -374,12 +414,15 @@ pub const EXPANSION_WAVE: usize = MAX_SEARCH_SHARDS;
 ///   cap of the anytime search (`0` = unlimited).
 /// - [`deadline`](Self::deadline) caps **wall-clock time**, cancelling
 ///   in-flight shard work cooperatively.
+/// - [`cancel`](Self::cancel) is the caller-driven cap: an external
+///   [`CancelToken`] stops the search the same cooperative way a deadline
+///   does, whenever another thread flips it.
 ///
 /// Whichever binds first truncates the search; any truncation is reported
 /// uniformly through [`SearchStats::complete`] (false) and a certified
 /// gap > 1.0, so callers never need to know *which* cap fired to trust
 /// the result.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct SearchOptions {
     /// Stop once this many candidates have been *discovered* (kept +
     /// bound-cut). Exhaustive mode discovers exactly what it keeps, so
@@ -428,6 +471,15 @@ pub struct SearchOptions {
     /// and its nodes return to the open frontier, keeping the certified
     /// gap sound. `None` = no deadline.
     pub deadline: Option<Instant>,
+    /// External cooperative cancellation ([`CancelToken`]): checked
+    /// between waves and — through the shared [`SearchBound`] flag —
+    /// mid-wave inside shard expansion, so flipping the token from
+    /// another thread stops a running search without waiting the wave
+    /// out. A cancelled wave is discarded whole and its nodes return to
+    /// the open frontier (identical to a deadline trip), keeping the
+    /// certified gap sound; the run reports [`SearchStats::cancelled`]
+    /// instead of `deadline_hit`. `None` = not cancellable.
+    pub cancel: Option<CancelToken>,
 }
 
 impl Default for SearchOptions {
@@ -439,6 +491,7 @@ impl Default for SearchOptions {
             score: false,
             budget: 0,
             deadline: None,
+            cancel: None,
         }
     }
 }
@@ -511,6 +564,12 @@ pub struct SearchStats {
     /// The deadline stopped expansion (between waves, or by cancelling an
     /// in-flight wave) before the frontier drained.
     pub deadline_hit: bool,
+    /// An external [`CancelToken`] ([`SearchOptions::cancel`]) stopped
+    /// expansion before the frontier drained — the caller-driven
+    /// counterpart of [`deadline_hit`](Self::deadline_hit). The run still
+    /// returns its best-so-far prefix with a sound certified gap; it is
+    /// never [`complete`](Self::complete).
+    pub cancelled: bool,
 }
 
 impl SearchStats {
@@ -532,21 +591,27 @@ pub struct SearchResult {
 
 /// The shared search state every shard consults: the best-known score (an
 /// `f64` min over an atomic word — the branch-and-bound threshold) plus
-/// the cooperative cancellation flag the anytime deadline rides on. One
-/// structure on purpose: a shard that is already polling the bound costs
-/// nothing extra to also notice a cancellation, which is how a deadline
-/// *cancels* in-flight expansion work instead of waiting for the wave to
-/// finish.
+/// the cooperative cancellation flag the anytime deadline rides on, plus
+/// an optional *external* [`CancelToken`] flipped by the caller (service
+/// cancellation, ISSUE 9). One structure on purpose: a shard that is
+/// already polling the bound costs nothing extra to also notice either
+/// kind of cancellation, which is how a deadline — or a user's
+/// `cancel()` — *cancels* in-flight expansion work instead of waiting
+/// for the wave to finish. The internal flag and the external token stay
+/// distinct so the driver can attribute the stop to
+/// [`SearchStats::deadline_hit`] vs [`SearchStats::cancelled`].
 pub struct SearchBound {
     best: AtomicU64,
     cancelled: AtomicBool,
+    external: Option<CancelToken>,
 }
 
 impl SearchBound {
-    fn new(v: f64) -> Self {
+    fn new(v: f64, external: Option<CancelToken>) -> Self {
         SearchBound {
             best: AtomicU64::new(v.to_bits()),
             cancelled: AtomicBool::new(false),
+            external,
         }
     }
 
@@ -579,8 +644,21 @@ impl SearchBound {
         self.cancelled.store(true, Ordering::Relaxed);
     }
 
-    fn is_cancelled(&self) -> bool {
+    /// The *internal* (deadline-driven) flag alone — the driver uses this
+    /// to attribute a mid-wave stop to the deadline vs the external token.
+    fn deadline_tripped(&self) -> bool {
         self.cancelled.load(Ordering::Relaxed)
+    }
+
+    /// Whether the external [`CancelToken`] (if any) was flipped.
+    fn externally_cancelled(&self) -> bool {
+        self.external.as_ref().is_some_and(CancelToken::is_cancelled)
+    }
+
+    /// Either cancellation source: the shards' mid-expansion poll. One
+    /// load in the common (no external token) case.
+    fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Relaxed) || self.externally_cancelled()
     }
 }
 
@@ -1083,7 +1161,7 @@ pub fn enumerate_search(
     if let Some(s) = start_score {
         scores.push(s);
     }
-    let shared = SearchBound::new(start_score.unwrap_or(f64::INFINITY));
+    let shared = SearchBound::new(start_score.unwrap_or(f64::INFINITY), opts.cancel.clone());
     let mut stats = SearchStats {
         shards: threads,
         ..Default::default()
@@ -1114,6 +1192,12 @@ pub fn enumerate_search(
         }
         if opts.deadline.is_some_and(|d| Instant::now() >= d) {
             stats.deadline_hit = true;
+            break;
+        }
+        // External cancellation (service `cancel()`): same between-wave
+        // checkpoint as the deadline, attributed separately.
+        if shared.externally_cancelled() {
+            stats.cancelled = true;
             break;
         }
         // Pop one wave of the cheapest open nodes. The wave shrinks to
@@ -1168,14 +1252,22 @@ pub fn enumerate_search(
             }
         };
         if shared.is_cancelled() {
-            // The deadline tripped mid-wave: discard the partial
-            // expansions entirely and return the wave to the open
-            // frontier, so the gap certificate still covers everything
-            // the truncated run did not explore.
+            // The deadline or an external cancellation tripped mid-wave:
+            // discard the partial expansions entirely and return the wave
+            // to the open frontier, so the gap certificate still covers
+            // everything the truncated run did not explore. Attribute the
+            // stop to its source(s) — the internal flag is only ever set
+            // by deadline expiry, the external token only by the caller
+            // (both can fire within one wave).
             for (bits, i) in wave {
                 heap.push(Reverse((bits, i)));
             }
-            stats.deadline_hit = true;
+            if shared.deadline_tripped() {
+                stats.deadline_hit = true;
+            }
+            if shared.externally_cancelled() {
+                stats.cancelled = true;
+            }
             break;
         }
         stats.expanded += wave.len();
@@ -1280,8 +1372,11 @@ pub fn enumerate_search(
     }
     stats.kept = out.len();
     stats.frontier_open = heap.len();
-    stats.complete =
-        heap.is_empty() && !dropped && !stats.budget_hit && !stats.deadline_hit;
+    stats.complete = heap.is_empty()
+        && !dropped
+        && !stats.budget_hit
+        && !stats.deadline_hit
+        && !stats.cancelled;
     // The certified gap: best-known score over the tightest invariant
     // floor still open. Sound because the floor is rearrangement-
     // invariant — it bounds not just each open node but every family

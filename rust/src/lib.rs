@@ -93,6 +93,12 @@ pub enum Error {
     /// A lowered program failed static access-footprint verification
     /// ([`verify::verify`]); the message lists every violation found.
     Verify(String),
+    /// The coordinator's admission control rejected the job at intake:
+    /// the optimize queue was at capacity. Carries the queue depth
+    /// observed at rejection so clients can back off proportionally.
+    /// Shed jobs are counted in `Metrics::shed` and never occupy a
+    /// worker, a queue slot, or a reply channel.
+    Overloaded { queue_depth: usize },
 }
 
 impl std::fmt::Display for Error {
@@ -107,6 +113,10 @@ impl std::fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Verify(m) => write!(f, "verification error: {m}"),
+            Error::Overloaded { queue_depth } => write!(
+                f,
+                "service overloaded: optimize intake queue at capacity ({queue_depth} queued)"
+            ),
         }
     }
 }

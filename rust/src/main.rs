@@ -10,10 +10,12 @@
 //!   regenerate a paper table/figure.
 //! - `run-artifact <name> [--n <n>]` — execute an AOT artifact through
 //!   PJRT.
-//! - `serve --demo` — start the coordinator and run a demo workload.
+//! - `serve --demo [--clients N] [--queue-cap N]` — start the coordinator
+//!   and run a demo workload through the typed front door, including an
+//!   N-client concurrent burst against a queue of the given capacity.
 
 use hofdla::bench_support::BenchConfig;
-use hofdla::coordinator::{Config, Coordinator, OptimizeSpec, RankBy, Request, Response};
+use hofdla::coordinator::{Config, Coordinator, OptimizeSpec, RankBy};
 use hofdla::enumerate::{enumerate_all, starts};
 use hofdla::experiments::{self, MatmulOpts};
 use hofdla::layout::Layout;
@@ -33,7 +35,7 @@ fn main() {
 }
 
 fn usage() -> String {
-    "usage:\n  hofdla optimize <file.dsl> --input NAME=DIMxDIM [--rank cost|cachesim] [--subdivide-rnz B] [--top K] [--prune] [--verify] [--budget N] [--deadline-ms MS]\n  hofdla enumerate --family naive|rnz|maps|rnz2|all [--n N] [--b B]\n  hofdla bench table1|table2|fig3|fig4|fig5|fig6|gpu|baselines|all [--n N] [--b B] [--sim]\n  hofdla run-artifact <name> [--n N]\n  hofdla serve --demo".to_string()
+    "usage:\n  hofdla optimize <file.dsl> --input NAME=DIMxDIM [--rank cost|cachesim] [--subdivide-rnz B] [--top K] [--prune] [--verify] [--budget N] [--deadline-ms MS] [--shards N]\n  hofdla enumerate --family naive|rnz|maps|rnz2|all [--n N] [--b B]\n  hofdla bench table1|table2|fig3|fig4|fig5|fig6|gpu|baselines|all [--n N] [--b B] [--sim]\n  hofdla run-artifact <name> [--n N]\n  hofdla serve --demo [--clients N] [--queue-cap N]".to_string()
 }
 
 fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
@@ -83,18 +85,21 @@ fn run(args: &[String]) -> hofdla::Result<()> {
                 Some("cachesim") => RankBy::CacheSim,
                 _ => RankBy::CostModel,
             };
-            let spec = OptimizeSpec {
-                source,
-                inputs,
-                rank_by,
-                subdivide_rnz: flag_value(args, "--subdivide-rnz")
-                    .and_then(|v| v.parse().ok()),
-                top_k: flag_usize(args, "--top", 12),
-                prune: args.iter().any(|a| a == "--prune"),
-                verify: args.iter().any(|a| a == "--verify"),
-                budget: flag_u64(args, "--budget", 0),
-                deadline_ms: flag_u64(args, "--deadline-ms", 0),
-            };
+            // The builder validates the knobs at build time, so a bad
+            // flag value fails here with a typed error, not mid-search.
+            let spec = OptimizeSpec::builder(source)
+                .inputs(inputs)
+                .rank_by(rank_by)
+                .subdivide_rnz(
+                    flag_value(args, "--subdivide-rnz").and_then(|v| v.parse::<usize>().ok()),
+                )
+                .top_k(flag_usize(args, "--top", 12))
+                .prune(args.iter().any(|a| a == "--prune"))
+                .verify(args.iter().any(|a| a == "--verify"))
+                .budget(flag_u64(args, "--budget", 0))
+                .deadline_ms(flag_u64(args, "--deadline-ms", 0))
+                .shards(flag_usize(args, "--shards", 0))
+                .build()?;
             let r = hofdla::coordinator::optimize(&spec)?;
             println!("explored {} rearrangements", r.variants_explored);
             if r.programs_verified > 0 {
@@ -212,28 +217,23 @@ fn run(args: &[String]) -> hofdla::Result<()> {
             Ok(())
         }
         Some("serve") => {
-            let c = Coordinator::start(Config::default())?;
-            println!("coordinator started: demo workload");
-            let spec = OptimizeSpec {
-                source:
-                    "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))"
-                        .into(),
-                inputs: vec![("A".into(), vec![128, 128]), ("B".into(), vec![128, 128])],
-                rank_by: RankBy::CacheSim,
-                subdivide_rnz: Some(16),
-                top_k: 12,
-                prune: false,
-                verify: true,
-                budget: 0,
-                deadline_ms: 0,
-            };
-            let budgeted = OptimizeSpec {
-                budget: 4,
-                ..spec.clone()
-            };
-            let Response::Optimized(r) = c.call(Request::Optimize(spec.clone()))? else {
-                return Err(err("optimize job returned a non-optimize response".into()));
-            };
+            let clients = flag_usize(args, "--clients", 8);
+            let queue_cap = flag_usize(args, "--queue-cap", 256);
+            let c = Coordinator::start(Config {
+                queue_cap,
+                ..Config::default()
+            })?;
+            println!("coordinator started (queue_cap={queue_cap}): demo workload");
+            let spec = OptimizeSpec::builder(
+                "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))",
+            )
+            .input("A", &[128, 128])
+            .input("B", &[128, 128])
+            .rank_by(RankBy::CacheSim)
+            .subdivide_rnz(16)
+            .verify(true)
+            .build()?;
+            let r = c.submit_optimize(spec.clone())?.wait()?;
             println!(
                 "explored {} rearrangements; best = {} (gap {:.3})",
                 r.variants_explored, r.best, r.certified_gap
@@ -243,16 +243,11 @@ fn run(args: &[String]) -> hofdla::Result<()> {
             // cache through the canonical key — no fresh search (watch
             // opt_cache_hits_canonical tick in the metrics line, with
             // search_expanded unchanged).
-            let renamed = OptimizeSpec {
-                source:
-                    "(map (lam (rowOfA) (map (lam (colOfB) (rnz + * rowOfA colOfB)) \
-                     (flip 0 (in B)))) (in A))"
-                        .into(),
-                ..spec
-            };
-            let Response::Optimized(rn) = c.call(Request::Optimize(renamed))? else {
-                return Err(err("optimize job returned a non-optimize response".into()));
-            };
+            let mut renamed = spec.clone();
+            renamed.source = "(map (lam (rowOfA) (map (lam (colOfB) (rnz + * rowOfA colOfB)) \
+                 (flip 0 (in B)))) (in A))"
+                .into();
+            let rn = c.submit_optimize(renamed)?.wait()?;
             println!(
                 "α-renamed resubmission: best = {} (canonical cache hit: {})",
                 rn.best,
@@ -260,12 +255,38 @@ fn run(args: &[String]) -> hofdla::Result<()> {
             );
             // Anytime flavor: the same job under a 4-expansion budget still
             // returns a winner, now with a certified optimality gap.
-            let Response::Optimized(b) = c.call(Request::Optimize(budgeted))? else {
-                return Err(err("optimize job returned a non-optimize response".into()));
-            };
+            let mut budgeted = spec.clone();
+            budgeted.budget = 4;
+            let b = c.submit_optimize(budgeted)?.wait()?;
             println!(
                 "budgeted (4 expansions): best = {} gap={:.3} complete={}",
                 b.best, b.certified_gap, b.stats.complete
+            );
+            // Admission-control flavor: --clients concurrent submissions
+            // of the (now cached) kernel through the typed front door.
+            // With the default --queue-cap nothing sheds; rerun with e.g.
+            // `--clients 32 --queue-cap 1` to watch typed Overloaded
+            // rejections and the shed counter move instead.
+            let mut shed = 0usize;
+            let mut handles = Vec::new();
+            for _ in 0..clients {
+                match c.submit_optimize(spec.clone()) {
+                    Ok(h) => handles.push(h),
+                    Err(hofdla::Error::Overloaded { queue_depth }) => {
+                        shed += 1;
+                        println!("  shed: intake queue at capacity ({queue_depth} queued)");
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            for h in handles {
+                h.wait()?;
+            }
+            println!(
+                "{} concurrent clients: {} answered, {} shed",
+                clients,
+                clients - shed,
+                shed
             );
             println!("metrics: {}", c.metrics.summary());
             Ok(())

@@ -80,17 +80,13 @@ fn families() -> Vec<Family> {
 }
 
 fn spec_for(f: &Family, source: &str) -> OptimizeSpec {
-    OptimizeSpec {
-        source: source.into(),
-        inputs: f.inputs.clone(),
-        rank_by: RankBy::CostModel,
-        subdivide_rnz: f.subdivide_rnz,
-        top_k: 12,
-        prune: false,
-        verify: false,
-        budget: 0,
-        deadline_ms: 0,
-    }
+    OptimizeSpec::builder(source)
+        .inputs(f.inputs.clone())
+        .rank_by(RankBy::CostModel)
+        .subdivide_rnz(f.subdivide_rnz)
+        .top_k(12)
+        .build()
+        .unwrap()
 }
 
 /// Formatting permutations of a source that must not change its key:

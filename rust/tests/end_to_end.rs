@@ -22,17 +22,16 @@ fn service_optimizes_and_executes_under_concurrency() {
     let mut opt_handles = Vec::new();
     for _ in 0..12 {
         let n = 8 * rng.range(1, 5);
-        let spec = OptimizeSpec {
-            source: matmul_src(),
-            inputs: vec![("A".into(), vec![n, n]), ("B".into(), vec![n, n])],
-            rank_by: RankBy::CostModel,
-            subdivide_rnz: if rng.chance(0.5) { Some(4) } else { None },
-            top_k: 12,
-            prune: rng.chance(0.5),
-            verify: rng.chance(0.5),
-            budget: 0,
-            deadline_ms: 0,
-        };
+        let spec = OptimizeSpec::builder(matmul_src())
+            .input("A", &[n, n])
+            .input("B", &[n, n])
+            .rank_by(RankBy::CostModel)
+            .subdivide_rnz(if rng.chance(0.5) { Some(4) } else { None })
+            .top_k(12)
+            .prune(rng.chance(0.5))
+            .verify(rng.chance(0.5))
+            .build()
+            .unwrap();
         let expected = if spec.subdivide_rnz.is_some() { 12 } else { 6 };
         let pruned = spec.prune;
         opt_handles.push((n, expected, pruned, c.submit(Request::Optimize(spec)).unwrap()));

@@ -200,18 +200,16 @@ fn differential_enumerate_same_variants_with_and_without_rewrite_memo() {
 
 #[test]
 fn differential_pipeline_same_ranking_with_and_without_rewrite_memo() {
-    let spec = OptimizeSpec {
-        source: "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))"
-            .into(),
-        inputs: vec![("A".into(), vec![32, 32]), ("B".into(), vec![32, 32])],
-        rank_by: RankBy::CostModel,
-        subdivide_rnz: Some(4),
-        top_k: 12,
-        prune: false,
-        verify: false,
-        budget: 0,
-        deadline_ms: 0,
-    };
+    let spec = OptimizeSpec::builder(
+        "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))",
+    )
+    .input("A", &[32, 32])
+    .input("B", &[32, 32])
+    .rank_by(RankBy::CostModel)
+    .subdivide_rnz(4)
+    .top_k(12)
+    .build()
+    .unwrap();
     let with_intern = optimize(&spec).unwrap();
     let without = with_memo_disabled(|| optimize(&spec)).unwrap();
     assert_eq!(with_intern.variants_explored, 12, "Table 2 count");

@@ -111,7 +111,7 @@ fn sharded_search_matches_serial() {
     };
     let sharded_opts = SearchOptions {
         shards: shard_count(),
-        ..serial_opts
+        ..serial_opts.clone()
     };
     for (name, start) in families() {
         let serial = enumerate_search(&start, &ctx, &serial_opts).unwrap();
@@ -165,7 +165,7 @@ fn prop_default_pruning_preserves_winner_and_survivor_scores() {
     };
     let pruned_opts = SearchOptions {
         prune_slack: Some(DEFAULT_PRUNE_SLACK),
-        ..exhaustive_opts
+        ..exhaustive_opts.clone()
     };
     for (name, start) in families() {
         let exhaustive = enumerate_search(&start, &ctx, &exhaustive_opts).unwrap();
@@ -335,17 +335,19 @@ fn tight_slack_actually_prunes() {
 /// the exhaustive winner with its exhaustive score.
 #[test]
 fn pruned_service_pipeline_matches_exhaustive() {
-    let mk = |prune: bool| OptimizeSpec {
-        source: "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))"
-            .into(),
-        inputs: vec![("A".into(), vec![64, 64]), ("B".into(), vec![64, 64])],
-        rank_by: RankBy::CostModel,
-        subdivide_rnz: Some(4),
-        top_k: 12,
-        prune,
-        verify: true,
-        budget: 0,
-        deadline_ms: 0,
+    let mk = |prune: bool| {
+        OptimizeSpec::builder(
+            "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))",
+        )
+        .input("A", &[64, 64])
+        .input("B", &[64, 64])
+        .rank_by(RankBy::CostModel)
+        .subdivide_rnz(4)
+        .top_k(12)
+        .prune(prune)
+        .verify(true)
+        .build()
+        .unwrap()
     };
     let exhaustive = optimize(&mk(false)).unwrap();
     let pruned = optimize(&mk(true)).unwrap();

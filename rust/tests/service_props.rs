@@ -1,0 +1,331 @@
+//! Service front-end properties (ISSUE 9): admission control, deadline
+//! propagation, cooperative cancellation and compatible-job batching,
+//! all through the redesigned typed coordinator API
+//! (`Coordinator::submit_optimize` → `OptimizeHandle`).
+//!
+//! - a burst past `queue_cap` sheds with typed [`Error::Overloaded`]
+//!   rejections (counted in `shed`, never in `submitted`) while every
+//!   accepted job still resolves;
+//! - [`OptimizeHandle::cancel`] stops an *in-flight* search mid-wave:
+//!   the stats report a cancelled, incomplete run — never a completed
+//!   frontier — and the truncated result is never cached;
+//! - a job's deadline is measured from intake, so queue wait behind a
+//!   slow neighbour is charged against the anytime budget;
+//! - same-family distinct jobs are checked out as one worker batch;
+//! - handles resolve exactly once (`wait_timeout` lifecycle), cancel
+//!   after resolution is a no-op, and dropping an unresolved handle is
+//!   safe.
+//!
+//! Timing assumption (shared with `coordinator::tests`): the n=64
+//! subdivided-matmul search runs for hundreds of milliseconds in the
+//! debug profile `cargo test` uses, so a 50 ms sleep is always inside
+//! the blocker's search window.
+
+use hofdla::coordinator::{Config, Coordinator, OptimizeSpec, MAX_DEADLINE_MS};
+use hofdla::Error;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+fn matmul_src() -> &'static str {
+    "(map (lam (rA) (map (lam (cB) (rnz + * rA cB)) (flip 0 (in B)))) (in A))"
+}
+
+/// A fast job: the 6-variant n=16 family.
+fn quick_spec(top_k: usize) -> OptimizeSpec {
+    OptimizeSpec::builder(matmul_src())
+        .input("A", &[16, 16])
+        .input("B", &[16, 16])
+        .top_k(top_k)
+        .build()
+        .unwrap()
+}
+
+/// The slow headline job: n=64, subdivided (Table 2's 12
+/// rearrangements) — hundreds of milliseconds in the debug profile.
+fn slow_spec() -> OptimizeSpec {
+    OptimizeSpec::builder(matmul_src())
+        .input("A", &[64, 64])
+        .input("B", &[64, 64])
+        .subdivide_rnz(4)
+        .top_k(12)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn saturated_intake_sheds_with_typed_overloaded_and_accepted_jobs_resolve() {
+    let c = Coordinator::start(Config {
+        workers: 1,
+        queue_cap: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    // Burst 16 *distinct* slow-family jobs (different top_k → different
+    // canonical keys, so nothing coalesces or hits the cache) at one
+    // worker with two intake slots. The short deadline keeps accepted
+    // jobs from serializing 16 full searches — they truncate instead —
+    // without affecting what admission control sees.
+    let mut accepted = Vec::new();
+    let mut shed = 0u64;
+    for i in 0..16usize {
+        let mut s = slow_spec();
+        s.top_k = i + 1;
+        s.deadline_ms = 10;
+        match c.submit_optimize(s) {
+            Ok(h) => accepted.push(h),
+            Err(Error::Overloaded { queue_depth }) => {
+                shed += 1;
+                // The depth a rejection carries is the depth that caused
+                // it, observed under the admission lock: exactly the cap.
+                assert_eq!(queue_depth, 2, "shed must report the saturating depth");
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(shed > 0, "a 16-job burst at queue_cap=2 must shed");
+    assert!(!accepted.is_empty(), "an empty queue must admit");
+    // Every accepted job resolves (deadline-truncated is still Ok).
+    let n_accepted = accepted.len() as u64;
+    for h in accepted {
+        h.wait().unwrap();
+    }
+    let m = &c.metrics;
+    assert_eq!(m.shed.load(Ordering::Relaxed), shed);
+    // Shed jobs never count as submitted — they were never accepted.
+    assert_eq!(m.submitted.load(Ordering::Relaxed), n_accepted);
+    assert_eq!(m.completed.load(Ordering::Relaxed), n_accepted);
+    assert_eq!(m.in_flight(), 0);
+    let high_water = m.queue_high_water.load(Ordering::Relaxed);
+    assert!(
+        (1..=2).contains(&high_water),
+        "queue high-water {high_water} escaped the configured bound"
+    );
+    // The typed rejection renders a useful operator message.
+    let msg = Error::Overloaded { queue_depth: 2 }.to_string();
+    assert!(msg.contains("overloaded"), "unhelpful message: {msg}");
+}
+
+/// ISSUE 9 acceptance: `cancel()` stops an in-flight search — the stats
+/// show a cancellation, not a completed frontier — and the truncated
+/// result is never cached.
+#[test]
+fn cancel_stops_an_inflight_search_and_is_never_cached() {
+    let c = Coordinator::start(Config {
+        workers: 1,
+        ..Default::default()
+    })
+    .unwrap();
+    let h = c.submit_optimize(slow_spec()).unwrap();
+    // Let the worker check the job out and get deep into the search.
+    std::thread::sleep(Duration::from_millis(50));
+    h.cancel();
+    let r = h.wait().unwrap();
+    assert!(r.stats.cancelled, "the search must observe the token");
+    assert!(!r.stats.complete, "a cancelled run must not claim a completed frontier");
+    assert!(!r.stats.deadline_hit, "no deadline was set");
+    assert!(r.certified_gap >= 1.0, "best-so-far still certifies a gap");
+    let m = &c.metrics;
+    assert_eq!(m.search_cancelled.load(Ordering::Relaxed), 1);
+    assert_eq!(m.cancelled_before_start.load(Ordering::Relaxed), 0);
+    // The truncated report was delivered (the job completed from the
+    // service's point of view)…
+    assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+    // …but never published: an identical resubmission misses the cache
+    // and runs the full search to completion.
+    let generated = m.search_generated.load(Ordering::Relaxed);
+    let r2 = c.submit_optimize(slow_spec()).unwrap().wait().unwrap();
+    assert_eq!(m.opt_cache_hits(), 0, "a cancelled result must never be cached");
+    assert!(
+        m.search_generated.load(Ordering::Relaxed) > generated,
+        "the resubmission must run a fresh search"
+    );
+    assert!(r2.stats.complete);
+    assert!(!r2.stats.cancelled);
+    assert_eq!(r2.variants_explored, 12, "Table 2");
+    assert_eq!(m.search_cancelled.load(Ordering::Relaxed), 1, "only the first run cancelled");
+}
+
+#[test]
+fn cancelling_a_queued_job_drops_it_at_checkout() {
+    let c = Coordinator::start(Config {
+        workers: 1,
+        ..Default::default()
+    })
+    .unwrap();
+    let blocker = c.submit_optimize(slow_spec()).unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+    // Queued behind the blocker; cancelled long before a worker reaches
+    // it. The checkout gate must drop it without starting (or joining)
+    // a search.
+    let victim = c.submit_optimize(quick_spec(6)).unwrap();
+    victim.cancel();
+    assert!(
+        victim.wait().is_err(),
+        "a job cancelled while queued resolves with an error"
+    );
+    let m = &c.metrics;
+    assert_eq!(m.cancelled_before_start.load(Ordering::Relaxed), 1);
+    assert_eq!(m.search_cancelled.load(Ordering::Relaxed), 0, "no search ever started");
+    assert_eq!(m.failed.load(Ordering::Relaxed), 1);
+    blocker.wait().unwrap();
+    assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+    assert_eq!(m.in_flight(), 0);
+}
+
+/// The explicit `shards` knob through the service: every width produces
+/// the same winner and bit-identical ranking (the deterministic-merge
+/// contract), with the per-shard layout reporting the requested width.
+/// Each width keys differently, so all three run fresh searches.
+#[test]
+fn explicit_shard_widths_reproduce_the_winner_bit_identically() {
+    let c = Coordinator::start(Config {
+        workers: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut reports = Vec::new();
+    for shards in [1usize, 2, 8] {
+        let mut s = slow_spec();
+        s.shards = shards;
+        let r = c.submit_optimize(s).unwrap().wait().unwrap();
+        assert_eq!(r.stats.shards, shards, "effective shard count");
+        assert_eq!(r.stats.extracted_per_shard.len(), shards);
+        assert!(r.stats.complete);
+        reports.push(format!("{:?} best={}", r.ranking, r.best));
+    }
+    assert!(
+        reports.windows(2).all(|w| w[0] == w[1]),
+        "shard width changed the result: {reports:?}"
+    );
+    assert_eq!(c.metrics.opt_cache_hits(), 0, "distinct widths key distinctly");
+}
+
+#[test]
+fn queue_wait_is_charged_against_the_deadline() {
+    let c = Coordinator::start(Config {
+        workers: 1,
+        ..Default::default()
+    })
+    .unwrap();
+    // Occupy the only worker with a full search, then queue a
+    // 1 ms-deadline job behind it. The deadline expires while the job
+    // waits, so its search must truncate at the first checkpoint —
+    // checkout must not restart the clock.
+    let blocker = c.submit_optimize(slow_spec()).unwrap();
+    let mut s = slow_spec();
+    s.top_k = 1; // distinct key: must not coalesce with the blocker
+    s.deadline_ms = 1;
+    let h = c.submit_optimize(s).unwrap();
+    let r = h.wait().unwrap();
+    assert!(r.stats.deadline_hit, "queue wait must count against the deadline");
+    assert!(!r.stats.complete);
+    assert!(!r.stats.cancelled);
+    assert!(r.variants_explored < 12, "an expired deadline must truncate the search");
+    let m = &c.metrics;
+    assert_eq!(m.search_deadline_hits.load(Ordering::Relaxed), 1);
+    // The wait behind the blocker is visible to operators: well over the
+    // job's whole deadline.
+    assert!(
+        m.queue_wait_max_ns.load(Ordering::Relaxed) > 1_000_000,
+        "queue-wait metrics missed a job that waited out a full search"
+    );
+    blocker.wait().unwrap();
+    assert_eq!(m.in_flight(), 0);
+}
+
+/// Compatible-job batching: distinct jobs of one kernel family queued
+/// behind a blocker are checked out as a single worker batch (leader
+/// plus same-family followers), visible in the batch metrics.
+#[test]
+fn same_family_distinct_jobs_batch_onto_one_worker_checkout() {
+    let c = Coordinator::start(Config {
+        workers: 1,
+        opt_batch: 8,
+        ..Default::default()
+    })
+    .unwrap();
+    // The blocker is checked out alone (nothing else is queued yet).
+    let blocker = c.submit_optimize(slow_spec()).unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+    // Three distinct jobs of the same α-invariant source family
+    // (different top_k → different keys: none coalesce, none hit the
+    // cache) queue while the worker is busy.
+    let followers: Vec<_> = [3usize, 4, 5]
+        .iter()
+        .map(|&k| c.submit_optimize(quick_spec(k)).unwrap())
+        .collect();
+    for h in followers {
+        h.wait().unwrap();
+    }
+    blocker.wait().unwrap();
+    let m = &c.metrics;
+    // Two checkouts: the lone blocker, then the three-job family batch.
+    assert_eq!(m.opt_batches.load(Ordering::Relaxed), 2);
+    assert_eq!(m.max_opt_batch.load(Ordering::Relaxed), 3);
+    assert_eq!(m.opt_batched_jobs.load(Ordering::Relaxed), 3);
+    assert_eq!(m.completed.load(Ordering::Relaxed), 4);
+    assert_eq!(m.in_flight(), 0);
+}
+
+#[test]
+fn handle_resolves_exactly_once_through_wait_timeout() {
+    let c = Coordinator::start(Config {
+        workers: 1,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut h = c.submit_optimize(slow_spec()).unwrap();
+    // Mid-search, a short poll reports pending and leaves the handle
+    // live.
+    let pending = h.wait_timeout(Duration::from_millis(1)).unwrap();
+    assert!(pending.is_none(), "slow search resolved implausibly fast");
+    let r = loop {
+        if let Some(r) = h.wait_timeout(Duration::from_secs(60)).unwrap() {
+            break r;
+        }
+    };
+    assert!(r.stats.complete);
+    // Exactly-once: the resolved handle reports an error on every later
+    // poll instead of hanging or double-delivering…
+    assert!(h.wait_timeout(Duration::from_millis(1)).is_err());
+    // …and cancelling it now is a documented no-op: the run completed,
+    // so its result was cached and a resubmission hits.
+    h.cancel();
+    let r2 = c.submit_optimize(slow_spec()).unwrap().wait().unwrap();
+    assert_eq!(c.metrics.opt_cache_hits(), 1);
+    assert_eq!(c.metrics.search_cancelled.load(Ordering::Relaxed), 0);
+    assert_eq!(r.best, r2.best);
+}
+
+#[test]
+fn dropping_an_unresolved_handle_is_safe_and_the_job_still_completes() {
+    let c = Coordinator::start(Config {
+        workers: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    drop(c.submit_optimize(quick_spec(6)).unwrap());
+    // The dropped job still runs: an identical resubmission either hits
+    // the cache the dropped job populated or coalesces onto its flight —
+    // both resolve, and `completed` counts the dropped job too.
+    let r = c.submit_optimize(quick_spec(6)).unwrap().wait().unwrap();
+    assert_eq!(r.best, "map1 rnz map2");
+    assert_eq!(c.metrics.completed.load(Ordering::Relaxed), 2);
+    assert_eq!(c.metrics.in_flight(), 0);
+}
+
+#[test]
+fn submit_validates_hand_mutated_specs_before_queueing() {
+    let c = Coordinator::start(Config::default()).unwrap();
+    // The builder refuses these knobs; mutation after `build()` bypasses
+    // it, and `submit_optimize` re-validates before anything queues.
+    let mut bad = quick_spec(6);
+    bad.top_k = 0;
+    assert!(c.submit_optimize(bad).is_err());
+    let mut bad = quick_spec(6);
+    bad.deadline_ms = MAX_DEADLINE_MS + 1;
+    assert!(c.submit_optimize(bad).is_err());
+    let m = &c.metrics;
+    assert_eq!(m.submitted.load(Ordering::Relaxed), 0, "rejected specs must not queue");
+    assert_eq!(m.shed.load(Ordering::Relaxed), 0, "a validation failure is not shed");
+}

@@ -161,7 +161,7 @@ fn stressed_shard_counts_reproduce_serial_order_with_boundary_only_extraction() 
         for shards in stress_shard_counts() {
             let opts = SearchOptions {
                 shards,
-                ..serial_opts
+                ..serial_opts.clone()
             };
             let got = enumerate_search(&start, &ctx, &opts).unwrap();
             let got_keys: Vec<String> = got.variants.iter().map(|v| v.display_key()).collect();
