@@ -16,14 +16,31 @@ cross-request sharing machinery going inert flags too. The schema-v5
 `load` row's p50/p99 tails compare against the baseline at the 3x
 threshold and must not shed, while the `overload` row must shed — a
 zero shed count under a 64-job burst at a 2-slot queue means admission
-control went inert. Exit codes: 0 = within threshold (or nothing to
-compare), 1 = at least one row regressed beyond THRESHOLD (or a
+control went inert. The schema-v6 `exec` block (ISSUE 10: serial vs
+certificate-gated threaded execution of the shipped loop-nest families)
+is guarded too: every family reporting `parallel_loops == 0` means the
+parallel-safety certificate went inert — the threaded path silently ran
+serial — which flags even when wall-clock rows stay flat.
+
+A second mode, `--update-baseline CURRENT.json`, schema-checks a fresh
+run and writes it as `BENCH_coordinator.baseline.json` next to this
+script (preserving the committed baseline's prose `note`), so refreshing
+the baseline after an intended trajectory change is one command instead
+of hand-editing JSON.
+
+Exit codes: 0 = within threshold (or nothing to compare / baseline
+written), 1 = at least one row regressed beyond THRESHOLD (or a
 within-run signal broke), 2 = usage error. Stdlib only — the repo's
 default build is dependency-free and CI should be too.
 """
 
 import json
+import os
 import sys
+
+# The bench JSON schema this script understands; `--update-baseline`
+# refuses to install a baseline written by any other schema version.
+EXPECTED_SCHEMA = 6
 
 # Generous: flag only when a median is more than 3x the baseline.
 THRESHOLD = 3.0
@@ -41,9 +58,62 @@ def rows_by_name(doc):
     return {r.get("name"): r for r in doc.get("rows", [])}
 
 
+def update_baseline(current_path):
+    """Schema-check a fresh run and install it as the committed baseline."""
+    try:
+        with open(current_path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"cannot read current results {current_path}: {e}", file=sys.stderr)
+        return 2
+    problems = []
+    if doc.get("bench") != "coordinator":
+        problems.append(f"bench is {doc.get('bench')!r}, expected 'coordinator'")
+    if doc.get("schema") != EXPECTED_SCHEMA:
+        problems.append(f"schema is {doc.get('schema')!r}, expected {EXPECTED_SCHEMA}")
+    rows = rows_by_name(doc)
+    for name in ROWS:
+        if not rows.get(name, {}).get("median_ns"):
+            problems.append(f"row {name!r} missing or has no median_ns")
+    for block in ("search", "anytime", "sharing", "service", "exec"):
+        if not doc.get(block):
+            problems.append(f"block {block!r} missing or empty")
+    if not doc.get("exec", {}).get("rows"):
+        problems.append("exec block has no rows")
+    if problems:
+        for p in problems:
+            print(f"refusing to write baseline: {p}", file=sys.stderr)
+        return 2
+    out = os.path.join(
+        os.path.dirname(os.path.abspath(__file__)),
+        "BENCH_coordinator.baseline.json",
+    )
+    # Keep the committed baseline's prose note (provenance + refresh
+    # guidance) — the bench binary does not emit one.
+    if "note" not in doc:
+        try:
+            with open(out) as f:
+                note = json.load(f).get("note")
+            if note is not None:
+                doc = {**doc, "note": note}
+        except (OSError, ValueError):
+            pass
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out} (schema {EXPECTED_SCHEMA})")
+    return 0
+
+
 def main(argv):
+    if len(argv) == 3 and argv[1] == "--update-baseline":
+        return update_baseline(argv[2])
     if len(argv) != 3:
-        print(f"usage: {argv[0]} CURRENT.json BASELINE.json", file=sys.stderr)
+        print(
+            f"usage: {argv[0]} CURRENT.json BASELINE.json\n"
+            f"       {argv[0]} --update-baseline CURRENT.json",
+            file=sys.stderr,
+        )
         return 2
     try:
         with open(argv[1]) as f:
@@ -271,6 +341,55 @@ def main(argv):
                 )
                 if ratio > THRESHOLD:
                     regressed.append(f"service-load-{col}")
+
+    # Parallel-executor tracking (ISSUE 10): serial vs certificate-gated
+    # threaded execution of the shipped loop-nest families. The within-run
+    # signal is the certificate going inert — every family reporting
+    # parallel_loops == 0 means the dependence analysis demoted all root
+    # maps (or the executor stopped consulting the cert) and the threaded
+    # path silently ran serial; that is `broken`, a code regression no
+    # wall-clock row catches. Per-family threaded medians additionally
+    # compare against the committed baseline at the generous cross-run
+    # threshold. Tolerant of pre-exec baselines (no "exec" block).
+    exec_block = current.get("exec", {})
+    if exec_block:
+        base_exec = {
+            r.get("family"): r for r in baseline.get("exec", {}).get("rows", [])
+        }
+        total_parallel = 0
+        for row in exec_block.get("rows", []):
+            family = row.get("family")
+            total_parallel += row.get("parallel_loops") or 0
+            print(
+                "exec {}: n={} serial_ns={} parallel_ns={} speedup={} "
+                "parallel_loops={} (threads={})".format(
+                    family,
+                    row.get("n", "?"),
+                    row.get("serial_ns", "?"),
+                    row.get("parallel_ns", "?"),
+                    row.get("speedup", "?"),
+                    row.get("parallel_loops", "?"),
+                    exec_block.get("threads", "?"),
+                )
+            )
+            b = base_exec.get(family)
+            c = row.get("parallel_ns", 0)
+            if b and b.get("parallel_ns", 0) > 0 and c:
+                ratio = c / b["parallel_ns"]
+                mark = "OK" if ratio <= THRESHOLD else f"REGRESSION (> {THRESHOLD}x)"
+                print(
+                    f"exec {family} parallel {c:>13} ns  baseline "
+                    f"{b['parallel_ns']:>13} ns  ({ratio:6.2f}x)  {mark}"
+                )
+                if ratio > THRESHOLD:
+                    regressed.append(f"exec-{family}-parallel_ns")
+        if total_parallel == 0:
+            print(
+                "advisory: no bench family executed a parallel loop — the "
+                "parallel-safety certificate has gone inert (see "
+                "verify::depend::certify and the execute_threaded gate)"
+            )
+            broken.append("exec-parallel-loops")
 
     if regressed:
         print(

@@ -24,14 +24,21 @@
 //! - pipelined submission throughput over the worker pool.
 //!
 //! The cold/warm/warm_canonical/pruned/coalesced rows are also written to
-//! `BENCH_coordinator.json` (schema v5, nanosecond medians), together
+//! `BENCH_coordinator.json` (schema v6, nanosecond medians), together
 //! with a `sharing` block (hit split, coalesced count, canonical hit
-//! rate, arena pool high-water) and the `service` rows above, so the perf
-//! trajectory — and the sharing + admission machinery staying live — is
-//! tracked across PRs.
+//! rate, arena pool high-water), the `service` rows above, and an `exec`
+//! block (ISSUE 10: serial vs certificate-gated threaded execution of the
+//! shipped loop-nest families, with the parallel-loop count so an inert
+//! certificate flags), so the perf trajectory — and the sharing +
+//! admission + parallel-execution machinery staying live — is tracked
+//! across PRs.
 
 use hofdla::bench_support::{bench, fmt_duration, BenchConfig, Measurement};
 use hofdla::coordinator::{self, Config, Coordinator, OptimizeSpec, RankBy, Request, Response};
+use hofdla::enumerate::starts;
+use hofdla::exec::{execute, execute_threaded, lower, order_inputs};
+use hofdla::layout::Layout;
+use hofdla::typecheck::Env;
 use hofdla::Error;
 
 fn subdivided_matmul_spec(prune: bool) -> OptimizeSpec {
@@ -98,6 +105,22 @@ struct SharingRow {
     coalesced: u64,
     canonical_hit_rate: f64,
     arena_pool_high_water: u64,
+}
+
+/// Serial vs certificate-gated threaded execution of one shipped family
+/// for the `exec` block of the JSON (schema v6). `parallel_loops` is the
+/// threaded run's [`hofdla::exec::ExecReport::parallel_loops`]; the
+/// advisory perf lane flags the block when every row reports 0 — an inert
+/// certificate (the dependence analysis demoted everything, or the
+/// executor stopped consulting it) that wall-clock rows on fast machines
+/// would never catch.
+struct ExecRow {
+    family: &'static str,
+    n: usize,
+    serial_ns: u128,
+    parallel_ns: u128,
+    speedup: f64,
+    parallel_loops: u64,
 }
 
 /// One load-generator scenario for the `service` block of the JSON
@@ -199,9 +222,11 @@ fn write_bench_json(
     anytime: &[AnytimeRow],
     sharing: &SharingRow,
     service: &[ServiceRow],
+    exec_threads: usize,
+    exec: &[ExecRow],
 ) {
     let mut s = String::from(
-        "{\n  \"bench\": \"coordinator\",\n  \"schema\": 5,\n  \"workload\": \"matmul n=64 subdivide_rnz=4 (Table 2, 12 variants)\",\n  \"rows\": [\n",
+        "{\n  \"bench\": \"coordinator\",\n  \"schema\": 6,\n  \"workload\": \"matmul n=64 subdivide_rnz=4 (Table 2, 12 variants)\",\n  \"rows\": [\n",
     );
     for (i, (name, m)) in rows.iter().enumerate() {
         s.push_str(&format!(
@@ -251,7 +276,24 @@ fn write_bench_json(
             if i + 1 < service.len() { "," } else { "" }
         ));
     }
-    s.push_str(&format!("  ],\n  \"jobs_per_s\": {jobs_per_s:.1}\n}}\n"));
+    s.push_str(&format!(
+        "  ],\n  \"exec\": {{\"threads\": {exec_threads}, \"rows\": [\n"
+    ));
+    for (i, r) in exec.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"family\": \"{}\", \"n\": {}, \"serial_ns\": {}, \"parallel_ns\": {}, \"speedup\": {:.3}, \"parallel_loops\": {}}}{}\n",
+            r.family,
+            r.n,
+            r.serial_ns,
+            r.parallel_ns,
+            r.speedup,
+            r.parallel_loops,
+            if i + 1 < exec.len() { "," } else { "" }
+        ));
+    }
+    s.push_str(&format!(
+        "  ]}},\n  \"jobs_per_s\": {jobs_per_s:.1}\n}}\n"
+    ));
     match std::fs::write("BENCH_coordinator.json", &s) {
         Ok(()) => println!("wrote BENCH_coordinator.json"),
         Err(e) => eprintln!("could not write BENCH_coordinator.json: {e}"),
@@ -331,6 +373,79 @@ fn main() {
             row
         })
         .collect();
+
+    // Executor phase (ISSUE 10): serial vs certificate-gated threaded
+    // execution of the shipped loop-nest families at a size where the
+    // nest dominates. Both families certify their root map `Parallel`
+    // (all-`+` reductions lower without temps), so the threaded run must
+    // actually chunk — `parallel_loops` lands in the JSON and the
+    // advisory lane flags the certificate going inert. Bit-identity to
+    // the serial path is asserted on every row before timing.
+    let exec_threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(8);
+    let exec_rows: Vec<ExecRow> = vec![
+        ("matmul_naive", starts::matmul_naive_variant()),
+        ("subdivided_matmul", starts::matmul_rnz_subdivided_variant(4)),
+    ]
+    .into_iter()
+    .map(|(family, v)| {
+        let n = 192usize;
+        let env = Env::new()
+            .with("A", Layout::row_major(&[n, n]))
+            .with("B", Layout::row_major(&[n, n]));
+        let prog = lower(&v.expr, &env).expect("lower family");
+        let a: Vec<f64> = (0..n * n).map(|i| ((i % 13) as f64) - 6.0).collect();
+        let b: Vec<f64> = (0..n * n).map(|i| ((i % 7) as f64) * 0.5 - 1.5).collect();
+        let bufs = order_inputs(&prog, &[("A", &a), ("B", &b)]).expect("inputs");
+        let mut serial_out = vec![0.0; prog.out_size];
+        execute(&prog, &bufs, &mut serial_out).expect("serial execute");
+        let mut parallel_out = vec![0.0; prog.out_size];
+        let rep = execute_threaded(&prog, &bufs, &mut parallel_out, exec_threads)
+            .expect("threaded execute");
+        assert!(
+            serial_out
+                .iter()
+                .zip(&parallel_out)
+                .all(|(x, y)| x.to_bits() == y.to_bits()),
+            "{family}: threaded output must be bit-identical to serial"
+        );
+        let serial = bench(&format!("exec {family} n={n} (serial)"), &cfg, || {
+            let mut out = vec![0.0; prog.out_size];
+            execute(&prog, &bufs, &mut out).expect("serial execute");
+            std::hint::black_box(out[0]);
+        });
+        let parallel = bench(
+            &format!("exec {family} n={n} ({exec_threads} threads)"),
+            &cfg,
+            || {
+                let mut out = vec![0.0; prog.out_size];
+                execute_threaded(&prog, &bufs, &mut out, exec_threads)
+                    .expect("threaded execute");
+                std::hint::black_box(out[0]);
+            },
+        );
+        let row = ExecRow {
+            family,
+            n,
+            serial_ns: serial.median.as_nanos(),
+            parallel_ns: parallel.median.as_nanos(),
+            speedup: serial.median.as_secs_f64()
+                / parallel.median.as_secs_f64().max(f64::EPSILON),
+            parallel_loops: rep.parallel_loops,
+        };
+        println!(
+            "exec {family} n={n}: serial {} vs {} threads {} ({:.2}x, parallel_loops={})",
+            fmt_duration(serial.median),
+            exec_threads,
+            fmt_duration(parallel.median),
+            row.speedup,
+            row.parallel_loops
+        );
+        row
+    })
+    .collect();
 
     let c = Coordinator::start(Config::default()).expect("start");
 
@@ -522,6 +637,8 @@ fn main() {
         &anytime,
         &sharing,
         &service,
+        exec_threads,
+        &exec_rows,
     );
 
     if hofdla::runtime::artifact_path("matmul_xla_256").exists()

@@ -107,6 +107,15 @@ pub struct Metrics {
     /// verifier ([`crate::Error::Verify`]) — should stay 0; any tick is a
     /// lowering or rewrite bug caught before execution.
     pub verify_rejects: AtomicU64,
+    /// Root loops executed through the certificate-gated threaded path
+    /// ([`crate::exec::execute_threaded`]) across fresh optimize runs
+    /// whose spec requested an execution rehearsal.
+    pub exec_parallel_loops: AtomicU64,
+    /// Execution rehearsals that requested threads but fell closed to the
+    /// serial path (`Serial` certificate verdict or non-map root).
+    pub exec_serial_fallback: AtomicU64,
+    /// Gauge: most worker threads any single rehearsal actually used.
+    pub exec_threads_high_water: AtomicU64,
 }
 
 impl Metrics {
@@ -174,7 +183,7 @@ impl Metrics {
     /// Human-readable one-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "submitted={} completed={} failed={} shed={} queue_depth={} queue_high_water={} queue_wait_max_ns={} opt_batches={} opt_batched_jobs={} max_opt_batch={} exec_batches={} max_batch={} cache_hits={} opt_cache_hits_exact={} opt_cache_hits_canonical={} opt_coalesced={} opt_cache_flushes={} arena_pool_high_water={} search_expanded={} search_generated={} search_pruned={} search_type_rejects={} search_bound_updates={} search_extractions={} search_budget_hits={} search_deadline_hits={} search_cancelled={} cancelled_before_start={} last_gap={} verify_passed={} verify_rejects={}",
+            "submitted={} completed={} failed={} shed={} queue_depth={} queue_high_water={} queue_wait_max_ns={} opt_batches={} opt_batched_jobs={} max_opt_batch={} exec_batches={} max_batch={} cache_hits={} opt_cache_hits_exact={} opt_cache_hits_canonical={} opt_coalesced={} opt_cache_flushes={} arena_pool_high_water={} search_expanded={} search_generated={} search_pruned={} search_type_rejects={} search_bound_updates={} search_extractions={} search_budget_hits={} search_deadline_hits={} search_cancelled={} cancelled_before_start={} last_gap={} verify_passed={} verify_rejects={} exec_parallel_loops={} exec_serial_fallback={} exec_threads_high_water={}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -210,6 +219,9 @@ impl Metrics {
             },
             self.verify_passed.load(Ordering::Relaxed),
             self.verify_rejects.load(Ordering::Relaxed),
+            self.exec_parallel_loops.load(Ordering::Relaxed),
+            self.exec_serial_fallback.load(Ordering::Relaxed),
+            self.exec_threads_high_water.load(Ordering::Relaxed),
         )
     }
 
@@ -344,5 +356,17 @@ mod tests {
         m.verify_rejects.store(1, Ordering::Relaxed);
         assert!(m.summary().contains("verify_passed=7"));
         assert!(m.summary().contains("verify_rejects=1"));
+    }
+
+    #[test]
+    fn exec_counters_surface_in_summary() {
+        let m = Metrics::default();
+        m.exec_parallel_loops.store(4, Ordering::Relaxed);
+        m.exec_serial_fallback.store(2, Ordering::Relaxed);
+        m.exec_threads_high_water.store(8, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("exec_parallel_loops=4"));
+        assert!(s.contains("exec_serial_fallback=2"));
+        assert!(s.contains("exec_threads_high_water=8"));
     }
 }

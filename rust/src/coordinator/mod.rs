@@ -39,8 +39,8 @@ mod pipeline;
 
 pub use metrics::Metrics;
 pub use pipeline::{
-    optimize, optimize_ctl, CanonicalKey, JobCtl, OptimizeResult, OptimizeSpec,
-    OptimizeSpecBuilder, RankBy, MAX_DEADLINE_MS,
+    optimize, optimize_ctl, CanonicalKey, ExecRehearsal, JobCtl, OptimizeResult,
+    OptimizeSpec, OptimizeSpecBuilder, RankBy, MAX_DEADLINE_MS,
 };
 
 use crate::enumerate::CancelToken;
@@ -210,6 +210,14 @@ fn run_fresh(spec: &OptimizeSpec, ctl: &JobCtl, m: &Metrics) -> Result<OptimizeR
             m.record_search(&res.stats);
             m.verify_passed
                 .fetch_add(res.programs_verified as u64, Ordering::Relaxed);
+            if let Some(ex) = &res.exec {
+                m.exec_parallel_loops
+                    .fetch_add(ex.parallel_loops, Ordering::Relaxed);
+                m.exec_serial_fallback
+                    .fetch_add(u64::from(ex.serial_fallback), Ordering::Relaxed);
+                m.exec_threads_high_water
+                    .fetch_max(ex.threads_used as u64, Ordering::Relaxed);
+            }
             m.arena_pool_high_water.fetch_max(
                 crate::dsl::intern::arena_pool_stats().high_water,
                 Ordering::Relaxed,

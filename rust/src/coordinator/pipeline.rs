@@ -11,7 +11,7 @@ use crate::enumerate::{
     enumerate_search, CancelToken, SearchOptions, SearchResult, SearchStats, Variant,
     DEFAULT_PRUNE_SLACK, MAX_SEARCH_SHARDS,
 };
-use crate::exec::lower;
+use crate::exec::{execute, execute_threaded, lower, ExecReport, MAX_EXEC_THREADS};
 use crate::layout::Layout;
 use crate::rewrite::{fusion, normalize, subdivision, Ctx};
 use crate::typecheck::Env;
@@ -92,6 +92,18 @@ pub struct OptimizeSpec {
     /// deterministic-merge contract, pinned by the CI `SEARCH_SHARDS`
     /// matrix) — this knob trades latency against machine load only.
     pub shards: usize,
+    /// Execution rehearsal: lower the winning candidate and *run* it on
+    /// deterministic synthetic inputs before reporting. `0` = off (the
+    /// default — report without executing); `1` = serial rehearsal; `>= 2`
+    /// = additionally run the certificate-gated threaded executor
+    /// ([`crate::exec::execute_threaded`]) with this many workers and
+    /// assert the output is bit-identical to serial. Values above
+    /// [`crate::exec::MAX_EXEC_THREADS`] are rejected by
+    /// [`OptimizeSpec::validate`] rather than silently clamped. The
+    /// resulting [`ExecRehearsal`] report is folded into
+    /// [`super::Metrics`] (`exec_parallel_loops` / `exec_serial_fallback`
+    /// / `exec_threads_high_water`).
+    pub exec_threads: usize,
 }
 
 /// Upper bound accepted for [`OptimizeSpec::deadline_ms`] (24 hours).
@@ -120,6 +132,7 @@ impl OptimizeSpec {
                 budget: 0,
                 deadline_ms: 0,
                 shards: 0,
+                exec_threads: 0,
             },
         }
     }
@@ -158,6 +171,13 @@ impl OptimizeSpec {
                 "top_k 0 requests an empty report; keep at least one row".into(),
             ));
         }
+        if self.exec_threads > MAX_EXEC_THREADS {
+            return Err(Error::Coordinator(format!(
+                "exec_threads {} exceeds MAX_EXEC_THREADS ({MAX_EXEC_THREADS}); use 0 to skip \
+                 the execution rehearsal",
+                self.exec_threads
+            )));
+        }
         Ok(())
     }
 
@@ -193,6 +213,7 @@ impl OptimizeSpec {
             budget: self.budget,
             deadline_ms: self.deadline_ms,
             shards: self.shards,
+            exec_threads: self.exec_threads,
         })
     }
 }
@@ -283,6 +304,12 @@ impl OptimizeSpecBuilder {
         self
     }
 
+    /// See [`OptimizeSpec::exec_threads`].
+    pub fn exec_threads(mut self, exec_threads: usize) -> Self {
+        self.spec.exec_threads = exec_threads;
+        self
+    }
+
     /// Validate the knob bounds and return the finished spec.
     pub fn build(self) -> Result<OptimizeSpec> {
         self.spec.validate()?;
@@ -318,6 +345,10 @@ pub struct CanonicalKey {
     /// "every non-source knob" key contract (ISSUE 8) stays trivially
     /// true.
     pub shards: usize,
+    /// Execution-rehearsal width: cached results carry the rehearsal
+    /// report of the run that produced them, so the knob is part of the
+    /// key like every other non-source knob.
+    pub exec_threads: usize,
 }
 
 /// The pipeline's report.
@@ -348,6 +379,29 @@ pub struct OptimizeResult {
     /// truncated run had nothing to certify (CacheSim jobs rank outside
     /// the search, so only complete runs certify there).
     pub certified_gap: f64,
+    /// Execution-rehearsal report (`None` unless the spec's
+    /// [`exec_threads`](OptimizeSpec::exec_threads) knob is on): how the
+    /// winner actually ran, plus the parallel/serial loop split of its
+    /// dependence certificate ([`crate::verify::ParCert`]).
+    pub exec: Option<ExecRehearsal>,
+}
+
+/// Outcome of the optional execution rehearsal: the winner's lowered
+/// program was run on deterministic synthetic inputs, threaded when its
+/// certificate allows, and checked bit-identical to the serial path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecRehearsal {
+    /// Root loops executed through the threaded path (0 or 1 per run).
+    pub parallel_loops: u64,
+    /// True when threads were requested but the certificate (or program
+    /// shape) forced the fail-closed serial path.
+    pub serial_fallback: bool,
+    /// Worker threads the executor actually used.
+    pub threads_used: usize,
+    /// `MapLoop`s in the winner's certificate with a `Parallel` verdict.
+    pub cert_parallel_loops: usize,
+    /// `MapLoop`s demoted to `Serial` (with a named reason) in the cert.
+    pub cert_serial_loops: usize,
 }
 
 /// Per-job runtime control the service front end threads into a pipeline
@@ -500,6 +554,7 @@ pub fn optimize_ctl(spec: &OptimizeSpec, ctl: &JobCtl) -> Result<OptimizeResult>
     } else {
         0
     };
+    let exec = rehearse_execution(best_e, &env, spec.exec_threads)?;
     let certified_gap = stats.certified_gap;
     Ok(OptimizeResult {
         variants_explored,
@@ -510,7 +565,65 @@ pub fn optimize_ctl(spec: &OptimizeSpec, ctl: &JobCtl) -> Result<OptimizeResult>
         stats,
         programs_verified,
         certified_gap,
+        exec,
     })
+}
+
+/// Execution rehearsal: lower the winner, run it on deterministic
+/// synthetic inputs (sized from its declared input lengths) and — for
+/// `threads >= 2` — run it again through the certificate-gated threaded
+/// executor and require the two outputs bit-identical. Returns `None`
+/// when the knob is off (`threads == 0`).
+fn rehearse_execution(
+    best: &dsl::Expr,
+    env: &Env,
+    threads: usize,
+) -> Result<Option<ExecRehearsal>> {
+    if threads == 0 {
+        return Ok(None);
+    }
+    let prog = lower(best, env)?;
+    let fp = crate::verify::verify(&prog)?;
+    // Deterministic, slot-keyed synthetic inputs: mixed-sign, non-constant
+    // values so element misplacement cannot cancel out.
+    let owned: Vec<Vec<f64>> = prog
+        .input_lens
+        .iter()
+        .enumerate()
+        .map(|(slot, &len)| {
+            (0..len)
+                .map(|i| ((i * 7 + slot * 13) % 31) as f64 * 0.25 - 3.0)
+                .collect()
+        })
+        .collect();
+    let bufs: Vec<&[f64]> = owned.iter().map(|v| v.as_slice()).collect();
+    let mut serial = vec![0.0; prog.out_size];
+    execute(&prog, &bufs, &mut serial)?;
+    let report = if threads >= 2 {
+        let mut threaded = vec![0.0; prog.out_size];
+        let rep = execute_threaded(&prog, &bufs, &mut threaded, threads)?;
+        if serial
+            .iter()
+            .zip(&threaded)
+            .any(|(a, b)| a.to_bits() != b.to_bits())
+        {
+            return Err(Error::Coordinator(
+                "execution rehearsal: threaded output diverged from serial — \
+                 refusing to report an unsound parallel certificate"
+                    .into(),
+            ));
+        }
+        rep
+    } else {
+        ExecReport { parallel_loops: 0, serial_fallback: false, threads_used: 1 }
+    };
+    Ok(Some(ExecRehearsal {
+        parallel_loops: report.parallel_loops,
+        serial_fallback: report.serial_fallback,
+        threads_used: report.threads_used,
+        cert_parallel_loops: fp.par.parallel_loops(),
+        cert_serial_loops: fp.par.serial_loops(),
+    }))
 }
 
 /// Score one variant under the chosen metric.
@@ -740,6 +853,29 @@ mod tests {
     }
 
     #[test]
+    fn exec_rehearsal_runs_threaded_and_reports_cert_split() {
+        // ISSUE 10: with the knob on, the winner is lowered and *run* —
+        // threaded when its certificate allows — and the report carries
+        // both what happened and the cert's parallel/serial loop split.
+        let mut spec = matmul_spec(16, RankBy::CostModel);
+        spec.subdivide_rnz = Some(4);
+        spec.exec_threads = 2;
+        let ex = optimize(&spec).unwrap().exec.expect("rehearsal requested");
+        assert_eq!(ex.parallel_loops, 1, "matmul roots in a certified map");
+        assert!(!ex.serial_fallback);
+        assert_eq!(ex.threads_used, 2);
+        assert!(ex.cert_parallel_loops >= 1);
+        // `1` rehearses serially (no threaded run, no fallback flag).
+        spec.exec_threads = 1;
+        let ex = optimize(&spec).unwrap().exec.unwrap();
+        assert_eq!((ex.parallel_loops, ex.threads_used), (0, 1));
+        assert!(!ex.serial_fallback);
+        // Off (the default) skips the rehearsal entirely.
+        spec.exec_threads = 0;
+        assert!(optimize(&spec).unwrap().exec.is_none());
+    }
+
+    #[test]
     fn unknown_input_is_an_error() {
         let mut spec = matmul_spec(8, RankBy::CostModel);
         spec.inputs.pop();
@@ -809,6 +945,11 @@ mod tests {
         assert!(err.to_string().contains("shards"), "{err}");
         let err = base().top_k(0).build().unwrap_err();
         assert!(err.to_string().contains("top_k"), "{err}");
+        let err = base()
+            .exec_threads(crate::exec::MAX_EXEC_THREADS + 1)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("exec_threads"), "{err}");
         #[cfg(target_pointer_width = "32")]
         {
             let err = base().budget(u64::MAX).build().unwrap_err();
@@ -824,6 +965,7 @@ mod tests {
             .budget(100)
             .deadline_ms(250)
             .shards(2)
+            .exec_threads(4)
             .build()
             .unwrap();
         assert_eq!(spec.rank_by, RankBy::CacheSim);
@@ -831,6 +973,7 @@ mod tests {
         assert_eq!(spec.top_k, 5);
         assert!(spec.prune && spec.verify);
         assert_eq!((spec.budget, spec.deadline_ms, spec.shards), (100, 250, 2));
+        assert_eq!(spec.exec_threads, 4);
         // `inputs` replaces wholesale; `input` appends.
         let spec = base()
             .inputs(vec![("w".into(), vec![4])])
@@ -927,6 +1070,9 @@ mod tests {
         let mut subdivided = spec.clone();
         subdivided.subdivide_rnz = Some(4);
         assert_ne!(k, subdivided.canonical_key(7).unwrap());
+        let mut threaded = spec.clone();
+        threaded.exec_threads = 2;
+        assert_ne!(k, threaded.canonical_key(7).unwrap());
     }
 
     #[test]

@@ -14,13 +14,56 @@
 //! rearrangements (identical per-element work), the interpretation overhead
 //! is constant across variants and the measured differences are the memory
 //! system's — which is exactly what the paper measures.
+//!
+//! **Certificate-gated parallel mode** ([`execute_threaded`]): the
+//! verifier's dependence analysis ([`crate::verify::ParCert`]) decides
+//! whether the root `MapLoop`'s iterations own disjoint destination
+//! chunks. When it says `Parallel` and the caller asks for ≥ 2 threads,
+//! the root loop is split into contiguous iteration ranges and run on a
+//! scoped thread pool — bit-identical to serial, because each output
+//! element is computed exactly once, by one thread, with the same
+//! floating-point operation order (`RedLoop`s stay serial inside each
+//! chunk, so reduction association never changes). On any `Serial`
+//! verdict, a missing certificate, or a root that is not a map, execution
+//! fails closed to the serial path — the analysis, not a flag, is the
+//! authority.
 
 use super::program::{Adv, Kernel, KernelOp, Node, Program, WriteMode};
 use crate::dsl::Prim;
+use crate::verify::ParVerdict;
 use crate::{Error, Result};
 
-/// Execute a lowered program. `inputs` must follow `prog.input_names`
-/// order; `out` must have exactly `prog.out_size` elements.
+/// Hard cap on worker threads [`execute_threaded`] will use; requests
+/// beyond it are clamped (the coordinator's `exec_threads` knob rejects
+/// such values at validation instead).
+pub const MAX_EXEC_THREADS: usize = 64;
+
+/// What [`execute_threaded`] actually did, for metrics plumbing.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExecReport {
+    /// Map loops executed via the threaded path (the root chunking counts
+    /// as one; nested maps run inside their chunk's thread).
+    pub parallel_loops: u64,
+    /// `true` when ≥ 2 threads were requested but the certificate (or the
+    /// nest shape) forced the serial path.
+    pub serial_fallback: bool,
+    /// Worker threads actually used (1 on the serial path).
+    pub threads_used: usize,
+}
+
+/// Execute a lowered program serially. `inputs` must follow
+/// `prog.input_names` order; `out` must have exactly `prog.out_size`
+/// elements. Equivalent to [`execute_threaded`] with one thread.
+pub fn execute(prog: &Program, inputs: &[&[f64]], out: &mut [f64]) -> Result<()> {
+    execute_threaded(prog, inputs, out, 1).map(|_| ())
+}
+
+/// Execute a lowered program, chunking the root `MapLoop` across up to
+/// `threads` worker threads when — and only when — the verifier's
+/// dependence certificate says its iterations are independent
+/// ([`ParVerdict::Parallel`]). `threads <= 1` (and any `Serial` verdict,
+/// missing certificate, or non-map root) runs the serial path; the output
+/// is bit-identical either way. Returns what actually happened.
 ///
 /// Before touching any buffer the program is statically verified
 /// ([`crate::verify::verify`]) and the certified footprint is checked
@@ -28,7 +71,12 @@ use crate::{Error, Result};
 /// with [`Error::Verify`] instead of trusting lowering (the unchecked fast
 /// paths below rely on this gate; their `debug_assert!`s are belt and
 /// braces, not the defense).
-pub fn execute(prog: &Program, inputs: &[&[f64]], out: &mut [f64]) -> Result<()> {
+pub fn execute_threaded(
+    prog: &Program,
+    inputs: &[&[f64]],
+    out: &mut [f64],
+    threads: usize,
+) -> Result<ExecReport> {
     if inputs.len() != prog.input_names.len() {
         return Err(Error::Eval(format!(
             "expected {} inputs, got {}",
@@ -71,14 +119,119 @@ pub fn execute(prog: &Program, inputs: &[&[f64]], out: &mut [f64]) -> Result<()>
             )));
         }
     }
-    let mut ctx = Ctx {
-        bufs: inputs,
-        off: vec![0usize; prog.n_tracks()],
-        track_slot: &prog.track_slot,
-        temps: prog.temp_sizes.iter().map(|&s| vec![0.0; s]).collect(),
+    let threads = threads.clamp(1, MAX_EXEC_THREADS);
+    // Certificate gate: only a root MapLoop the dependence analysis marked
+    // Parallel may be chunked. Everything else — Serial verdicts, red
+    // roots, single iterations — takes the serial path (fail closed).
+    let plan = if threads >= 2 {
+        match (&prog.root, fp.par.root()) {
+            (
+                Node::MapLoop {
+                    extent,
+                    advances,
+                    body_size,
+                    body,
+                },
+                Some(cert),
+            ) if *extent >= 2 && matches!(cert.verdict, ParVerdict::Parallel { .. }) => {
+                Some((*extent, advances.as_slice(), *body_size, &**body))
+            }
+            _ => None,
+        }
+    } else {
+        None
     };
-    exec(&prog.root, &mut ctx, out, 0, WriteMode::Set);
-    Ok(())
+    let Some((extent, advances, body_size, body)) = plan else {
+        let mut ctx = Ctx {
+            bufs: inputs,
+            off: vec![0usize; prog.n_tracks()],
+            track_slot: &prog.track_slot,
+            temps: prog.temp_sizes.iter().map(|&s| vec![0.0; s]).collect(),
+        };
+        exec(&prog.root, &mut ctx, out, 0, WriteMode::Set);
+        return Ok(ExecReport {
+            parallel_loops: 0,
+            serial_fallback: threads >= 2,
+            threads_used: 1,
+        });
+    };
+    // Contiguous balanced iteration ranges; the output splits on the same
+    // boundaries because the verified root span is extent * body_size.
+    let n_threads = threads.min(extent);
+    let per = extent / n_threads;
+    let rem = extent % n_threads;
+    let n_tracks = prog.n_tracks();
+    let track_slot = &prog.track_slot;
+    let temp_sizes = &prog.temp_sizes;
+    let panicked = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(n_threads);
+        let mut rest = out;
+        let mut start = 0usize;
+        for t in 0..n_threads {
+            let count = per + usize::from(t < rem);
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(count * body_size);
+            rest = tail;
+            // Each worker gets its own cursor vector and a private temp
+            // arena (temps are per-iteration scratch; the certificate
+            // additionally guarantees no certified-parallel body stages
+            // through one, see verify::depend). Input buffers are shared
+            // read-only; output chunks are disjoint by construction.
+            handles.push(s.spawn(move || {
+                let mut ctx = Ctx {
+                    bufs: inputs,
+                    off: vec![0usize; n_tracks],
+                    track_slot,
+                    temps: temp_sizes.iter().map(|&sz| vec![0.0; sz]).collect(),
+                };
+                run_root_chunk(body, advances, body_size, start, count, &mut ctx, chunk);
+            }));
+            start += count;
+        }
+        // Join every handle (no short-circuit): a panicked worker left
+        // unjoined would re-panic at scope exit instead of surfacing as
+        // the typed error below.
+        let joins: Vec<bool> = handles.into_iter().map(|h| h.join().is_err()).collect();
+        joins.into_iter().any(|p| p)
+    });
+    if panicked {
+        return Err(Error::Eval("parallel executor worker panicked".into()));
+    }
+    Ok(ExecReport {
+        parallel_loops: 1,
+        serial_fallback: false,
+        threads_used: n_threads,
+    })
+}
+
+/// Run iterations `start .. start + count` of a certified-parallel root
+/// map. `dst` is the output chunk whose first element corresponds to
+/// iteration `start` (the root cursor advances by `body_size` per
+/// iteration, so chunk-local offsets start at 0).
+fn run_root_chunk(
+    body: &Node,
+    advances: &[Adv],
+    body_size: usize,
+    start: usize,
+    count: usize,
+    ctx: &mut Ctx,
+    dst: &mut [f64],
+) {
+    // Reproduce `Ctx::enter` against the all-zero entry state the root
+    // loop sees, then advance every cursor to iteration `start`.
+    ctx.enter(advances);
+    for a in advances {
+        ctx.off[a.dst] += start * a.stride;
+    }
+    if let Node::Leaf(k) = body {
+        map_leaf_loop(count, advances, k, ctx, dst, 0, WriteMode::Set);
+        return;
+    }
+    let mut off = 0usize;
+    for _ in 0..count {
+        exec(body, ctx, dst, off, WriteMode::Set);
+        ctx.step(advances);
+        off += body_size;
+    }
 }
 
 struct Ctx<'a> {
@@ -604,6 +757,72 @@ mod tests {
         let a = vec![1., 2., 3., 4., -10., 0., 0., 0., 2., 2., 2., 2.];
         let out = run(&e, &env, &[("A", &a)]).unwrap();
         assert_eq!(out, vec![10.0]);
+    }
+
+    #[test]
+    fn threaded_matmul_is_bit_identical_to_serial() {
+        let n = 8;
+        let env = Env::new()
+            .with("A", Layout::row_major(&[n, n]))
+            .with("B", Layout::row_major(&[n, n]));
+        let prog = lower(&matmul_naive(input("A"), input("B")), &env).unwrap();
+        let a: Vec<f64> = (0..n * n).map(|i| (i % 7) as f64 - 3.0).collect();
+        let b: Vec<f64> = (0..n * n).map(|i| (i % 5) as f64 * 0.5).collect();
+        let mut serial = vec![0.0; prog.out_size];
+        execute(&prog, &[&a, &b], &mut serial).unwrap();
+        for threads in [2, 3, 8, 64] {
+            let mut par = vec![f64::NAN; prog.out_size];
+            let rep = execute_threaded(&prog, &[&a, &b], &mut par, threads).unwrap();
+            assert_eq!(rep.parallel_loops, 1);
+            assert!(!rep.serial_fallback);
+            assert!(rep.threads_used >= 2 && rep.threads_used <= threads.min(n));
+            assert!(
+                serial.iter().zip(&par).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "threads={threads}: parallel output differs from serial"
+            );
+        }
+    }
+
+    #[test]
+    fn serial_verdict_fails_closed_to_serial_path() {
+        // The root map stages a reduction through a shared temp, so the
+        // certificate demotes it; a 4-thread request must fall back to the
+        // serial path and still produce the serial answer.
+        let env = Env::new().with("A", Layout::row_major(&[3, 4]));
+        let e = map(
+            lam1(
+                "r",
+                rnz(
+                    pmax(),
+                    lam1("c", reduce(add(), var("c"))),
+                    vec![subdiv(0, 2, var("r"))],
+                ),
+            ),
+            input("A"),
+        );
+        let prog = lower(&e, &env).unwrap();
+        let a: Vec<f64> = (0..12).map(|i| i as f64 - 5.0).collect();
+        let mut serial = vec![0.0; prog.out_size];
+        execute(&prog, &[&a], &mut serial).unwrap();
+        let mut par = vec![f64::NAN; prog.out_size];
+        let rep = execute_threaded(&prog, &[&a], &mut par, 4).unwrap();
+        assert_eq!(rep.parallel_loops, 0);
+        assert!(rep.serial_fallback);
+        assert_eq!(rep.threads_used, 1);
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn reduction_root_reports_serial_fallback() {
+        let env = Env::new().with("u", Layout::row_major(&[4]));
+        let prog = lower(&reduce(add(), input("u")), &env).unwrap();
+        let u = [1.0, 2.0, 3.0, 4.0];
+        let mut out = vec![0.0];
+        let rep = execute_threaded(&prog, &[&u], &mut out, 2).unwrap();
+        assert_eq!(out, vec![10.0]);
+        assert!(rep.serial_fallback, "red root cannot be chunked");
+        let rep1 = execute_threaded(&prog, &[&u], &mut out, 1).unwrap();
+        assert!(!rep1.serial_fallback, "serial request is not a fallback");
     }
 
     #[test]

@@ -20,13 +20,19 @@
 //! hot path — candidates are lowered and cost-estimated straight from the
 //! arena, never rebuilt as trees). The two are held bit-identical by the
 //! differential tests in `tests/lower_id_props.rs`.
+//!
+//! Execution is serial by default ([`execute`]); [`execute_threaded`]
+//! additionally consults the verifier's parallel-safety certificate
+//! ([`crate::verify::ParCert`]) and chunks a certified root `MapLoop`
+//! across a scoped thread pool, failing closed to the serial path on any
+//! `Serial` verdict.
 
 mod interp;
 mod lower;
 mod program;
 mod trace;
 
-pub use interp::execute;
+pub use interp::{execute, execute_threaded, ExecReport, MAX_EXEC_THREADS};
 pub use lower::{lower, lower_id};
 pub use program::{Adv, Kernel, KernelOp, Node, Program, WriteMode};
 pub use trace::{count_accesses, trace, Access, AccessKind};

@@ -29,7 +29,12 @@ pub struct Adv {
 #[derive(Clone, Debug)]
 pub enum Node {
     /// `nzip`: iterate `extent` times, advancing each argument track by its
-    /// stride and the destination cursor by `body_size` elements.
+    /// stride and the destination cursor by `body_size` elements. Because
+    /// the cursor step equals the per-iteration write span (the verifier's
+    /// `MapOverlap`/`MapGap` checks pin this), iterations own disjoint
+    /// destination chunks — the fact the dependence analysis
+    /// ([`crate::verify::ParCert`]) certifies per loop and
+    /// [`super::execute_threaded`] consumes.
     MapLoop {
         extent: usize,
         advances: Vec<Adv>,

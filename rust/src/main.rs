@@ -35,7 +35,7 @@ fn main() {
 }
 
 fn usage() -> String {
-    "usage:\n  hofdla optimize <file.dsl> --input NAME=DIMxDIM [--rank cost|cachesim] [--subdivide-rnz B] [--top K] [--prune] [--verify] [--budget N] [--deadline-ms MS] [--shards N]\n  hofdla enumerate --family naive|rnz|maps|rnz2|all [--n N] [--b B]\n  hofdla bench table1|table2|fig3|fig4|fig5|fig6|gpu|baselines|all [--n N] [--b B] [--sim]\n  hofdla run-artifact <name> [--n N]\n  hofdla serve --demo [--clients N] [--queue-cap N]".to_string()
+    "usage:\n  hofdla optimize <file.dsl> --input NAME=DIMxDIM [--rank cost|cachesim] [--subdivide-rnz B] [--top K] [--prune] [--verify] [--budget N] [--deadline-ms MS] [--shards N] [--exec-threads N]\n  hofdla enumerate --family naive|rnz|maps|rnz2|all [--n N] [--b B]\n  hofdla bench table1|table2|fig3|fig4|fig5|fig6|gpu|baselines|all [--n N] [--b B] [--sim]\n  hofdla run-artifact <name> [--n N]\n  hofdla serve --demo [--clients N] [--queue-cap N]".to_string()
 }
 
 fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
@@ -99,11 +99,21 @@ fn run(args: &[String]) -> hofdla::Result<()> {
                 .budget(flag_u64(args, "--budget", 0))
                 .deadline_ms(flag_u64(args, "--deadline-ms", 0))
                 .shards(flag_usize(args, "--shards", 0))
+                .exec_threads(flag_usize(args, "--exec-threads", 0))
                 .build()?;
             let r = hofdla::coordinator::optimize(&spec)?;
             println!("explored {} rearrangements", r.variants_explored);
             if r.programs_verified > 0 {
                 println!("winner statically verified (bounds, init, disjointness)");
+            }
+            if let Some(ex) = &r.exec {
+                println!(
+                    "exec rehearsal: cert {} parallel / {} serial loops; ran with {} thread(s){}",
+                    ex.cert_parallel_loops,
+                    ex.cert_serial_loops,
+                    ex.threads_used,
+                    if ex.serial_fallback { " (serial fallback)" } else { "" },
+                );
             }
             println!("{:<28} {:>14}", "HoF order", "score");
             for (k, s) in &r.ranking {
@@ -232,12 +242,26 @@ fn run(args: &[String]) -> hofdla::Result<()> {
             .rank_by(RankBy::CacheSim)
             .subdivide_rnz(16)
             .verify(true)
+            .exec_threads(2)
             .build()?;
             let r = c.submit_optimize(spec.clone())?.wait()?;
             println!(
                 "explored {} rearrangements; best = {} (gap {:.3})",
                 r.variants_explored, r.best, r.certified_gap
             );
+            // Parallel-safety flavor: the winner's dependence certificate
+            // splits its map loops into parallel/serial, and the rehearsal
+            // ran it through the certificate-gated threaded executor.
+            if let Some(ex) = &r.exec {
+                println!(
+                    "parallel certificate: {} parallel / {} serial map loop(s); \
+                     rehearsed with {} thread(s){}",
+                    ex.cert_parallel_loops,
+                    ex.cert_serial_loops,
+                    ex.threads_used,
+                    if ex.serial_fallback { " (serial fallback)" } else { "" },
+                );
+            }
             // Cross-request sharing flavor: the same kernel resubmitted
             // with every binder α-renamed is answered from the result
             // cache through the canonical key — no fresh search (watch

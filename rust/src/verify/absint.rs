@@ -203,10 +203,14 @@ pub(super) fn check(prog: &Program) -> Result<Footprint, Vec<Violation>> {
         )));
     }
     if c.violations.is_empty() {
+        // The dependence analysis runs only on programs that passed the
+        // bounds/initialization/disjointness walk above: `Parallel`
+        // verdicts lean on those guarantees (body span == body_size).
         Ok(Footprint {
             spaces: c.spaces,
             n_inputs,
             leaf_evals: c.leaf_evals,
+            par: super::depend::certify(prog),
         })
     } else {
         Err(c.violations)

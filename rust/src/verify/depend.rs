@@ -1,0 +1,356 @@
+//! Per-loop dependence analysis: the fourth property [`super::verify`]
+//! proves, turning the pass/fail safety check into a typed parallelism
+//! certificate ([`ParCert`]) the executor can consult.
+//!
+//! For every `MapLoop` in the nest — not just the root — the analysis
+//! decides [`ParVerdict::Parallel`] vs [`ParVerdict::Serial`] by proving,
+//! with the same interval machinery the bounds checker uses, that one
+//! iteration's accesses stay inside the chunk the loop hands it:
+//!
+//! - **(a) write disjointness** — the iteration's writes to its
+//!   destination space (output or an enclosing reduction temp) span at
+//!   most `body_size` elements relative to the iteration's cursor. The
+//!   cursor advances by exactly `body_size` per iteration, so relative
+//!   containment in `[0, body_size)` makes absolute ranges disjoint
+//!   across iterations.
+//! - **(b) no cross-iteration read-after-write** — every read of the
+//!   destination space (an `Acc`-mode leaf read, or a temp fold into the
+//!   chunk) also lands inside `[0, body_size)` relative to the cursor.
+//!   Combined with (a), iteration `i` can only read destination cells
+//!   that iteration `i` itself writes — never a cell another iteration
+//!   produces. Kernel *input* reads are irrelevant here: kernel tracks
+//!   are backed exclusively by input slots, and inputs are never written.
+//! - **(c) accumulator privacy** — enclosed `RedLoop` accumulators must
+//!   be iteration-private. A reduction accumulating straight into the
+//!   iteration's own destination chunk qualifies (covered by (a)/(b));
+//!   one that declares a *temp* does not: the temp arena slot is shared
+//!   by every iteration, so the loop is conservatively demoted to
+//!   `Serial` naming the temp. (Per-thread temp privatization would make
+//!   this safe — the executor already allocates private arenas — but the
+//!   certificate stays conservative until the privacy argument is part
+//!   of the proof; see the ROADMAP.)
+//!
+//! Every `Serial` verdict carries a [`SerialReason`] whose `Display`
+//! names the offending space exactly like [`super::Violation`]
+//! diagnostics. The certificate is only attached to a [`super::Footprint`]
+//! that passed the other three properties, so `Parallel` verdicts inherit
+//! their guarantees (in particular `MapOverlap`/`MapGap` have already
+//! pinned the body span to `body_size`); the checks here re-derive the
+//! containment facts from the node structure rather than assuming them.
+
+use super::footprint::Interval;
+use crate::exec::{Node, Program, WriteMode};
+
+/// Parallel-safety certificate for one program: a verdict for every
+/// `MapLoop` in the nest, in pre-order (so when the root is a `MapLoop`,
+/// `loops[0]` with `depth == 0` is the loop the executor may chunk).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ParCert {
+    pub loops: Vec<LoopCert>,
+}
+
+impl ParCert {
+    /// Certificate for the root loop, if the program roots in a `MapLoop`.
+    pub fn root(&self) -> Option<&LoopCert> {
+        self.loops.first().filter(|l| l.depth == 0)
+    }
+
+    /// Number of map loops certified `Parallel`.
+    pub fn parallel_loops(&self) -> usize {
+        self.loops
+            .iter()
+            .filter(|l| matches!(l.verdict, ParVerdict::Parallel { .. }))
+            .count()
+    }
+
+    /// Number of map loops demoted to `Serial`.
+    pub fn serial_loops(&self) -> usize {
+        self.loops.len() - self.parallel_loops()
+    }
+}
+
+/// Dependence verdict for one `MapLoop`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LoopCert {
+    /// Loop position in `Violation` grammar: "depth D map(extent E)".
+    pub at: String,
+    /// Nesting depth (0 = the program root).
+    pub depth: usize,
+    pub extent: usize,
+    pub verdict: ParVerdict,
+}
+
+impl std::fmt::Display for LoopCert {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.verdict {
+            ParVerdict::Parallel { chunks_disjoint } => {
+                write!(f, "{}: parallel across {chunks_disjoint} disjoint chunks", self.at)
+            }
+            ParVerdict::Serial { reason } => write!(f, "{}: serial — {reason}", self.at),
+        }
+    }
+}
+
+/// Is one `MapLoop` safe to run with iterations split across threads?
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ParVerdict {
+    /// Iterations own disjoint destination ranges; the loop may be chunked
+    /// into up to `chunks_disjoint` (= extent) independent pieces.
+    Parallel { chunks_disjoint: usize },
+    /// The analysis could not prove independence; the executor must run
+    /// this loop serially. The reason names the offending space.
+    Serial { reason: SerialReason },
+}
+
+/// Why a `MapLoop` was demoted to serial. `Display` names the offending
+/// space (output, temp index) like [`super::Violation`] diagnostics do.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SerialReason {
+    /// One iteration's writes to `space` span more elements than the loop
+    /// advances the destination cursor by — adjacent iterations overlap.
+    WriteOverlap {
+        space: String,
+        span: usize,
+        body_size: usize,
+    },
+    /// One iteration reads `space` at relative offsets reaching
+    /// `read_hi`, beyond its own `body_size`-element chunk — an earlier
+    /// iteration's write could be observed.
+    ReadEscapesIteration {
+        space: String,
+        read_hi: usize,
+        body_size: usize,
+    },
+    /// The loop body stages a reduction through temp `temp`, a scratch
+    /// arena slot shared across iterations.
+    SharedTemp { temp: usize },
+}
+
+impl std::fmt::Display for SerialReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SerialReason::WriteOverlap {
+                space,
+                span,
+                body_size,
+            } => write!(
+                f,
+                "iteration writes to {space} span {span} elements but the loop advances by {body_size} — iterations would overlap"
+            ),
+            SerialReason::ReadEscapesIteration {
+                space,
+                read_hi,
+                body_size,
+            } => write!(
+                f,
+                "iteration reads {space} up to relative offset {read_hi}, outside its own {body_size}-element chunk — cross-iteration read-after-write"
+            ),
+            SerialReason::SharedTemp { temp } => write!(
+                f,
+                "loop body stages a reduction through temp {temp}, shared across iterations"
+            ),
+        }
+    }
+}
+
+/// Human name of a destination space, matching the `Violation` grammar
+/// (only the output and temps can be destinations — inputs are read-only).
+fn space_name(n_inputs: usize, space: usize) -> String {
+    if space == n_inputs {
+        "output".into()
+    } else {
+        format!("temp {}", space - n_inputs - 1)
+    }
+}
+
+/// Output size a node declares (identical to the bounds checker's notion;
+/// after `MapOverlap`/`MapGap`/`RedSizeMismatch` pass, it equals the span
+/// the body actually writes).
+fn declared_size(n: &Node) -> usize {
+    match n {
+        Node::MapLoop {
+            extent, body_size, ..
+        } => extent.saturating_mul(*body_size),
+        Node::RedLoop { body_size, .. } => *body_size,
+        Node::Leaf(_) => 1,
+    }
+}
+
+/// Relative footprint of one iteration of a candidate map: hulls of the
+/// destination-space accesses, as offsets relative to the iteration's
+/// destination-cursor entry. All destination accesses in this IR are
+/// cursor-chained with the same per-iteration coefficient (`body_size`),
+/// so relative intervals compare directly across iterations.
+#[derive(Default)]
+struct IterScan {
+    write: Option<Interval>,
+    read: Option<Interval>,
+    /// First reduction temp declared anywhere in the body (active or not —
+    /// a declared slot is shared across iterations either way).
+    shared_temp: Option<usize>,
+}
+
+impl IterScan {
+    fn record_write(&mut self, iv: Interval) {
+        self.write = Some(self.write.map_or(iv, |old| old.hull(iv)));
+    }
+
+    fn record_read(&mut self, iv: Interval) {
+        self.read = Some(self.read.map_or(iv, |old| old.hull(iv)));
+    }
+
+    /// Walk one body node. `rel` is the interval of destination-cursor
+    /// offsets (relative to the candidate iteration's entry) the node can
+    /// run at; `in_temp` means the current destination is a temp the
+    /// candidate's own chunk does not own (accesses there are not
+    /// destination-chain accesses of the candidate).
+    fn scan(&mut self, node: &Node, mode: WriteMode, rel: Interval, in_temp: bool) {
+        match node {
+            Node::MapLoop {
+                extent,
+                body_size,
+                body,
+                ..
+            } => {
+                let child = rel.widen_hi(extent.saturating_sub(1).saturating_mul(*body_size));
+                self.scan(body, mode, child, in_temp);
+            }
+            Node::RedLoop {
+                op,
+                body_size,
+                temp,
+                body,
+                ..
+            } => {
+                if let Some(t) = temp {
+                    self.shared_temp.get_or_insert(*t);
+                }
+                match (temp, mode) {
+                    (Some(_), WriteMode::Acc(_)) => {
+                        // Active temp path: fill/accumulate target the temp,
+                        // then the fold reads the temp and read-modify-writes
+                        // the destination chunk element by element.
+                        if *body_size > 0 && !in_temp {
+                            let iv = rel.widen_hi(*body_size - 1);
+                            self.record_read(iv);
+                            self.record_write(iv);
+                        }
+                        self.scan(body, WriteMode::Acc(*op), Interval::point(0), true);
+                    }
+                    _ => {
+                        // Straight into the destination: identity fill under
+                        // Set, then the body accumulates over the same region.
+                        let fill = declared_size(body);
+                        if matches!(mode, WriteMode::Set) && fill > 0 && !in_temp {
+                            self.record_write(rel.widen_hi(fill - 1));
+                        }
+                        self.scan(body, WriteMode::Acc(*op), rel, in_temp);
+                    }
+                }
+            }
+            Node::Leaf(_) => {
+                // Kernel operand reads only touch input slots (never
+                // written); the destination access is the single element at
+                // the cursor — read-modify-write under Acc.
+                if !in_temp {
+                    if matches!(mode, WriteMode::Acc(_)) {
+                        self.record_read(rel);
+                    }
+                    self.record_write(rel);
+                }
+            }
+        }
+    }
+}
+
+struct Analyzer<'p> {
+    prog: &'p Program,
+    loops: Vec<LoopCert>,
+}
+
+impl<'p> Analyzer<'p> {
+    /// Why one `MapLoop` writing `dst_space` under `mode` must stay
+    /// serial, if the scan of a single iteration's relative footprint
+    /// finds a reason (`None` = provably parallel).
+    fn demote_reason(
+        &self,
+        body: &Node,
+        body_size: usize,
+        mode: WriteMode,
+        dst_space: usize,
+    ) -> Option<SerialReason> {
+        let n_inputs = self.prog.input_names.len();
+        let mut scan = IterScan::default();
+        scan.scan(body, mode, Interval::point(0), false);
+        if let Some(t) = scan.shared_temp {
+            return Some(SerialReason::SharedTemp { temp: t });
+        }
+        if let Some(w) = scan.write {
+            if w.hi >= body_size {
+                return Some(SerialReason::WriteOverlap {
+                    space: space_name(n_inputs, dst_space),
+                    span: w.hi + 1,
+                    body_size,
+                });
+            }
+        }
+        if let Some(r) = scan.read {
+            if r.hi >= body_size {
+                return Some(SerialReason::ReadEscapesIteration {
+                    space: space_name(n_inputs, dst_space),
+                    read_hi: r.hi,
+                    body_size,
+                });
+            }
+        }
+        None
+    }
+
+    /// Pre-order walk mirroring the bounds checker's mode threading: map
+    /// bodies inherit the mode, reduction bodies run under `Acc(op)`, and
+    /// an *active* temp path switches the destination space to the temp.
+    fn walk(&mut self, node: &Node, mode: WriteMode, dst_space: usize, depth: usize) {
+        match node {
+            Node::MapLoop {
+                extent,
+                body_size,
+                body,
+                ..
+            } => {
+                let verdict = match self.demote_reason(body, *body_size, mode, dst_space) {
+                    Some(reason) => ParVerdict::Serial { reason },
+                    None => ParVerdict::Parallel {
+                        chunks_disjoint: *extent,
+                    },
+                };
+                self.loops.push(LoopCert {
+                    at: format!("depth {depth} map(extent {extent})"),
+                    depth,
+                    extent: *extent,
+                    verdict,
+                });
+                self.walk(body, mode, dst_space, depth + 1);
+            }
+            Node::RedLoop { op, temp, body, .. } => match (temp, mode) {
+                (Some(t), WriteMode::Acc(_)) => {
+                    let n_inputs = self.prog.input_names.len();
+                    self.walk(body, WriteMode::Acc(*op), n_inputs + 1 + *t, depth + 1);
+                }
+                _ => self.walk(body, WriteMode::Acc(*op), dst_space, depth + 1),
+            },
+            Node::Leaf(_) => {}
+        }
+    }
+}
+
+/// Run the dependence analysis over a program that already passed the
+/// bounds/initialization/disjointness checks, producing its [`ParCert`].
+pub(super) fn certify(prog: &Program) -> ParCert {
+    let mut a = Analyzer {
+        prog,
+        loops: Vec::new(),
+    };
+    let root_space = prog.input_names.len(); // the output space
+    a.walk(&prog.root, WriteMode::Set, root_space, 0);
+    ParCert { loops: a.loops }
+}

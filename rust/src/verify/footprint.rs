@@ -1,6 +1,7 @@
 //! The certified result of a successful verification: per-space access
 //! intervals and exact access counts.
 
+use super::depend::ParCert;
 use crate::exec::{Access, AccessKind};
 
 /// A closed interval `[lo, hi]` of element offsets.
@@ -79,6 +80,11 @@ pub struct Footprint {
     /// Number of leaf-kernel evaluations — the program's scalar-op count,
     /// cross-checked against [`crate::costmodel::CostEstimate::flops`].
     pub leaf_evals: u64,
+    /// Parallel-safety certificate: a dependence verdict for every
+    /// `MapLoop` in the nest (see [`super::depend`]). The executor's
+    /// threaded mode is gated on this — a `Serial` verdict or a missing
+    /// root entry falls back to the serial path.
+    pub par: ParCert,
 }
 
 impl Footprint {
@@ -142,6 +148,7 @@ mod tests {
             spaces: vec![a, out],
             n_inputs: 1,
             leaf_evals: 32,
+            par: ParCert::default(),
         };
         assert!(fp.contains(&Access {
             kind: AccessKind::Read,

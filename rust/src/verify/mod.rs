@@ -6,7 +6,7 @@
 //! the exact memory footprint of a program is computable without running
 //! it. This module computes it — by abstract interpretation of the `Adv`
 //! chains, propagating per-track offset intervals through the
-//! `MapLoop`/`RedLoop` nesting — and proves three properties:
+//! `MapLoop`/`RedLoop` nesting — and proves four properties:
 //!
 //! 1. **Bounds** — every read offset reachable through any track stays
 //!    below its slot's `input_lens` entry, and every write stays inside
@@ -25,6 +25,16 @@
 //!    actual span must equal the loop's declared `body_size`, the amount
 //!    the destination cursor advances per iteration. This is the invariant
 //!    that licenses parallel execution of map loops.
+//! 4. **Loop dependence** — a per-loop dependence analysis ([`depend`])
+//!    turns property 3 into a consumable certificate: every `MapLoop` in
+//!    the nest gets a typed [`ParVerdict`] — `Parallel { chunks_disjoint }`
+//!    when one iteration's destination writes *and reads* provably stay
+//!    inside its own `body_size` chunk and every enclosed reduction
+//!    accumulator is iteration-private, `Serial { reason }` otherwise,
+//!    with the reason naming the offending space like a [`Violation`]
+//!    does. The certificate rides on the [`Footprint`]
+//!    ([`Footprint::par`]); [`crate::exec::execute_threaded`] consults it
+//!    and fails closed to serial execution on any `Serial` verdict.
 //!
 //! The analysis is exact for this IR (see [`absint`]'s module docs): the
 //! reported [`Footprint`] intervals are attained, and its per-space access
@@ -43,9 +53,11 @@
 //! [`crate::coordinator::Metrics`].
 
 mod absint;
+mod depend;
 mod footprint;
 
 pub use absint::{Violation, MAX_KERNEL_STACK};
+pub use depend::{LoopCert, ParCert, ParVerdict, SerialReason};
 pub use footprint::{Footprint, Interval, SpaceUse};
 
 use crate::exec::Program;
@@ -123,6 +135,50 @@ mod tests {
         let (reads, writes) = count_accesses(&prog).unwrap();
         assert_eq!(fp.reads(), reads as u64);
         assert_eq!(fp.writes(), writes as u64);
+    }
+
+    #[test]
+    fn matmul_cert_marks_every_map_parallel() {
+        let n = 4;
+        let prog = matmul_prog(n);
+        let fp = verify(&prog).unwrap();
+        assert!(!fp.par.loops.is_empty(), "matmul has map loops");
+        assert_eq!(fp.par.serial_loops(), 0, "{:?}", fp.par);
+        let root = fp.par.root().expect("matmul roots in a map");
+        assert_eq!(root.depth, 0);
+        assert_eq!(root.extent, n);
+        assert_eq!(root.verdict, ParVerdict::Parallel { chunks_disjoint: n });
+    }
+
+    #[test]
+    fn map_over_shared_temp_is_demoted_with_named_reason() {
+        // Per row: max over 2-chunks of chunk-sums. The inner add-reduction
+        // under max stages through a temp, whose arena slot the enclosing
+        // map shares across iterations — demoted, naming the temp.
+        let env = Env::new().with("A", Layout::row_major(&[3, 4]));
+        let e = map(
+            lam1(
+                "r",
+                rnz(
+                    pmax(),
+                    lam1("c", reduce(add(), var("c"))),
+                    vec![subdiv(0, 2, var("r"))],
+                ),
+            ),
+            input("A"),
+        );
+        let prog = lower(&e, &env).unwrap();
+        assert_eq!(prog.temp_sizes.len(), 1);
+        let fp = verify(&prog).unwrap();
+        let root = fp.par.root().expect("roots in a map");
+        let ParVerdict::Serial { reason } = &root.verdict else {
+            panic!("expected a Serial verdict, got {:?}", root.verdict);
+        };
+        let msg = reason.to_string();
+        assert!(msg.contains("temp 0"), "reason must name the temp: {msg}");
+        assert_eq!(fp.par.serial_loops(), 1);
+        // The certificate surfaces through Display like Violations do.
+        assert!(root.to_string().contains("serial"), "{root}");
     }
 
     #[test]

@@ -1,0 +1,136 @@
+//! Differential oracle for the certificate-gated parallel executor
+//! (ISSUE 10): for every variant of every search family — enumerated at
+//! the CI `SEARCH_SHARDS` width (1, 2, 8), mirroring
+//! `tests/verify_props.rs` — threaded execution at 1, 2 and 8 workers is
+//! bit-identical to the serial interpreter, the [`ExecReport`] agrees
+//! with the program shape (the shipped families lower without temps, so
+//! a map root must actually chunk at >= 2 threads and anything else must
+//! fail closed), and the verifier's footprint counts and parallel
+//! certificate are facts about the *program*: re-verifying after a
+//! threaded run reproduces them exactly.
+//!
+//! [`ExecReport`]: hofdla::exec::ExecReport
+
+use hofdla::enumerate::{enumerate_search, starts, SearchOptions, Variant, MAX_SEARCH_SHARDS};
+use hofdla::exec::{execute, execute_threaded, lower, order_inputs, Node, Program};
+use hofdla::layout::Layout;
+use hofdla::rewrite::Ctx;
+use hofdla::typecheck::Env;
+use hofdla::verify::verify;
+
+/// Shard count under test — the CI matrix sets `SEARCH_SHARDS` (1, 2, 8),
+/// mirroring `tests/search_props.rs`.
+fn shard_count() -> usize {
+    std::env::var("SEARCH_SHARDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(4)
+        .min(MAX_SEARCH_SHARDS)
+}
+
+/// A is n×j, B is j×k, v has length j (the `verify_props` conventions).
+fn env(n: usize, j: usize, k: usize) -> Env {
+    Env::new()
+        .with("A", Layout::row_major(&[n, j]))
+        .with("B", Layout::row_major(&[j, k]))
+        .with("v", Layout::row_major(&[j]))
+}
+
+fn families() -> Vec<(&'static str, Variant)> {
+    vec![
+        ("matmul-naive", starts::matmul_naive_variant()),
+        ("matmul-rnz-subdiv", starts::matmul_rnz_subdivided_variant(2)),
+        ("matmul-maps-subdiv", starts::matmul_maps_subdivided_variant(2)),
+        ("matmul-rnz-twice", starts::matmul_rnz_twice_subdivided_variant(2, 2)),
+        ("matmul-all-subdiv", starts::matmul_all_subdivided_variant(2)),
+        ("matvec-naive", starts::matvec_naive_variant()),
+        ("matvec-vector-subdiv", starts::matvec_vector_subdivided_variant(2)),
+        ("matvec-map-subdiv", starts::matvec_map_subdivided_variant(2)),
+    ]
+}
+
+/// Every lowered variant of every family, at the given shape.
+fn family_programs(n: usize, j: usize, k: usize) -> Vec<(String, Program)> {
+    let env = env(n, j, k);
+    let ctx = Ctx::new(env.clone());
+    let opts = SearchOptions {
+        limit: 4096,
+        shards: shard_count(),
+        prune_slack: None,
+        score: false,
+        ..SearchOptions::default()
+    };
+    let mut out = Vec::new();
+    for (name, start) in families() {
+        let r = enumerate_search(&start, &ctx, &opts).unwrap();
+        for v in &r.variants {
+            let key = format!("{name}/{} @ {n}x{j}x{k}", v.display_key());
+            out.push((key, lower(&v.expr, &env).unwrap()));
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_threaded_execution_is_bit_identical_across_families_and_widths() {
+    let (n, j, k) = (4usize, 8usize, 4usize);
+    // Deterministic mixed-sign inputs: non-constant so a misplaced or
+    // doubly-written element cannot cancel out of the comparison.
+    let a: Vec<f64> = (0..n * j).map(|i| ((i % 11) as f64) * 0.5 - 2.0).collect();
+    let b: Vec<f64> = (0..j * k).map(|i| ((i % 7) as f64) - 3.0).collect();
+    let v: Vec<f64> = (0..j).map(|i| (i as f64) * 0.25 - 1.0).collect();
+    for (key, prog) in family_programs(n, j, k) {
+        let fp = verify(&prog).unwrap_or_else(|e| panic!("{key}: {e}"));
+        let bufs = order_inputs(&prog, &[("A", &a), ("B", &b), ("v", &v)])
+            .unwrap_or_else(|e| panic!("{key}: {e}"));
+        let mut serial = vec![0.0; prog.out_size];
+        execute(&prog, &bufs, &mut serial).unwrap_or_else(|e| panic!("{key}: {e}"));
+        for threads in [1usize, 2, 8] {
+            let mut out = vec![0.0; prog.out_size];
+            let rep = execute_threaded(&prog, &bufs, &mut out, threads)
+                .unwrap_or_else(|e| panic!("{key} @ {threads} threads: {e}"));
+            assert!(
+                serial.iter().zip(&out).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{key}: {threads}-thread output diverges from serial"
+            );
+            // The report must agree with the program shape: these
+            // families lower without temps, so every map root certifies
+            // Parallel and must chunk; a reduction root must fail closed.
+            let map_root =
+                matches!(&prog.root, Node::MapLoop { extent, .. } if *extent >= 2);
+            if threads >= 2 && map_root {
+                assert_eq!(
+                    rep.parallel_loops, 1,
+                    "{key} @ {threads} threads: certified map root must chunk"
+                );
+                assert!(!rep.serial_fallback, "{key} @ {threads} threads");
+                assert!(
+                    (2..=threads).contains(&rep.threads_used),
+                    "{key} @ {threads} threads: used {}",
+                    rep.threads_used
+                );
+            } else if threads >= 2 {
+                assert!(
+                    rep.serial_fallback && rep.parallel_loops == 0,
+                    "{key} @ {threads} threads: non-map root must fail closed"
+                );
+            } else {
+                assert!(
+                    !rep.serial_fallback && rep.threads_used == 1,
+                    "{key}: one thread is the serial path, not a fallback"
+                );
+            }
+        }
+        // Execution mode is invisible to the static analysis: re-verifying
+        // the program after the threaded runs reproduces the footprint
+        // counts and the certificate bit for bit.
+        let fp2 = verify(&prog).unwrap_or_else(|e| panic!("{key}: {e}"));
+        assert_eq!(
+            (fp.reads(), fp.writes()),
+            (fp2.reads(), fp2.writes()),
+            "{key}: access counts must not depend on execution mode"
+        );
+        assert_eq!(fp.par, fp2.par, "{key}: certificate must be deterministic");
+    }
+}

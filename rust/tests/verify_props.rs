@@ -13,6 +13,13 @@
 //!   diagnostic naming the offending space and track where applicable.
 //!   A verifier that accepts everything would pass the differential suite;
 //!   these prove it can actually say no.
+//! - **parallel certificates** (ISSUE 10): every map loop of every shipped
+//!   family certifies `Parallel` (no temps, disjoint chunks), corrupted
+//!   programs never reach certification (verify rejects them outright),
+//!   and a verifiable aliasing program — a map whose body declares a
+//!   shared reduction temp — demotes to `Serial` with a reason naming the
+//!   temp and executes serially under a threaded request, bit-identical,
+//!   never racing.
 
 use hofdla::enumerate::{enumerate_search, starts, SearchOptions, Variant, MAX_SEARCH_SHARDS};
 use hofdla::exec::{count_accesses, lower, trace, Node, Program};
@@ -268,6 +275,91 @@ fn mutation_corrupted_temp_size_is_rejected_naming_temp() {
             "{r}x{c}: diagnostic must name the temp: {msg}"
         );
     }
+}
+
+/// Parallel-safety certificates (ISSUE 10): the shipped families carry
+/// only all-`+` reductions, which lower without temp regions, so the
+/// dependence analysis must certify every map loop `Parallel` — one cert
+/// row per map in the nest, root included.
+#[test]
+fn par_cert_every_family_map_loop_certifies_parallel() {
+    use hofdla::verify::ParVerdict;
+    for (key, prog) in family_programs(4, 8, 4) {
+        let fp = verify(&prog).unwrap_or_else(|e| panic!("{key}: {e}"));
+        let maps = prog.loop_kinds().iter().filter(|k| **k == "map").count();
+        assert_eq!(fp.par.loops.len(), maps, "{key}: one cert row per map loop");
+        assert_eq!(fp.par.serial_loops(), 0, "{key}: no temps, nothing demotes");
+        if let Node::MapLoop { extent, .. } = &prog.root {
+            let root = fp
+                .par
+                .root()
+                .unwrap_or_else(|| panic!("{key}: map root must carry a root cert"));
+            assert_eq!(
+                root.verdict,
+                ParVerdict::Parallel { chunks_disjoint: *extent },
+                "{key}: root map over disjoint chunks must certify Parallel"
+            );
+        }
+    }
+}
+
+/// Single-fault injection against the certificate. Corrupted strides and
+/// extents never reach certification — `verify` rejects them outright
+/// with the space/track-naming `Violation`s pinned by the mutation tests
+/// above, so no cert-bearing `Footprint` exists for a racy program. The
+/// reachable `Serial` verdict is the aliasing shape: a map whose body
+/// declares a mixed-op reduction temp (one arena slot shared by every
+/// iteration) verifies fine but demotes with a reason naming the temp —
+/// and the executor fails closed, running a threaded request serially,
+/// bit-identical to `execute`, never racing on the shared slot.
+#[test]
+fn par_cert_faults_demote_to_serial_or_reject_and_fail_closed() {
+    use hofdla::dsl::{add, input, lam1, map, pmax, reduce, rnz, subdiv, var};
+    use hofdla::exec::{execute, execute_threaded};
+    use hofdla::verify::{ParVerdict, SerialReason};
+    for (key, prog) in family_programs(4, 8, 4) {
+        if stride_sites(&prog.root) > 0 {
+            let mut bad = prog.clone();
+            assert!(corrupt_nth_stride(&mut bad.root, 0));
+            assert!(verify(&bad).is_err(), "{key}: corrupted program must not certify");
+        }
+        if extent_sites(&prog.root) > 0 {
+            let mut bad = prog.clone();
+            assert!(corrupt_nth_extent(&mut bad.root, 0));
+            assert!(verify(&bad).is_err(), "{key}: corrupted program must not certify");
+        }
+    }
+    let env = Env::new().with("A", Layout::row_major(&[3, 4]));
+    let e = map(
+        lam1(
+            "r",
+            rnz(pmax(), lam1("c", reduce(add(), var("c"))), vec![subdiv(0, 2, var("r"))]),
+        ),
+        input("A"),
+    );
+    let prog = lower(&e, &env).unwrap();
+    assert_eq!(prog.temp_sizes.len(), 1, "mixed-op inner reduction must use a temp");
+    let fp = verify(&prog).unwrap();
+    let root = fp.par.root().expect("map root carries a cert");
+    let ParVerdict::Serial { reason } = &root.verdict else {
+        panic!("shared-temp map must demote, got {:?}", root.verdict);
+    };
+    assert!(
+        matches!(reason, SerialReason::SharedTemp { temp: 0 }),
+        "expected SharedTemp, got {reason:?}"
+    );
+    assert!(reason.to_string().contains("temp 0"), "reason must name the temp: {reason}");
+    let a: Vec<f64> = (0..12).map(|i| (i as f64) - 5.5).collect();
+    let mut serial = vec![0.0; prog.out_size];
+    execute(&prog, &[&a], &mut serial).unwrap();
+    let mut threaded = vec![0.0; prog.out_size];
+    let rep = execute_threaded(&prog, &[&a], &mut threaded, 8).unwrap();
+    assert!(rep.serial_fallback, "Serial verdict must force the fallback");
+    assert_eq!((rep.parallel_loops, rep.threads_used), (0, 1));
+    assert!(
+        serial.iter().zip(&threaded).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "fail-closed execution must be bit-identical to serial"
+    );
 }
 
 /// Seeded random single-fault sampling at random shapes — the same
